@@ -1,0 +1,20 @@
+//! §5.3.1 ablation: instruction combining (rcs/rrcs/rrs) on vs off —
+//! instruction counts and simulated completion time.
+//!
+//! Run: `cargo bench --bench abl_fusion`
+
+use gc3::bench::abl_fusion;
+
+fn main() {
+    println!("== Ablation: peephole fusion (§5.3.1), 2MB buffers");
+    println!(
+        "{:<18} {:>10} {:>10} {:>12} {:>12} {:>8}",
+        "program", "insts raw", "fused", "raw us", "fused us", "speedup"
+    );
+    for (name, raw, fused, t_raw, t_fused) in abl_fusion(2 * 1024 * 1024).expect("abl") {
+        println!(
+            "{name:<18} {raw:>10} {fused:>10} {t_raw:>12.1} {t_fused:>12.1} {:>7.2}x",
+            t_raw / t_fused
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! §6.2 ablations: schedule shape at fixed resources (8tb × 4 instances vs
+//! 1tb × 32 vs 1tb × 24 vs automatic) and protocol choice on the GC3 ring.
+//!
+//! Run: `cargo bench --bench abl_schedule`
+
+use gc3::bench::{abl_protocols, abl_schedule, render, size_sweep};
+
+fn main() {
+    let sizes = size_sweep(128 * 1024, 1 << 28);
+    let rows = abl_schedule(&sizes).expect("abl_schedule");
+    print!("{}", render("Ablation: ring schedules at fixed resources (§6.2)", &rows));
+    // Paper: "8 threadblocks per ring instantiated 4 times outperforms
+    // 1 threadblock per ring instantiated 32 times."
+    let mid = rows.iter().find(|r| r.size == 2 * 1024 * 1024).or(rows.first()).unwrap();
+    println!(
+        "  @{}: 8tbx4 = {:.2} GB/s vs 1tbx32 = {:.2} GB/s vs 1tbx24 = {:.2} GB/s",
+        gc3::util::human_bytes(mid.size),
+        mid.series[0].1,
+        mid.series[1].1,
+        mid.series[2].1
+    );
+    let rows = abl_protocols(&sizes).expect("abl_protocols");
+    print!("{}", render("Ablation: protocols on the GC3 ring (§4.3)", &rows));
+}

@@ -1,0 +1,57 @@
+//! Compiler and simulator throughput (wall-clock, no criterion in the
+//! vendored crate set): how fast GC3 compiles its library programs and how
+//! fast the discrete-event engine retires simulation events — the §Perf
+//! numbers tracked in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench compiler_perf`
+
+use gc3::collectives::{allreduce, alltoall};
+use gc3::compiler::{compile, CompileOpts};
+use gc3::sim::simulate;
+use gc3::topology::Topology;
+use std::time::Instant;
+
+fn time<T>(label: &str, n: usize, mut f: impl FnMut() -> T) -> f64 {
+    // Warmup + best-of-n, the usual microbench hygiene.
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..n {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    println!("{label:<44} {best:>10.3} ms (best of {n})", best = best * 1e3);
+    best
+}
+
+fn main() {
+    println!("== Compiler throughput");
+    let ring = allreduce::ring(8, true).unwrap();
+    time("compile ring_allreduce(8) x4 instances", 10, || {
+        compile(&ring, "r", &CompileOpts::default().with_instances(4)).unwrap()
+    });
+    let a2a = alltoall::two_step(8, 8).unwrap();
+    time("compile alltoall_two_step(8x8) [4096 chunks]", 3, || {
+        compile(&a2a, "a", &CompileOpts::default()).unwrap()
+    });
+
+    println!("== Simulator throughput");
+    let topo8 = Topology::a100_single();
+    let ring_ef = compile(&ring, "r", &CompileOpts::default().with_instances(4)).unwrap().ef;
+    let t = time("simulate ring 8xA100 @ 1GB", 5, || {
+        simulate(&ring_ef, &topo8, 1 << 30).unwrap()
+    });
+    let rep = simulate(&ring_ef, &topo8, 1 << 30).unwrap();
+    println!(
+        "{:<44} {:>10.0} events/s",
+        "  event rate",
+        rep.events as f64 / t
+    );
+    let topo = Topology::a100(8);
+    let a2a_ef = compile(&a2a, "a", &CompileOpts::default()).unwrap().ef;
+    let t = time("simulate alltoall 8 nodes (64 ranks) @ 256MB", 3, || {
+        simulate(&a2a_ef, &topo, 256 << 20).unwrap()
+    });
+    let rep = simulate(&a2a_ef, &topo, 256 << 20).unwrap();
+    println!("{:<44} {:>10.0} events/s", "  event rate", rep.events as f64 / t);
+}

@@ -1,0 +1,43 @@
+//! Fig. 7 (§6.1): AllToAll algorithmic bandwidth on 8 / 16 / 32 nodes of
+//! 8 A100s — GC3 two-step vs handwritten two-step vs NCCL p2p vs the
+//! theoretical `IB_bw · N/(N−1)` bound.
+//!
+//! Run: `cargo bench --bench fig7_alltoall [-- --nodes 8 --quick]`
+
+use gc3::bench::{fig7, render, size_sweep};
+use gc3::util::cli::Args;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1), &["quick"]);
+    let node_counts: Vec<usize> = match args.opt("nodes") {
+        Some(n) => vec![n.parse().expect("--nodes N")],
+        // 32 nodes = 256 simulated ranks; --quick stops at 8.
+        None if args.flag("quick") => vec![8],
+        None => vec![8, 16, 32],
+    };
+    let sizes = if args.flag("quick") {
+        size_sweep(1 << 20, 1 << 28)
+    } else {
+        size_sweep(1 << 20, 1 << 30)
+    };
+    for nodes in node_counts {
+        let t0 = Instant::now();
+        let rows = fig7(nodes, &sizes).expect("fig7");
+        print!("{}", render(&format!("Fig 7: AllToAll, {nodes} nodes x 8 A100"), &rows));
+        // Shape checks the paper claims (§6.1).
+        let last = rows.last().unwrap();
+        let get = |name: &str| last.series.iter().find(|(n, _)| n == name).unwrap().1;
+        let (gc3, hw, nccl, bound) =
+            (get("GC3"), get("handwritten"), get("NCCL"), get("theoretical"));
+        println!(
+            "  @{}: GC3/handwritten = {:.2}x (paper: up to 1.35x), GC3/NCCL = {:.2}x \
+             (paper: ~1.2x), GC3 at {:.0}% of bound",
+            gc3::util::human_bytes(last.size),
+            gc3 / hw,
+            gc3 / nccl,
+            gc3 / bound * 100.0
+        );
+        println!("  [{} sizes in {:.1}s]\n", rows.len(), t0.elapsed().as_secs_f64());
+    }
+}

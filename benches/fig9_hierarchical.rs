@@ -1,0 +1,21 @@
+//! Fig. 9 (§6.3): Hierarchical AllReduce on two NDv2 nodes vs NCCL's
+//! 16-GPU ring (and its tree, for reference).
+//!
+//! Run: `cargo bench --bench fig9_hierarchical`
+
+use gc3::bench::{fig9, render, size_sweep};
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = fig9(&size_sweep(64 * 1024, 1 << 30)).expect("fig9");
+    print!("{}", render("Fig 9: Hierarchical AllReduce, 2x NDv2", &rows));
+    let last = rows.last().unwrap();
+    let gc3 = last.series[0].1;
+    let ring = last.series[1].1;
+    println!(
+        "  @1GB: GC3/NCCL-ring = {:.2}x (paper: improvement over NCCL across sizes)",
+        gc3 / ring
+    );
+    println!("  [{:.1}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,61 @@
+//! §6.4's application scenario: pipeline-parallel training, where each
+//! stage hands its activations to the next GPU. Across node boundaries the
+//! naive send uses one of the eight IB links; the GC3 AllToNext collective
+//! scatters the boundary transfer across every GPU in the node.
+//!
+//! This example verifies AllToNext byte-accurately on a 3-node topology,
+//! then reports the activation-handoff time per pipeline stage for both
+//! implementations across microbatch sizes.
+//!
+//! Run: `cargo run --release --example pipeline_alltonext`
+
+use gc3::collectives::alltonext;
+use gc3::compiler::{compile, CompileOpts};
+use gc3::exec::{verify, NativeReducer};
+use gc3::sched::SchedOpts;
+use gc3::sim::simulate;
+use gc3::topology::Topology;
+
+fn main() -> gc3::core::Result<()> {
+    let topo = Topology::a100(3);
+    let (n, g) = (topo.nodes, topo.gpus_per_node);
+    let opts = CompileOpts { sched: SchedOpts { sm_count: topo.sm_count }, ..Default::default() };
+
+    let a2n_trace = alltonext::alltonext(n, g)?;
+    let a2n = compile(&a2n_trace, "alltonext", &opts)?;
+    let base_trace = alltonext::baseline(n, g)?;
+    let base = compile(&base_trace, "baseline", &opts)?;
+
+    // Byte-accurate check first: every GPU's buffer must arrive intact at
+    // its successor.
+    verify(&a2n.ef, &a2n_trace.spec, 16, &mut NativeReducer)?;
+    verify(&base.ef, &base_trace.spec, 16, &mut NativeReducer)?;
+    println!("AllToNext verified on {} ranks ({} IB links per boundary)\n", n * g, g);
+
+    // Pipeline handoff: activations = microbatch x seq x hidden x 2B.
+    let hidden = 8192u64;
+    let seq = 2048u64;
+    println!(
+        "{:>11} {:>10} {:>14} {:>14} {:>9}",
+        "microbatch", "buffer", "GC3 a2next", "naive send", "speedup"
+    );
+    for mb in [1u64, 4, 16, 64] {
+        let size = mb * seq * hidden * 2;
+        let t_gc3 = simulate(&a2n.ef, &topo, size)?.time;
+        let t_base = simulate(&base.ef, &topo, size)?.time;
+        println!(
+            "{:>11} {:>10} {:>11.1} us {:>11.1} us {:>8.2}x",
+            mb,
+            gc3::util::human_bytes(size),
+            t_gc3 * 1e6,
+            t_base * 1e6,
+            t_base / t_gc3
+        );
+    }
+    println!(
+        "\n(the paper measures 14.5x at 1GB on hardware, where the naive \
+         single NCCL send achieved only ~0.55 GB/s; our simulated baseline \
+         still gets the full single-QP rate — see EXPERIMENTS.md FIG11)"
+    );
+    Ok(())
+}

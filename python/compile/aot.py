@@ -1,0 +1,112 @@
+"""AOT pipeline: lower Layer-1/Layer-2 to HLO **text** artifacts.
+
+Run once by `make artifacts`; Python never executes at run time. Produces,
+under `artifacts/`:
+
+* ``reduce.hlo.txt``       — the Pallas chunk-reduce kernel over
+  ``REDUCE_ELEMS`` f32 elements (the GC3 runtime's reduce datapath);
+* ``train_step.hlo.txt``   — transformer fwd+bwd: ``(flat, batch) ->
+  (flat_grads, loss)``;
+* ``sgd_update.hlo.txt``   — ``(flat, grads, lr) -> flat'``;
+* ``params_init.bin``      — the initial flat f32 parameter vector
+  (little-endian raw);
+* ``model_meta.json``      — shapes the Rust runtime needs.
+
+HLO *text* (not a serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids
+(/opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.reduce import reduce_chunks
+
+#: f32 elements per reduce-kernel invocation (the Rust reducer's quantum).
+REDUCE_ELEMS = 1 << 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_reduce(out_dir: str) -> str:
+    spec = jax.ShapeDtypeStruct((REDUCE_ELEMS,), jnp.float32)
+    lowered = jax.jit(lambda a, b: (reduce_chunks(a, b),)).lower(spec, spec)
+    path = os.path.join(out_dir, "reduce.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return path
+
+
+def lower_model(cfg: model.Config, out_dir: str, seed: int) -> dict:
+    flat0, train_step, sgd_update = model.make_flat_fns(cfg, seed)
+    p = flat0.shape[0]
+    flat_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    batch_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(train_step.lower(flat_spec, batch_spec)))
+    with open(os.path.join(out_dir, "sgd_update.hlo.txt"), "w") as f:
+        f.write(
+            to_hlo_text(
+                jax.jit(lambda a, g, lr: (sgd_update(a, g, lr),)).lower(
+                    flat_spec, flat_spec, lr_spec
+                )
+            )
+        )
+    import numpy as np
+
+    np.asarray(flat0, dtype="<f4").tofile(os.path.join(out_dir, "params_init.bin"))
+    meta = {
+        "num_params": int(p),
+        "batch": cfg.batch,
+        "seq_len": cfg.seq_len,
+        "vocab": model.VOCAB,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "reduce_elems": REDUCE_ELEMS,
+        "seed": seed,
+    }
+    with open(os.path.join(out_dir, "model_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--model",
+        default=os.environ.get("GC3_MODEL", "base"),
+        choices=sorted(model.CONFIGS),
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-model", action="store_true", help="only the reduce kernel")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    path = lower_reduce(args.out)
+    print(f"wrote {path}")
+    if not args.skip_model:
+        cfg = model.CONFIGS[args.model]
+        meta = lower_model(cfg, args.out, args.seed)
+        print(f"wrote model artifacts: {meta['num_params']} params ({args.model})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels and their jnp oracles."""
+
+from . import layernorm, reduce, ref  # noqa: F401

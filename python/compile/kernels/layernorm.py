@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: fused LayerNorm for the Layer-2 transformer.
+
+Forward runs through Pallas (one grid step per row-block: mean, variance,
+normalize, scale-shift fused in VMEM — on a real TPU this saves three HBM
+round-trips versus the unfused jnp chain). The backward pass is defined via
+`jax.custom_vjp` against the reference semantics, the standard pattern for
+Pallas kernels on a `jax.grad` path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_ROWS = 64
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[...] = (x - mean) * inv * g_ref[...] + b_ref[...]
+
+
+def _ln_pallas(x2, gamma, beta, eps):
+    rows, d = x2.shape
+    block = min(rows, BLOCK_ROWS)
+    # Pad the row count so the grid divides evenly.
+    pad = (-rows) % block
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, d), x2.dtype)], axis=0)
+    grid = (rows + pad) // block
+    out = pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, d), x2.dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x2, gamma[None, :], beta[None, :])
+    return out[:rows]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis; arbitrary leading dims."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    return _ln_pallas(x2, gamma, beta, eps).reshape(shape)
+
+
+def _ln_fwd(x, gamma, beta, eps):
+    return layernorm(x, gamma, beta, eps), (x, gamma, beta)
+
+
+def _ln_bwd(eps, res, g):
+    x, gamma, beta = res
+    # Gradient of the reference semantics (identical numerics).
+    _, vjp = jax.vjp(lambda x_, g_, b_: ref.layernorm_ref(x_, g_, b_, eps), x, gamma, beta)
+    return vjp(g)
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: chunk reduction (the GC3 runtime's hot compute).
+
+The GC3-EF instructions `reduce`, `rrc`, `rrcs`, `rrs` all funnel through
+one datapath: elementwise summation of a staged chunk into an accumulator
+(paper §4.1). This kernel is that datapath. The Rust runtime AOT-loads its
+HLO (`artifacts/reduce.hlo.txt`) and the functional executor's
+`PjrtReducer` calls it for every reducing instruction, closing the
+three-layer loop.
+
+TPU-shaped tiling (DESIGN.md §Hardware-Adaptation): the 1-D chunk is viewed
+as `(blocks, LANES)` with LANES=128 (the VPU lane width) and a grid over
+row-blocks sized to keep each block's two inputs + output comfortably in
+VMEM. On this image Pallas must run with `interpret=True` (the CPU PJRT
+plugin cannot execute Mosaic custom-calls), so the tiling documents the
+intended TPU schedule while numerics are verified through the interpreter.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VPU lane width; also the last-dim tile for f32 in VMEM.
+LANES = 128
+# Rows of 128 lanes per grid step: 512*128*4B*3 buffers ≈ 0.75 MB of VMEM.
+BLOCK_ROWS = 512
+
+
+def _reduce_kernel(acc_ref, src_ref, out_ref):
+    out_ref[...] = acc_ref[...] + src_ref[...]
+
+
+def reduce_chunks(acc, src):
+    """out = acc + src over equal-shaped 1-D f32 arrays.
+
+    The length must be a multiple of LANES; the AOT entry point fixes it to
+    `aot.REDUCE_ELEMS`. Rust-side callers segment arbitrary chunk sizes
+    into that quantum (see rust/src/runtime/reducer.rs).
+    """
+    (n,) = acc.shape
+    assert n % LANES == 0, f"length {n} not a multiple of {LANES}"
+    rows = n // LANES
+    block_rows = min(rows, BLOCK_ROWS)
+    assert rows % block_rows == 0, f"{rows} rows not divisible by {block_rows}"
+    grid = rows // block_rows
+    a2 = acc.reshape(rows, LANES)
+    s2 = src.reshape(rows, LANES)
+    out = pl.pallas_call(
+        _reduce_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), acc.dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        interpret=True,
+    )(a2, s2)
+    return out.reshape(n)

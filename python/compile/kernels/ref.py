@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer 1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (`python/tests/test_kernels.py`) asserts allclose between the two
+across a hypothesis-driven sweep of shapes and dtypes. The same references
+define the backward passes (the Pallas kernels ride the forward path only;
+see `layernorm.py` for the custom_vjp wiring).
+"""
+
+import jax.numpy as jnp
+
+
+def reduce_ref(acc, src):
+    """Chunk reduction: elementwise sum — the datapath of the GC3 runtime's
+    reduce / rrc / rrcs instructions (paper §4.1)."""
+    return acc + src
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """Row-wise layer normalization over the last axis."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

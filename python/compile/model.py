@@ -1,0 +1,148 @@
+"""Layer-2: the JAX transformer LM whose gradients ride GC3 collectives.
+
+This is the build-time half of the end-to-end driver: a byte-level
+decoder-only transformer (pre-LN, learned positions, weight-tied head)
+whose `train_step` (fwd + bwd + loss) and `sgd_update` are AOT-lowered to
+HLO text by `aot.py` and executed per data-parallel rank by the Rust
+coordinator. Parameters and gradients live in ONE flat f32 buffer so the
+Rust side can all-reduce them through a GC3-EF byte-accurately.
+
+LayerNorm runs through the Layer-1 Pallas kernel
+(`kernels.layernorm`), so the kernel lowers into the same HLO artifact the
+Rust runtime loads — Python never runs at training time.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.layernorm import layernorm
+
+VOCAB = 256  # byte-level
+
+
+@dataclass(frozen=True)
+class Config:
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    seq_len: int = 128
+    batch: int = 8
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+#: Named model sizes; selected by GC3_MODEL / aot.py --model.
+CONFIGS = {
+    # ~3.3M params: CI-friendly end-to-end runs.
+    "small": Config(),
+    # ~13M params: the default EXPERIMENTS.md run.
+    "base": Config(d_model=384, n_layers=8, n_heads=8, d_ff=1536, seq_len=128, batch=8),
+    # ~86M params: the paper-scale substitute (GPT-2-small shape); slow on CPU.
+    "big": Config(d_model=768, n_layers=12, n_heads=12, d_ff=3072, seq_len=256, batch=4),
+}
+
+
+def init_params(cfg: Config, key):
+    """GPT-2-style init: N(0, 0.02), residual projections scaled down."""
+
+    def dense(key, fan_in, fan_out, scale=0.02):
+        return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale
+
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+    resid_scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    params = {
+        "wte": jax.random.normal(next(keys), (VOCAB, cfg.d_model), jnp.float32) * 0.02,
+        "wpe": jax.random.normal(next(keys), (cfg.seq_len, cfg.d_model), jnp.float32) * 0.01,
+        "ln_f": {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)},
+        "blocks": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["blocks"].append(
+            {
+                "ln1": {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)},
+                "ln2": {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)},
+                "wqkv": dense(next(keys), cfg.d_model, 3 * cfg.d_model),
+                "wo": jax.random.normal(next(keys), (cfg.d_model, cfg.d_model)) * resid_scale,
+                "w1": dense(next(keys), cfg.d_model, cfg.d_ff),
+                "b1": jnp.zeros(cfg.d_ff),
+                "w2": jax.random.normal(next(keys), (cfg.d_ff, cfg.d_model)) * resid_scale,
+                "b2": jnp.zeros(cfg.d_model),
+            }
+        )
+    return params
+
+
+def _attention(cfg: Config, block, x):
+    b, s, d = x.shape
+    qkv = x @ block["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    shape = (b, s, cfg.n_heads, cfg.d_head)
+    q, k, v = (t.reshape(shape).transpose(0, 2, 1, 3) for t in (q, k, v))
+    att = (q @ k.transpose(0, 1, 3, 2)) / cfg.d_head**0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ block["wo"]
+
+
+def forward(cfg: Config, params, tokens):
+    """tokens [B, S] int32 → logits [B, S, VOCAB]."""
+    b, s = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][:s]
+    for block in params["blocks"]:
+        h = layernorm(x, block["ln1"]["g"], block["ln1"]["b"])
+        x = x + _attention(cfg, block, h)
+        h = layernorm(x, block["ln2"]["g"], block["ln2"]["b"])
+        h = jax.nn.gelu(h @ block["w1"] + block["b1"])
+        x = x + h @ block["w2"] + block["b2"]
+    x = layernorm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    return x @ params["wte"].T  # tied head
+
+
+def loss_fn(cfg: Config, params, batch):
+    """batch [B, S+1] int32 → mean next-token cross-entropy."""
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def make_flat_fns(cfg: Config, seed: int = 0):
+    """Build the flat-buffer entry points `aot.py` lowers.
+
+    Returns `(flat0, train_step, sgd_update)` where
+
+    * `flat0` — the initial parameter vector (f32[P]);
+    * `train_step(flat, batch) -> (flat_grads, loss)`;
+    * `sgd_update(flat, flat_grads, lr) -> flat'`.
+    """
+    params0 = init_params(cfg, jax.random.PRNGKey(seed))
+    flat0, unravel = ravel_pytree(params0)
+
+    @functools.partial(jax.jit)
+    def train_step(flat, batch):
+        def f(flat_):
+            return loss_fn(cfg, unravel(flat_), batch)
+
+        loss, grads = jax.value_and_grad(f)(flat)
+        return grads, loss
+
+    @functools.partial(jax.jit)
+    def sgd_update(flat, flat_grads, lr):
+        return flat - lr * flat_grads
+
+    return flat0, train_step, sgd_update
+
+
+def num_params(cfg: Config) -> int:
+    flat0, _, _ = make_flat_fns(cfg)
+    return flat0.shape[0]

@@ -1,0 +1,83 @@
+"""Layer-2 correctness: transformer shapes, gradients, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+TINY = model.Config(d_model=32, n_layers=2, n_heads=4, d_ff=64, seq_len=16, batch=2)
+
+
+def _batch(key, cfg):
+    return jax.random.randint(key, (cfg.batch, cfg.seq_len + 1), 0, model.VOCAB)
+
+
+def test_forward_shapes():
+    params = model.init_params(TINY, jax.random.PRNGKey(0))
+    tokens = _batch(jax.random.PRNGKey(1), TINY)[:, :-1]
+    logits = model.forward(TINY, params, tokens)
+    assert logits.shape == (TINY.batch, TINY.seq_len, model.VOCAB)
+
+
+def test_initial_loss_near_uniform():
+    params = model.init_params(TINY, jax.random.PRNGKey(0))
+    loss = model.loss_fn(TINY, params, _batch(jax.random.PRNGKey(1), TINY))
+    assert abs(loss - np.log(model.VOCAB)) < 0.5, loss
+
+
+def test_flat_roundtrip_and_grads():
+    flat0, train_step, sgd_update = model.make_flat_fns(TINY)
+    batch = _batch(jax.random.PRNGKey(2), TINY)
+    grads, loss = train_step(flat0, batch)
+    assert grads.shape == flat0.shape
+    assert np.isfinite(loss)
+    assert np.isfinite(np.asarray(grads)).all()
+    assert np.abs(np.asarray(grads)).max() > 0
+    new = sgd_update(flat0, grads, jnp.float32(0.1))
+    assert not np.allclose(new, flat0)
+
+
+def test_sgd_loss_decreases():
+    flat0, train_step, sgd_update = model.make_flat_fns(TINY)
+    key = jax.random.PRNGKey(3)
+    # Overfit a single fixed batch for a few steps.
+    batch = _batch(key, TINY)
+    flat = flat0
+    losses = []
+    for _ in range(8):
+        grads, loss = train_step(flat, batch)
+        losses.append(float(loss))
+        flat = sgd_update(flat, grads, jnp.float32(0.5))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_causality():
+    # Changing a future token must not change past logits.
+    params = model.init_params(TINY, jax.random.PRNGKey(0))
+    tokens = np.asarray(_batch(jax.random.PRNGKey(4), TINY)[:, :-1])
+    logits_a = model.forward(TINY, params, jnp.asarray(tokens))
+    tokens_b = tokens.copy()
+    tokens_b[:, -1] = (tokens_b[:, -1] + 1) % model.VOCAB
+    logits_b = model.forward(TINY, params, jnp.asarray(tokens_b))
+    np.testing.assert_allclose(
+        logits_a[:, : -1], logits_b[:, : -1], rtol=1e-5, atol=1e-5
+    )
+    assert not np.allclose(logits_a[:, -1], logits_b[:, -1])
+
+
+def test_param_counts_scale():
+    small = model.num_params(model.CONFIGS["small"])
+    base = model.num_params(model.CONFIGS["base"])
+    assert 3.0e6 < small < 4.0e6, small
+    assert 1.0e7 < base < 2.0e7, base
+
+
+@pytest.mark.parametrize("name", ["small"])
+def test_named_config_trains(name):
+    cfg = model.CONFIGS[name]
+    flat0, train_step, _ = model.make_flat_fns(cfg)
+    batch = _batch(jax.random.PRNGKey(0), cfg)
+    grads, loss = train_step(flat0, batch)
+    assert np.isfinite(loss) and np.isfinite(np.asarray(grads)).all()

@@ -1,0 +1,329 @@
+//! Evaluation harness: regenerates every figure of §6 plus the ablations.
+//!
+//! Each `figN` function returns the figure's series as rows of
+//! `(size, [(series name, algbw GB/s)])`, priced on the simulator (GC3 and
+//! handwritten schedules) or the NCCL closed-form model where NCCL's
+//! grouped-p2p structure can't be expressed as GC3-EF (see
+//! [`crate::nccl::alltoall`]). `benches/*.rs` and `gc3 figures` print
+//! them; EXPERIMENTS.md records paper-vs-measured shapes.
+
+use crate::collectives::{allreduce, alltonext, basics};
+use crate::compiler::{compile, CompileOpts, Compiled};
+use crate::core::Result;
+use crate::dsl::Trace;
+use crate::ef::EfProgram;
+use crate::nccl;
+use crate::sched::SchedOpts;
+use crate::sim::{simulate, Protocol};
+use crate::topology::Topology;
+use crate::util::human_bytes;
+
+/// One x-axis point of a figure.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub size: u64,
+    /// (series, algorithmic bandwidth GB/s).
+    pub series: Vec<(String, f64)>,
+}
+
+/// Standard log-spaced size sweep `lo..=hi` (both powers of two).
+pub fn size_sweep(lo: u64, hi: u64) -> Vec<u64> {
+    let mut v = Vec::new();
+    let mut s = lo;
+    while s <= hi {
+        v.push(s);
+        s *= 4;
+    }
+    v
+}
+
+fn gbps(size: u64, time: f64) -> f64 {
+    size as f64 / time / 1e9
+}
+
+fn opts_for(topo: &Topology) -> CompileOpts {
+    CompileOpts { sched: SchedOpts { sm_count: topo.sm_count }, ..Default::default() }
+}
+
+fn compile_cached(trace: &Trace, name: &str, opts: &CompileOpts) -> Result<Compiled> {
+    compile(trace, name, opts)
+}
+
+/// Fig. 7: AllToAll algorithmic bandwidth on `nodes` × 8 A100.
+/// Series: GC3 two-step, handwritten two-step, NCCL p2p, theoretical bound.
+pub fn fig7(nodes: usize, sizes: &[u64]) -> Result<Vec<Row>> {
+    let topo = Topology::a100(nodes);
+    let trace = crate::collectives::alltoall::two_step(nodes, topo.gpus_per_node)?;
+    let gc3 = compile_cached(&trace, "gc3_alltoall", &opts_for(&topo))?.ef;
+    let hw1 = compile_cached(
+        &nccl::alltoall::handwritten_step1(nodes, topo.gpus_per_node)?,
+        "hw1",
+        &opts_for(&topo),
+    )?
+    .ef;
+    let hw2 = compile_cached(
+        &nccl::alltoall::handwritten_step2(nodes, topo.gpus_per_node)?,
+        "hw2",
+        &opts_for(&topo),
+    )?
+    .ef;
+    let bound = topo.alltoall_bound() / 1e9;
+    let mut rows = Vec::new();
+    for &size in sizes {
+        let t_gc3 = simulate(&gc3, &topo, size)?.time;
+        // Handwritten: both steps simulated + barrier + extra copy (§6.1).
+        let t1 = simulate(&hw1, &topo, size)?.time;
+        let t2 = simulate(&hw2, &topo, size)?.time;
+        let cross = size as f64 * (nodes as f64 - 1.0) / nodes as f64;
+        let t_hw = t1 + 15.0e-6 + cross / topo.nvlink_gpu_bw * 2.0 + t2;
+        let t_nccl = nccl::alltoall::nccl_time(&topo, size);
+        rows.push(Row {
+            size,
+            series: vec![
+                ("GC3".into(), gbps(size, t_gc3)),
+                ("handwritten".into(), gbps(size, t_hw)),
+                ("NCCL".into(), gbps(size, t_nccl)),
+                ("theoretical".into(), bound),
+            ],
+        });
+    }
+    Ok(rows)
+}
+
+/// Fig. 8b: AllReduce on one 8×A100 node. Series: GC3 ring (8 tb × 4
+/// instances, LL128 — the paper's best schedule) vs NCCL (model-based
+/// tuner over its algorithm/protocol grid).
+pub fn fig8(sizes: &[u64]) -> Result<Vec<Row>> {
+    let topo = Topology::a100_single();
+    let ring = allreduce::ring(8, true)?;
+    let gc3 = compile(
+        &ring,
+        "gc3_ring",
+        &CompileOpts { instances: 4, protocol: Protocol::LL128, ..opts_for(&topo) },
+    )?
+    .ef;
+    let mut rows = Vec::new();
+    for &size in sizes {
+        let t_gc3 = simulate(&gc3, &topo, size)?.time;
+        let (_, choice, t_nccl) = nccl::allreduce::build_best(&topo, size)?;
+        rows.push(Row {
+            size,
+            series: vec![
+                ("GC3 ring".into(), gbps(size, t_gc3)),
+                (format!("NCCL ({:?}/{})", choice.algo, choice.proto), gbps(size, t_nccl)),
+            ],
+        });
+    }
+    Ok(rows)
+}
+
+/// Fig. 9: Hierarchical AllReduce on 2 × NDv2. GC3, like any good GC3
+/// program, is compiled per size class (best protocol); the NCCL columns
+/// show both of NCCL's algorithms — the 16-GPU flat ring the paper's NCCL
+/// ran on NDv2 and the (stronger) topology tree for reference.
+pub fn fig9(sizes: &[u64]) -> Result<Vec<Row>> {
+    let topo = Topology::ndv2(2);
+    let hier = allreduce::hierarchical(2, topo.gpus_per_node)?;
+    let gc3_efs: Vec<EfProgram> = Protocol::all()
+        .iter()
+        .map(|&p| Ok(compile(&hier, "gc3_hier", &CompileOpts { protocol: p, ..opts_for(&topo) })?.ef))
+        .collect::<Result<_>>()?;
+    let mut rows = Vec::new();
+    for &size in sizes {
+        let mut t_gc3 = f64::INFINITY;
+        for ef in &gc3_efs {
+            t_gc3 = t_gc3.min(simulate(ef, &topo, size)?.time);
+        }
+        let mut t_ring = f64::INFINITY;
+        let mut t_tree = f64::INFINITY;
+        for proto in Protocol::all() {
+            let nch = nccl::tuner::channels_for(size);
+            let ring = nccl::allreduce::build_choice(
+                &topo,
+                nccl::Choice { algo: nccl::Algo::Ring, proto, nchannels: nch },
+            )?;
+            t_ring = t_ring.min(simulate(&ring, &topo, size)?.time);
+            let tree = nccl::allreduce::build_choice(
+                &topo,
+                nccl::Choice { algo: nccl::Algo::Tree, proto, nchannels: nch },
+            )?;
+            t_tree = t_tree.min(simulate(&tree, &topo, size)?.time);
+        }
+        rows.push(Row {
+            size,
+            series: vec![
+                ("GC3 hierarchical".into(), gbps(size, t_gc3)),
+                ("NCCL ring-16".into(), gbps(size, t_ring)),
+                ("NCCL tree".into(), gbps(size, t_tree)),
+            ],
+        });
+    }
+    Ok(rows)
+}
+
+/// Fig. 11: AllToNext over 3 nodes × 8 A100 vs the single-send baseline.
+pub fn fig11(sizes: &[u64]) -> Result<Vec<Row>> {
+    let topo = Topology::a100(3);
+    let g = topo.gpus_per_node;
+    let a2n = compile_cached(&alltonext::alltonext(3, g)?, "gc3_alltonext", &opts_for(&topo))?.ef;
+    let base = compile_cached(&alltonext::baseline(3, g)?, "baseline", &opts_for(&topo))?.ef;
+    let mut rows = Vec::new();
+    for &size in sizes {
+        let t_gc3 = simulate(&a2n, &topo, size)?.time;
+        let t_base = simulate(&base, &topo, size)?.time;
+        rows.push(Row {
+            size,
+            series: vec![
+                ("GC3 AllToNext".into(), gbps(size, t_gc3)),
+                ("baseline send".into(), gbps(size, t_base)),
+            ],
+        });
+    }
+    Ok(rows)
+}
+
+/// §6.2 schedule ablation at fixed resources: 8 tb × 4 instances vs
+/// 1 tb × 32 instances vs 1 tb × 24 (NCCL's channel count) vs automatic.
+pub fn abl_schedule(sizes: &[u64]) -> Result<Vec<Row>> {
+    let topo = Topology::a100_single();
+    let mk = |trace: &Trace, inst: usize| -> Result<EfProgram> {
+        Ok(compile(
+            trace,
+            "abl",
+            &CompileOpts { instances: inst, protocol: Protocol::LL128, ..opts_for(&topo) },
+        )?
+        .ef)
+    };
+    let ring8 = allreduce::ring(8, true)?;
+    let ring1 = allreduce::ring_one_tb(8)?;
+    let auto = allreduce::ring(8, false)?;
+    let efs = vec![
+        ("8tb x 4inst".to_string(), mk(&ring8, 4)?),
+        ("1tb x 32inst".to_string(), mk(&ring1, 32)?),
+        ("1tb x 24inst".to_string(), mk(&ring1, 24)?),
+        ("auto x 4inst".to_string(), mk(&auto, 4)?),
+    ];
+    let mut rows = Vec::new();
+    for &size in sizes {
+        let mut series = Vec::new();
+        for (name, ef) in &efs {
+            series.push((name.clone(), gbps(size, simulate(ef, &topo, size)?.time)));
+        }
+        rows.push(Row { size, series });
+    }
+    Ok(rows)
+}
+
+/// §4.3 protocol ablation on the GC3 ring.
+pub fn abl_protocols(sizes: &[u64]) -> Result<Vec<Row>> {
+    let topo = Topology::a100_single();
+    let ring = allreduce::ring(8, true)?;
+    let efs: Vec<(String, EfProgram)> = Protocol::all()
+        .iter()
+        .map(|&p| {
+            Ok((
+                p.name().to_string(),
+                compile(
+                    &ring,
+                    "abl",
+                    &CompileOpts { instances: 4, protocol: p, ..opts_for(&topo) },
+                )?
+                .ef,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    let mut rows = Vec::new();
+    for &size in sizes {
+        let mut series = Vec::new();
+        for (name, ef) in &efs {
+            series.push((name.clone(), gbps(size, simulate(ef, &topo, size)?.time)));
+        }
+        rows.push(Row { size, series });
+    }
+    Ok(rows)
+}
+
+/// §5.3.1 fusion ablation: instruction counts and simulated time with the
+/// peephole passes on/off, on the ring AllReduce and AllGather.
+pub fn abl_fusion(size: u64) -> Result<Vec<(String, usize, usize, f64, f64)>> {
+    let topo = Topology::a100_single();
+    let cases: Vec<(&str, Trace)> = vec![
+        ("ring_allreduce", allreduce::ring(8, true)?),
+        ("allgather_ring", basics::allgather_ring(8)?),
+        ("reduce_scatter", basics::reduce_scatter_ring(8)?),
+    ];
+    let mut out = Vec::new();
+    for (name, trace) in cases {
+        let fused = compile(&trace, name, &CompileOpts { protocol: Protocol::LL128, ..opts_for(&topo) })?;
+        let raw = compile(
+            &trace,
+            name,
+            &CompileOpts { protocol: Protocol::LL128, ..opts_for(&topo) }.without_fusion(),
+        )?;
+        let t_fused = simulate(&fused.ef, &topo, size)?.time;
+        let t_raw = simulate(&raw.ef, &topo, size)?.time;
+        out.push((
+            name.to_string(),
+            raw.stats.insts_after_fusion,
+            fused.stats.insts_after_fusion,
+            t_raw * 1e6,
+            t_fused * 1e6,
+        ));
+    }
+    Ok(out)
+}
+
+/// §6 "all algorithms under 30 lines": the DSL line counts.
+pub fn loc_table(topo: &Topology) -> Result<Vec<(String, usize, usize)>> {
+    Ok(crate::collectives::library(topo)?
+        .into_iter()
+        .map(|p| (p.name.to_string(), p.dsl_lines, p.trace.op_count()))
+        .collect())
+}
+
+/// Render rows as an aligned text table.
+pub fn render(title: &str, rows: &[Row]) -> String {
+    let mut out = format!("== {title}\n");
+    if rows.is_empty() {
+        return out;
+    }
+    out.push_str(&format!("{:>10}", "size"));
+    for (name, _) in &rows[0].series {
+        out.push_str(&format!("  {:>22}", name));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&format!("{:>10}", human_bytes(row.size)));
+        for (_, v) in &row.series {
+            out.push_str(&format!("  {:>20.2}GB", v));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_is_log_spaced() {
+        let s = size_sweep(1024, 1 << 20);
+        assert_eq!(s, vec![1024, 4096, 16384, 65536, 262144, 1048576]);
+    }
+
+    #[test]
+    fn fig11_small_has_both_series() {
+        let rows = fig11(&[64 * 1024]).unwrap();
+        assert_eq!(rows[0].series.len(), 2);
+        assert!(rows[0].series.iter().all(|(_, v)| *v > 0.0));
+    }
+
+    #[test]
+    fn render_contains_sizes() {
+        let rows = vec![Row { size: 2 * 1024 * 1024, series: vec![("a".into(), 1.5)] }];
+        let s = render("t", &rows);
+        assert!(s.contains("2MB"));
+        assert!(s.contains("1.50GB"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Symbolic postcondition checking for traced programs (§3.2).
+//!
+//! After the Chunk DAG is built the final symbolic state maps every live
+//! slot to the set of input chunks reduced into it. This pass compares that
+//! state against the collective's declared postcondition, giving the
+//! compiler-level guarantee that the *algorithm* is correct before any
+//! scheduling happens. (The functional executor re-checks the same property
+//! numerically on the scheduled GC3-EF — see [`crate::exec`].)
+
+use super::ChunkDag;
+use crate::core::{Gc3Error, Result};
+use crate::dsl::collective::fmt_val;
+
+/// Check the collective postcondition on the final symbolic state.
+pub fn check_postcondition(dag: &ChunkDag) -> Result<()> {
+    for (slot, expected) in &dag.spec.postcondition {
+        match dag.final_state.get(slot) {
+            None => {
+                return Err(Gc3Error::Postcondition {
+                    slot: *slot,
+                    expected: fmt_val(expected),
+                    found: "<never written>".to_string(),
+                })
+            }
+            Some(found) if found != expected => {
+                return Err(Gc3Error::Postcondition {
+                    slot: *slot,
+                    expected: fmt_val(expected),
+                    found: fmt_val(found),
+                })
+            }
+            Some(_) => {}
+        }
+    }
+    Ok(())
+}
+
+/// Full validation: acyclicity + postcondition.
+pub fn validate(dag: &ChunkDag) -> Result<()> {
+    dag.check_acyclic()?;
+    check_postcondition(dag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::BufferId;
+    use crate::dsl::collective::CollectiveSpec;
+    use crate::dsl::{Program, SchedHint};
+
+    #[test]
+    fn correct_allgather_passes() {
+        let ranks = 3;
+        let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
+        for r in 0..ranks {
+            let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
+            let local = p.copy(c, BufferId::Output, r, r, SchedHint::none()).unwrap();
+            let mut cur = local;
+            // Ring-broadcast r's chunk around.
+            for step in 1..ranks {
+                let dst = (r + step) % ranks;
+                cur = p.copy(cur, BufferId::Output, dst, r, SchedHint::none()).unwrap();
+            }
+        }
+        let dag = ChunkDag::build(&p.finish().unwrap()).unwrap();
+        validate(&dag).unwrap();
+    }
+
+    #[test]
+    fn missing_write_fails() {
+        let ranks = 2;
+        let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
+        // Only rank 0 distributes its chunk; rank 1's chunk never moves.
+        let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        let c = p.copy(c, BufferId::Output, 0, 0, SchedHint::none()).unwrap();
+        p.copy(c, BufferId::Output, 1, 0, SchedHint::none()).unwrap();
+        let dag = ChunkDag::build(&p.finish().unwrap()).unwrap();
+        let err = check_postcondition(&dag).unwrap_err();
+        assert!(matches!(err, Gc3Error::Postcondition { .. }));
+    }
+
+    #[test]
+    fn wrong_routing_fails() {
+        // "AllGather" that swaps the two chunks' output slots.
+        let mut p = Program::new(CollectiveSpec::allgather(2, 1));
+        for r in 0..2 {
+            let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
+            let c = p.copy(c, BufferId::Output, r, 1 - r, SchedHint::none()).unwrap();
+            p.copy(c, BufferId::Output, 1 - r, 1 - r, SchedHint::none()).unwrap();
+        }
+        let dag = ChunkDag::build(&p.finish().unwrap()).unwrap();
+        assert!(check_postcondition(&dag).is_err());
+    }
+
+    #[test]
+    fn partial_reduction_fails() {
+        // 3-rank allreduce that only reduces 2 contributions.
+        let mut p = Program::new(CollectiveSpec::allreduce(3, 1));
+        let c0 = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        let c1 = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+        let r = p.reduce(c1, c0, SchedHint::none()).unwrap();
+        let r = p.copy(r, BufferId::Input, 0, 0, SchedHint::none()).unwrap();
+        p.copy(r, BufferId::Input, 2, 0, SchedHint::none()).unwrap();
+        let dag = ChunkDag::build(&p.finish().unwrap()).unwrap();
+        let err = check_postcondition(&dag).unwrap_err();
+        match err {
+            Gc3Error::Postcondition { expected, found, .. } => {
+                assert!(expected.contains("in(2,0)"));
+                assert!(!found.contains("in(2,0)"));
+            }
+            other => panic!("unexpected error {other}"),
+        }
+    }
+
+    #[test]
+    fn unconstrained_slots_ignored() {
+        // AllToNext leaves rank 0's output unconstrained: writing garbage
+        // there must not fail validation.
+        let mut p = Program::new(CollectiveSpec::alltonext(2, 1));
+        let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        p.copy(c, BufferId::Output, 1, 0, SchedHint::none()).unwrap();
+        let junk = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+        p.copy(junk, BufferId::Output, 0, 0, SchedHint::none()).unwrap();
+        let dag = ChunkDag::build(&p.finish().unwrap()).unwrap();
+        validate(&dag).unwrap();
+    }
+}

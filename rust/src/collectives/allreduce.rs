@@ -1,0 +1,192 @@
+//! AllReduce programs: the §6.2 Ring (Fig. 8a) and the §6.3 Hierarchical
+//! algorithm.
+
+use crate::core::{BufferId, Rank, Result};
+use crate::dsl::collective::CollectiveSpec;
+use crate::dsl::{Program, SchedHint, Trace};
+
+/// Fig. 8a: Ring AllReduce over `ranks` GPUs, in place, `ranks` chunks.
+///
+/// Chunk `i` starts at rank `i`, rides the ring twice — once reducing,
+/// once broadcasting. With `manual = true` the paper's hand schedule is
+/// applied: chunk `i`'s entire ring runs on threadblock `i` / channel `i`
+/// of every GPU ("divides a single logical ring into 8 threadblocks so
+/// that every chunk is processed in its own threadblock"). Replicate with
+/// [`crate::instdag::instances::replicate`] ×4 for the paper's best
+/// schedule (32 threadblocks / 32 channels).
+pub fn ring(ranks: usize, manual: bool) -> Result<Trace> {
+    let r_ = ranks;
+    let mut p = Program::new(CollectiveSpec::allreduce(r_, r_));
+    for i in 0..r_ {
+        let hint = if manual { SchedHint::tb(i, i, i) } else { SchedHint::none() };
+        // Chunk i starts at rank i.
+        let mut c = p.chunk(BufferId::Input, i, i, 1)?;
+        // First ring: compute the fully reduced chunk.
+        for step in 1..r_ {
+            let at = p.chunk(BufferId::Input, (i + step) % r_, i, 1)?;
+            c = p.reduce(at, c, hint)?;
+        }
+        // Second ring: broadcast the fully reduced chunk.
+        for step in r_ - 1..2 * r_ - 2 {
+            let dst = (i + step + 1) % r_;
+            c = p.copy(c, BufferId::Input, dst, i, hint)?;
+        }
+    }
+    p.finish()
+}
+
+/// The ablation schedule from §6.2: the whole ring on ONE threadblock /
+/// channel per GPU ("1 threadblock per ring"); instantiate ×32 to compare
+/// against 8 tb × 4 instances at equal resources.
+pub fn ring_one_tb(ranks: usize) -> Result<Trace> {
+    let r_ = ranks;
+    let mut p = Program::new(CollectiveSpec::allreduce(r_, r_));
+    let hint = SchedHint::tb(0, 0, 0);
+    for i in 0..r_ {
+        let mut c = p.chunk(BufferId::Input, i, i, 1)?;
+        for step in 1..r_ {
+            let at = p.chunk(BufferId::Input, (i + step) % r_, i, 1)?;
+            c = p.reduce(at, c, hint)?;
+        }
+        for step in r_ - 1..2 * r_ - 2 {
+            c = p.copy(c, BufferId::Input, (i + step + 1) % r_, i, hint)?;
+        }
+    }
+    p.finish()
+}
+
+/// §6.3 Hierarchical AllReduce over `nodes × gpus` ranks (NDv2 scenario).
+///
+/// Three phases, all expressed as one chunk-oriented program:
+///
+/// 1. *Intra-node ring reduce-scatter*: GPU `g` of each node ends holding
+///    the node-local sum of chunk `g`.
+/// 2. *Cross-node ring all-reduce* on each chunk `g` among the `nodes`
+///    GPUs with index `g` (for 2 nodes this is the paper's "two IB sends"
+///    exchange).
+/// 3. *Intra-node ring broadcast* of the now-global chunk `g`.
+///
+/// A 16-GPU flat ring crosses IB `2(R−1) = 30` times; this program crosses
+/// `2(N−1)` times per chunk — with chunks spread over all GPUs, each IB
+/// link carries two transfers total.
+pub fn hierarchical(nodes: usize, gpus: usize) -> Result<Trace> {
+    let g_ = gpus;
+    let rank = |n: usize, g: usize| -> Rank { n * g_ + g };
+    let mut p = Program::new(CollectiveSpec::allreduce(nodes * g_, g_));
+    // Channel directives (§5.4): chunk `g`'s pipeline rides channel `g`,
+    // and each *phase* gets its own channel block so the three phases land
+    // on separate threadblocks — otherwise a threadblock interleaving a
+    // phase-1 and a phase-3 instruction stalls the reduce pipeline on the
+    // broadcast's round-trip (head-of-line blocking across the tile loop).
+    let hint = |g: usize, phase: usize| SchedHint::chan(phase * g_ + g);
+
+    for g in 0..g_ {
+        for n in 0..nodes {
+            // Phase 1: ring reduce chunk g around node n, ending at gpu g.
+            let mut c = p.chunk(BufferId::Input, rank(n, (g + 1) % g_), g, 1)?;
+            for step in 2..=g_ {
+                let at = p.chunk(BufferId::Input, rank(n, (g + step) % g_), g, 1)?;
+                c = p.reduce(at, c, hint(g, 0))?;
+            }
+            // c now lives at rank(n, g) and holds node n's sum of chunk g.
+        }
+        // Phase 2: cross-node ring all-reduce among ranks (·, g).
+        let mut c = p.chunk(BufferId::Input, rank(1 % nodes, g), g, 1)?;
+        for n in 2..=nodes {
+            let at = p.chunk(BufferId::Input, rank(n % nodes, g), g, 1)?;
+            c = p.reduce(at, c, hint(g, 1))?;
+        }
+        // Global sum of chunk g is at rank(0, g); send it back around.
+        for n in 1..nodes {
+            c = p.copy(c, BufferId::Input, rank(n, g), g, hint(g, 1))?;
+        }
+        // Phase 3: broadcast chunk g around each node's ring.
+        for n in 0..nodes {
+            let mut c = p.chunk(BufferId::Input, rank(n, g), g, 1)?;
+            for step in 1..g_ {
+                c = p.copy(c, BufferId::Input, rank(n, (g + step) % g_), g, hint(g, 2))?;
+            }
+        }
+    }
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkdag::{validate::validate, ChunkDag};
+    use crate::compiler::{compile, CompileOpts};
+    use crate::exec::{verify, NativeReducer};
+    use crate::instdag::instances::replicate;
+
+    #[test]
+    fn ring_validates_all_sizes() {
+        for r in [2, 3, 4, 8] {
+            let t = ring(r, false).unwrap();
+            validate(&ChunkDag::build(&t).unwrap()).unwrap();
+            let c = compile(&t, "ar", &CompileOpts::default()).unwrap();
+            verify(&c.ef, &t.spec, 4, &mut NativeReducer)
+                .unwrap_or_else(|e| panic!("ring({r}): {e}"));
+        }
+    }
+
+    #[test]
+    fn ring_manual_schedule_shape() {
+        // The paper's schedule: 8 tbs and 8 channels per GPU, every chunk
+        // in its own threadblock.
+        let t = ring(8, true).unwrap();
+        let c = compile(&t, "ar8", &CompileOpts::default()).unwrap();
+        assert_eq!(c.stats.max_tbs, 8);
+        assert_eq!(c.stats.max_channels, 8);
+        verify(&c.ef, &t.spec, 4, &mut NativeReducer).unwrap();
+    }
+
+    #[test]
+    fn ring_x4_instances_is_32_channels() {
+        // 8 tb × 4 instances = 32 threadblocks and 32 channels (§6.2).
+        let t = ring(8, true).unwrap();
+        let c = compile(&t, "ar8x4", &CompileOpts::default().with_instances(4)).unwrap();
+        assert_eq!(c.stats.max_tbs, 32);
+        assert_eq!(c.stats.max_channels, 32);
+        verify(&c.ef, &t.spec.scaled(4), 4, &mut NativeReducer).unwrap();
+    }
+
+    #[test]
+    fn ring_one_tb_x_many() {
+        let t = ring_one_tb(4).unwrap();
+        let c = compile(&t, "ar1tb", &CompileOpts::default()).unwrap();
+        assert_eq!(c.stats.max_tbs, 1, "whole ring on one threadblock");
+        verify(&c.ef, &t.spec, 4, &mut NativeReducer).unwrap();
+        // ×8 instances → 8 tbs, one ring each.
+        let t8 = replicate(&t, 8);
+        let c8 = compile(&t8, "ar1tbx8", &CompileOpts::default()).unwrap();
+        assert_eq!(c8.stats.max_tbs, 8);
+        verify(&c8.ef, &t8.spec, 2, &mut NativeReducer).unwrap();
+    }
+
+    #[test]
+    fn hierarchical_validates_and_runs() {
+        for (n, g) in [(2, 2), (2, 4), (3, 3)] {
+            let t = hierarchical(n, g).unwrap();
+            validate(&ChunkDag::build(&t).unwrap())
+                .unwrap_or_else(|e| panic!("hier({n},{g}): {e}"));
+            let c = compile(&t, "hier", &CompileOpts::default()).unwrap();
+            verify(&c.ef, &t.spec, 4, &mut NativeReducer)
+                .unwrap_or_else(|e| panic!("hier({n},{g}): {e}"));
+        }
+    }
+
+    #[test]
+    fn hierarchical_ib_crossings() {
+        // Per chunk: 2(N-1) cross-node hops; 16-GPU flat ring would do
+        // 2(R-1)=30 total ring steps each crossing IB twice per lap.
+        let (n, g) = (2, 8);
+        let t = hierarchical(n, g).unwrap();
+        let crossings = t
+            .ops
+            .iter()
+            .filter(|o| o.is_remote() && o.src().rank / g != o.dst().rank / g)
+            .count();
+        assert_eq!(crossings, g * 2 * (n - 1), "2(N-1) IB hops per chunk");
+    }
+}

@@ -1,0 +1,118 @@
+//! AllToNext (§6.4, Fig. 10): the application-specific pipeline collective.
+//!
+//! GPU `i` sends its whole buffer to GPU `i+1`; the last GPU sends nothing.
+//! Within a node the transfer is one NVLink hop. Across nodes the naive
+//! single send uses exactly one of the node's `G` IB links — so GC3's
+//! AllToNext *scatters* the boundary GPU's buffer across all `G` GPUs of
+//! its node over NVLink, pushes `G` parallel IB transfers (one per NIC),
+//! and *gathers* on the receiving node, turning a 1-link transfer into a
+//! G-link one.
+
+use crate::core::{BufferId, Rank, Result};
+use crate::dsl::collective::CollectiveSpec;
+use crate::dsl::{Program, SchedHint, Trace};
+
+/// Fig. 10a: AllToNext over `nodes × gpus`, input divided into `gpus`
+/// chunks so the boundary buffer can be scattered one chunk per IB link.
+pub fn alltonext(nodes: usize, gpus: usize) -> Result<Trace> {
+    let g_ = gpus;
+    let rank = |n: usize, g: usize| -> Rank { n * g_ + g };
+    let mut p = Program::new(CollectiveSpec::alltonext(nodes * g_, g_));
+    for n in 0..nodes {
+        for g in 0..g_ {
+            if g != g_ - 1 {
+                // Direct intra-node send: whole buffer in one NVLink copy.
+                let c = p.chunk(BufferId::Input, rank(n, g), 0, g_)?;
+                p.copy(c, BufferId::Output, rank(n, g + 1), 0, SchedHint::none())?;
+                continue;
+            }
+            if n == nodes - 1 {
+                continue; // last rank sends nothing
+            }
+            // Cross-node boundary: use all G IB links by routing chunk i
+            // through helper GPU (n, i) and receiving helper (n+1, i).
+            for i in 0..g_ {
+                let c = p.chunk(BufferId::Input, rank(n, g_ - 1), i, 1)?;
+                if i == g_ - 1 {
+                    // The boundary GPU's own NIC: direct IB, then NVLink
+                    // into the destination's output.
+                    let c = p.copy(c, BufferId::Scratch, rank(n + 1, i), 0, SchedHint::chan(1))?;
+                    p.copy(c, BufferId::Output, rank(n + 1, 0), i, SchedHint::none())?;
+                } else {
+                    // Scatter over NVLink, IB on the helper's own link
+                    // (channel directive keeps the IB sends parallel),
+                    // gather over NVLink.
+                    let c = p.copy(c, BufferId::Scratch, rank(n, i), 0, SchedHint::none())?;
+                    let c = p.copy(c, BufferId::Scratch, rank(n + 1, i), 1, SchedHint::chan(1))?;
+                    p.copy(c, BufferId::Output, rank(n + 1, 0), i, SchedHint::none())?;
+                }
+            }
+        }
+    }
+    p.finish()
+}
+
+/// §6.4 baseline: every GPU sends its whole buffer straight to the next
+/// GPU (one NCCL p2p send) — the cross-node hop uses a single IB link.
+pub fn baseline(nodes: usize, gpus: usize) -> Result<Trace> {
+    let ranks = nodes * gpus;
+    let mut p = Program::new(CollectiveSpec::alltonext(ranks, gpus))
+;
+    for r in 0..ranks - 1 {
+        let c = p.chunk(BufferId::Input, r, 0, gpus)?;
+        p.copy(c, BufferId::Output, r + 1, 0, SchedHint::none())?;
+    }
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkdag::{validate::validate, ChunkDag};
+    use crate::compiler::{compile, CompileOpts};
+    use crate::exec::{verify, NativeReducer};
+
+    #[test]
+    fn alltonext_validates_and_runs() {
+        for (n, g) in [(2, 3), (3, 2), (2, 4), (3, 8)] {
+            let t = alltonext(n, g).unwrap();
+            validate(&ChunkDag::build(&t).unwrap())
+                .unwrap_or_else(|e| panic!("a2n({n},{g}): {e}"));
+            let c = compile(&t, "a2n", &CompileOpts::default()).unwrap();
+            verify(&c.ef, &t.spec, 4, &mut NativeReducer)
+                .unwrap_or_else(|e| panic!("a2n({n},{g}): {e}"));
+        }
+    }
+
+    #[test]
+    fn baseline_validates_and_runs() {
+        let t = baseline(3, 2).unwrap();
+        validate(&ChunkDag::build(&t).unwrap()).unwrap();
+        let c = compile(&t, "a2n_base", &CompileOpts::default()).unwrap();
+        verify(&c.ef, &t.spec, 4, &mut NativeReducer).unwrap();
+    }
+
+    #[test]
+    fn alltonext_uses_all_ib_links() {
+        let (n, g) = (2, 4);
+        let t = alltonext(n, g).unwrap();
+        // Cross-node transfers: one per (boundary, helper) pair = G per
+        // node boundary, each from a distinct source GPU (≈ its own NIC).
+        let mut ib_srcs: Vec<usize> = t
+            .ops
+            .iter()
+            .filter(|o| o.is_remote() && o.src().rank / g != o.dst().rank / g)
+            .map(|o| o.src().rank)
+            .collect();
+        ib_srcs.sort_unstable();
+        ib_srcs.dedup();
+        assert_eq!(ib_srcs.len(), g, "each of the G GPUs drives one IB link");
+        let b = baseline(n, g).unwrap();
+        let ib_b: Vec<_> = b
+            .ops
+            .iter()
+            .filter(|o| o.is_remote() && o.src().rank / g != o.dst().rank / g)
+            .collect();
+        assert_eq!(ib_b.len(), 1, "baseline uses a single IB link");
+    }
+}

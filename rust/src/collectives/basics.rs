@@ -1,0 +1,119 @@
+//! Ring implementations of the MPI staples: AllGather, ReduceScatter,
+//! Broadcast. These exercise the compiler the same way NCCL's core
+//! algorithms do and serve as substrates for the hierarchical programs.
+
+use crate::core::{BufferId, Result};
+use crate::dsl::collective::CollectiveSpec;
+use crate::dsl::{Program, SchedHint, Trace};
+
+/// Ring AllGather: rank `r`'s chunk hops around the ring `R−1` times.
+pub fn allgather_ring(ranks: usize) -> Result<Trace> {
+    let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
+    for r in 0..ranks {
+        let c = p.chunk(BufferId::Input, r, 0, 1)?;
+        let mut cur = p.copy(c, BufferId::Output, r, r, SchedHint::none())?;
+        for step in 1..ranks {
+            cur = p.copy(cur, BufferId::Output, (r + step) % ranks, r, SchedHint::none())?;
+        }
+    }
+    p.finish()
+}
+
+/// Ring ReduceScatter: chunk `d` accumulates around the ring and lands at
+/// rank `d`'s single-chunk output.
+pub fn reduce_scatter_ring(ranks: usize) -> Result<Trace> {
+    let mut p = Program::new(CollectiveSpec::reduce_scatter(ranks, 1));
+    for d in 0..ranks {
+        // Start at the successor of d, so the sum finishes at rank d.
+        let first = (d + 1) % ranks;
+        let mut c = p.chunk(BufferId::Input, first, d, 1)?;
+        for step in 2..=ranks {
+            let at = p.chunk(BufferId::Input, (d + step) % ranks, d, 1)?;
+            c = p.reduce(at, c, SchedHint::none())?;
+        }
+        // c is the full sum, resident at rank d's input; move to output.
+        p.copy(c, BufferId::Output, d, 0, SchedHint::none())?;
+    }
+    p.finish()
+}
+
+/// Ring Broadcast from `root`.
+pub fn broadcast_ring(ranks: usize, root: usize) -> Result<Trace> {
+    let mut p = Program::new(CollectiveSpec::broadcast(ranks, root, 1));
+    let c = p.chunk(BufferId::Input, root, 0, 1)?;
+    let mut cur = p.copy(c, BufferId::Output, root, 0, SchedHint::none())?;
+    for step in 1..ranks {
+        cur = p.copy(cur, BufferId::Output, (root + step) % ranks, 0, SchedHint::none())?;
+    }
+    p.finish()
+}
+
+/// Binary-tree Broadcast from `root` — lower latency than the ring for
+/// small buffers; used by the NCCL baseline's tree algorithms.
+pub fn broadcast_tree(ranks: usize, root: usize) -> Result<Trace> {
+    let mut p = Program::new(CollectiveSpec::broadcast(ranks, root, 1));
+    // Relabel so the root is rank 0 of a heap-ordered binary tree.
+    let relabel = |v: usize| (v + root) % ranks;
+    let c = p.chunk(BufferId::Input, root, 0, 1)?;
+    p.copy(c, BufferId::Output, root, 0, SchedHint::none())?;
+    // BFS order guarantees parents are written before children read.
+    for v in 0..ranks {
+        for child in [2 * v + 1, 2 * v + 2] {
+            if child < ranks {
+                let c = p.chunk(BufferId::Output, relabel(v), 0, 1)?;
+                p.copy(c, BufferId::Output, relabel(child), 0, SchedHint::none())?;
+            }
+        }
+    }
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkdag::{validate::validate, ChunkDag};
+    use crate::compiler::{compile, CompileOpts};
+    use crate::exec::{verify, NativeReducer};
+
+    #[test]
+    fn reduce_scatter_correct() {
+        for r in [2, 3, 5, 8] {
+            let t = reduce_scatter_ring(r).unwrap();
+            validate(&ChunkDag::build(&t).unwrap()).unwrap_or_else(|e| panic!("rs({r}): {e}"));
+            let c = compile(&t, "rs", &CompileOpts::default()).unwrap();
+            verify(&c.ef, &t.spec, 4, &mut NativeReducer).unwrap_or_else(|e| panic!("rs({r}): {e}"));
+        }
+    }
+
+    #[test]
+    fn broadcasts_correct() {
+        for root in [0, 2] {
+            for build in [broadcast_ring, broadcast_tree] {
+                let t = build(5, root).unwrap();
+                validate(&ChunkDag::build(&t).unwrap()).unwrap();
+                let c = compile(&t, "bc", &CompileOpts::default()).unwrap();
+                verify(&c.ef, &t.spec, 4, &mut NativeReducer).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn tree_is_shallower_than_ring() {
+        use crate::instdag::lower::lower;
+        use crate::sched::depths;
+        let ring = lower(&ChunkDag::build(&broadcast_ring(8, 0).unwrap()).unwrap()).unwrap();
+        let tree = lower(&ChunkDag::build(&broadcast_tree(8, 0).unwrap()).unwrap()).unwrap();
+        let max_depth = |d: &crate::instdag::InstDag| {
+            let (depth, _) = depths(d);
+            depth.into_iter().max().unwrap()
+        };
+        assert!(max_depth(&tree) < max_depth(&ring), "tree must cut the critical path");
+    }
+
+    #[test]
+    fn allgather_correct() {
+        let t = allgather_ring(6).unwrap();
+        let c = compile(&t, "ag", &CompileOpts::default()).unwrap();
+        verify(&c.ef, &t.spec, 3, &mut NativeReducer).unwrap();
+    }
+}

@@ -1,0 +1,157 @@
+//! The end-to-end GC3 compiler driver (Fig. 3 / Fig. 6).
+//!
+//! Chains every stage: instance replication (§5.3.2) → Chunk DAG tracing +
+//! validation (§5.1) → instruction generation (§5.2) → peephole fusion
+//! (§5.3.1) → threadblock assignment + synchronization insertion (§5.2,
+//! §5.4) → GC3-EF (§4.1).
+
+use crate::chunkdag::{validate::validate, ChunkDag};
+use crate::core::Result;
+use crate::dsl::Trace;
+use crate::ef::EfProgram;
+use crate::instdag::fusion::{fuse, FusionStats};
+use crate::instdag::{instances::replicate, lower::lower};
+use crate::sched::{emit_ef, SchedOpts, Schedule};
+use crate::sim::Protocol;
+
+/// Compiler options.
+#[derive(Clone, Debug)]
+pub struct CompileOpts {
+    /// Instance replication factor `r` (§5.3.2). 1 = no replication.
+    pub instances: usize,
+    /// Communication protocol the EF will run under (§4.3).
+    pub protocol: Protocol,
+    /// Enable the rcs/rrcs/rrs peephole passes (§5.3.1). On by default;
+    /// the fusion ablation bench turns it off.
+    pub fuse: bool,
+    pub sched: SchedOpts,
+}
+
+impl Default for CompileOpts {
+    fn default() -> Self {
+        CompileOpts {
+            instances: 1,
+            protocol: Protocol::Simple,
+            fuse: true,
+            sched: SchedOpts::default(),
+        }
+    }
+}
+
+impl CompileOpts {
+    pub fn with_protocol(mut self, p: Protocol) -> Self {
+        self.protocol = p;
+        self
+    }
+
+    pub fn with_instances(mut self, r: usize) -> Self {
+        self.instances = r;
+        self
+    }
+
+    pub fn without_fusion(mut self) -> Self {
+        self.fuse = false;
+        self
+    }
+}
+
+/// Statistics collected along the pipeline — surfaced by `gc3 compile -v`
+/// and the ablation benches.
+#[derive(Clone, Debug, Default)]
+pub struct CompileStats {
+    pub chunk_ops: usize,
+    pub insts_before_fusion: usize,
+    pub fusion: FusionStats,
+    pub insts_after_fusion: usize,
+    pub max_tbs: usize,
+    pub max_channels: usize,
+    pub nops_inserted: usize,
+}
+
+/// A compiled program: the GC3-EF plus pipeline statistics.
+#[derive(Clone, Debug)]
+pub struct Compiled {
+    pub ef: EfProgram,
+    pub stats: CompileStats,
+}
+
+/// Compile a traced GC3 program to GC3-EF.
+pub fn compile(trace: &Trace, name: &str, opts: &CompileOpts) -> Result<Compiled> {
+    let trace = replicate(trace, opts.instances);
+    let cdag = ChunkDag::build(&trace)?;
+    validate(&cdag)?;
+    let mut idag = lower(&cdag)?;
+    let mut stats = CompileStats {
+        chunk_ops: cdag.num_ops(),
+        insts_before_fusion: idag.live_count(),
+        ..Default::default()
+    };
+    if opts.fuse {
+        stats.fusion = fuse(&mut idag);
+    } else {
+        idag.compact();
+    }
+    stats.insts_after_fusion = idag.live_count();
+    let sched = Schedule::build(&idag, &opts.sched)?;
+    stats.max_tbs = sched.max_tbs();
+    stats.max_channels =
+        (0..idag.spec.num_ranks).map(|r| sched.channels_at(r)).max().unwrap_or(0);
+    let ef = emit_ef(&idag, &sched, opts.protocol, name)?;
+    stats.nops_inserted = ef.num_insts() - stats.insts_after_fusion;
+    Ok(Compiled { ef, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::BufferId;
+    use crate::dsl::collective::CollectiveSpec;
+    use crate::dsl::{Program, SchedHint};
+
+    fn ring_allgather(ranks: usize) -> Trace {
+        let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
+        for r in 0..ranks {
+            let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
+            let mut cur = p.copy(c, BufferId::Output, r, r, SchedHint::none()).unwrap();
+            for s in 1..ranks {
+                cur = p.copy(cur, BufferId::Output, (r + s) % ranks, r, SchedHint::none()).unwrap();
+            }
+        }
+        p.finish().unwrap()
+    }
+
+    #[test]
+    fn pipeline_produces_valid_ef() {
+        let c = compile(&ring_allgather(4), "ag4", &CompileOpts::default()).unwrap();
+        c.ef.validate().unwrap();
+        assert_eq!(c.ef.num_ranks, 4);
+        assert!(c.stats.fusion.rcs > 0, "ring relays must fuse: {:?}", c.stats);
+        assert!(c.stats.insts_after_fusion < c.stats.insts_before_fusion);
+    }
+
+    #[test]
+    fn instances_scale_chunks_and_tbs() {
+        let one = compile(&ring_allgather(4), "ag", &CompileOpts::default()).unwrap();
+        let four =
+            compile(&ring_allgather(4), "ag", &CompileOpts::default().with_instances(4)).unwrap();
+        assert_eq!(four.ef.in_chunks, 4 * one.ef.in_chunks);
+        assert_eq!(four.stats.max_tbs, 4 * one.stats.max_tbs);
+        four.ef.validate().unwrap();
+    }
+
+    #[test]
+    fn fusion_off_keeps_raw_instructions() {
+        let opts = CompileOpts::default().without_fusion();
+        let c = compile(&ring_allgather(3), "ag3", &opts).unwrap();
+        assert_eq!(c.stats.fusion, Default::default());
+        assert_eq!(c.stats.insts_before_fusion, c.stats.insts_after_fusion);
+    }
+
+    #[test]
+    fn sm_cap_enforced() {
+        let mut opts = CompileOpts::default().with_instances(8);
+        opts.sched.sm_count = 4;
+        let err = compile(&ring_allgather(8), "ag8", &opts).unwrap_err();
+        assert!(err.to_string().contains("threadblocks"), "{err}");
+    }
+}

@@ -1,0 +1,82 @@
+//! Lightweight run-time metrics for the coordinator and trainer.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Accumulating counters with section timers.
+#[derive(Default)]
+pub struct Metrics {
+    pub steps: usize,
+    pub collective_calls: usize,
+    pub bytes_reduced: u64,
+    pub compute_time: Duration,
+    pub comm_time: Duration,
+    pub update_time: Duration,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Time a closure into one of the buckets.
+    pub fn timed<T>(bucket: &mut Duration, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        *bucket += start.elapsed();
+        out
+    }
+
+    /// Fraction of wall time spent communicating — the number the §2 MoE
+    /// profile motivates watching.
+    pub fn comm_fraction(&self) -> f64 {
+        let total = (self.compute_time + self.comm_time + self.update_time).as_secs_f64();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.comm_time.as_secs_f64() / total
+        }
+    }
+}
+
+impl fmt::Display for Metrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "steps={} collectives={} reduced={}MB compute={:.2}s comm={:.2}s ({:.0}%) update={:.2}s",
+            self.steps,
+            self.collective_calls,
+            self.bytes_reduced / (1024 * 1024),
+            self.compute_time.as_secs_f64(),
+            self.comm_time.as_secs_f64(),
+            self.comm_fraction() * 100.0,
+            self.update_time.as_secs_f64(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_accumulates() {
+        let mut m = Metrics::new();
+        let v = Metrics::timed(&mut m.compute_time, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(m.compute_time >= Duration::from_millis(4));
+        Metrics::timed(&mut m.comm_time, || std::thread::sleep(Duration::from_millis(5)));
+        let frac = m.comm_fraction();
+        assert!(frac > 0.2 && frac < 0.8, "{frac}");
+    }
+
+    #[test]
+    fn display_is_stable() {
+        let m = Metrics::new();
+        let s = format!("{m}");
+        assert!(s.contains("steps=0"));
+    }
+}

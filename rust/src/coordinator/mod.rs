@@ -1,0 +1,201 @@
+//! The Layer-3 coordinator: collective registry, metrics, rank drivers.
+//!
+//! The paper positions GC3 as *API-compatible with NCCL*: frameworks keep
+//! calling `allReduce`/`allToAll`, and "in the case where there is no GC3
+//! custom kernel for a given collective … our runtime falls back on
+//! NCCL's implementation" (§1). [`Registry`] implements exactly that
+//! dispatch: a lookup of compiled GC3-EFs per (collective, topology,
+//! size-class), falling back to the NCCL baseline schedule when no custom
+//! program is registered or when the custom program's tuned size window
+//! doesn't cover the request.
+
+pub mod metrics;
+
+pub use metrics::Metrics;
+
+use crate::collectives::{allreduce, alltoall};
+use crate::compiler::{compile, CompileOpts};
+use crate::core::{Gc3Error, Result};
+use crate::ef::EfProgram;
+use crate::nccl;
+use crate::sched::SchedOpts;
+use crate::sim::Protocol;
+use crate::topology::Topology;
+use std::collections::HashMap;
+
+/// Which implementation served a request.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Backend {
+    /// A GC3-compiled custom kernel.
+    Gc3,
+    /// NCCL fallback (baseline schedule).
+    NcclFallback,
+}
+
+/// Keyed cache of compiled programs.
+pub struct Registry {
+    topo: Topology,
+    cache: HashMap<String, EfProgram>,
+    /// GC3 Ring AllReduce is tuned for this size window (§6.2: "optimized
+    /// … for these buffer sizes", 128 KB – 32 MB); outside it the registry
+    /// falls back to NCCL, which wins at >32 MB.
+    pub allreduce_window: (u64, u64),
+}
+
+impl Registry {
+    pub fn new(topo: Topology) -> Registry {
+        Registry {
+            topo,
+            cache: HashMap::new(),
+            allreduce_window: (128 * 1024, 32 * 1024 * 1024),
+        }
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    fn gc3_opts(&self, instances: usize, proto: Protocol) -> CompileOpts {
+        CompileOpts {
+            instances,
+            protocol: proto,
+            fuse: true,
+            sched: SchedOpts { sm_count: self.topo.sm_count },
+        }
+    }
+
+    /// AllReduce dispatch: GC3's tuned ring inside the window, NCCL
+    /// outside it.
+    pub fn allreduce(&mut self, size: u64) -> Result<(EfProgram, Backend)> {
+        let (lo, hi) = self.allreduce_window;
+        if size < lo || size > hi {
+            let key = format!("nccl_ar_{size}");
+            if !self.cache.contains_key(&key) {
+                let (ef, _) = nccl::allreduce::build(&self.topo, size)?;
+                self.cache.insert(key.clone(), ef);
+            }
+            return Ok((self.cache[&key].clone(), Backend::NcclFallback));
+        }
+        let key = "gc3_ar".to_string();
+        if !self.cache.contains_key(&key) {
+            let ranks = self.topo.num_ranks();
+            let ef = if self.topo.nodes > 1 {
+                // Multi-node: hierarchical AllReduce (§6.3).
+                let t = allreduce::hierarchical(self.topo.nodes, self.topo.gpus_per_node)?;
+                compile(&t, "gc3_allreduce_hier", &self.gc3_opts(1, Protocol::LL128))?.ef
+            } else {
+                // Single node: the paper's ring — 8 tb × 4 instances, LL128.
+                let t = allreduce::ring(ranks, true)?;
+                compile(&t, "gc3_allreduce_ring", &self.gc3_opts(4, Protocol::LL128))?.ef
+            };
+            self.cache.insert(key.clone(), ef);
+        }
+        Ok((self.cache[&key].clone(), Backend::Gc3))
+    }
+
+    /// AllToAll dispatch: the two-step program across nodes; single-node
+    /// AllToAll is pure NVSwitch traffic where NCCL's direct pattern is
+    /// already optimal, so it falls back.
+    pub fn alltoall(&mut self) -> Result<(EfProgram, Backend)> {
+        if self.topo.nodes == 1 {
+            let key = "nccl_a2a".to_string();
+            if !self.cache.contains_key(&key) {
+                let t = alltoall::direct(self.topo.num_ranks())?;
+                let ef = compile(&t, "nccl_alltoall", &self.gc3_opts(1, Protocol::Simple))?.ef;
+                self.cache.insert(key.clone(), ef);
+            }
+            return Ok((self.cache[&key].clone(), Backend::NcclFallback));
+        }
+        let key = "gc3_a2a".to_string();
+        if !self.cache.contains_key(&key) {
+            let t = alltoall::two_step(self.topo.nodes, self.topo.gpus_per_node)?;
+            let ef = compile(&t, "gc3_alltoall", &self.gc3_opts(1, Protocol::Simple))?.ef;
+            self.cache.insert(key.clone(), ef);
+        }
+        Ok((self.cache[&key].clone(), Backend::Gc3))
+    }
+
+    /// Application-specific collectives by name — the §6.4 AllToNext plus
+    /// anything user-registered.
+    pub fn custom(&mut self, name: &str) -> Result<(EfProgram, Backend)> {
+        match name {
+            "alltonext" => {
+                let key = "gc3_a2n".to_string();
+                if !self.cache.contains_key(&key) {
+                    let t = crate::collectives::alltonext::alltonext(
+                        self.topo.nodes,
+                        self.topo.gpus_per_node,
+                    )?;
+                    let ef = compile(&t, "gc3_alltonext", &self.gc3_opts(1, Protocol::Simple))?.ef;
+                    self.cache.insert(key.clone(), ef);
+                }
+                Ok((self.cache[&key].clone(), Backend::Gc3))
+            }
+            other => Err(Gc3Error::Invalid(format!(
+                "no GC3 kernel registered for '{other}' and no NCCL fallback exists"
+            ))),
+        }
+    }
+
+    /// Register a pre-compiled EF under a custom name.
+    pub fn register(&mut self, name: &str, ef: EfProgram) {
+        self.cache.insert(name.to_string(), ef);
+    }
+
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        let mut t = Topology::a100_single();
+        t.gpus_per_node = 4;
+        t
+    }
+
+    #[test]
+    fn allreduce_window_dispatch() {
+        let mut reg = Registry::new(topo());
+        let (_, b_small) = reg.allreduce(32 * 1024).unwrap();
+        assert_eq!(b_small, Backend::NcclFallback, "below window");
+        let (ef, b_mid) = reg.allreduce(2 * 1024 * 1024).unwrap();
+        assert_eq!(b_mid, Backend::Gc3);
+        assert_eq!(ef.protocol, Protocol::LL128);
+        let (_, b_big) = reg.allreduce(256 * 1024 * 1024).unwrap();
+        assert_eq!(b_big, Backend::NcclFallback, "above window");
+    }
+
+    #[test]
+    fn cache_hits() {
+        let mut reg = Registry::new(topo());
+        reg.allreduce(2 * 1024 * 1024).unwrap();
+        let n = reg.cached();
+        reg.allreduce(4 * 1024 * 1024).unwrap();
+        assert_eq!(reg.cached(), n, "same window entry reused");
+    }
+
+    #[test]
+    fn unknown_custom_collective_errors() {
+        let mut reg = Registry::new(topo());
+        assert!(reg.custom("frobnicate").is_err());
+    }
+
+    #[test]
+    fn multi_node_uses_hierarchical_and_two_step() {
+        let mut t = Topology::a100(2);
+        t.gpus_per_node = 2;
+        let mut reg = Registry::new(t);
+        let (ef, b) = reg.allreduce(1024 * 1024).unwrap();
+        assert_eq!(b, Backend::Gc3);
+        assert!(ef.name.contains("hier"));
+        let (ef2, b2) = reg.alltoall().unwrap();
+        assert_eq!(b2, Backend::Gc3);
+        assert!(ef2.name.contains("alltoall"));
+        let (_, b3) = reg.custom("alltonext").unwrap();
+        assert_eq!(b3, Backend::Gc3);
+    }
+}

@@ -1,0 +1,196 @@
+//! Core identifiers and slot types shared by every compiler stage.
+//!
+//! GC3 programs are *chunk oriented* (§3.1): the unit of state is a chunk
+//! stored in a *buffer slot*, the triple `(buffer, rank, index)`. Every
+//! stage of the pipeline — DSL, Chunk DAG, Instruction DAG, GC3-EF, and the
+//! two executors — addresses memory exclusively through these types.
+
+use std::fmt;
+
+/// A rank is a global GPU id in `0..num_ranks`.
+pub type Rank = usize;
+/// Channel id; distinguishes multiple connections between one GPU pair (§4.3).
+pub type ChanId = usize;
+/// Threadblock id within one GPU.
+pub type TbId = usize;
+
+/// The three per-rank buffers of a GC3 program (§3.1).
+///
+/// `Input` and `Output` have sizes fixed by the collective's interface;
+/// `Scratch` is unbounded and sized by the compiler from the program's use.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum BufferId {
+    Input,
+    Output,
+    Scratch,
+}
+
+impl BufferId {
+    /// Short name used in GC3-EF listings (`in`/`out`/`sc`), matching §4.1.
+    pub fn short(&self) -> &'static str {
+        match self {
+            BufferId::Input => "in",
+            BufferId::Output => "out",
+            BufferId::Scratch => "sc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BufferId> {
+        match s {
+            "in" | "input" => Some(BufferId::Input),
+            "out" | "output" => Some(BufferId::Output),
+            "sc" | "scratch" => Some(BufferId::Scratch),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for BufferId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.short())
+    }
+}
+
+/// A single buffer slot `(rank, buffer, index)` — one chunk of storage.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct Slot {
+    pub rank: Rank,
+    pub buffer: BufferId,
+    pub index: usize,
+}
+
+impl fmt::Display for Slot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "r{}:{}[{}]", self.rank, self.buffer, self.index)
+    }
+}
+
+/// A contiguous range of `size` chunks starting at `index` on one buffer.
+///
+/// DSL operations and GC3-EF instructions both operate on ranges (the
+/// instruction `count` argument, §4.1); `size == 1` is the common case.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct SlotRange {
+    pub rank: Rank,
+    pub buffer: BufferId,
+    pub index: usize,
+    pub size: usize,
+}
+
+impl SlotRange {
+    pub fn new(rank: Rank, buffer: BufferId, index: usize, size: usize) -> Self {
+        SlotRange { rank, buffer, index, size }
+    }
+
+    pub fn slot(rank: Rank, buffer: BufferId, index: usize) -> Self {
+        SlotRange { rank, buffer, index, size: 1 }
+    }
+
+    /// The `k`-th slot covered by this range.
+    pub fn at(&self, k: usize) -> Slot {
+        debug_assert!(k < self.size);
+        Slot { rank: self.rank, buffer: self.buffer, index: self.index + k }
+    }
+
+    pub fn slots(&self) -> impl Iterator<Item = Slot> + '_ {
+        (0..self.size).map(move |k| self.at(k))
+    }
+
+    /// True if the two ranges name overlapping chunks of the same buffer.
+    pub fn overlaps(&self, other: &SlotRange) -> bool {
+        self.rank == other.rank
+            && self.buffer == other.buffer
+            && self.index < other.index + other.size
+            && other.index < self.index + self.size
+    }
+
+    pub fn end(&self) -> usize {
+        self.index + self.size
+    }
+}
+
+impl fmt::Display for SlotRange {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.size == 1 {
+            write!(f, "r{}:{}[{}]", self.rank, self.buffer, self.index)
+        } else {
+            write!(f, "r{}:{}[{}..{}]", self.rank, self.buffer, self.index, self.end())
+        }
+    }
+}
+
+/// Errors produced by the GC3 compiler pipeline.
+#[derive(thiserror::Error, Debug)]
+pub enum Gc3Error {
+    /// Program reads a buffer slot that no chunk was ever assigned to (§3.2).
+    #[error("invalid GC3 program: read of uninitialized slot {0}")]
+    UninitializedRead(Slot),
+    /// Program uses a chunk reference whose slot has been overwritten (§3.2).
+    #[error("invalid GC3 program: chunk at {0} was overwritten (stale reference, version {expected} != current {found})", expected = .1, found = .2)]
+    StaleChunk(Slot, u64, u64),
+    /// reduce() operands of different sizes (§3.2 "need to be the same size").
+    #[error("invalid GC3 program: reduce operands {0} and {1} differ in size")]
+    SizeMismatch(SlotRange, SlotRange),
+    #[error("invalid GC3 program: {0}")]
+    Invalid(String),
+    /// Postcondition of the declared collective does not hold.
+    #[error("collective postcondition violated at {slot}: expected {expected}, got {found}")]
+    Postcondition { slot: Slot, expected: String, found: String },
+    /// Threadblock connection invariant (§4.1) violated.
+    #[error("scheduling error: {0}")]
+    Sched(String),
+    /// More threadblocks than streaming multiprocessors (§4.4).
+    #[error("GPU {rank} needs {tbs} threadblocks but the GPU has only {sms} SMs")]
+    TooManyThreadblocks { rank: Rank, tbs: usize, sms: usize },
+    #[error("GC3-EF error: {0}")]
+    Ef(String),
+    #[error("execution error: {0}")]
+    Exec(String),
+    #[error("deadlock detected: {0}")]
+    Deadlock(String),
+}
+
+pub type Result<T> = std::result::Result<T, Gc3Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_range_overlap() {
+        let a = SlotRange::new(0, BufferId::Input, 0, 4);
+        let b = SlotRange::new(0, BufferId::Input, 3, 2);
+        let c = SlotRange::new(0, BufferId::Input, 4, 2);
+        let d = SlotRange::new(1, BufferId::Input, 0, 4);
+        let e = SlotRange::new(0, BufferId::Output, 0, 4);
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+        assert!(!a.overlaps(&d));
+        assert!(!a.overlaps(&e));
+    }
+
+    #[test]
+    fn slot_range_iter() {
+        let a = SlotRange::new(2, BufferId::Scratch, 5, 3);
+        let idx: Vec<usize> = a.slots().map(|s| s.index).collect();
+        assert_eq!(idx, vec![5, 6, 7]);
+        assert_eq!(a.at(0).rank, 2);
+        assert_eq!(a.end(), 8);
+    }
+
+    #[test]
+    fn buffer_roundtrip() {
+        for b in [BufferId::Input, BufferId::Output, BufferId::Scratch] {
+            assert_eq!(BufferId::parse(b.short()), Some(b));
+        }
+        assert_eq!(BufferId::parse("bogus"), None);
+    }
+
+    #[test]
+    fn display_forms() {
+        let s = Slot { rank: 3, buffer: BufferId::Output, index: 7 };
+        assert_eq!(format!("{s}"), "r3:out[7]");
+        let r = SlotRange::new(1, BufferId::Input, 2, 3);
+        assert_eq!(format!("{r}"), "r1:in[2..5]");
+    }
+}

@@ -1,0 +1,353 @@
+//! Collective interface specifications (§3.1–3.2).
+//!
+//! A [`CollectiveSpec`] fixes the shape of a GC3 program's world: how many
+//! ranks, how many chunks the input/output buffers are divided into, which
+//! input slots start holding a chunk (the *precondition*) and what every
+//! output slot must contain when the program finishes (the
+//! *postcondition*). Postconditions are expressed symbolically as the set
+//! of input chunks that must have been reduced into a slot — a singleton
+//! set means a plain copy. The Chunk DAG checker
+//! ([`crate::chunkdag::validate`]) propagates these sets through the
+//! program, and the functional executor ([`crate::exec`]) checks the same
+//! property numerically.
+
+use crate::core::{BufferId, Rank, Slot};
+use std::collections::BTreeMap;
+
+/// Symbolic chunk contents: the sorted set of input chunks `(rank, index)`
+/// reduced together. A singleton is an unreduced copy of one input chunk.
+pub type ChunkValue = Vec<(Rank, usize)>;
+
+/// Make a singleton [`ChunkValue`].
+pub fn val(rank: Rank, index: usize) -> ChunkValue {
+    vec![(rank, index)]
+}
+
+/// Reduce two symbolic values (set union; duplicates collapse, matching a
+/// sum-reduction applied to the same chunk at most once in valid programs).
+pub fn reduce_vals(a: &ChunkValue, b: &ChunkValue) -> ChunkValue {
+    let mut out = a.clone();
+    out.extend(b.iter().cloned());
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Render a value for error messages.
+pub fn fmt_val(v: &ChunkValue) -> String {
+    let parts: Vec<String> = v.iter().map(|(r, i)| format!("in({r},{i})")).collect();
+    if parts.len() == 1 {
+        parts[0].clone()
+    } else {
+        format!("sum[{}]", parts.join("+"))
+    }
+}
+
+/// Specification of one collective instance.
+#[derive(Clone, Debug)]
+pub struct CollectiveSpec {
+    pub name: String,
+    pub num_ranks: usize,
+    /// Chunks the input buffer of every rank is divided into.
+    pub in_chunks: usize,
+    /// Chunks the output buffer of every rank is divided into.
+    pub out_chunks: usize,
+    /// In-place collectives (the paper's Ring AllReduce) read *and* produce
+    /// their result in the input buffer; the postcondition then constrains
+    /// input slots instead of output slots.
+    pub inplace: bool,
+    /// Input slots holding a chunk at program start. `None` = all of them.
+    pub precondition: Option<Vec<Slot>>,
+    /// Required contents of result slots. Partial: unlisted slots are
+    /// unconstrained. Keys live in the output buffer (input if `inplace`).
+    pub postcondition: BTreeMap<Slot, ChunkValue>,
+}
+
+impl CollectiveSpec {
+    /// Result buffer: where the postcondition is checked.
+    pub fn result_buffer(&self) -> BufferId {
+        if self.inplace {
+            BufferId::Input
+        } else {
+            BufferId::Output
+        }
+    }
+
+    /// Enumerate the input slots that start initialized.
+    pub fn initialized_inputs(&self) -> Vec<Slot> {
+        match &self.precondition {
+            Some(list) => list.clone(),
+            None => (0..self.num_ranks)
+                .flat_map(|r| {
+                    (0..self.in_chunks).map(move |i| Slot { rank: r, buffer: BufferId::Input, index: i })
+                })
+                .collect(),
+        }
+    }
+
+    /// AllToAll over `ranks` GPUs: input chunk `j` of rank `i` must land in
+    /// output slot `i` of rank `j` (§6.1). `in_chunks = out_chunks = ranks`.
+    pub fn alltoall(ranks: usize) -> CollectiveSpec {
+        Self::alltoall_factor(ranks, 1)
+    }
+
+    /// AllToAll with `factor` chunks per peer (§3.1 allows finer division:
+    /// "the buffers can have 2×N×G chunks for better routing").
+    pub fn alltoall_factor(ranks: usize, factor: usize) -> CollectiveSpec {
+        let chunks = ranks * factor;
+        let mut post = BTreeMap::new();
+        for dst in 0..ranks {
+            for src in 0..ranks {
+                for f in 0..factor {
+                    // Input chunk (dst*factor+f) at rank src → output slot
+                    // (src*factor+f) at rank dst.
+                    post.insert(
+                        Slot { rank: dst, buffer: BufferId::Output, index: src * factor + f },
+                        val(src, dst * factor + f),
+                    );
+                }
+            }
+        }
+        CollectiveSpec {
+            name: format!("alltoall_{ranks}"),
+            num_ranks: ranks,
+            in_chunks: chunks,
+            out_chunks: chunks,
+            inplace: false,
+            precondition: None,
+            postcondition: post,
+        }
+    }
+
+    /// In-place AllReduce: every rank's `chunks`-chunk input buffer ends
+    /// holding the full reduction, chunk by chunk (§6.2).
+    pub fn allreduce(ranks: usize, chunks: usize) -> CollectiveSpec {
+        let mut post = BTreeMap::new();
+        for r in 0..ranks {
+            for i in 0..chunks {
+                let full: ChunkValue = (0..ranks).map(|s| (s, i)).collect();
+                post.insert(Slot { rank: r, buffer: BufferId::Input, index: i }, full);
+            }
+        }
+        CollectiveSpec {
+            name: format!("allreduce_{ranks}"),
+            num_ranks: ranks,
+            in_chunks: chunks,
+            out_chunks: chunks,
+            inplace: true,
+            precondition: None,
+            postcondition: post,
+        }
+    }
+
+    /// AllGather: rank `r` contributes `per_rank` chunks; all ranks end with
+    /// the concatenation in the output buffer.
+    pub fn allgather(ranks: usize, per_rank: usize) -> CollectiveSpec {
+        let mut post = BTreeMap::new();
+        for dst in 0..ranks {
+            for src in 0..ranks {
+                for i in 0..per_rank {
+                    post.insert(
+                        Slot { rank: dst, buffer: BufferId::Output, index: src * per_rank + i },
+                        val(src, i),
+                    );
+                }
+            }
+        }
+        CollectiveSpec {
+            name: format!("allgather_{ranks}"),
+            num_ranks: ranks,
+            in_chunks: per_rank,
+            out_chunks: ranks * per_rank,
+            inplace: false,
+            precondition: None,
+            postcondition: post,
+        }
+    }
+
+    /// ReduceScatter: rank `r` ends with the full reduction of chunk `r`
+    /// (shard `per_rank` chunks wide) in its output buffer.
+    pub fn reduce_scatter(ranks: usize, per_rank: usize) -> CollectiveSpec {
+        let mut post = BTreeMap::new();
+        for r in 0..ranks {
+            for i in 0..per_rank {
+                let idx = r * per_rank + i;
+                let full: ChunkValue = (0..ranks).map(|s| (s, idx)).collect();
+                post.insert(Slot { rank: r, buffer: BufferId::Output, index: i }, full);
+            }
+        }
+        CollectiveSpec {
+            name: format!("reduce_scatter_{ranks}"),
+            num_ranks: ranks,
+            in_chunks: ranks * per_rank,
+            out_chunks: per_rank,
+            inplace: false,
+            precondition: None,
+            postcondition: post,
+        }
+    }
+
+    /// Broadcast from `root`: only the root's input starts initialized.
+    pub fn broadcast(ranks: usize, root: Rank, chunks: usize) -> CollectiveSpec {
+        let pre: Vec<Slot> =
+            (0..chunks).map(|i| Slot { rank: root, buffer: BufferId::Input, index: i }).collect();
+        let mut post = BTreeMap::new();
+        for r in 0..ranks {
+            for i in 0..chunks {
+                post.insert(Slot { rank: r, buffer: BufferId::Output, index: i }, val(root, i));
+            }
+        }
+        CollectiveSpec {
+            name: format!("broadcast_{ranks}_root{root}"),
+            num_ranks: ranks,
+            in_chunks: chunks,
+            out_chunks: chunks,
+            inplace: false,
+            precondition: Some(pre),
+            postcondition: post,
+        }
+    }
+
+    /// AllToNext (§6.4): GPU `i` sends its whole input buffer (`chunks`
+    /// chunks) to GPU `i+1`'s output buffer; the last GPU sends nothing and
+    /// rank 0's output is unconstrained.
+    pub fn alltonext(ranks: usize, chunks: usize) -> CollectiveSpec {
+        let mut post = BTreeMap::new();
+        for r in 0..ranks - 1 {
+            for i in 0..chunks {
+                post.insert(Slot { rank: r + 1, buffer: BufferId::Output, index: i }, val(r, i));
+            }
+        }
+        CollectiveSpec {
+            name: format!("alltonext_{ranks}"),
+            num_ranks: ranks,
+            in_chunks: chunks,
+            out_chunks: chunks,
+            inplace: false,
+            precondition: None,
+            postcondition: post,
+        }
+    }
+
+    /// A custom collective with explicit fields — used by tests and by
+    /// application-specific programs (the paper's headline flexibility).
+    #[allow(clippy::too_many_arguments)]
+    pub fn custom(
+        name: &str,
+        num_ranks: usize,
+        in_chunks: usize,
+        out_chunks: usize,
+        inplace: bool,
+        precondition: Option<Vec<Slot>>,
+        postcondition: BTreeMap<Slot, ChunkValue>,
+    ) -> CollectiveSpec {
+        CollectiveSpec {
+            name: name.to_string(),
+            num_ranks,
+            in_chunks,
+            out_chunks,
+            inplace,
+            precondition,
+            postcondition,
+        }
+    }
+
+    /// Multiply the chunk count by `r` for instance replication (§5.3.2):
+    /// original chunk `i` becomes chunks `i*r .. (i+1)*r`, and every
+    /// postcondition entry is re-indexed accordingly.
+    pub fn scaled(&self, r: usize) -> CollectiveSpec {
+        let mut post = BTreeMap::new();
+        for (slot, value) in &self.postcondition {
+            for j in 0..r {
+                let new_slot =
+                    Slot { rank: slot.rank, buffer: slot.buffer, index: slot.index * r + j };
+                let new_val: ChunkValue =
+                    value.iter().map(|(rk, idx)| (*rk, idx * r + j)).collect();
+                post.insert(new_slot, new_val);
+            }
+        }
+        let pre = self.precondition.as_ref().map(|slots| {
+            slots
+                .iter()
+                .flat_map(|s| {
+                    (0..r).map(move |j| Slot { rank: s.rank, buffer: s.buffer, index: s.index * r + j })
+                })
+                .collect()
+        });
+        CollectiveSpec {
+            name: self.name.clone(),
+            num_ranks: self.num_ranks,
+            in_chunks: self.in_chunks * r,
+            out_chunks: self.out_chunks * r,
+            inplace: self.inplace,
+            precondition: pre,
+            postcondition: post,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alltoall_postcondition_shape() {
+        let s = CollectiveSpec::alltoall(4);
+        assert_eq!(s.in_chunks, 4);
+        assert_eq!(s.postcondition.len(), 16);
+        // Chunk 2 of rank 1 must land at output slot 1 of rank 2.
+        let slot = Slot { rank: 2, buffer: BufferId::Output, index: 1 };
+        assert_eq!(s.postcondition[&slot], val(1, 2));
+    }
+
+    #[test]
+    fn allreduce_is_inplace_full_sum() {
+        let s = CollectiveSpec::allreduce(3, 2);
+        assert!(s.inplace);
+        assert_eq!(s.result_buffer(), BufferId::Input);
+        let slot = Slot { rank: 1, buffer: BufferId::Input, index: 1 };
+        assert_eq!(s.postcondition[&slot], vec![(0, 1), (1, 1), (2, 1)]);
+    }
+
+    #[test]
+    fn broadcast_precondition_only_root() {
+        let s = CollectiveSpec::broadcast(4, 2, 3);
+        let init = s.initialized_inputs();
+        assert_eq!(init.len(), 3);
+        assert!(init.iter().all(|s| s.rank == 2));
+    }
+
+    #[test]
+    fn alltonext_partial_postcondition() {
+        let s = CollectiveSpec::alltonext(3, 2);
+        // Rank 0's output unconstrained → 2 ranks × 2 chunks entries.
+        assert_eq!(s.postcondition.len(), 4);
+        assert!(!s.postcondition.contains_key(&Slot { rank: 0, buffer: BufferId::Output, index: 0 }));
+    }
+
+    #[test]
+    fn reduce_vals_dedups_and_sorts() {
+        let a = vec![(1, 0), (0, 0)];
+        let b = vec![(0, 0), (2, 0)];
+        assert_eq!(reduce_vals(&a, &b), vec![(0, 0), (1, 0), (2, 0)]);
+    }
+
+    #[test]
+    fn scaled_spec_reindexes() {
+        let s = CollectiveSpec::allreduce(2, 2).scaled(2);
+        assert_eq!(s.in_chunks, 4);
+        let slot = Slot { rank: 0, buffer: BufferId::Input, index: 3 };
+        // Original chunk 1 instance 1 → full sum over (r, 3).
+        assert_eq!(s.postcondition[&slot], vec![(0, 3), (1, 3)]);
+        assert_eq!(s.postcondition.len(), 8);
+    }
+
+    #[test]
+    fn alltoall_factor_two() {
+        let s = CollectiveSpec::alltoall_factor(2, 2);
+        assert_eq!(s.in_chunks, 4);
+        // Input chunk dst*2+f at rank src → out slot src*2+f at rank dst.
+        let slot = Slot { rank: 1, buffer: BufferId::Output, index: 1 };
+        assert_eq!(s.postcondition[&slot], val(0, 3));
+    }
+}

@@ -1,0 +1,354 @@
+//! The GC3 chunk-oriented DSL (§3).
+//!
+//! A [`Program`] is written by routing chunks between buffer slots:
+//!
+//! ```
+//! use gc3::dsl::{Program, SchedHint};
+//! use gc3::core::BufferId;
+//! use gc3::dsl::collective::CollectiveSpec;
+//!
+//! // 2-rank AllGather: every rank ends with both input chunks.
+//! let mut p = Program::new(CollectiveSpec::allgather(2, 1));
+//! for r in 0..2 {
+//!     let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
+//!     // keep own chunk ...
+//!     let c_out = p.copy(c, BufferId::Output, r, r, SchedHint::none()).unwrap();
+//!     // ... and send it to the peer.
+//!     p.copy(c_out, BufferId::Output, 1 - r, r, SchedHint::none()).unwrap();
+//! }
+//! let trace = p.finish().unwrap();
+//! assert_eq!(trace.ops.len(), 4);
+//! ```
+//!
+//! The paper's `c.assign(buffer, rank, index)` is [`Program::copy`] here
+//! (`assign` collides with Rust naming conventions); `c1.reduce(c2)` is
+//! [`Program::reduce`]. Both accept a [`SchedHint`] carrying the §5.4
+//! extensions: manual `sendtb`/`recvtb` threadblock assignment and `ch`
+//! channel directives.
+//!
+//! The DSL performs the §3.2 validity checks *while recording*: reading an
+//! uninitialized slot or using a stale (overwritten) chunk reference is an
+//! error at the offending call, exactly like the paper's tracing frontend.
+
+pub mod collective;
+
+use crate::core::{BufferId, ChanId, Gc3Error, Rank, Result, Slot, SlotRange, TbId};
+use collective::CollectiveSpec;
+use std::collections::HashMap;
+
+/// Manual scheduling directives (§5.4). `none()` means fully automatic.
+#[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
+pub struct SchedHint {
+    /// Threadblock on the *sending* rank that must run the send half.
+    pub sendtb: Option<TbId>,
+    /// Threadblock on the *receiving* rank that must run the receive half.
+    pub recvtb: Option<TbId>,
+    /// Channel the transfer must use.
+    pub ch: Option<ChanId>,
+}
+
+impl SchedHint {
+    pub fn none() -> SchedHint {
+        SchedHint::default()
+    }
+
+    /// Full manual placement: `sendtb`, `recvtb` and channel.
+    pub fn tb(sendtb: TbId, recvtb: TbId, ch: ChanId) -> SchedHint {
+        SchedHint { sendtb: Some(sendtb), recvtb: Some(recvtb), ch: Some(ch) }
+    }
+
+    /// Channel directive only (§5.4 "Channel Directives").
+    pub fn chan(ch: ChanId) -> SchedHint {
+        SchedHint { sendtb: None, recvtb: None, ch: Some(ch) }
+    }
+
+    pub fn is_manual(&self) -> bool {
+        self.sendtb.is_some() || self.recvtb.is_some()
+    }
+}
+
+/// A reference to `size` contiguous chunks returned by [`Program::chunk`],
+/// [`Program::copy`] and [`Program::reduce`]. Carries the write-versions of
+/// the covered slots so stale use is detected (§3.2 "Validity").
+#[derive(Clone, Debug)]
+pub struct ChunkRef {
+    pub range: SlotRange,
+    versions: Vec<u64>,
+}
+
+/// One recorded chunk operation. `Copy` is the paper's `assign`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceOp {
+    /// Copy `src` to `dst` (sizes equal). Remote if ranks differ.
+    Copy { src: SlotRange, dst: SlotRange, hint: SchedHint },
+    /// `dst = reduce(dst, src)` elementwise over the ranges (sizes equal).
+    Reduce { dst: SlotRange, src: SlotRange, hint: SchedHint },
+}
+
+impl TraceOp {
+    pub fn hint(&self) -> &SchedHint {
+        match self {
+            TraceOp::Copy { hint, .. } | TraceOp::Reduce { hint, .. } => hint,
+        }
+    }
+
+    pub fn src(&self) -> &SlotRange {
+        match self {
+            TraceOp::Copy { src, .. } | TraceOp::Reduce { src, .. } => src,
+        }
+    }
+
+    pub fn dst(&self) -> &SlotRange {
+        match self {
+            TraceOp::Copy { dst, .. } | TraceOp::Reduce { dst, .. } => dst,
+        }
+    }
+
+    pub fn is_remote(&self) -> bool {
+        self.src().rank != self.dst().rank
+    }
+}
+
+/// A finished, validated program trace: the input to the compiler.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub spec: CollectiveSpec,
+    pub ops: Vec<TraceOp>,
+    /// Highest scratch index used per rank (+1) — sizes the scratch buffer.
+    pub scratch_chunks: Vec<usize>,
+}
+
+impl Trace {
+    /// Number of source lines a user would write for this program — one per
+    /// op. Used by the §6 "all algorithms under 30 lines" accounting.
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+/// The DSL recorder. See module docs for the programming model.
+pub struct Program {
+    spec: CollectiveSpec,
+    ops: Vec<TraceOp>,
+    /// Per-slot write version; presence means the slot holds a live chunk.
+    versions: HashMap<Slot, u64>,
+    next_version: u64,
+    scratch_chunks: Vec<usize>,
+}
+
+impl Program {
+    pub fn new(spec: CollectiveSpec) -> Program {
+        let mut versions = HashMap::new();
+        for s in spec.initialized_inputs() {
+            versions.insert(s, 0);
+        }
+        let n = spec.num_ranks;
+        Program { spec, ops: Vec::new(), versions, next_version: 1, scratch_chunks: vec![0; n] }
+    }
+
+    pub fn spec(&self) -> &CollectiveSpec {
+        &self.spec
+    }
+
+    /// `chunk(buffer, rank, index, size)` — a reference to live chunks (§3.2).
+    pub fn chunk(&self, buffer: BufferId, rank: Rank, index: usize, size: usize) -> Result<ChunkRef> {
+        let range = SlotRange::new(rank, buffer, index, size);
+        self.check_ranges(&range)?;
+        let mut versions = Vec::with_capacity(size);
+        for s in range.slots() {
+            match self.versions.get(&s) {
+                Some(v) => versions.push(*v),
+                None => return Err(Gc3Error::UninitializedRead(s)),
+            }
+        }
+        Ok(ChunkRef { range, versions })
+    }
+
+    /// The paper's `c.assign(buffer, rank, index)`: copy `c` into the slot
+    /// range starting at `(buffer, rank, index)` and return a reference to
+    /// the new chunk(s).
+    pub fn copy(
+        &mut self,
+        c: ChunkRef,
+        buffer: BufferId,
+        rank: Rank,
+        index: usize,
+        hint: SchedHint,
+    ) -> Result<ChunkRef> {
+        self.check_fresh(&c)?;
+        let dst = SlotRange::new(rank, buffer, index, c.range.size);
+        self.check_ranges(&dst)?;
+        if dst == c.range {
+            return Err(Gc3Error::Invalid(format!("copy of {dst} onto itself", dst = dst)));
+        }
+        self.write(&dst);
+        self.note_scratch(&dst);
+        self.ops.push(TraceOp::Copy { src: c.range, dst, hint });
+        self.chunk(buffer, rank, index, c.range.size)
+    }
+
+    /// The paper's `c1.reduce(c2)`: reduce `other` into `c1`'s location and
+    /// return a reference to the result (stored at `c1`).
+    pub fn reduce(&mut self, c1: ChunkRef, other: ChunkRef, hint: SchedHint) -> Result<ChunkRef> {
+        self.check_fresh(&c1)?;
+        self.check_fresh(&other)?;
+        if c1.range.size != other.range.size {
+            return Err(Gc3Error::SizeMismatch(c1.range, other.range));
+        }
+        if c1.range.overlaps(&other.range) {
+            return Err(Gc3Error::Invalid(format!(
+                "reduce operands {a} and {b} overlap",
+                a = c1.range,
+                b = other.range
+            )));
+        }
+        self.write(&c1.range);
+        self.ops.push(TraceOp::Reduce { dst: c1.range, src: other.range, hint });
+        self.chunk(c1.range.buffer, c1.range.rank, c1.range.index, c1.range.size)
+    }
+
+    /// Finish recording: checks nothing was left dangling and returns the
+    /// trace. The symbolic postcondition check happens when the Chunk DAG is
+    /// built ([`crate::chunkdag`]).
+    pub fn finish(self) -> Result<Trace> {
+        Ok(Trace { spec: self.spec, ops: self.ops, scratch_chunks: self.scratch_chunks })
+    }
+
+    fn check_fresh(&self, c: &ChunkRef) -> Result<()> {
+        for (k, s) in c.range.slots().enumerate() {
+            let cur = *self.versions.get(&s).ok_or(Gc3Error::UninitializedRead(s))?;
+            if cur != c.versions[k] {
+                return Err(Gc3Error::StaleChunk(s, c.versions[k], cur));
+            }
+        }
+        Ok(())
+    }
+
+    fn check_ranges(&self, r: &SlotRange) -> Result<()> {
+        if r.size == 0 {
+            return Err(Gc3Error::Invalid(format!("zero-size range {r}")));
+        }
+        if r.rank >= self.spec.num_ranks {
+            return Err(Gc3Error::Invalid(format!(
+                "rank {} out of range (num_ranks={})",
+                r.rank, self.spec.num_ranks
+            )));
+        }
+        let cap = match r.buffer {
+            BufferId::Input => Some(self.spec.in_chunks),
+            BufferId::Output => Some(self.spec.out_chunks),
+            BufferId::Scratch => None, // unbounded by design (§3.1)
+        };
+        if let Some(cap) = cap {
+            if r.end() > cap {
+                return Err(Gc3Error::Invalid(format!(
+                    "range {r} exceeds {} buffer of {cap} chunks",
+                    r.buffer
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn write(&mut self, dst: &SlotRange) {
+        for s in dst.slots() {
+            self.versions.insert(s, self.next_version);
+        }
+        self.next_version += 1;
+    }
+
+    fn note_scratch(&mut self, dst: &SlotRange) {
+        if dst.buffer == BufferId::Scratch {
+            let cur = &mut self.scratch_chunks[dst.rank];
+            *cur = (*cur).max(dst.end());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use collective::CollectiveSpec;
+
+    fn spec2() -> CollectiveSpec {
+        CollectiveSpec::allgather(2, 1)
+    }
+
+    #[test]
+    fn records_copy_and_reduce() {
+        let mut p = Program::new(CollectiveSpec::allreduce(2, 2));
+        let c0 = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        let c1 = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+        let r = p.reduce(c1, c0, SchedHint::none()).unwrap();
+        assert_eq!(r.range, SlotRange::slot(1, BufferId::Input, 0));
+        let t_ops = p.ops.len();
+        assert_eq!(t_ops, 1);
+    }
+
+    #[test]
+    fn uninitialized_read_rejected() {
+        let p = Program::new(spec2());
+        let err = p.chunk(BufferId::Output, 0, 0, 1).unwrap_err();
+        assert!(matches!(err, Gc3Error::UninitializedRead(_)));
+        let err = p.chunk(BufferId::Scratch, 1, 3, 1).unwrap_err();
+        assert!(matches!(err, Gc3Error::UninitializedRead(_)));
+    }
+
+    #[test]
+    fn stale_chunk_rejected() {
+        let mut p = Program::new(CollectiveSpec::allreduce(2, 1));
+        let a = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        let b = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+        // Overwrite rank1 input[0] with a copy of rank0's chunk...
+        p.copy(a.clone(), BufferId::Input, 1, 0, SchedHint::none()).unwrap();
+        // ...then use the stale reference to it.
+        let err = p.copy(b, BufferId::Scratch, 0, 0, SchedHint::none()).unwrap_err();
+        assert!(matches!(err, Gc3Error::StaleChunk(..)));
+    }
+
+    #[test]
+    fn reduce_size_mismatch_rejected() {
+        let mut p = Program::new(CollectiveSpec::allreduce(2, 4));
+        let a = p.chunk(BufferId::Input, 0, 0, 2).unwrap();
+        let b = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+        assert!(matches!(p.reduce(a, b, SchedHint::none()), Err(Gc3Error::SizeMismatch(..))));
+    }
+
+    #[test]
+    fn buffer_bounds_enforced() {
+        let mut p = Program::new(spec2());
+        let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        // Output of allgather(2,1) has 2 chunks; index 5 is out of range.
+        assert!(p.copy(c, BufferId::Output, 0, 5, SchedHint::none()).is_err());
+        assert!(p.chunk(BufferId::Input, 7, 0, 1).is_err());
+    }
+
+    #[test]
+    fn scratch_is_unbounded_and_sized() {
+        let mut p = Program::new(spec2());
+        let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        p.copy(c, BufferId::Scratch, 1, 41, SchedHint::none()).unwrap();
+        let t = p.finish().unwrap();
+        assert_eq!(t.scratch_chunks, vec![0, 42]);
+    }
+
+    #[test]
+    fn self_copy_rejected() {
+        let mut p = Program::new(spec2());
+        let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        assert!(p.copy(c, BufferId::Input, 0, 0, SchedHint::none()).is_err());
+    }
+
+    #[test]
+    fn multi_chunk_refs() {
+        let mut p = Program::new(CollectiveSpec::alltoall(4));
+        let c = p.chunk(BufferId::Input, 0, 0, 4).unwrap();
+        let out = p.copy(c, BufferId::Scratch, 2, 0, SchedHint::none()).unwrap();
+        assert_eq!(out.range.size, 4);
+        // Partial overlap staleness: overwrite chunk 2 of the scratch copy.
+        let one = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+        p.copy(one, BufferId::Scratch, 2, 2, SchedHint::none()).unwrap();
+        let err = p.copy(out, BufferId::Output, 0, 0, SchedHint::none()).unwrap_err();
+        assert!(matches!(err, Gc3Error::StaleChunk(..)));
+    }
+}

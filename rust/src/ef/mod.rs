@@ -1,0 +1,465 @@
+//! GC3-EF — the executable format (§4.1).
+//!
+//! A GC3-EF is the per-GPU, per-threadblock procedural program the
+//! interpreter runtime executes (Fig. 4): each threadblock owns at most one
+//! send and one receive connection and runs a linear instruction list;
+//! cross-threadblock ordering is expressed by at most one `depend`
+//! annotation per instruction (extra dependences are carried by prepended
+//! `nop`s — see [`crate::sched`]).
+//!
+//! The format serializes to JSON (hand-rolled — no serde in the vendored
+//! crate set) so EFs can be saved, inspected (`gc3 inspect`), diffed and
+//! loaded by the runtime without recompiling the program.
+
+use crate::core::{BufferId, ChanId, Gc3Error, Rank, Result, TbId};
+use crate::instdag::OpCode;
+use crate::sim::Protocol;
+use crate::util::json::Json;
+
+/// One GC3-EF instruction (§4.1): opcode, source buffer slot, destination
+/// buffer slot, count, and an optional cross-threadblock dependence.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EfInst {
+    pub op: OpCode,
+    /// Local source `(buffer, chunk index)` — used by send/copy/reduce-type
+    /// instructions.
+    pub src: Option<(BufferId, usize)>,
+    /// Local destination `(buffer, chunk index)` — used by receive/copy
+    /// type instructions.
+    pub dst: Option<(BufferId, usize)>,
+    /// Number of consecutive chunks the instruction moves (default 1).
+    pub count: usize,
+    /// `(tb, step)` of an instruction in another threadblock of the same
+    /// GPU that must have executed first (spin-lock enforced, §4.4).
+    pub depend: Option<(TbId, usize)>,
+}
+
+/// One threadblock: its connections and instruction list (Fig. 4).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct EfTb {
+    /// Send connection `(peer rank, channel)`.
+    pub send: Option<(Rank, ChanId)>,
+    /// Receive connection `(peer rank, channel)`.
+    pub recv: Option<(Rank, ChanId)>,
+    pub steps: Vec<EfInst>,
+}
+
+/// Per-GPU section of the EF.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct EfGpu {
+    pub rank: Rank,
+    /// Scratch buffer size in chunks.
+    pub scratch_chunks: usize,
+    pub tbs: Vec<EfTb>,
+}
+
+/// A complete GC3-EF program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EfProgram {
+    pub name: String,
+    /// Collective identity, e.g. `allreduce_8` — consumers look up the
+    /// postcondition spec by this plus the chunk counts.
+    pub collective: String,
+    pub num_ranks: usize,
+    /// Chunks the input buffer is divided into (per rank).
+    pub in_chunks: usize,
+    pub out_chunks: usize,
+    /// In-place collectives alias the output buffer onto the input.
+    pub inplace: bool,
+    pub protocol: Protocol,
+    pub gpus: Vec<EfGpu>,
+}
+
+impl EfProgram {
+    /// Total instruction count across all GPUs (incl. nops).
+    pub fn num_insts(&self) -> usize {
+        self.gpus.iter().map(|g| g.tbs.iter().map(|t| t.steps.len()).sum::<usize>()).sum()
+    }
+
+    /// Max threadblocks on any GPU.
+    pub fn max_tbs(&self) -> usize {
+        self.gpus.iter().map(|g| g.tbs.len()).max().unwrap_or(0)
+    }
+
+    /// Structural validation: connection invariant, dependence targets in
+    /// range, instruction/connection consistency. (Semantic validation is
+    /// the functional executor's job.)
+    pub fn validate(&self) -> Result<()> {
+        if self.gpus.len() != self.num_ranks {
+            return Err(Gc3Error::Ef(format!(
+                "{} GPU sections for {} ranks",
+                self.gpus.len(),
+                self.num_ranks
+            )));
+        }
+        for (r, gpu) in self.gpus.iter().enumerate() {
+            if gpu.rank != r {
+                return Err(Gc3Error::Ef(format!("GPU section {r} labeled rank {}", gpu.rank)));
+            }
+            for (t, tb) in gpu.tbs.iter().enumerate() {
+                for (s, inst) in tb.steps.iter().enumerate() {
+                    if inst.op.sends() && tb.send.is_none() {
+                        return Err(Gc3Error::Ef(format!(
+                            "r{r}/tb{t}/step{s}: {} needs a send connection",
+                            inst.op
+                        )));
+                    }
+                    if inst.op.recvs() && tb.recv.is_none() {
+                        return Err(Gc3Error::Ef(format!(
+                            "r{r}/tb{t}/step{s}: {} needs a receive connection",
+                            inst.op
+                        )));
+                    }
+                    if let Some((dep_tb, dep_step)) = inst.depend {
+                        if dep_tb >= gpu.tbs.len() {
+                            return Err(Gc3Error::Ef(format!(
+                                "r{r}/tb{t}/step{s}: depend names tb{dep_tb} of {}",
+                                gpu.tbs.len()
+                            )));
+                        }
+                        if dep_tb == t {
+                            return Err(Gc3Error::Ef(format!(
+                                "r{r}/tb{t}/step{s}: self-tb depend is redundant"
+                            )));
+                        }
+                        if dep_step >= gpu.tbs[dep_tb].steps.len() {
+                            return Err(Gc3Error::Ef(format!(
+                                "r{r}/tb{t}/step{s}: depend step {dep_step} out of range"
+                            )));
+                        }
+                    }
+                    if inst.count == 0 {
+                        return Err(Gc3Error::Ef(format!("r{r}/tb{t}/step{s}: count 0")));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---------------- JSON serialization ----------------
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("name", Json::str(&self.name))
+            .set("collective", Json::str(&self.collective))
+            .set("num_ranks", Json::num(self.num_ranks))
+            .set("in_chunks", Json::num(self.in_chunks))
+            .set("out_chunks", Json::num(self.out_chunks))
+            .set("inplace", Json::Bool(self.inplace))
+            .set("protocol", Json::str(self.protocol.name()));
+        let gpus: Vec<Json> = self
+            .gpus
+            .iter()
+            .map(|g| {
+                let mut go = Json::obj();
+                go.set("rank", Json::num(g.rank))
+                    .set("scratch_chunks", Json::num(g.scratch_chunks));
+                let tbs: Vec<Json> = g
+                    .tbs
+                    .iter()
+                    .map(|t| {
+                        let mut to = Json::obj();
+                        to.set("send", conn_json(t.send)).set("recv", conn_json(t.recv));
+                        let steps: Vec<Json> = t.steps.iter().map(inst_json).collect();
+                        to.set("steps", Json::Arr(steps));
+                        to
+                    })
+                    .collect();
+                go.set("tbs", Json::Arr(tbs));
+                go
+            })
+            .collect();
+        root.set("gpus", Json::Arr(gpus));
+        root
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json_str(text: &str) -> Result<EfProgram> {
+        let j = Json::parse(text).map_err(Gc3Error::Ef)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<EfProgram> {
+        let e = |m: String| Gc3Error::Ef(m);
+        let protocol = Protocol::parse(j.req_str("protocol").map_err(e)?)
+            .ok_or_else(|| Gc3Error::Ef("bad protocol".into()))?;
+        let mut gpus = Vec::new();
+        for gj in j.req_arr("gpus").map_err(e)? {
+            let mut tbs = Vec::new();
+            for tj in gj.req_arr("tbs").map_err(e)? {
+                let mut steps = Vec::new();
+                for sj in tj.req_arr("steps").map_err(e)? {
+                    steps.push(inst_from_json(sj)?);
+                }
+                tbs.push(EfTb {
+                    send: conn_from_json(tj.req("send").map_err(e)?)?,
+                    recv: conn_from_json(tj.req("recv").map_err(e)?)?,
+                    steps,
+                });
+            }
+            gpus.push(EfGpu {
+                rank: gj.req_usize("rank").map_err(e)?,
+                scratch_chunks: gj.req_usize("scratch_chunks").map_err(e)?,
+                tbs,
+            });
+        }
+        let ef = EfProgram {
+            name: j.req_str("name").map_err(e)?.to_string(),
+            collective: j.req_str("collective").map_err(e)?.to_string(),
+            num_ranks: j.req_usize("num_ranks").map_err(e)?,
+            in_chunks: j.req_usize("in_chunks").map_err(e)?,
+            out_chunks: j.req_usize("out_chunks").map_err(e)?,
+            inplace: j.req("inplace").map_err(e)?.as_bool().unwrap_or(false),
+            protocol,
+            gpus,
+        };
+        ef.validate()?;
+        Ok(ef)
+    }
+
+    /// Human-readable listing in the style of Fig. 4 — `gc3 inspect`.
+    pub fn listing(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "GC3-EF {name} collective={col} ranks={r} chunks={c} protocol={p}\n",
+            name = self.name,
+            col = self.collective,
+            r = self.num_ranks,
+            c = self.in_chunks,
+            p = self.protocol.name()
+        ));
+        for g in &self.gpus {
+            out.push_str(&format!("gpu {} (scratch {} chunks)\n", g.rank, g.scratch_chunks));
+            for (t, tb) in g.tbs.iter().enumerate() {
+                let fmt_conn = |c: Option<(Rank, ChanId)>| match c {
+                    Some((p, ch)) => format!("r{p}/ch{ch}"),
+                    None => "-".to_string(),
+                };
+                out.push_str(&format!(
+                    "  tb {t}: send {} recv {}\n",
+                    fmt_conn(tb.send),
+                    fmt_conn(tb.recv)
+                ));
+                for (s, inst) in tb.steps.iter().enumerate() {
+                    let arg = |a: Option<(BufferId, usize)>| match a {
+                        Some((b, i)) => format!("{b}[{i}]"),
+                        None => "-".to_string(),
+                    };
+                    let dep = match inst.depend {
+                        Some((tb, step)) => format!("  @after(tb{tb},{step})"),
+                        None => String::new(),
+                    };
+                    let cnt =
+                        if inst.count > 1 { format!(" x{}", inst.count) } else { String::new() };
+                    out.push_str(&format!(
+                        "    {s:3}: {op} {src} -> {dst}{cnt}{dep}\n",
+                        op = inst.op,
+                        src = arg(inst.src),
+                        dst = arg(inst.dst),
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn conn_json(c: Option<(Rank, ChanId)>) -> Json {
+    match c {
+        None => Json::Null,
+        Some((peer, ch)) => {
+            let mut o = Json::obj();
+            o.set("peer", Json::num(peer)).set("ch", Json::num(ch));
+            o
+        }
+    }
+}
+
+fn conn_from_json(j: &Json) -> Result<Option<(Rank, ChanId)>> {
+    match j {
+        Json::Null => Ok(None),
+        _ => Ok(Some((
+            j.req_usize("peer").map_err(Gc3Error::Ef)?,
+            j.req_usize("ch").map_err(Gc3Error::Ef)?,
+        ))),
+    }
+}
+
+fn inst_json(i: &EfInst) -> Json {
+    let mut o = Json::obj();
+    o.set("op", Json::str(i.op.name()));
+    if let Some((b, idx)) = i.src {
+        o.set("sbuf", Json::str(b.short())).set("sidx", Json::num(idx));
+    }
+    if let Some((b, idx)) = i.dst {
+        o.set("dbuf", Json::str(b.short())).set("didx", Json::num(idx));
+    }
+    if i.count != 1 {
+        o.set("cnt", Json::num(i.count));
+    }
+    if let Some((tb, step)) = i.depend {
+        o.set("dep_tb", Json::num(tb)).set("dep_step", Json::num(step));
+    }
+    o
+}
+
+fn inst_from_json(j: &Json) -> Result<EfInst> {
+    let op = OpCode::parse(j.req_str("op").map_err(Gc3Error::Ef)?)
+        .ok_or_else(|| Gc3Error::Ef("unknown opcode".into()))?;
+    let buf = |key: &str| -> Result<Option<BufferId>> {
+        match j.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(
+                BufferId::parse(v.as_str().unwrap_or(""))
+                    .ok_or_else(|| Gc3Error::Ef(format!("bad buffer in '{key}'")))?,
+            )),
+        }
+    };
+    let src = match buf("sbuf")? {
+        Some(b) => Some((b, j.req_usize("sidx").map_err(Gc3Error::Ef)?)),
+        None => None,
+    };
+    let dst = match buf("dbuf")? {
+        Some(b) => Some((b, j.req_usize("didx").map_err(Gc3Error::Ef)?)),
+        None => None,
+    };
+    let count = j.get("cnt").and_then(|v| v.as_usize()).unwrap_or(1);
+    let depend = match (j.get("dep_tb"), j.get("dep_step")) {
+        (Some(t), Some(s)) => Some((
+            t.as_usize().ok_or_else(|| Gc3Error::Ef("bad dep_tb".into()))?,
+            s.as_usize().ok_or_else(|| Gc3Error::Ef("bad dep_step".into()))?,
+        )),
+        _ => None,
+    };
+    Ok(EfInst { op, src, dst, count, depend })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_ef() -> EfProgram {
+        EfProgram {
+            name: "t".into(),
+            collective: "allgather_2".into(),
+            num_ranks: 2,
+            in_chunks: 1,
+            out_chunks: 2,
+            inplace: false,
+            protocol: Protocol::Simple,
+            gpus: vec![
+                EfGpu {
+                    rank: 0,
+                    scratch_chunks: 0,
+                    tbs: vec![
+                        EfTb {
+                            send: Some((1, 0)),
+                            recv: Some((1, 0)),
+                            steps: vec![
+                                EfInst {
+                                    op: OpCode::Copy,
+                                    src: Some((BufferId::Input, 0)),
+                                    dst: Some((BufferId::Output, 0)),
+                                    count: 1,
+                                    depend: None,
+                                },
+                                EfInst {
+                                    op: OpCode::Send,
+                                    src: Some((BufferId::Output, 0)),
+                                    dst: None,
+                                    count: 1,
+                                    depend: None,
+                                },
+                                EfInst {
+                                    op: OpCode::Recv,
+                                    src: None,
+                                    dst: Some((BufferId::Output, 1)),
+                                    count: 1,
+                                    depend: None,
+                                },
+                            ],
+                        },
+                        EfTb { send: None, recv: None, steps: vec![] },
+                    ],
+                },
+                EfGpu {
+                    rank: 1,
+                    scratch_chunks: 0,
+                    tbs: vec![EfTb {
+                        send: Some((0, 0)),
+                        recv: Some((0, 0)),
+                        steps: vec![
+                            EfInst {
+                                op: OpCode::Copy,
+                                src: Some((BufferId::Input, 0)),
+                                dst: Some((BufferId::Output, 1)),
+                                count: 1,
+                                depend: None,
+                            },
+                            EfInst {
+                                op: OpCode::Send,
+                                src: Some((BufferId::Output, 1)),
+                                dst: None,
+                                count: 1,
+                                depend: None,
+                            },
+                            EfInst {
+                                op: OpCode::Recv,
+                                src: None,
+                                dst: Some((BufferId::Output, 0)),
+                                count: 1,
+                                depend: None,
+                            },
+                        ],
+                    }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let ef = tiny_ef();
+        ef.validate().unwrap();
+        let text = ef.to_json_string();
+        let back = EfProgram::from_json_str(&text).unwrap();
+        assert_eq!(ef, back);
+    }
+
+    #[test]
+    fn validate_catches_missing_connection() {
+        let mut ef = tiny_ef();
+        ef.gpus[0].tbs[0].send = None;
+        let err = ef.validate().unwrap_err();
+        assert!(err.to_string().contains("send connection"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_bad_depend() {
+        let mut ef = tiny_ef();
+        ef.gpus[0].tbs[0].steps[0].depend = Some((5, 0));
+        assert!(ef.validate().is_err());
+        let mut ef2 = tiny_ef();
+        ef2.gpus[0].tbs[0].steps[0].depend = Some((1, 3));
+        assert!(ef2.validate().is_err());
+    }
+
+    #[test]
+    fn listing_mentions_ops() {
+        let l = tiny_ef().listing();
+        assert!(l.contains("send out[0]"), "{l}");
+        assert!(l.contains("recv - -> out[1]"), "{l}");
+    }
+
+    #[test]
+    fn from_json_rejects_rank_mismatch() {
+        let mut ef = tiny_ef();
+        ef.num_ranks = 3;
+        let text = ef.to_json_string();
+        assert!(EfProgram::from_json_str(&text).is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! Peephole instruction combining (§5.3.1): `rcs`, `rrcs`, `rrs`.
+//!
+//! These passes run right after instruction generation, before threadblock
+//! assignment. Each rewrites a back-to-back pair where the *only* direct
+//! dependent of the first instruction is the second:
+//!
+//! * **rcs** — `recv(b,i)` ; `send(b,i)`  →  `recvCopySend(b,i)`
+//! * **rrcs** — `rrc(...)` ; `send(dst)`  →  `recvReduceCopySend(...)`
+//! * **rrs** — an `rrcs` whose local result is never consumed again (and is
+//!   not a required output of the collective) drops the local copy:
+//!   `recvReduceSend`.
+//!
+//! When the program uses manual threadblock assignment (§5.4) a fusion is
+//! only applied if the receive half's `recvtb` and the send half's `sendtb`
+//! agree — a fused instruction executes on a single threadblock.
+
+use super::{InstDag, InstId, OpCode};
+use crate::core::BufferId;
+
+/// Statistics returned by [`fuse`] — used by the fusion ablation bench.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FusionStats {
+    pub rcs: usize,
+    pub rrcs: usize,
+    pub rrs: usize,
+}
+
+/// Run all three passes to fixpoint order (rcs, rrcs, then rrs) and compact
+/// the instruction list.
+pub fn fuse(dag: &mut InstDag) -> FusionStats {
+    let mut stats = FusionStats::default();
+    stats.rcs = fuse_recv_send(dag, OpCode::Recv, OpCode::Rcs);
+    stats.rrcs = fuse_recv_send(dag, OpCode::Rrc, OpCode::Rrcs);
+    stats.rrs = demote_rrcs(dag);
+    dag.compact();
+    debug_assert!(dag.check().is_ok());
+    stats
+}
+
+/// Direct dependents of every instruction (reverse processing edges).
+fn dependents(dag: &InstDag) -> Vec<Vec<InstId>> {
+    let mut rev: Vec<Vec<InstId>> = vec![Vec::new(); dag.insts.len()];
+    for inst in dag.live() {
+        for &d in &inst.deps {
+            rev[d].push(inst.id);
+        }
+    }
+    rev
+}
+
+/// Fuse `first_op` (a receive-type) with a directly-following `send` into
+/// `fused_op`. Returns the number of fusions applied.
+fn fuse_recv_send(dag: &mut InstDag, first_op: OpCode, fused_op: OpCode) -> usize {
+    let rev = dependents(dag);
+    let mut count = 0;
+    for r_id in 0..dag.insts.len() {
+        if dag.insts[r_id].dead || dag.insts[r_id].op != first_op {
+            continue;
+        }
+        // The paper's condition: exactly one direct dependent, and it is a
+        // send of the slot range the receive produced.
+        let live_deps: Vec<InstId> = rev[r_id].iter().copied().filter(|&d| !dag.insts[d].dead).collect();
+        if live_deps.len() != 1 {
+            continue;
+        }
+        let s_id = live_deps[0];
+        let (ok, send_peer, s_paired, s_deps, s_hint) = {
+            let r = &dag.insts[r_id];
+            let s = &dag.insts[s_id];
+            let same_range = s.op == OpCode::Send && s.rank == r.rank && s.src == r.dst;
+            // Manual scheduling: the fused instruction runs on one
+            // threadblock, so recvtb and sendtb must name the same one.
+            let tb_ok = match (r.hint.recvtb, s.hint.sendtb) {
+                (Some(a), Some(b)) => a == b,
+                _ => !dag.any_manual,
+            };
+            let ch_ok = match (r.hint.ch, s.hint.ch) {
+                (Some(a), Some(b)) => a == b,
+                _ => true,
+            };
+            (same_range && tb_ok && ch_ok, s.send_peer, s.paired_recv, s.deps.clone(), s.hint)
+        };
+        if !ok {
+            continue;
+        }
+        // Merge the send into the receive.
+        {
+            let r = &mut dag.insts[r_id];
+            r.op = fused_op;
+            r.send_peer = send_peer;
+            r.paired_recv = s_paired;
+            r.hint.sendtb = s_hint.sendtb;
+            if r.hint.ch.is_none() {
+                r.hint.ch = s_hint.ch;
+            }
+            for d in s_deps {
+                if d != r_id && !r.deps.contains(&d) {
+                    r.deps.push(d);
+                }
+            }
+            r.deps.sort_unstable();
+        }
+        dag.insts[s_id].dead = true;
+        // Re-point edges at the dead send.
+        if let Some(p) = s_paired {
+            dag.insts[p].comm_dep = Some(r_id);
+        }
+        for inst in dag.insts.iter_mut() {
+            if !inst.dead {
+                for d in inst.deps.iter_mut() {
+                    if *d == s_id {
+                        *d = r_id;
+                    }
+                }
+                inst.deps.sort_unstable();
+                inst.deps.dedup();
+                inst.deps.retain(|&d| d != inst.id);
+            }
+        }
+        count += 1;
+    }
+    count
+}
+
+/// §5.3.1 rrs: an `rrcs` whose local result is dead (no dependents, and the
+/// destination is not a slot the collective's postcondition constrains)
+/// needs no local copy.
+fn demote_rrcs(dag: &mut InstDag) -> usize {
+    let rev = dependents(dag);
+    let mut count = 0;
+    for id in 0..dag.insts.len() {
+        if dag.insts[id].dead || dag.insts[id].op != OpCode::Rrcs {
+            continue;
+        }
+        if rev[id].iter().any(|&d| !dag.insts[d].dead) {
+            continue;
+        }
+        let dst = dag.insts[id].dst.expect("rrcs has dst");
+        // Result slots of the collective must actually be written.
+        let required = dst.slots().any(|s| dag.spec.postcondition.contains_key(&s))
+            && dst.buffer == dag.spec.result_buffer();
+        // Conservatively keep the copy for output-buffer writes even when
+        // unconstrained — cheap, and keeps inplace semantics obvious.
+        if required || dst.buffer != BufferId::Scratch {
+            continue;
+        }
+        let inst = &mut dag.insts[id];
+        inst.op = OpCode::Rrs;
+        inst.dst = None;
+        count += 1;
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkdag::ChunkDag;
+    use crate::core::BufferId;
+    use crate::dsl::collective::CollectiveSpec;
+    use crate::dsl::{Program, SchedHint};
+    use crate::instdag::lower::lower;
+
+    fn lowered(build: impl FnOnce(&mut Program), spec: CollectiveSpec) -> InstDag {
+        let mut p = Program::new(spec);
+        build(&mut p);
+        let dag = ChunkDag::build(&p.finish().unwrap()).unwrap();
+        lower(&dag).unwrap()
+    }
+
+    /// Relay r0 -> r1 -> r2 through scratch: recv+send at r1 fuses to rcs.
+    #[test]
+    fn rcs_fusion_on_relay() {
+        let mut dag = lowered(
+            |p| {
+                let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+                let c = p.copy(c, BufferId::Scratch, 1, 0, SchedHint::none()).unwrap();
+                p.copy(c, BufferId::Output, 2, 0, SchedHint::none()).unwrap();
+            },
+            CollectiveSpec::custom("relay", 3, 1, 1, false, None, Default::default()),
+        );
+        let stats = fuse(&mut dag);
+        assert_eq!(stats.rcs, 1);
+        let ops: Vec<OpCode> = dag.insts.iter().map(|i| i.op).collect();
+        assert_eq!(ops, vec![OpCode::Send, OpCode::Rcs, OpCode::Recv]);
+        let rcs = &dag.insts[1];
+        assert_eq!(rcs.recv_peer, Some(0));
+        assert_eq!(rcs.send_peer, Some(2));
+        // Final recv's comm pairing re-pointed to the fused instruction.
+        assert_eq!(dag.insts[2].comm_dep, Some(1));
+        assert_eq!(rcs.paired_recv, Some(2));
+    }
+
+    /// Reduce-relay: rrc+send at r1 fuses to rrcs; with the result in
+    /// scratch and unused it demotes to rrs.
+    #[test]
+    fn rrcs_then_rrs() {
+        let mut dag = lowered(
+            |p| {
+                let c0 = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+                let c1 = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+                let acc = p.copy(c1, BufferId::Scratch, 1, 0, SchedHint::none()).unwrap();
+                let red = p.reduce(acc, c0, SchedHint::none()).unwrap();
+                p.copy(red, BufferId::Output, 2, 0, SchedHint::none()).unwrap();
+            },
+            CollectiveSpec::custom("redrelay", 3, 1, 1, false, None, Default::default()),
+        );
+        let stats = fuse(&mut dag);
+        assert_eq!(stats.rrcs, 1, "{:?}", dag.opcode_histogram());
+        assert_eq!(stats.rrs, 1);
+        assert!(dag.insts.iter().any(|i| i.op == OpCode::Rrs));
+        assert!(dag.insts.iter().all(|i| i.op != OpCode::Rrcs));
+    }
+
+    /// Two sends consuming one recv: fusion must NOT fire (the paper:
+    /// fusing would delay the other send).
+    #[test]
+    fn no_fusion_with_two_dependents() {
+        let mut dag = lowered(
+            |p| {
+                let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+                let c = p.copy(c, BufferId::Scratch, 1, 0, SchedHint::none()).unwrap();
+                p.copy(c.clone(), BufferId::Output, 2, 0, SchedHint::none()).unwrap();
+                p.copy(c, BufferId::Output, 0, 0, SchedHint::none()).unwrap();
+            },
+            CollectiveSpec::custom("fanout", 3, 1, 1, false, None, Default::default()),
+        );
+        let stats = fuse(&mut dag);
+        assert_eq!(stats.rcs, 0);
+        assert_eq!(dag.insts.iter().filter(|i| i.op == OpCode::Send).count(), 3);
+    }
+
+    /// Manual hints: recvtb != sendtb blocks fusion; equal tbs allow it.
+    #[test]
+    fn manual_tb_gates_fusion() {
+        let build = |sendtb2: usize| {
+            move |p: &mut Program| {
+                let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+                let c = p.copy(c, BufferId::Scratch, 1, 0, SchedHint::tb(0, 1, 0)).unwrap();
+                p.copy(c, BufferId::Output, 2, 0, SchedHint::tb(sendtb2, 0, 0)).unwrap();
+            }
+        };
+        let spec = || CollectiveSpec::custom("relay", 3, 1, 1, false, None, Default::default());
+        let mut split = lowered(build(2), spec());
+        assert_eq!(fuse(&mut split).rcs, 0, "recvtb=1 sendtb=2 must not fuse");
+        let mut same = lowered(build(1), spec());
+        assert_eq!(fuse(&mut same).rcs, 1, "recvtb=1 sendtb=1 fuses");
+    }
+
+    /// rrs must not fire when the reduced chunk is a required result.
+    #[test]
+    fn rrs_respects_postcondition() {
+        // 2-rank allreduce final step: rank1 reduces into its input slot
+        // (a required result) and sends onward; keep the local copy.
+        let mut dag = lowered(
+            |p| {
+                let c0 = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+                let c1 = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+                let r = p.reduce(c1, c0, SchedHint::none()).unwrap();
+                p.copy(r, BufferId::Input, 0, 0, SchedHint::none()).unwrap();
+            },
+            CollectiveSpec::allreduce(2, 1),
+        );
+        let stats = fuse(&mut dag);
+        assert_eq!(stats.rrcs, 1);
+        assert_eq!(stats.rrs, 0, "result slot write must stay rrcs");
+    }
+}

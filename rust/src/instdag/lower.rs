@@ -1,0 +1,300 @@
+//! Instruction generation (§5.2): Chunk DAG → Instruction DAG.
+//!
+//! Each chunk operation expands by locality:
+//!
+//! | Chunk op        | Expansion                                  |
+//! |-----------------|--------------------------------------------|
+//! | remote `assign` | `send` @src  ─comm─▶ `recv` @dst           |
+//! | remote `reduce` | `send` @src  ─comm─▶ `rrc`  @dst           |
+//! | local  `assign` | `copy`                                     |
+//! | local  `reduce` | `reduce`                                   |
+//!
+//! Processing dependences are recomputed slot-precisely here rather than
+//! projected from the Chunk DAG: every instruction that reads a slot
+//! depends on its last writer; every instruction that writes a slot
+//! depends on its last writer and on all readers since (WAR/WAW). This is
+//! exactly the paper's "true dependences from chunk movements as well as
+//! false dependences from reusing a buffer slot", but at instruction
+//! granularity, which the threadblock scheduler needs.
+
+use super::{Inst, InstDag, InstId, OpCode};
+use crate::chunkdag::{ChunkDag, ChunkOpKind};
+use crate::core::{Result, Slot, SlotRange};
+use crate::dsl::SchedHint;
+use std::collections::HashMap;
+
+#[derive(Default)]
+struct SlotDeps {
+    last_writer: Option<InstId>,
+    readers_since: Vec<InstId>,
+}
+
+/// Lower a validated Chunk DAG into the Instruction DAG.
+pub fn lower(dag: &ChunkDag) -> Result<InstDag> {
+    let mut insts: Vec<Inst> = Vec::with_capacity(dag.num_ops() * 2);
+    let mut slots: HashMap<Slot, SlotDeps> = HashMap::new();
+    let mut any_manual = false;
+
+    // Start nodes seed the writer table with "nobody": input data is
+    // present before the kernel launches, so reads of untouched input
+    // slots carry no dependence.
+
+    for node in dag.ops() {
+        let hint = node.hint;
+        if hint.is_manual() {
+            any_manual = true;
+        }
+        let src = node.src.expect("op node has source");
+        let dst = node.dst;
+        let remote = src.rank != dst.rank;
+        match (node.op, remote) {
+            (ChunkOpKind::Copy, false) => {
+                push_local(&mut insts, &mut slots, OpCode::Copy, src, dst, hint);
+            }
+            (ChunkOpKind::Reduce, false) => {
+                push_local(&mut insts, &mut slots, OpCode::Reduce, src, dst, hint);
+            }
+            (ChunkOpKind::Copy, true) => {
+                push_pair(&mut insts, &mut slots, OpCode::Recv, src, dst, hint);
+            }
+            (ChunkOpKind::Reduce, true) => {
+                push_pair(&mut insts, &mut slots, OpCode::Rrc, src, dst, hint);
+            }
+            (ChunkOpKind::Start, _) => unreachable!(),
+        }
+    }
+
+    let out = InstDag {
+        spec: dag.spec.clone(),
+        insts,
+        scratch_chunks: dag.scratch_chunks.clone(),
+        any_manual,
+    };
+    out.check()?;
+    Ok(out)
+}
+
+/// Record read/write dependences for an instruction and register it.
+fn finish_inst(insts: &mut Vec<Inst>, slots: &mut HashMap<Slot, SlotDeps>, mut inst: Inst) -> InstId {
+    let id = inst.id;
+    let mut deps: Vec<InstId> = Vec::new();
+    if inst.op.reads_src() {
+        if let Some(src) = inst.src {
+            for s in src.slots() {
+                let sd = slots.entry(s).or_default();
+                if let Some(w) = sd.last_writer {
+                    deps.push(w);
+                }
+                sd.readers_since.push(id);
+            }
+        }
+    }
+    // Rrc/Rrcs read dst as the in-place reduce operand even though it is
+    // recorded as `src` above (src == dst for accumulation); plain writes
+    // need WAW/WAR edges on dst regardless.
+    if inst.op.writes_dst() {
+        if let Some(dst) = inst.dst {
+            for s in dst.slots() {
+                let sd = slots.entry(s).or_default();
+                if let Some(w) = sd.last_writer {
+                    deps.push(w);
+                }
+                deps.extend(sd.readers_since.iter().copied());
+                sd.last_writer = Some(id);
+                sd.readers_since.clear();
+            }
+        }
+    }
+    deps.retain(|&d| d != id);
+    deps.sort_unstable();
+    deps.dedup();
+    inst.deps = deps;
+    insts.push(inst);
+    id
+}
+
+fn push_local(
+    insts: &mut Vec<Inst>,
+    slots: &mut HashMap<Slot, SlotDeps>,
+    op: OpCode,
+    src: SlotRange,
+    dst: SlotRange,
+    hint: SchedHint,
+) {
+    let id = insts.len();
+    finish_inst(
+        insts,
+        slots,
+        Inst {
+            id,
+            rank: dst.rank,
+            op,
+            src: Some(src),
+            dst: Some(dst),
+            send_peer: None,
+            recv_peer: None,
+            deps: Vec::new(),
+            comm_dep: None,
+            paired_recv: None,
+            hint,
+            dead: false,
+        },
+    );
+}
+
+/// Emit `send` on the source rank paired with `recv_op` on the destination.
+fn push_pair(
+    insts: &mut Vec<Inst>,
+    slots: &mut HashMap<Slot, SlotDeps>,
+    recv_op: OpCode,
+    src: SlotRange,
+    dst: SlotRange,
+    hint: SchedHint,
+) {
+    let send_id = insts.len();
+    // The send half keeps the sendtb/ch hints; the receive half the recvtb/ch.
+    let send_hint = SchedHint { sendtb: hint.sendtb, recvtb: None, ch: hint.ch };
+    let recv_hint = SchedHint { sendtb: None, recvtb: hint.recvtb, ch: hint.ch };
+    finish_inst(
+        insts,
+        slots,
+        Inst {
+            id: send_id,
+            rank: src.rank,
+            op: OpCode::Send,
+            src: Some(src),
+            dst: None,
+            send_peer: Some(dst.rank),
+            recv_peer: None,
+            deps: Vec::new(),
+            comm_dep: None,
+            paired_recv: Some(send_id + 1),
+            hint: send_hint,
+            dead: false,
+        },
+    );
+    let recv_id = insts.len();
+    debug_assert_eq!(recv_id, send_id + 1);
+    // recvReduceCopy accumulates into dst: it reads dst as local operand.
+    let local_src = if recv_op == OpCode::Rrc { Some(dst) } else { None };
+    finish_inst(
+        insts,
+        slots,
+        Inst {
+            id: recv_id,
+            rank: dst.rank,
+            op: recv_op,
+            src: local_src,
+            dst: Some(dst),
+            send_peer: None,
+            recv_peer: Some(src.rank),
+            deps: Vec::new(),
+            comm_dep: Some(send_id),
+            paired_recv: None,
+            hint: recv_hint,
+            dead: false,
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkdag::ChunkDag;
+    use crate::core::BufferId;
+    use crate::dsl::collective::CollectiveSpec;
+    use crate::dsl::Program;
+
+    fn lower_prog(build: impl FnOnce(&mut Program)) -> InstDag {
+        let mut p = Program::new(CollectiveSpec::allreduce(3, 1));
+        build(&mut p);
+        let dag = ChunkDag::build(&p.finish().unwrap()).unwrap();
+        lower(&dag).unwrap()
+    }
+
+    #[test]
+    fn remote_copy_becomes_send_recv() {
+        let dag = lower_prog(|p| {
+            let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+            p.copy(c, BufferId::Scratch, 1, 0, SchedHint::none()).unwrap();
+        });
+        assert_eq!(dag.insts.len(), 2);
+        assert_eq!(dag.insts[0].op, OpCode::Send);
+        assert_eq!(dag.insts[0].rank, 0);
+        assert_eq!(dag.insts[0].send_peer, Some(1));
+        assert_eq!(dag.insts[1].op, OpCode::Recv);
+        assert_eq!(dag.insts[1].rank, 1);
+        assert_eq!(dag.insts[1].comm_dep, Some(0));
+        assert_eq!(dag.insts[0].paired_recv, Some(1));
+    }
+
+    #[test]
+    fn remote_reduce_becomes_send_rrc() {
+        let dag = lower_prog(|p| {
+            let c0 = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+            let c1 = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+            p.reduce(c1, c0, SchedHint::none()).unwrap();
+        });
+        assert_eq!(dag.insts[1].op, OpCode::Rrc);
+        // rrc reads its own dst as the local reduce operand.
+        assert_eq!(dag.insts[1].src, dag.insts[1].dst);
+    }
+
+    #[test]
+    fn local_ops_single_instruction() {
+        let dag = lower_prog(|p| {
+            let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+            let s = p.copy(c, BufferId::Scratch, 0, 0, SchedHint::none()).unwrap();
+            let c2 = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+            p.reduce(s, c2, SchedHint::none()).unwrap();
+        });
+        assert_eq!(dag.insts.len(), 2);
+        assert_eq!(dag.insts[0].op, OpCode::Copy);
+        assert_eq!(dag.insts[1].op, OpCode::Reduce);
+        // Reduce depends on the copy (reads its dst, writes it).
+        assert_eq!(dag.insts[1].deps, vec![0]);
+    }
+
+    #[test]
+    fn chain_dependences_cross_instructions() {
+        // r0 -> r1 -> r2 chain: recv at r1 then send r1->r2 must depend on it.
+        let dag = lower_prog(|p| {
+            let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+            let c = p.copy(c, BufferId::Scratch, 1, 0, SchedHint::none()).unwrap();
+            p.copy(c, BufferId::Scratch, 2, 0, SchedHint::none()).unwrap();
+        });
+        // insts: 0 send@r0, 1 recv@r1, 2 send@r1, 3 recv@r2
+        assert_eq!(dag.insts[2].op, OpCode::Send);
+        assert_eq!(dag.insts[2].rank, 1);
+        assert_eq!(dag.insts[2].deps, vec![1], "send reads slot recv wrote");
+    }
+
+    #[test]
+    fn war_on_overwrite() {
+        let dag = lower_prog(|p| {
+            let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+            // Send input chunk away...
+            p.copy(c.clone(), BufferId::Scratch, 1, 0, SchedHint::none()).unwrap();
+            // ...then overwrite the input slot with a received chunk.
+            let c2 = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+            p.copy(c2, BufferId::Input, 0, 0, SchedHint::none()).unwrap();
+        });
+        // insts: 0 send@r0(in[0]), 1 recv@r1, 2 send@r1, 3 recv@r0 writes in[0]
+        let recv_overwrite = &dag.insts[3];
+        assert_eq!(recv_overwrite.rank, 0);
+        assert!(recv_overwrite.deps.contains(&0), "WAR: overwrite waits for reader send");
+    }
+
+    #[test]
+    fn manual_hints_split_between_halves() {
+        let dag = lower_prog(|p| {
+            let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+            p.copy(c, BufferId::Scratch, 1, 0, SchedHint::tb(3, 5, 2)).unwrap();
+        });
+        assert_eq!(dag.insts[0].hint.sendtb, Some(3));
+        assert_eq!(dag.insts[0].hint.recvtb, None);
+        assert_eq!(dag.insts[1].hint.recvtb, Some(5));
+        assert_eq!(dag.insts[0].hint.ch, Some(2));
+        assert!(dag.any_manual);
+    }
+}

@@ -1,0 +1,253 @@
+//! The Instruction DAG (§5.2) and its optimizations (§5.3).
+//!
+//! Chunk operations expand into per-rank *instructions* drawn from the
+//! GC3-EF instruction set (§4.1). A remote `assign` becomes a `send` on the
+//! source rank paired with a `recv` on the destination; a remote `reduce`
+//! becomes a `send` paired with a `recvReduceCopy`; local operations become
+//! `copy`/`reduce`. Edges:
+//!
+//! * **processing edges** — same-rank dependences (true + false), computed
+//!   slot-precisely while lowering;
+//! * **communication edges** — the pairing between a send-type instruction
+//!   and its matching receive-type instruction on the peer rank.
+//!
+//! [`fusion`] then rewrites back-to-back patterns into the fused
+//! instructions (`rcs`, `rrcs`, `rrs`, §5.3.1) and [`instances`] replicates
+//! a program into `r` parallel copies over subdivided chunks (§5.3.2).
+
+pub mod fusion;
+pub mod instances;
+pub mod lower;
+
+use crate::core::{Rank, SlotRange};
+use crate::dsl::collective::CollectiveSpec;
+use crate::dsl::SchedHint;
+use std::fmt;
+
+pub type InstId = usize;
+
+/// The GC3-EF instruction set (§4.1).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum OpCode {
+    /// Dependence carrier inserted by synchronization insertion (§5.2).
+    Nop,
+    Send,
+    Recv,
+    Copy,
+    Reduce,
+    /// recvCopySend
+    Rcs,
+    /// recvReduceCopy
+    Rrc,
+    /// recvReduceCopySend
+    Rrcs,
+    /// recvReduceSend
+    Rrs,
+}
+
+impl OpCode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpCode::Nop => "nop",
+            OpCode::Send => "send",
+            OpCode::Recv => "recv",
+            OpCode::Copy => "copy",
+            OpCode::Reduce => "reduce",
+            OpCode::Rcs => "rcs",
+            OpCode::Rrc => "rrc",
+            OpCode::Rrcs => "rrcs",
+            OpCode::Rrs => "rrs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OpCode> {
+        Some(match s {
+            "nop" => OpCode::Nop,
+            "send" => OpCode::Send,
+            "recv" => OpCode::Recv,
+            "copy" => OpCode::Copy,
+            "reduce" => OpCode::Reduce,
+            "rcs" | "recvCopySend" => OpCode::Rcs,
+            "rrc" | "recvReduceCopy" => OpCode::Rrc,
+            "rrcs" | "recvReduceCopySend" => OpCode::Rrcs,
+            "rrs" | "recvReduceSend" => OpCode::Rrs,
+            _ => return None,
+        })
+    }
+
+    /// Instruction transmits to a send peer.
+    pub fn sends(&self) -> bool {
+        matches!(self, OpCode::Send | OpCode::Rcs | OpCode::Rrcs | OpCode::Rrs)
+    }
+
+    /// Instruction consumes data from a receive peer.
+    pub fn recvs(&self) -> bool {
+        matches!(self, OpCode::Recv | OpCode::Rcs | OpCode::Rrc | OpCode::Rrcs | OpCode::Rrs)
+    }
+
+    /// Instruction applies the reduction operator.
+    pub fn reduces(&self) -> bool {
+        matches!(self, OpCode::Reduce | OpCode::Rrc | OpCode::Rrcs | OpCode::Rrs)
+    }
+
+    /// Instruction writes its `dst` range to local memory.
+    pub fn writes_dst(&self) -> bool {
+        matches!(
+            self,
+            OpCode::Recv | OpCode::Copy | OpCode::Reduce | OpCode::Rcs | OpCode::Rrc | OpCode::Rrcs
+        )
+    }
+
+    /// Instruction reads its `src` range from local memory.
+    pub fn reads_src(&self) -> bool {
+        matches!(
+            self,
+            OpCode::Send
+                | OpCode::Copy
+                | OpCode::Reduce
+                | OpCode::Rrc
+                | OpCode::Rrcs
+                | OpCode::Rrs
+        )
+    }
+}
+
+impl fmt::Display for OpCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One instruction at one rank.
+#[derive(Clone, Debug)]
+pub struct Inst {
+    pub id: InstId,
+    pub rank: Rank,
+    pub op: OpCode,
+    /// Local source range (what `reads_src` reads).
+    pub src: Option<SlotRange>,
+    /// Local destination range (what `writes_dst` writes).
+    pub dst: Option<SlotRange>,
+    pub send_peer: Option<Rank>,
+    pub recv_peer: Option<Rank>,
+    /// Same-rank processing dependences.
+    pub deps: Vec<InstId>,
+    /// For receive-type instructions: the paired send (communication edge).
+    pub comm_dep: Option<InstId>,
+    /// For send-type instructions: the paired receive on the peer.
+    pub paired_recv: Option<InstId>,
+    pub hint: SchedHint,
+    /// Set by `fusion` when the instruction is merged away.
+    pub dead: bool,
+}
+
+impl Inst {
+    /// Number of chunks moved (the GC3-EF `count` argument).
+    pub fn count(&self) -> usize {
+        self.dst.map(|r| r.size).or_else(|| self.src.map(|r| r.size)).unwrap_or(0)
+    }
+}
+
+/// The lowered program: all instructions plus the collective metadata the
+/// later stages need.
+#[derive(Clone, Debug)]
+pub struct InstDag {
+    pub spec: CollectiveSpec,
+    pub insts: Vec<Inst>,
+    pub scratch_chunks: Vec<usize>,
+    /// True once any op carried a manual threadblock hint — the scheduler
+    /// then requires *all* ops to (§5.4).
+    pub any_manual: bool,
+}
+
+impl InstDag {
+    pub fn live(&self) -> impl Iterator<Item = &Inst> {
+        self.insts.iter().filter(|i| !i.dead)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live().count()
+    }
+
+    /// Instructions of one rank, in id order.
+    pub fn rank_insts(&self, rank: Rank) -> impl Iterator<Item = &Inst> {
+        self.insts.iter().filter(move |i| !i.dead && i.rank == rank)
+    }
+
+    /// Count per opcode — used by the fusion ablation.
+    pub fn opcode_histogram(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for i in self.live() {
+            *m.entry(i.op.name()).or_insert(0) += 1;
+        }
+        m
+    }
+
+    /// Drop dead instructions and remap all ids/edges to the compacted set.
+    pub fn compact(&mut self) {
+        let mut remap: Vec<Option<InstId>> = vec![None; self.insts.len()];
+        let mut next = 0;
+        for (id, inst) in self.insts.iter().enumerate() {
+            if !inst.dead {
+                remap[id] = Some(next);
+                next += 1;
+            }
+        }
+        let map = |id: InstId| remap[id].expect("edge to dead instruction");
+        let mut out: Vec<Inst> = Vec::with_capacity(next);
+        for inst in self.insts.drain(..) {
+            if inst.dead {
+                continue;
+            }
+            let mut inst = inst;
+            inst.id = map(inst.id);
+            for d in inst.deps.iter_mut() {
+                *d = map(*d);
+            }
+            inst.deps.sort_unstable();
+            inst.deps.dedup();
+            inst.comm_dep = inst.comm_dep.map(map);
+            inst.paired_recv = inst.paired_recv.map(map);
+            out.push(inst);
+        }
+        self.insts = out;
+    }
+
+    /// Verify edges are topological (acyclicity by construction) and that
+    /// communication pairings are mutual.
+    pub fn check(&self) -> crate::core::Result<()> {
+        for inst in self.live() {
+            for &d in &inst.deps {
+                if d >= inst.id {
+                    return Err(crate::core::Gc3Error::Invalid(format!(
+                        "instruction dep {} -> {} not topological",
+                        d, inst.id
+                    )));
+                }
+                if self.insts[d].rank != inst.rank {
+                    return Err(crate::core::Gc3Error::Invalid(format!(
+                        "processing edge {} -> {} crosses ranks",
+                        d, inst.id
+                    )));
+                }
+            }
+            if let Some(p) = inst.paired_recv {
+                if self.insts[p].comm_dep != Some(inst.id) {
+                    return Err(crate::core::Gc3Error::Invalid(format!(
+                        "comm pairing {} -> {} not mutual",
+                        inst.id, p
+                    )));
+                }
+            }
+            if let Some(s) = inst.comm_dep {
+                if self.insts[s].paired_recv != Some(inst.id) {
+                    return Err(crate::core::Gc3Error::Invalid(format!(
+                        "comm pairing {} <- {} not mutual",
+                        inst.id, s
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}

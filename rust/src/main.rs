@@ -1,0 +1,259 @@
+//! `gc3` — the command-line front end.
+//!
+//! ```text
+//! gc3 list      [--nodes N] [--gpus G]          list library programs
+//! gc3 compile   <program> [--instances R] [--protocol P] [--out EF.json] [-v]
+//! gc3 inspect   <EF.json>                       print a Fig.-4-style listing
+//! gc3 verify    <program> [--instances R]       byte-accurate correctness
+//! gc3 simulate  <program> --size S [--nodes N]  price a schedule
+//! gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]
+//! gc3 figures   [--fig 7|8|9|11|loc|abl]        regenerate §6 figures
+//! ```
+
+use gc3::collectives;
+use gc3::compiler::{compile, CompileOpts};
+use gc3::coordinator::Registry;
+use gc3::core::Result;
+use gc3::ef::EfProgram;
+use gc3::exec::{verify, NativeReducer};
+use gc3::sched::SchedOpts;
+use gc3::sim::{simulate, Protocol};
+use gc3::topology::Topology;
+use gc3::train::{train, TrainOpts};
+use gc3::util::cli::Args;
+use gc3::{bench, util};
+
+fn topo_from(args: &Args) -> Topology {
+    let nodes = args.usize("nodes", 1);
+    let mut t = if args.str_or("topo", "a100") == "ndv2" {
+        Topology::ndv2(nodes)
+    } else {
+        Topology::a100(nodes)
+    };
+    t.gpus_per_node = args.usize("gpus", t.gpus_per_node);
+    t
+}
+
+fn find_program(topo: &Topology, name: &str) -> Result<gc3::dsl::Trace> {
+    let lib = collectives::library(topo)?;
+    for p in &lib {
+        if p.name == name {
+            return Ok(p.trace.clone());
+        }
+    }
+    let names: Vec<&str> = lib.iter().map(|p| p.name).collect();
+    Err(gc3::core::Gc3Error::Invalid(format!(
+        "unknown program '{name}'; available: {}",
+        names.join(", ")
+    )))
+}
+
+fn opts_from(args: &Args, topo: &Topology) -> CompileOpts {
+    let mut o = CompileOpts {
+        instances: args.usize("instances", 1),
+        sched: SchedOpts { sm_count: topo.sm_count },
+        ..Default::default()
+    };
+    if let Some(p) = args.opt("protocol").and_then(Protocol::parse) {
+        o.protocol = p;
+    }
+    if args.flag("no-fuse") {
+        o.fuse = false;
+    }
+    o
+}
+
+fn main() {
+    let args = Args::parse(&["v", "no-fuse", "pjrt-reduce", "check"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "list" => {
+            let topo = topo_from(args);
+            println!("programs for {} ({} ranks):", topo.name, topo.num_ranks());
+            for p in collectives::library(&topo)? {
+                println!(
+                    "  {:24} {:3} DSL lines, {:5} chunk ops",
+                    p.name,
+                    p.dsl_lines,
+                    p.trace.op_count()
+                );
+            }
+            Ok(())
+        }
+        "compile" => {
+            let topo = topo_from(args);
+            let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("allreduce_ring");
+            let trace = find_program(&topo, name)?;
+            let c = compile(&trace, name, &opts_from(args, &topo))?;
+            if args.flag("v") {
+                println!("{:#?}", c.stats);
+            }
+            println!(
+                "compiled {name}: {} instructions, {} tbs, {} channels",
+                c.ef.num_insts(),
+                c.stats.max_tbs,
+                c.stats.max_channels
+            );
+            if let Some(out) = args.opt("out") {
+                std::fs::write(out, c.ef.to_json_string())
+                    .map_err(|e| gc3::core::Gc3Error::Ef(e.to_string()))?;
+                println!("wrote {out}");
+            }
+            Ok(())
+        }
+        "inspect" => {
+            let path = args.positional.get(1).expect("inspect <EF.json>");
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| gc3::core::Gc3Error::Ef(e.to_string()))?;
+            let ef = EfProgram::from_json_str(&text)?;
+            print!("{}", ef.listing());
+            Ok(())
+        }
+        "verify" => {
+            let topo = topo_from(args);
+            let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("allreduce_ring");
+            let trace = find_program(&topo, name)?;
+            let inst = args.usize("instances", 1);
+            let c = compile(&trace, name, &opts_from(args, &topo))?;
+            let spec = if inst > 1 { trace.spec.scaled(inst) } else { trace.spec.clone() };
+            let stats = verify(&c.ef, &spec, args.usize("elems", 8), &mut NativeReducer)?;
+            println!(
+                "{name} OK: {} messages, {} elems moved, {} scheduler rounds",
+                stats.messages, stats.elems_moved, stats.rounds
+            );
+            Ok(())
+        }
+        "simulate" => {
+            let topo = topo_from(args);
+            let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("allreduce_ring");
+            let size = args.bytes("size", 4 * 1024 * 1024);
+            let trace = find_program(&topo, name)?;
+            let c = compile(&trace, name, &opts_from(args, &topo))?;
+            let rep = simulate(&c.ef, &topo, size)?;
+            println!(
+                "{name} @ {} on {}: {:.1} us, algbw {:.2} GB/s ({} events, {} flows)",
+                util::human_bytes(size),
+                topo.name,
+                rep.time * 1e6,
+                rep.algbw / 1e9,
+                rep.events,
+                rep.flows
+            );
+            for (res, u) in rep.utilization.iter().take(4) {
+                println!("  {res}: {:.0}% busy", u * 100.0);
+            }
+            Ok(())
+        }
+        "train" => {
+            let opts = TrainOpts {
+                ranks: args.usize("ranks", 8),
+                steps: args.usize("steps", 300),
+                lr: args.f64("lr", 0.05) as f32,
+                seed: args.usize("seed", 0) as u64,
+                pjrt_reduce: args.flag("pjrt-reduce"),
+                log_every: args.usize("log-every", 10),
+            };
+            let report = train(&opts, |line| println!("{line}"))?;
+            println!(
+                "trained {} params on {} ranks: loss {:.4} -> {:.4}, {:.2} steps/s, \
+                 divergence {:.2e}\n{}",
+                report.num_params,
+                opts.ranks,
+                report.initial_loss,
+                report.final_loss,
+                report.steps_per_sec,
+                report.max_param_divergence,
+                report.metrics
+            );
+            Ok(())
+        }
+        "figures" => {
+            let fig = args.str_or("fig", "all");
+            let small = bench::size_sweep(64 * 1024, 1 << 30);
+            if fig == "7" || fig == "all" {
+                for nodes in [8, 16, 32] {
+                    if nodes > 8 && args.opt("fig").is_none() {
+                        continue; // `--fig 7` runs all three; `all` keeps it quick
+                    }
+                    let rows = bench::fig7(nodes, &bench::size_sweep(1 << 20, 1 << 30))?;
+                    print!("{}", bench::render(&format!("Fig 7: AllToAll, {nodes} nodes"), &rows));
+                }
+            }
+            if fig == "8" || fig == "all" {
+                let rows = bench::fig8(&small)?;
+                print!("{}", bench::render("Fig 8b: AllReduce, 8xA100", &rows));
+            }
+            if fig == "9" || fig == "all" {
+                let rows = bench::fig9(&small)?;
+                print!("{}", bench::render("Fig 9: Hierarchical AllReduce, 2xNDv2", &rows));
+            }
+            if fig == "11" || fig == "all" {
+                let rows = bench::fig11(&bench::size_sweep(32 * 1024, 1 << 30))?;
+                print!("{}", bench::render("Fig 11: AllToNext, 3 nodes", &rows));
+            }
+            if fig == "abl" || fig == "all" {
+                let rows = bench::abl_schedule(&small)?;
+                print!("{}", bench::render("Ablation: schedule shapes (6.2)", &rows));
+                let rows = bench::abl_protocols(&small)?;
+                print!("{}", bench::render("Ablation: protocols", &rows));
+                println!("== Ablation: fusion (2MB)");
+                for (name, raw, fused, t_raw, t_fused) in bench::abl_fusion(2 * 1024 * 1024)? {
+                    println!(
+                        "  {name:16} insts {raw:4} -> {fused:4}   time {t_raw:8.1}us -> {t_fused:8.1}us"
+                    );
+                }
+            }
+            if fig == "loc" || fig == "all" {
+                let topo = Topology::a100(2);
+                println!("== DSL program sizes (all under 30 lines, §6)");
+                for (name, lines, ops) in bench::loc_table(&topo)? {
+                    println!("  {name:24} {lines:3} lines  {ops:6} chunk ops");
+                }
+            }
+            Ok(())
+        }
+        "registry" => {
+            // Demo of the NCCL-fallback dispatch.
+            let mut reg = Registry::new(topo_from(args));
+            for size in [32 * 1024u64, 2 << 20, 256 << 20] {
+                let (ef, backend) = reg.allreduce(size)?;
+                println!(
+                    "allreduce {:>8}: {:?} -> {} ({})",
+                    util::human_bytes(size),
+                    backend,
+                    ef.name,
+                    ef.protocol
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+gc3 — an optimizing compiler for GPU collective communication (reproduction)
+
+usage:
+  gc3 list      [--nodes N] [--gpus G] [--topo a100|ndv2]
+  gc3 compile   <program> [--instances R] [--protocol simple|ll|ll128] [--out EF.json] [--v]
+  gc3 inspect   <EF.json>
+  gc3 verify    <program> [--instances R] [--elems E]
+  gc3 simulate  <program> --size 2MB [--nodes N] [--gpus G] [--topo a100|ndv2]
+  gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]   (needs `make artifacts`)
+  gc3 figures   [--fig 7|8|9|11|abl|loc]
+  gc3 registry  [--nodes N]";

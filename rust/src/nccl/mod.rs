@@ -1,0 +1,23 @@
+//! The NCCL 2.8 baseline (§6 "Baselines").
+//!
+//! The paper compares GC3 against NCCL's handwritten kernels. We rebuild
+//! NCCL's *algorithmic choices* — its ring/tree AllReduce schedules, its
+//! size-based (algorithm, protocol, channel-count) tuner, and its
+//! p2p-based AllToAll — and price them on the same simulator, which is the
+//! apples-to-apples analogue of measuring both systems on one testbed.
+//!
+//! * [`tuner`] — the selection model (`latency + size / busBw`, NCCL's
+//!   tuning tables simplified to the decisions that matter here).
+//! * [`allreduce`] — ring (one threadblock per channel, NCCL's structure)
+//!   and double-binary-tree schedules, emitted as GC3-EF.
+//! * [`alltoall`] — the grouped-p2p AllToAll cost model: NCCL multiplexes
+//!   many peers onto few proxy channels, which GC3-EF's
+//!   one-peer-per-threadblock invariant cannot express, so this baseline
+//!   is priced with a closed-form model over the same topology constants
+//!   (documented inline; DESIGN.md §Hardware-Adaptation).
+
+pub mod allreduce;
+pub mod alltoall;
+pub mod tuner;
+
+pub use tuner::{Algo, Choice};

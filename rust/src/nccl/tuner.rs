@@ -1,0 +1,89 @@
+//! NCCL's algorithm/protocol/channel tuner, simplified.
+//!
+//! NCCL picks, per call, an (algorithm, protocol, nChannels) triple by
+//! minimizing `baseLat + nsteps·hwLat + size/busBw` over its tuning
+//! tables [NCCL issue #256, cited by the paper]. We reproduce the
+//! *decisions* that shape Fig. 8/9: LL for small buffers, LL128 for the
+//! mid range, Simple for large; trees across nodes for latency-bound
+//! sizes; channel count scaled so each channel carries at least ~128 KB
+//! but never more than 24 channels.
+
+use crate::sim::Protocol;
+use crate::topology::Topology;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Algo {
+    Ring,
+    Tree,
+}
+
+/// One tuner decision.
+#[derive(Clone, Copy, Debug)]
+pub struct Choice {
+    pub algo: Algo,
+    pub proto: Protocol,
+    pub nchannels: usize,
+}
+
+/// NCCL's default max channel count (A100 generation).
+pub const MAX_CHANNELS: usize = 24;
+
+/// Per-channel minimum work before NCCL adds channels.
+const BYTES_PER_CHANNEL: u64 = 512 * 1024;
+
+/// Channel count for a given buffer size.
+pub fn channels_for(size: u64) -> usize {
+    ((size / BYTES_PER_CHANNEL) as usize).clamp(2, MAX_CHANNELS)
+}
+
+/// AllReduce tuning.
+pub fn allreduce(topo: &Topology, size: u64) -> Choice {
+    let proto = if size < 64 * 1024 {
+        Protocol::LL
+    } else if size < 4 * 1024 * 1024 {
+        Protocol::LL128
+    } else {
+        Protocol::Simple
+    };
+    // Trees only help across nodes (latency), and only for smaller sizes.
+    let algo = if topo.nodes > 1 && size < 1024 * 1024 { Algo::Tree } else { Algo::Ring };
+    Choice { algo, proto, nchannels: channels_for(size) }
+}
+
+/// p2p (send/recv) tuning: protocol by message size; NCCL gives grouped
+/// p2p at most 8 proxy channels.
+pub fn p2p(size_per_msg: u64) -> Choice {
+    let proto = if size_per_msg < 64 * 1024 { Protocol::LL } else { Protocol::Simple };
+    Choice { algo: Algo::Ring, proto, nchannels: 8 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protocol_ladder() {
+        let t = Topology::a100_single();
+        assert_eq!(allreduce(&t, 16 * 1024).proto, Protocol::LL);
+        assert_eq!(allreduce(&t, 2 * 1024 * 1024).proto, Protocol::LL128);
+        assert_eq!(allreduce(&t, 64 * 1024 * 1024).proto, Protocol::Simple);
+    }
+
+    #[test]
+    fn single_node_never_tree() {
+        let t = Topology::a100_single();
+        for size in [1024, 1 << 20, 1 << 28] {
+            assert_eq!(allreduce(&t, size).algo, Algo::Ring);
+        }
+        let multi = Topology::a100(4);
+        assert_eq!(allreduce(&multi, 256 * 1024).algo, Algo::Tree);
+        assert_eq!(allreduce(&multi, 1 << 28).algo, Algo::Ring);
+    }
+
+    #[test]
+    fn channels_scale_with_size() {
+        assert_eq!(channels_for(64 * 1024), 2);
+        assert_eq!(channels_for(4 * 1024 * 1024), 8);
+        assert_eq!(channels_for(1 << 30), MAX_CHANNELS);
+    }
+}

@@ -1,0 +1,232 @@
+//! PJRT runtime: load the AOT artifacts and execute them from Rust.
+//!
+//! The Python side runs once (`make artifacts`) and lowers Layer-2/Layer-1
+//! to HLO text; this module is everything needed at run time:
+//!
+//! * [`Artifacts`] — locate + parse `artifacts/` (HLO text, initial
+//!   parameters, model metadata);
+//! * [`Engine`] — a PJRT CPU client with each executable compiled once;
+//! * [`PjrtReducer`] — the [`crate::exec::Reducer`] implementation that
+//!   routes the GC3 runtime's chunk reductions through the Pallas kernel.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax≥0.5's 64-bit-id protos; the text parser reassigns ids).
+
+pub mod reducer;
+
+pub use reducer::PjrtReducer;
+
+use crate::core::{Gc3Error, Result};
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// Parsed `model_meta.json`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub num_params: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub reduce_elems: usize,
+}
+
+/// The artifact directory produced by `make artifacts`.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+}
+
+impl Artifacts {
+    pub fn at(dir: impl Into<PathBuf>) -> Artifacts {
+        Artifacts { dir: dir.into() }
+    }
+
+    /// Default location: `$GC3_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> Artifacts {
+        let dir = std::env::var("GC3_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Artifacts::at(dir)
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    pub fn available(&self) -> bool {
+        self.path("reduce.hlo.txt").exists()
+    }
+
+    pub fn model_available(&self) -> bool {
+        self.path("train_step.hlo.txt").exists() && self.path("model_meta.json").exists()
+    }
+
+    pub fn meta(&self) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(self.path("model_meta.json"))
+            .map_err(|e| Gc3Error::Exec(format!("model_meta.json: {e}")))?;
+        let j = Json::parse(&text).map_err(Gc3Error::Exec)?;
+        let req = |k: &str| j.req_usize(k).map_err(Gc3Error::Exec);
+        Ok(ModelMeta {
+            num_params: req("num_params")?,
+            batch: req("batch")?,
+            seq_len: req("seq_len")?,
+            vocab: req("vocab")?,
+            d_model: req("d_model")?,
+            n_layers: req("n_layers")?,
+            reduce_elems: req("reduce_elems")?,
+        })
+    }
+
+    /// Initial flat parameter vector.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.path("params_init.bin"))
+            .map_err(|e| Gc3Error::Exec(format!("params_init.bin: {e}")))?;
+        Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+    }
+}
+
+/// A PJRT CPU client with compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub artifacts: Artifacts,
+    reduce: Option<xla::PjRtLoadedExecutable>,
+    train_step: Option<xla::PjRtLoadedExecutable>,
+    sgd_update: Option<xla::PjRtLoadedExecutable>,
+}
+
+fn xe(e: xla::Error) -> Gc3Error {
+    Gc3Error::Exec(format!("xla: {e}"))
+}
+
+impl Engine {
+    /// Create the client; executables compile lazily on first use.
+    pub fn new(artifacts: Artifacts) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        Ok(Engine { client, artifacts, reduce: None, train_step: None, sgd_update: None })
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts.path(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Gc3Error::Exec("bad path".into()))?,
+        )
+        .map_err(xe)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(xe)
+    }
+
+    fn reduce_exe(&mut self) -> Result<&xla::PjRtLoadedExecutable> {
+        if self.reduce.is_none() {
+            self.reduce = Some(self.compile("reduce.hlo.txt")?);
+        }
+        Ok(self.reduce.as_ref().unwrap())
+    }
+
+    fn train_exe(&mut self) -> Result<&xla::PjRtLoadedExecutable> {
+        if self.train_step.is_none() {
+            self.train_step = Some(self.compile("train_step.hlo.txt")?);
+        }
+        Ok(self.train_step.as_ref().unwrap())
+    }
+
+    fn sgd_exe(&mut self) -> Result<&xla::PjRtLoadedExecutable> {
+        if self.sgd_update.is_none() {
+            self.sgd_update = Some(self.compile("sgd_update.hlo.txt")?);
+        }
+        Ok(self.sgd_update.as_ref().unwrap())
+    }
+
+    /// `out = a + b` through the AOT Pallas kernel. Lengths must equal the
+    /// kernel's compiled quantum (`ModelMeta::reduce_elems`).
+    pub fn reduce_quantum(&mut self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(a.len(), b.len());
+        let exe = self.reduce_exe()?;
+        let la = xla::Literal::vec1(a);
+        let lb = xla::Literal::vec1(b);
+        let result = exe.execute::<xla::Literal>(&[la, lb]).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        let out = result.to_tuple1().map_err(xe)?;
+        out.to_vec::<f32>().map_err(xe)
+    }
+
+    /// One fwd+bwd: `(flat_params, tokens[B, S+1]) -> (flat_grads, loss)`.
+    pub fn train_step(&mut self, flat: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let meta = self.artifacts.meta()?;
+        debug_assert_eq!(flat.len(), meta.num_params);
+        debug_assert_eq!(tokens.len(), meta.batch * (meta.seq_len + 1));
+        let exe = self.train_exe()?;
+        let lp = xla::Literal::vec1(flat);
+        let lt = xla::Literal::vec1(tokens)
+            .reshape(&[meta.batch as i64, meta.seq_len as i64 + 1])
+            .map_err(xe)?;
+        let result =
+            exe.execute::<xla::Literal>(&[lp, lt]).map_err(xe)?[0][0].to_literal_sync().map_err(xe)?;
+        let (grads, loss) = result.to_tuple2().map_err(xe)?;
+        Ok((grads.to_vec::<f32>().map_err(xe)?, loss.to_vec::<f32>().map_err(xe)?[0]))
+    }
+
+    /// SGD: `flat' = flat − lr · grads`.
+    pub fn sgd_update(&mut self, flat: &[f32], grads: &[f32], lr: f32) -> Result<Vec<f32>> {
+        let exe = self.sgd_exe()?;
+        let lp = xla::Literal::vec1(flat);
+        let lg = xla::Literal::vec1(grads);
+        let ll = xla::Literal::scalar(lr);
+        let result = exe.execute::<xla::Literal>(&[lp, lg, ll]).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        let out = result.to_tuple1().map_err(xe)?;
+        out.to_vec::<f32>().map_err(xe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<Artifacts> {
+        let a = Artifacts::default_dir();
+        if a.available() {
+            Some(a)
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn reduce_kernel_roundtrip() {
+        let Some(a) = artifacts() else { return };
+        let meta_elems =
+            a.meta().map(|m| m.reduce_elems).unwrap_or(1 << 16);
+        let mut eng = Engine::new(a).unwrap();
+        let x: Vec<f32> = (0..meta_elems).map(|i| i as f32 * 0.5).collect();
+        let y: Vec<f32> = (0..meta_elems).map(|i| i as f32).collect();
+        let out = eng.reduce_quantum(&x, &y).unwrap();
+        assert_eq!(out.len(), meta_elems);
+        for i in (0..meta_elems).step_by(7777) {
+            assert_eq!(out[i], i as f32 * 1.5, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn train_step_runs_if_model_built() {
+        let Some(a) = artifacts() else { return };
+        if !a.model_available() {
+            eprintln!("skipping: model artifacts not built");
+            return;
+        }
+        let meta = a.meta().unwrap();
+        let params = a.init_params().unwrap();
+        assert_eq!(params.len(), meta.num_params);
+        let mut eng = Engine::new(a).unwrap();
+        let tokens: Vec<i32> =
+            (0..meta.batch * (meta.seq_len + 1)).map(|i| (i % meta.vocab) as i32).collect();
+        let (grads, loss) = eng.train_step(&params, &tokens).unwrap();
+        assert_eq!(grads.len(), params.len());
+        // Initial loss ≈ ln(vocab) for a byte LM.
+        assert!((loss - (meta.vocab as f32).ln()).abs() < 1.0, "loss {loss}");
+        let new = eng.sgd_update(&params, &grads, 0.1).unwrap();
+        assert_ne!(new[0..32], params[0..32]);
+    }
+}

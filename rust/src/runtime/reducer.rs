@@ -1,0 +1,79 @@
+//! [`crate::exec::Reducer`] backed by the AOT Pallas kernel.
+//!
+//! The functional executor calls `reduce(acc, src)` for every reducing
+//! GC3-EF instruction. This implementation segments arbitrary chunk
+//! lengths into the kernel's compiled quantum (`REDUCE_ELEMS` f32, padded
+//! at the tail) and runs each segment through PJRT — the same binary
+//! kernel a real deployment would run on device, closing the
+//! Rust → GC3-EF → Pallas loop end to end.
+
+use super::Engine;
+use crate::exec::Reducer;
+
+pub struct PjrtReducer {
+    engine: Engine,
+    quantum: usize,
+    /// Scratch buffers to avoid reallocating per call.
+    a_buf: Vec<f32>,
+    b_buf: Vec<f32>,
+    pub calls: usize,
+}
+
+impl PjrtReducer {
+    pub fn new(mut engine: Engine) -> crate::core::Result<PjrtReducer> {
+        let quantum = engine.artifacts.meta().map(|m| m.reduce_elems).unwrap_or(1 << 16);
+        // Force compilation now so the hot path never pays it.
+        let probe = vec![0.0f32; quantum];
+        engine.reduce_quantum(&probe, &probe)?;
+        Ok(PjrtReducer { engine, quantum, a_buf: vec![0.0; quantum], b_buf: vec![0.0; quantum], calls: 0 })
+    }
+}
+
+impl Reducer for PjrtReducer {
+    fn reduce(&mut self, acc: &mut [f32], src: &[f32]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let q = self.quantum;
+        let mut off = 0;
+        while off < acc.len() {
+            let take = q.min(acc.len() - off);
+            self.a_buf[..take].copy_from_slice(&acc[off..off + take]);
+            self.b_buf[..take].copy_from_slice(&src[off..off + take]);
+            if take < q {
+                self.a_buf[take..].fill(0.0);
+                self.b_buf[take..].fill(0.0);
+            }
+            let out = self
+                .engine
+                .reduce_quantum(&self.a_buf, &self.b_buf)
+                .expect("pjrt reduce kernel failed");
+            acc[off..off + take].copy_from_slice(&out[..take]);
+            self.calls += 1;
+            off += take;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Artifacts;
+
+    #[test]
+    fn segments_and_pads() {
+        let a = Artifacts::default_dir();
+        if !a.available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut red = PjrtReducer::new(Engine::new(a).unwrap()).unwrap();
+        // Odd length crossing one quantum boundary.
+        let n = red.quantum + 1000;
+        let mut acc: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let src: Vec<f32> = (0..n).map(|i| (i * 2) as f32).collect();
+        red.reduce(&mut acc, &src);
+        assert_eq!(red.calls, 2);
+        for i in (0..n).step_by(997) {
+            assert_eq!(acc[i], (i * 3) as f32);
+        }
+    }
+}

@@ -1,0 +1,376 @@
+//! Step 1 + 5 of the scheduling routine: threadblock creation and
+//! instruction assignment — automatic (§5.2) and manual (§5.4).
+
+use super::{global_order, Schedule, Threadblock};
+use crate::core::{ChanId, Gc3Error, Rank, Result, TbId};
+use crate::instdag::{InstDag, InstId};
+use std::collections::HashMap;
+
+/// Channel of the communication edge rooted at send-type instruction `s`:
+/// the sender's channel directive, defaulting to 0.
+fn edge_channel(dag: &InstDag, s: InstId) -> ChanId {
+    dag.insts[s].hint.ch.unwrap_or(0)
+}
+
+/// `(send_need, recv_need)` of an instruction: the connections its
+/// threadblock must own. The receive side inherits the *sender's* channel
+/// (both ends of a connection see the same channel id, §4.3).
+fn needs(dag: &InstDag, id: InstId) -> (Option<(Rank, ChanId)>, Option<(Rank, ChanId)>) {
+    let inst = &dag.insts[id];
+    let send = if inst.op.sends() {
+        Some((inst.send_peer.expect("send op has peer"), edge_channel(dag, id)))
+    } else {
+        None
+    };
+    let recv = if inst.op.recvs() {
+        let s = inst.comm_dep.expect("recv op has paired send");
+        Some((inst.recv_peer.expect("recv op has peer"), edge_channel(dag, s)))
+    } else {
+        None
+    };
+    (send, recv)
+}
+
+/// Automatic threadblock assignment (§5.2, five-step routine).
+pub fn auto_assign(dag: &InstDag) -> Result<Schedule> {
+    auto_assign_capped(dag, usize::MAX)
+}
+
+/// Automatic assignment with an SM budget: half-open threadblocks are kept
+/// separate (independent streams overlap) unless the budget forces
+/// merging send-only with recv-only threadblocks — the same multiplexing
+/// real NCCL falls back to when channels are scarce.
+pub fn auto_assign_capped(dag: &InstDag, sm_cap: usize) -> Result<Schedule> {
+    let nranks = dag.spec.num_ranks;
+    let order = global_order(dag);
+    let mut tbs: Vec<Vec<Threadblock>> = (0..nranks).map(|_| Vec::new()).collect();
+
+    // -- Step 1: create threadblocks from connection signatures. --
+    // Fused instructions pin a full (send, recv) signature; the leftover
+    // send-only / recv-only demands are greedily paired afterwards so one
+    // threadblock serves both directions where possible.
+    let mut full_sigs: Vec<HashMap<((Rank, ChanId), (Rank, ChanId)), ()>> =
+        (0..nranks).map(|_| HashMap::new()).collect();
+    let mut send_demands: Vec<Vec<(Rank, ChanId)>> = (0..nranks).map(|_| Vec::new()).collect();
+    let mut recv_demands: Vec<Vec<(Rank, ChanId)>> = (0..nranks).map(|_| Vec::new()).collect();
+    for inst in dag.live() {
+        let (s, r) = needs(dag, inst.id);
+        match (s, r) {
+            (Some(s), Some(r)) => {
+                full_sigs[inst.rank].insert((s, r), ());
+            }
+            (Some(s), None) => send_demands[inst.rank].push(s),
+            (None, Some(r)) => recv_demands[inst.rank].push(r),
+            (None, None) => {}
+        }
+    }
+    for rank in 0..nranks {
+        let mut sigs: Vec<_> = full_sigs[rank].keys().copied().collect();
+        sigs.sort_unstable();
+        for (s, r) in sigs {
+            let id = tbs[rank].len();
+            tbs[rank].push(Threadblock { rank, id, send: Some(s), recv: Some(r), insts: vec![] });
+        }
+        // Deduplicate demands and drop those already covered.
+        let covered_s: Vec<(Rank, ChanId)> = tbs[rank].iter().filter_map(|t| t.send).collect();
+        let covered_r: Vec<(Rank, ChanId)> = tbs[rank].iter().filter_map(|t| t.recv).collect();
+        let mut s_left: Vec<(Rank, ChanId)> = send_demands[rank]
+            .iter()
+            .copied()
+            .filter(|d| !covered_s.contains(d))
+            .collect();
+        s_left.sort_unstable();
+        s_left.dedup();
+        let mut r_left: Vec<(Rank, ChanId)> = recv_demands[rank]
+            .iter()
+            .copied()
+            .filter(|d| !covered_r.contains(d))
+            .collect();
+        r_left.sort_unstable();
+        r_left.dedup();
+        // Unfused leftovers get half-open threadblocks. (Pairing a stray
+        // send with a stray receive onto one threadblock would serialize
+        // two independent bulk streams — NCCL's p2p path likewise gives
+        // sends and receives their own channels.) Only when the SM budget
+        // would be exceeded are send-only and recv-only demands merged.
+        let budget = sm_cap.saturating_sub(tbs[rank].len());
+        let merges = if s_left.len() + r_left.len() > budget {
+            (s_left.len() + r_left.len()).saturating_sub(budget).min(s_left.len().min(r_left.len()))
+        } else {
+            0
+        };
+        for k in 0..merges {
+            let id = tbs[rank].len();
+            tbs[rank].push(Threadblock {
+                rank,
+                id,
+                send: Some(s_left[k]),
+                recv: Some(r_left[k]),
+                insts: vec![],
+            });
+        }
+        for &s in &s_left[merges..] {
+            let id = tbs[rank].len();
+            tbs[rank].push(Threadblock { rank, id, send: Some(s), recv: None, insts: vec![] });
+        }
+        for &r in &r_left[merges..] {
+            let id = tbs[rank].len();
+            tbs[rank].push(Threadblock { rank, id, send: None, recv: Some(r), insts: vec![] });
+        }
+    }
+
+    // -- Step 5: assign instructions in the global topological order. --
+    let n = dag.insts.len();
+    let mut placement: Vec<(Rank, TbId, usize)> = vec![(usize::MAX, usize::MAX, usize::MAX); n];
+    // Position (in `order`) of each tb's latest assigned instruction.
+    let mut last_pos: Vec<Vec<i64>> = (0..nranks).map(|r| vec![-1i64; tbs[r].len()]).collect();
+    for (pos, &id) in order.iter().enumerate() {
+        let inst = &dag.insts[id];
+        let rank = inst.rank;
+        let (s_need, r_need) = needs(dag, id);
+        // Candidate threadblocks whose connections satisfy the needs.
+        let mut best: Option<TbId> = None;
+        for tb in &tbs[rank] {
+            let ok_s = match s_need {
+                Some(s) => tb.send == Some(s),
+                None => true,
+            };
+            let ok_r = match r_need {
+                Some(r) => tb.recv == Some(r),
+                None => true,
+            };
+            if ok_s && ok_r {
+                // "The one whose latest assigned instruction is earliest."
+                if best.map(|b| last_pos[rank][tb.id] < last_pos[rank][b]).unwrap_or(true) {
+                    best = Some(tb.id);
+                }
+            }
+        }
+        let tb_id = match best {
+            Some(b) => b,
+            None if s_need.is_none() && r_need.is_none() => {
+                // Purely local op on a rank with no threadblocks yet.
+                let id = tbs[rank].len();
+                tbs[rank].push(Threadblock { rank, id, send: None, recv: None, insts: vec![] });
+                last_pos[rank].push(-1);
+                id
+            }
+            None => {
+                return Err(Gc3Error::Sched(format!(
+                    "no threadblock on rank {rank} matches needs send={s_need:?} recv={r_need:?} \
+                     for inst {id} — conflicting connection signatures; add channel directives"
+                )))
+            }
+        };
+        let step = tbs[rank][tb_id].insts.len();
+        tbs[rank][tb_id].insts.push(id);
+        last_pos[rank][tb_id] = pos as i64;
+        placement[id] = (rank, tb_id, step);
+    }
+
+    Ok(Schedule { tbs, order, placement })
+}
+
+/// Manual threadblock assignment (§5.4): `sendtb`/`recvtb` hints name the
+/// threadblock directly. The paper requires hints on *every* operation once
+/// any operation uses them.
+pub fn manual_assign(dag: &InstDag) -> Result<Schedule> {
+    let nranks = dag.spec.num_ranks;
+    let order = global_order(dag);
+    // Which tb does each instruction name?
+    let mut want: Vec<Option<TbId>> = vec![None; dag.insts.len()];
+    for inst in dag.live() {
+        let tb = if inst.op.sends() && inst.op.recvs() {
+            // Fusion only merged halves whose recvtb == sendtb.
+            inst.hint.recvtb.or(inst.hint.sendtb)
+        } else if inst.op.sends() {
+            inst.hint.sendtb
+        } else if inst.op.recvs() {
+            inst.hint.recvtb
+        } else {
+            // Local ops: either half's hint names the threadblock.
+            inst.hint.sendtb.or(inst.hint.recvtb)
+        };
+        match tb {
+            Some(t) => want[inst.id] = Some(t),
+            None => {
+                return Err(Gc3Error::Sched(format!(
+                    "manual scheduling requires threadblock hints on every operation; \
+                     instruction {} ({}) on rank {} has none (partial automatic \
+                     assignment is not supported)",
+                    inst.id, inst.op, inst.rank
+                )))
+            }
+        }
+    }
+    let mut max_tb: Vec<usize> = vec![0; nranks];
+    for inst in dag.live() {
+        max_tb[inst.rank] = max_tb[inst.rank].max(want[inst.id].unwrap() + 1);
+    }
+    let mut tbs: Vec<Vec<Threadblock>> = (0..nranks)
+        .map(|rank| {
+            (0..max_tb[rank])
+                .map(|id| Threadblock { rank, id, send: None, recv: None, insts: vec![] })
+                .collect()
+        })
+        .collect();
+    // Fill connections and instruction lists in global order.
+    let mut placement = vec![(usize::MAX, usize::MAX, usize::MAX); dag.insts.len()];
+    for &id in &order {
+        let inst = &dag.insts[id];
+        let rank = inst.rank;
+        let tb_id = want[id].unwrap();
+        let (s_need, r_need) = needs(dag, id);
+        let tb = &mut tbs[rank][tb_id];
+        if let Some(s) = s_need {
+            match tb.send {
+                None => tb.send = Some(s),
+                Some(prev) if prev == s => {}
+                Some(prev) => {
+                    return Err(Gc3Error::Sched(format!(
+                        "rank {rank} tb{tb_id}: manual assignment gives it two send \
+                         connections {prev:?} and {s:?} (connection invariant, §4.1)"
+                    )))
+                }
+            }
+        }
+        if let Some(r) = r_need {
+            match tb.recv {
+                None => tb.recv = Some(r),
+                Some(prev) if prev == r => {}
+                Some(prev) => {
+                    return Err(Gc3Error::Sched(format!(
+                        "rank {rank} tb{tb_id}: manual assignment gives it two receive \
+                         connections {prev:?} and {r:?} (connection invariant, §4.1)"
+                    )))
+                }
+            }
+        }
+        let step = tb.insts.len();
+        tb.insts.push(id);
+        placement[id] = (rank, tb_id, step);
+    }
+    Ok(Schedule { tbs, order, placement })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkdag::ChunkDag;
+    use crate::core::BufferId;
+    use crate::dsl::collective::CollectiveSpec;
+    use crate::dsl::{Program, SchedHint};
+    use crate::instdag::fusion::fuse;
+    use crate::instdag::lower::lower;
+    use crate::sched::SchedOpts;
+
+    fn ring_allgather(ranks: usize, hint: impl Fn(usize) -> SchedHint) -> InstDag {
+        let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
+        for r in 0..ranks {
+            let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
+            let mut cur = p.copy(c, BufferId::Output, r, r, hint(r)).unwrap();
+            for step in 1..ranks {
+                cur = p.copy(cur, BufferId::Output, (r + step) % ranks, r, hint(r)).unwrap();
+            }
+        }
+        let mut dag = lower(&ChunkDag::build(&p.finish().unwrap()).unwrap()).unwrap();
+        fuse(&mut dag);
+        dag
+    }
+
+    #[test]
+    fn auto_ring_single_tb_per_rank() {
+        // Unhinted ring: every rank sends to next, receives from prev, all
+        // on channel 0 → exactly one threadblock per rank.
+        let dag = ring_allgather(4, |_| SchedHint::none());
+        let sched = auto_assign(&dag).unwrap();
+        sched.check_invariants(&dag, &SchedOpts::default()).unwrap();
+        for r in 0..4 {
+            assert_eq!(sched.tbs[r].len(), 1, "rank {r}");
+            let tb = &sched.tbs[r][0];
+            assert_eq!(tb.send, Some(((r + 1) % 4, 0)));
+            assert_eq!(tb.recv, Some(((r + 3) % 4, 0)));
+        }
+    }
+
+    #[test]
+    fn channel_directives_split_tbs() {
+        // Ring with per-origin channels: rank r's chunk rides channel r →
+        // each rank hosts one tb per channel it participates in.
+        let dag = ring_allgather(4, SchedHint::chan);
+        let sched = auto_assign(&dag).unwrap();
+        sched.check_invariants(&dag, &SchedOpts::default()).unwrap();
+        // Every rank forwards chunks of all 4 origins minus its own last
+        // hop: it sends on 4 channels... conservatively just check >1 tb
+        // and full invariant pass.
+        assert!(sched.tbs.iter().all(|t| t.len() >= 3), "channels must fan out tbs");
+    }
+
+    #[test]
+    fn manual_assignment_respected() {
+        let dag = ring_allgather(3, |r| SchedHint::tb(r, r, r));
+        let sched = manual_assign(&dag).unwrap();
+        sched.check_invariants(&dag, &SchedOpts::default()).unwrap();
+        // Chunk r's ring runs on tb r of every rank.
+        for rank in 0..3 {
+            assert_eq!(sched.tbs[rank].len(), 3);
+        }
+        for inst in dag.live() {
+            let (_, tb, _) = sched.placement[inst.id];
+            let expected = inst.hint.sendtb.or(inst.hint.recvtb).unwrap();
+            assert_eq!(tb, expected, "inst {} on wrong tb", inst.id);
+        }
+    }
+
+    #[test]
+    fn manual_partial_hints_rejected() {
+        let mut p = Program::new(CollectiveSpec::allgather(2, 1));
+        let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        let c = p.copy(c, BufferId::Output, 0, 0, SchedHint::tb(0, 0, 0)).unwrap();
+        p.copy(c, BufferId::Output, 1, 0, SchedHint::none()).unwrap();
+        let c = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+        let c = p.copy(c, BufferId::Output, 1, 1, SchedHint::none()).unwrap();
+        p.copy(c, BufferId::Output, 0, 1, SchedHint::none()).unwrap();
+        let dag = lower(&ChunkDag::build(&p.finish().unwrap()).unwrap()).unwrap();
+        assert!(dag.any_manual);
+        let err = manual_assign(&dag).unwrap_err();
+        assert!(err.to_string().contains("every operation"), "{err}");
+    }
+
+    #[test]
+    fn manual_connection_conflict_rejected() {
+        // tb 0 of rank 0 told to send to both rank 1 and rank 2.
+        let spec = CollectiveSpec::custom("bad", 3, 2, 2, false, None, Default::default());
+        let mut p = Program::new(spec);
+        let a = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        p.copy(a, BufferId::Output, 1, 0, SchedHint::tb(0, 0, 0)).unwrap();
+        let b = p.chunk(BufferId::Input, 0, 1, 1).unwrap();
+        p.copy(b, BufferId::Output, 2, 0, SchedHint::tb(0, 0, 0)).unwrap();
+        let dag = lower(&ChunkDag::build(&p.finish().unwrap()).unwrap()).unwrap();
+        let err = manual_assign(&dag).unwrap_err();
+        assert!(err.to_string().contains("two send"), "{err}");
+    }
+
+    #[test]
+    fn least_loaded_tiebreak_spreads_local_ops() {
+        // Two independent remote copies out of rank 0 on different
+        // channels create two tbs; a pile of local copies should spread.
+        let spec = CollectiveSpec::custom("mix", 2, 4, 4, false, None, Default::default());
+        let mut p = Program::new(spec);
+        let a = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        p.copy(a, BufferId::Output, 1, 0, SchedHint::chan(0)).unwrap();
+        let b = p.chunk(BufferId::Input, 0, 1, 1).unwrap();
+        p.copy(b, BufferId::Output, 1, 1, SchedHint::chan(1)).unwrap();
+        for i in 0..4 {
+            let c = p.chunk(BufferId::Input, 0, i, 1).unwrap();
+            p.copy(c, BufferId::Scratch, 0, i, SchedHint::none()).unwrap();
+        }
+        let dag = lower(&ChunkDag::build(&p.finish().unwrap()).unwrap()).unwrap();
+        let sched = auto_assign(&dag).unwrap();
+        sched.check_invariants(&dag, &SchedOpts::default()).unwrap();
+        let loads: Vec<usize> = sched.tbs[0].iter().map(|t| t.insts.len()).collect();
+        let max = *loads.iter().max().unwrap();
+        let min = *loads.iter().min().unwrap();
+        assert!(max - min <= 1, "local ops should balance: {loads:?}");
+    }
+}

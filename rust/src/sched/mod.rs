@@ -1,0 +1,281 @@
+//! Threadblock assignment and synchronization insertion (§5.2, §5.4).
+//!
+//! GC3-EF's connection invariant (§4.1): every threadblock owns at most one
+//! *send connection* and one *receive connection*, each identified by
+//! `(peer, channel)`. Scheduling places every instruction onto a
+//! threadblock whose connections match the instruction's communication
+//! needs, in an order that provably cannot deadlock.
+//!
+//! The automatic routine follows the paper's five steps:
+//!
+//! 1. *Create threadblocks* — one per unique connection signature
+//!    `(send-peer, send-channel, receive-peer, receive-channel)` appearing
+//!    in the instructions; half-open signatures (send-only / recv-only
+//!    instructions) are greedily paired so a threadblock serves both
+//!    directions where possible.
+//! 2. *Dependency depth* — longest path from a root, over processing and
+//!    communication edges ("hops ≈ time").
+//! 3. *Reverse dependency depth* — longest path to a sink.
+//! 4. *Global topological sort* with a heap prioritizing (depth asc,
+//!    reverse depth desc).
+//! 5. *Assignment* in that order; ties broken by the candidate threadblock
+//!    whose latest assigned instruction is earliest in the global order.
+//!
+//! Deadlock freedom: instructions are appended to threadblocks in one
+//! global topological order, so the implicit intra-threadblock sequencing
+//! cannot create a cycle (§5.2). [`Schedule::check_fifo`] additionally
+//! verifies the runtime's FIFO connection semantics: the k-th send on every
+//! connection pairs with the k-th receive.
+//!
+//! Manual assignment (§5.4) honors `sendtb`/`recvtb`/`ch` hints instead,
+//! validating the connection invariant and the channel-uniqueness rule.
+
+mod assign;
+mod sync;
+mod topo;
+
+pub use assign::{auto_assign, auto_assign_capped, manual_assign};
+pub use sync::emit_ef;
+pub use topo::{depths, global_order};
+
+use crate::core::{ChanId, Gc3Error, Rank, Result, TbId};
+use crate::ef::EfProgram;
+use crate::instdag::{InstDag, InstId};
+use crate::sim::Protocol;
+
+/// One scheduled threadblock: its two connections and its instruction list
+/// in execution order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Threadblock {
+    pub rank: Rank,
+    pub id: TbId,
+    /// Send connection `(peer, channel)`, if the tb ever sends.
+    pub send: Option<(Rank, ChanId)>,
+    /// Receive connection `(peer, channel)`, if the tb ever receives.
+    pub recv: Option<(Rank, ChanId)>,
+    /// Instructions in execution order (indices into the InstDag).
+    pub insts: Vec<InstId>,
+}
+
+/// The result of threadblock assignment, consumed by [`emit_ef`].
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Threadblocks per rank, dense ids `0..tbs[r].len()`.
+    pub tbs: Vec<Vec<Threadblock>>,
+    /// Global topological order used for placement.
+    pub order: Vec<InstId>,
+    /// inst id → (rank, tb id, position within tb).
+    pub placement: Vec<(Rank, TbId, usize)>,
+}
+
+/// Scheduling options.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedOpts {
+    /// Streaming multiprocessors per GPU: hard cap on threadblocks (§4.4).
+    pub sm_count: usize,
+}
+
+impl Default for SchedOpts {
+    fn default() -> Self {
+        // A100 has 108 SMs; the interpreter requires tbs <= SMs for the
+        // cooperative launch (§4.4).
+        SchedOpts { sm_count: 108 }
+    }
+}
+
+impl Schedule {
+    /// Dispatch on the program's hint mode: manual if any op was manually
+    /// placed (the paper requires all-or-nothing), automatic otherwise.
+    pub fn build(dag: &InstDag, opts: &SchedOpts) -> Result<Schedule> {
+        let sched = if dag.any_manual {
+            manual_assign(dag)?
+        } else {
+            auto_assign_capped(dag, opts.sm_count)?
+        };
+        sched.check_invariants(dag, opts)?;
+        Ok(sched)
+    }
+
+    /// Threadblock count at the busiest rank.
+    pub fn max_tbs(&self) -> usize {
+        self.tbs.iter().map(|t| t.len()).max().unwrap_or(0)
+    }
+
+    /// Total channels in use at `rank` (distinct send/recv connection
+    /// channels) — the number the paper reports as "channels per GPU".
+    pub fn channels_at(&self, rank: Rank) -> usize {
+        let mut chans: Vec<ChanId> = self.tbs[rank]
+            .iter()
+            .flat_map(|tb| tb.send.iter().chain(tb.recv.iter()).map(|&(_, c)| c))
+            .collect();
+        chans.sort_unstable();
+        chans.dedup();
+        chans.len()
+    }
+
+    /// Enforce the §4.1 connection invariant, the §5.4 channel uniqueness
+    /// rule, the SM cap, FIFO-consistency, and deadlock freedom.
+    pub fn check_invariants(&self, dag: &InstDag, opts: &SchedOpts) -> Result<()> {
+        for (rank, tbs) in self.tbs.iter().enumerate() {
+            if tbs.len() > opts.sm_count {
+                return Err(Gc3Error::TooManyThreadblocks {
+                    rank,
+                    tbs: tbs.len(),
+                    sms: opts.sm_count,
+                });
+            }
+            // No two tbs share a send or receive connection.
+            let mut sends: Vec<(Rank, ChanId)> = tbs.iter().filter_map(|t| t.send).collect();
+            let before = sends.len();
+            sends.sort_unstable();
+            sends.dedup();
+            if sends.len() != before {
+                return Err(Gc3Error::Sched(format!(
+                    "rank {rank}: two threadblocks share a send connection (peer, channel)"
+                )));
+            }
+            let mut recvs: Vec<(Rank, ChanId)> = tbs.iter().filter_map(|t| t.recv).collect();
+            let before = recvs.len();
+            recvs.sort_unstable();
+            recvs.dedup();
+            if recvs.len() != before {
+                return Err(Gc3Error::Sched(format!(
+                    "rank {rank}: two threadblocks share a receive connection (peer, channel)"
+                )));
+            }
+            // Every instruction's needs are met by its threadblock.
+            for tb in tbs {
+                for &i in &tb.insts {
+                    let inst = &dag.insts[i];
+                    if inst.op.sends() {
+                        match tb.send {
+                            Some((p, _)) if Some(p) == inst.send_peer => {}
+                            _ => {
+                                return Err(Gc3Error::Sched(format!(
+                                    "inst {i} ({}) on r{rank}/tb{} needs send peer {:?}, tb has {:?}",
+                                    inst.op, tb.id, inst.send_peer, tb.send
+                                )))
+                            }
+                        }
+                    }
+                    if inst.op.recvs() {
+                        match tb.recv {
+                            Some((p, _)) if Some(p) == inst.recv_peer => {}
+                            _ => {
+                                return Err(Gc3Error::Sched(format!(
+                                    "inst {i} ({}) on r{rank}/tb{} needs recv peer {:?}, tb has {:?}",
+                                    inst.op, tb.id, inst.recv_peer, tb.recv
+                                )))
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.check_fifo(dag)?;
+        self.check_deadlock_free(dag)
+    }
+
+    /// FIFO connection semantics (§4.3): on every connection
+    /// `(src, dst, channel)` the k-th send must pair with the k-th receive.
+    pub fn check_fifo(&self, dag: &InstDag) -> Result<()> {
+        use std::collections::HashMap;
+        let mut sends: HashMap<(Rank, ChanId, Rank), Vec<InstId>> = HashMap::new();
+        let mut recvs: HashMap<(Rank, ChanId, Rank), Vec<InstId>> = HashMap::new();
+        for tbs in &self.tbs {
+            for tb in tbs {
+                for &i in &tb.insts {
+                    let inst = &dag.insts[i];
+                    if inst.op.sends() {
+                        let (peer, ch) = tb.send.expect("send inst on tb without send conn");
+                        sends.entry((tb.rank, ch, peer)).or_default().push(i);
+                    }
+                    if inst.op.recvs() {
+                        let (peer, ch) = tb.recv.expect("recv inst on tb without recv conn");
+                        recvs.entry((peer, ch, tb.rank)).or_default().push(i);
+                    }
+                }
+            }
+        }
+        for (conn, s_list) in &sends {
+            let r_list = recvs.get(conn).ok_or_else(|| {
+                Gc3Error::Sched(format!("connection {conn:?} has sends but no receiver tb"))
+            })?;
+            if s_list.len() != r_list.len() {
+                return Err(Gc3Error::Sched(format!(
+                    "connection {conn:?}: {} sends vs {} recvs",
+                    s_list.len(),
+                    r_list.len()
+                )));
+            }
+            for (k, (&s, &r)) in s_list.iter().zip(r_list.iter()).enumerate() {
+                if dag.insts[s].paired_recv != Some(r) {
+                    return Err(Gc3Error::Sched(format!(
+                        "connection {conn:?}: send #{k} (inst {s}) pairs with inst {:?}, \
+                         but receive #{k} is inst {r} — FIFO order violated",
+                        dag.insts[s].paired_recv
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Deadlock freedom: the graph of (tb program order) ∪ (processing
+    /// deps) ∪ (communication edges) must be acyclic.
+    pub fn check_deadlock_free(&self, dag: &InstDag) -> Result<()> {
+        let n = dag.insts.len();
+        let mut adj: Vec<Vec<InstId>> = vec![Vec::new(); n];
+        for tbs in &self.tbs {
+            for tb in tbs {
+                for w in tb.insts.windows(2) {
+                    adj[w[0]].push(w[1]);
+                }
+            }
+        }
+        for inst in dag.live() {
+            for &d in &inst.deps {
+                adj[d].push(inst.id);
+            }
+            if let Some(p) = inst.paired_recv {
+                adj[inst.id].push(p);
+            }
+        }
+        let mut indeg = vec![0usize; n];
+        for v in &adj {
+            for &b in v {
+                indeg[b] += 1;
+            }
+        }
+        let mut queue: Vec<InstId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = queue.pop() {
+            seen += 1;
+            for &b in &adj[i] {
+                indeg[b] -= 1;
+                if indeg[b] == 0 {
+                    queue.push(b);
+                }
+            }
+        }
+        if seen != n {
+            return Err(Gc3Error::Deadlock(format!(
+                "{} of {} instructions are on a cycle of program order + dependencies",
+                n - seen,
+                n
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Convenience: run the whole backend — schedule `dag` and emit GC3-EF.
+pub fn compile_schedule(
+    dag: &InstDag,
+    opts: &SchedOpts,
+    protocol: Protocol,
+    name: &str,
+) -> Result<EfProgram> {
+    let sched = Schedule::build(dag, opts)?;
+    emit_ef(dag, &sched, protocol, name)
+}

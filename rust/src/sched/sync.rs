@@ -1,0 +1,263 @@
+//! Synchronization insertion and GC3-EF emission (§5.2 "Synchronization
+//! insertion").
+//!
+//! Instructions within a threadblock execute sequentially, so dependences
+//! already satisfied by program order are filtered out. Sends and receives
+//! synchronize implicitly through their connection, so communication edges
+//! need no annotation either. What remains are *processing* dependences on
+//! instructions placed in **other** threadblocks of the same GPU: GC3-EF
+//! carries at most one `(tb, step)` dependence per instruction, so an
+//! instruction with several is prefixed by `nop` instructions carrying the
+//! extras.
+
+use super::Schedule;
+use crate::core::{Gc3Error, Result, TbId};
+use crate::ef::{EfGpu, EfInst, EfProgram, EfTb};
+use crate::instdag::{InstDag, InstId, OpCode};
+use crate::sim::Protocol;
+
+/// Emit GC3-EF for a scheduled program.
+pub fn emit_ef(
+    dag: &InstDag,
+    sched: &Schedule,
+    protocol: Protocol,
+    name: &str,
+) -> Result<EfProgram> {
+    let nranks = dag.spec.num_ranks;
+
+    // Phase A: per threadblock, the item list with nops materialized.
+    // Items reference inst ids; nops carry the dependence they wait on.
+    enum Item {
+        Real(InstId, Option<InstId>), // instruction + at most one extra dep
+        Nop(InstId),                  // wait on this instruction
+    }
+    let mut tb_items: Vec<Vec<Vec<Item>>> = Vec::with_capacity(nranks);
+    for rank in 0..nranks {
+        let mut per_tb = Vec::with_capacity(sched.tbs[rank].len());
+        for tb in &sched.tbs[rank] {
+            let mut items: Vec<Item> = Vec::with_capacity(tb.insts.len());
+            for (pos, &id) in tb.insts.iter().enumerate() {
+                let inst = &dag.insts[id];
+                // Cross-tb processing deps: keep the latest dep per foreign
+                // tb (earlier ones are subsumed by sequential execution).
+                let mut per_tb_dep: Vec<(TbId, usize, InstId)> = Vec::new();
+                for &d in &inst.deps {
+                    let (drank, dtb, dstep) = sched.placement[d];
+                    if drank != rank {
+                        return Err(Gc3Error::Sched(format!(
+                            "processing dep {d}->{id} crosses ranks"
+                        )));
+                    }
+                    if dtb == tb.id {
+                        // Same threadblock: program order must satisfy it.
+                        let dpos = tb.insts.iter().position(|&x| x == d).unwrap();
+                        if dpos >= pos {
+                            return Err(Gc3Error::Sched(format!(
+                                "inst {id} placed before its same-tb dependency {d}"
+                            )));
+                        }
+                        continue;
+                    }
+                    match per_tb_dep.iter_mut().find(|(t, _, _)| *t == dtb) {
+                        Some(entry) if entry.1 < dstep => *entry = (dtb, dstep, d),
+                        Some(_) => {}
+                        None => per_tb_dep.push((dtb, dstep, d)),
+                    }
+                }
+                // Deterministic order; the instruction itself carries the
+                // last dependence, nops carry the rest.
+                per_tb_dep.sort_unstable();
+                let main_dep = per_tb_dep.pop().map(|(_, _, d)| d);
+                for (_, _, d) in per_tb_dep {
+                    items.push(Item::Nop(d));
+                }
+                items.push(Item::Real(id, main_dep));
+            }
+            per_tb.push(items);
+        }
+        tb_items.push(per_tb);
+    }
+
+    // Phase B: final step numbers of every real instruction.
+    let mut final_step: Vec<usize> = vec![usize::MAX; dag.insts.len()];
+    for (rank, per_tb) in tb_items.iter().enumerate() {
+        let _ = rank;
+        for items in per_tb {
+            for (step, item) in items.iter().enumerate() {
+                if let Item::Real(id, _) = item {
+                    final_step[*id] = step;
+                }
+            }
+        }
+    }
+
+    // Phase C: emit, resolving dependences to (tb, final step).
+    let mut gpus = Vec::with_capacity(nranks);
+    for rank in 0..nranks {
+        let mut tbs = Vec::with_capacity(sched.tbs[rank].len());
+        for (tb_id, items) in tb_items[rank].iter().enumerate() {
+            let mut steps = Vec::with_capacity(items.len());
+            let resolve = |d: InstId| -> (TbId, usize) {
+                let (_, dtb, _) = sched.placement[d];
+                (dtb, final_step[d])
+            };
+            for item in items {
+                let inst = match item {
+                    Item::Nop(d) => EfInst {
+                        op: OpCode::Nop,
+                        src: None,
+                        dst: None,
+                        count: 1,
+                        depend: Some(resolve(*d)),
+                    },
+                    Item::Real(id, extra) => {
+                        let inst = &dag.insts[*id];
+                        EfInst {
+                            op: inst.op,
+                            src: inst.src.map(|r| (r.buffer, r.index)),
+                            dst: inst.dst.map(|r| (r.buffer, r.index)),
+                            count: inst.count().max(1),
+                            depend: extra.map(resolve),
+                        }
+                    }
+                };
+                steps.push(inst);
+            }
+            let stb = &sched.tbs[rank][tb_id];
+            tbs.push(EfTb { send: stb.send, recv: stb.recv, steps });
+        }
+        gpus.push(EfGpu { rank, scratch_chunks: dag.scratch_chunks[rank], tbs });
+    }
+
+    let ef = EfProgram {
+        name: name.to_string(),
+        collective: dag.spec.name.clone(),
+        num_ranks: nranks,
+        in_chunks: dag.spec.in_chunks,
+        out_chunks: dag.spec.out_chunks,
+        inplace: dag.spec.inplace,
+        protocol,
+        gpus,
+    };
+    ef.validate()?;
+    Ok(ef)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkdag::ChunkDag;
+    use crate::core::BufferId;
+    use crate::dsl::collective::CollectiveSpec;
+    use crate::dsl::{Program, SchedHint};
+    use crate::instdag::lower::lower;
+    use crate::sched::{Schedule, SchedOpts};
+
+    /// Build the Fig. 4-style case: a recv on one tb, a send of the same
+    /// slot on another tb → the send must carry a depend on the recv.
+    #[test]
+    fn cross_tb_dependence_annotated() {
+        let spec = CollectiveSpec::custom("relay", 3, 1, 2, false, None, Default::default());
+        let mut p = Program::new(spec);
+        let c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        // recv on rank1, which then forwards to BOTH rank 2 and rank 0:
+        // two send connections → two threadblocks; at least one send sits
+        // in a different tb than the recv and needs a depend annotation.
+        // (Two dependents also block rcs fusion, §5.3.1.)
+        let c = p.copy(c, BufferId::Scratch, 1, 0, SchedHint::none()).unwrap();
+        p.copy(c.clone(), BufferId::Output, 2, 0, SchedHint::none()).unwrap();
+        p.copy(c, BufferId::Output, 0, 0, SchedHint::none()).unwrap();
+        let dag = lower(&ChunkDag::build(&p.finish().unwrap()).unwrap()).unwrap();
+        let sched = Schedule::build(&dag, &SchedOpts::default()).unwrap();
+        let ef = emit_ef(&dag, &sched, Protocol::Simple, "relay").unwrap();
+        // The recv and the two sends land on separate threadblocks (unfused
+        // demands are not merged); every send must carry a depend on the
+        // recv that produced its data.
+        let gpu1 = &ef.gpus[1];
+        let recv_tb = gpu1
+            .tbs
+            .iter()
+            .position(|tb| tb.steps.iter().any(|i| i.op == OpCode::Recv))
+            .expect("recv present");
+        let mut cross_sends = 0;
+        for (t, tb) in gpu1.tbs.iter().enumerate() {
+            for inst in &tb.steps {
+                if inst.op == OpCode::Send && t != recv_tb {
+                    assert_eq!(
+                        inst.depend,
+                        Some((recv_tb, 0)),
+                        "cross-tb send must wait on the recv: {}",
+                        ef.listing()
+                    );
+                    cross_sends += 1;
+                }
+            }
+        }
+        assert_eq!(cross_sends, 2, "both sends wait on the recv's tb\n{}", ef.listing());
+    }
+
+    /// An instruction with two cross-tb deps gets a nop prefix.
+    #[test]
+    fn nop_insertion_for_multiple_deps() {
+        // Rank 0 receives three chunks on three channels (three tbs); the
+        // second reduce then depends on instructions in two *other* tbs →
+        // one nop plus the instruction's own depend.
+        let spec = CollectiveSpec::custom("join", 4, 1, 1, false, None, Default::default());
+        let mut p = Program::new(spec);
+        let a = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+        let a = p.copy(a, BufferId::Scratch, 0, 0, SchedHint::chan(0)).unwrap();
+        let b = p.chunk(BufferId::Input, 2, 0, 1).unwrap();
+        let b = p.copy(b, BufferId::Scratch, 0, 1, SchedHint::chan(1)).unwrap();
+        let c = p.chunk(BufferId::Input, 3, 0, 1).unwrap();
+        let c = p.copy(c, BufferId::Scratch, 0, 2, SchedHint::chan(2)).unwrap();
+        let ab = p.reduce(a, b, SchedHint::none()).unwrap();
+        p.reduce(ab, c, SchedHint::none()).unwrap();
+        let dag = lower(&ChunkDag::build(&p.finish().unwrap()).unwrap()).unwrap();
+        let sched = Schedule::build(&dag, &SchedOpts::default()).unwrap();
+        let ef = emit_ef(&dag, &sched, Protocol::Simple, "join").unwrap();
+        let nops: usize = ef.gpus[0]
+            .tbs
+            .iter()
+            .flat_map(|t| t.steps.iter())
+            .filter(|i| i.op == OpCode::Nop)
+            .count();
+        assert_eq!(nops, 1, "reduce with 2 cross-tb deps needs 1 nop\n{}", ef.listing());
+        // And the reduce itself carries the other dependence.
+        let reduce = ef.gpus[0]
+            .tbs
+            .iter()
+            .flat_map(|t| t.steps.iter())
+            .find(|i| i.op == OpCode::Reduce)
+            .expect("reduce present");
+        assert!(reduce.depend.is_some());
+    }
+
+    /// Same-tb deps are filtered (no depend annotations in a fused ring —
+    /// all of a rank's work lands on one dual-connection threadblock).
+    #[test]
+    fn same_tb_deps_filtered() {
+        use crate::instdag::fusion::fuse;
+        let ranks = 3;
+        let spec = CollectiveSpec::allgather(ranks, 1);
+        let mut p = Program::new(spec);
+        for r in 0..ranks {
+            let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
+            let mut cur = p.copy(c, BufferId::Output, r, r, SchedHint::none()).unwrap();
+            for s in 1..ranks {
+                cur = p.copy(cur, BufferId::Output, (r + s) % ranks, r, SchedHint::none()).unwrap();
+            }
+        }
+        let mut dag = lower(&ChunkDag::build(&p.finish().unwrap()).unwrap()).unwrap();
+        fuse(&mut dag);
+        let sched = Schedule::build(&dag, &SchedOpts::default()).unwrap();
+        let ef = emit_ef(&dag, &sched, Protocol::LL128, "ag").unwrap();
+        for gpu in &ef.gpus {
+            assert_eq!(gpu.tbs.len(), 1, "{}", ef.listing());
+            for inst in &gpu.tbs[0].steps {
+                assert_eq!(inst.depend, None, "single-tb program needs no sync");
+                assert_ne!(inst.op, OpCode::Nop);
+            }
+        }
+        assert_eq!(ef.protocol, Protocol::LL128);
+    }
+}

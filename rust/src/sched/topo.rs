@@ -1,0 +1,157 @@
+//! Steps 2–4 of the scheduling routine (§5.2): dependency depths and the
+//! prioritized global topological order.
+
+use crate::instdag::{InstDag, InstId};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Longest-path depths over processing deps ∪ communication edges.
+///
+/// Returns `(depth, rdepth)`: `depth[i]` is the number of hops from a root
+/// to `i` (instructions enabled earlier have smaller depth); `rdepth[i]` is
+/// the number of hops from `i` to a sink (chunks with more hops remaining
+/// score higher and are prioritized, §5.2 step 3).
+pub fn depths(dag: &InstDag) -> (Vec<usize>, Vec<usize>) {
+    let n = dag.insts.len();
+    let mut depth = vec![0usize; n];
+    let mut rdepth = vec![0usize; n];
+    // Ids are creation-ordered and all edges point forward, so a single
+    // forward sweep computes longest paths.
+    for inst in dag.live() {
+        let mut d = 0;
+        for &p in &inst.deps {
+            d = d.max(depth[p] + 1);
+        }
+        if let Some(s) = inst.comm_dep {
+            d = d.max(depth[s] + 1);
+        }
+        depth[inst.id] = d;
+    }
+    for id in (0..n).rev() {
+        let inst = &dag.insts[id];
+        if inst.dead {
+            continue;
+        }
+        let mut r = 0usize;
+        // Successors: anything depending on us. Walk our own out-edges by
+        // scanning is O(E) total if we precompute reverse adjacency.
+        let _ = inst;
+        let _ = &mut r;
+    }
+    // Reverse pass with explicit reverse adjacency.
+    let mut rev: Vec<Vec<InstId>> = vec![Vec::new(); n];
+    for inst in dag.live() {
+        for &p in &inst.deps {
+            rev[p].push(inst.id);
+        }
+        if let Some(s) = inst.comm_dep {
+            rev[s].push(inst.id);
+        }
+    }
+    for id in (0..n).rev() {
+        let mut r = 0;
+        for &succ in &rev[id] {
+            r = r.max(rdepth[succ] + 1);
+        }
+        rdepth[id] = r;
+    }
+    (depth, rdepth)
+}
+
+/// Step 4: global topological order by (depth asc, rdepth desc, id asc).
+///
+/// A heap pops ready instructions (all predecessors emitted) in priority
+/// order; the result is a valid topological order of the full cross-rank
+/// graph, which is what makes appending to threadblocks deadlock-free.
+pub fn global_order(dag: &InstDag) -> Vec<InstId> {
+    let n = dag.insts.len();
+    let (depth, rdepth) = depths(dag);
+    let mut preds = vec![0usize; n];
+    let mut succs: Vec<Vec<InstId>> = vec![Vec::new(); n];
+    let mut live = vec![false; n];
+    for inst in dag.live() {
+        live[inst.id] = true;
+        for &p in &inst.deps {
+            preds[inst.id] += 1;
+            succs[p].push(inst.id);
+        }
+        if let Some(s) = inst.comm_dep {
+            preds[inst.id] += 1;
+            succs[s].push(inst.id);
+        }
+    }
+    // Min-heap on (depth, Reverse(rdepth), id).
+    let mut heap: BinaryHeap<Reverse<(usize, Reverse<usize>, InstId)>> = BinaryHeap::new();
+    for id in 0..n {
+        if live[id] && preds[id] == 0 {
+            heap.push(Reverse((depth[id], Reverse(rdepth[id]), id)));
+        }
+    }
+    let mut order = Vec::with_capacity(n);
+    while let Some(Reverse((_, _, id))) = heap.pop() {
+        order.push(id);
+        for &s in &succs[id] {
+            preds[s] -= 1;
+            if preds[s] == 0 {
+                heap.push(Reverse((depth[s], Reverse(rdepth[s]), s)));
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), dag.live_count(), "graph must be acyclic");
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkdag::ChunkDag;
+    use crate::core::BufferId;
+    use crate::dsl::collective::CollectiveSpec;
+    use crate::dsl::{Program, SchedHint};
+    use crate::instdag::lower::lower;
+
+    fn pipeline_dag() -> InstDag {
+        // r0 -> r1 -> r2 -> r3 relay.
+        let spec = CollectiveSpec::custom("relay", 4, 1, 1, false, None, Default::default());
+        let mut p = Program::new(spec);
+        let mut c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        for r in 1..4 {
+            c = p.copy(c, BufferId::Scratch, r, 0, SchedHint::none()).unwrap();
+        }
+        lower(&ChunkDag::build(&p.finish().unwrap()).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn depth_counts_hops() {
+        let dag = pipeline_dag();
+        let (depth, rdepth) = depths(&dag);
+        // send@r0, recv@r1, send@r1, recv@r2, send@r2, recv@r3.
+        assert_eq!(depth, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(rdepth, vec![5, 4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn order_is_topological() {
+        let dag = pipeline_dag();
+        let order = global_order(&dag);
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn priority_prefers_long_chains() {
+        // Two chains from rank 0: one 3-hop (to r3) and one 1-hop (to r1).
+        // The 3-hop chain's first send has higher rdepth → scheduled first.
+        let spec = CollectiveSpec::custom("fan", 4, 2, 2, false, None, Default::default());
+        let mut p = Program::new(spec);
+        let short = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        p.copy(short, BufferId::Output, 1, 0, SchedHint::none()).unwrap(); // insts 0,1
+        let long = p.chunk(BufferId::Input, 0, 1, 1).unwrap();
+        let long = p.copy(long, BufferId::Scratch, 1, 0, SchedHint::none()).unwrap(); // 2,3
+        let long = p.copy(long, BufferId::Scratch, 2, 0, SchedHint::none()).unwrap(); // 4,5
+        p.copy(long, BufferId::Output, 3, 0, SchedHint::none()).unwrap(); // 6,7
+        let dag = lower(&ChunkDag::build(&p.finish().unwrap()).unwrap()).unwrap();
+        let order = global_order(&dag);
+        let pos = |id: usize| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(2) < pos(0), "deep chain's send (rdepth 3) beats shallow send (rdepth 1)");
+    }
+}

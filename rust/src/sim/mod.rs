@@ -1,0 +1,14 @@
+//! Performance substrate: discrete-event simulation of the GC3 runtime
+//! (§4.2–4.4) over the Fig. 2 network model.
+//!
+//! * [`protocol`] — Simple / LL / LL128 latency-bandwidth economics.
+//! * [`resources`] — the shared-resource inventory and flow routing.
+//! * [`engine`] — the event loop: tile loop, slicing, staging windows,
+//!   spin-lock dependences, max-min fair bandwidth sharing.
+
+pub mod engine;
+pub mod protocol;
+pub mod resources;
+
+pub use engine::{simulate, SimReport, STAGING_BYTES};
+pub use protocol::Protocol;

@@ -1,0 +1,216 @@
+//! Network resources and flow routing for the simulator.
+//!
+//! Every data transfer becomes a *flow* over a route of shared resources;
+//! the engine divides resource capacity among concurrent flows max-min
+//! fairly. The resource inventory mirrors Fig. 2:
+//!
+//! * per-GPU NVLink egress / ingress (NVSwitch is non-blocking, so the GPU
+//!   ports are the contended resources);
+//! * per-PCIe-switch up/down capacity (2 GPUs share a switch);
+//! * per-NIC in/out capacity;
+//! * host shared-memory links for non-p2p intra-node pairs;
+//! * per-flow caps that are not shared: the sending threadblock's copy
+//!   bandwidth and, across nodes, the single-connection (QP + proxy) limit.
+
+use super::Protocol;
+use crate::core::Rank;
+use crate::topology::{LinkType, Topology};
+use std::collections::HashMap;
+
+/// Indexed capacity table + lazily allocated shm links.
+pub struct ResourceTable {
+    pub caps: Vec<f64>,
+    /// Human-readable names for profiling / utilization reports.
+    pub names: Vec<String>,
+    shm: HashMap<(Rank, Rank), usize>,
+    proto: Protocol,
+    nranks: usize,
+    switches_per_node: usize,
+    pcie_up0: usize,
+    pcie_down0: usize,
+    nic_out0: usize,
+    nic_in0: usize,
+}
+
+/// A flow's static routing information.
+#[derive(Clone, Debug)]
+pub struct Route {
+    /// Shared resources the flow crosses.
+    pub resources: Vec<usize>,
+    /// Un-shared per-flow rate cap (threadblock / QP limits), payload bytes/s.
+    pub cap: f64,
+    /// One-way latency added to every slice arrival.
+    pub alpha: f64,
+}
+
+impl ResourceTable {
+    /// Build the capacity table for one EF run. Capacities are *payload*
+    /// rates: each link class is derated by the protocol's achieved
+    /// efficiency on it (see [`Protocol::nvlink_eff`] etc.), so flows are
+    /// measured in payload bytes throughout the engine.
+    pub fn new(topo: &Topology, proto: Protocol) -> ResourceTable {
+        let n = topo.num_ranks();
+        let nv = proto.nvlink_eff();
+        let ib = proto.ib_eff();
+        let switches_per_node =
+            (topo.gpus_per_node + topo.gpus_per_pcie_switch - 1) / topo.gpus_per_pcie_switch;
+        let mut caps = Vec::new();
+        let mut names = Vec::new();
+        // [0, n): GPU NVLink egress; [n, 2n): ingress.
+        for r in 0..n {
+            caps.push(topo.nvlink_gpu_bw * nv);
+            names.push(format!("nvlink_out/r{r}"));
+        }
+        for r in 0..n {
+            caps.push(topo.nvlink_gpu_bw * nv);
+            names.push(format!("nvlink_in/r{r}"));
+        }
+        let pcie_up0 = caps.len();
+        for node in 0..topo.nodes {
+            for s in 0..switches_per_node {
+                caps.push(topo.pcie_switch_bw * ib);
+                names.push(format!("pcie_up/n{node}s{s}"));
+            }
+        }
+        let pcie_down0 = caps.len();
+        for node in 0..topo.nodes {
+            for s in 0..switches_per_node {
+                caps.push(topo.pcie_switch_bw * ib);
+                names.push(format!("pcie_down/n{node}s{s}"));
+            }
+        }
+        let nic_out0 = caps.len();
+        for node in 0..topo.nodes {
+            for k in 0..topo.nics_per_node {
+                caps.push(topo.ib_nic_bw * ib);
+                names.push(format!("nic_out/n{node}k{k}"));
+            }
+        }
+        let nic_in0 = caps.len();
+        for node in 0..topo.nodes {
+            for k in 0..topo.nics_per_node {
+                caps.push(topo.ib_nic_bw * ib);
+                names.push(format!("nic_in/n{node}k{k}"));
+            }
+        }
+        ResourceTable {
+            caps,
+            names,
+            shm: HashMap::new(),
+            proto,
+            nranks: n,
+            switches_per_node,
+            pcie_up0,
+            pcie_down0,
+            nic_out0,
+            nic_in0,
+        }
+    }
+
+    fn shm_link(&mut self, topo: &Topology, a: Rank, b: Rank) -> usize {
+        let key = (a.min(b), a.max(b));
+        if let Some(&id) = self.shm.get(&key) {
+            return id;
+        }
+        let id = self.caps.len();
+        self.caps.push(topo.shm_bw * self.proto.nvlink_eff());
+        self.names.push(format!("shm/r{}r{}", key.0, key.1));
+        self.shm.insert(key, id);
+        id
+    }
+
+    /// Build the route for a `src → dst` connection.
+    pub fn route(&mut self, topo: &Topology, src: Rank, dst: Rank) -> Route {
+        let proto = self.proto;
+        let tb_cap = topo.tb_bw * proto.tb_eff();
+        match topo.link_type(src, dst) {
+            LinkType::NvLink => Route {
+                resources: vec![src, self.nranks + dst],
+                cap: tb_cap,
+                alpha: proto.nvlink_latency(),
+            },
+            LinkType::Shm => {
+                let link = self.shm_link(topo, src, dst);
+                Route {
+                    resources: vec![src, link, self.nranks + dst],
+                    cap: tb_cap.min(topo.shm_bw),
+                    // Host bounce: two hops worth of latency.
+                    alpha: 2.0 * proto.nvlink_latency(),
+                }
+            }
+            LinkType::Ib => {
+                let (sn, dn) = (topo.node_of(src), topo.node_of(dst));
+                let s_sw = topo.pcie_switch_of(src);
+                let d_sw = topo.pcie_switch_of(dst);
+                let s_nic = topo.nic_of(src);
+                let d_nic = topo.nic_of(dst);
+                Route {
+                    resources: vec![
+                        self.pcie_up0 + sn * self.switches_per_node + s_sw,
+                        self.nic_out0 + sn * topo.nics_per_node + s_nic,
+                        self.nic_in0 + dn * topo.nics_per_node + d_nic,
+                        self.pcie_down0 + dn * self.switches_per_node + d_sw,
+                    ],
+                    cap: tb_cap.min(topo.ib_conn_bw * proto.ib_eff()),
+                    alpha: proto.ib_latency(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intra_node_route_uses_gpu_ports() {
+        let topo = Topology::a100(2);
+        let mut rt = ResourceTable::new(&topo, Protocol::Simple);
+        let r = rt.route(&topo, 1, 5);
+        assert_eq!(r.resources, vec![1, 16 + 5]);
+        assert_eq!(r.cap, topo.tb_bw);
+    }
+
+    #[test]
+    fn ib_route_crosses_pcie_and_nics() {
+        let topo = Topology::a100(2);
+        let mut rt = ResourceTable::new(&topo, Protocol::Simple);
+        let r = rt.route(&topo, 3, 8 + 6);
+        assert_eq!(r.resources.len(), 4);
+        assert!(r.cap <= topo.ib_conn_bw);
+        for &res in &r.resources {
+            assert!(rt.names[res].contains("pcie") || rt.names[res].contains("nic"));
+        }
+        // GPU 3 → switch 1, NIC 3 on node 0; GPU 6 → switch 3, NIC 6 node 1.
+        assert!(rt.names[r.resources[0]].contains("n0s1"));
+        assert!(rt.names[r.resources[1]].contains("n0k3"));
+        assert!(rt.names[r.resources[2]].contains("n1k6"));
+        assert!(rt.names[r.resources[3]].contains("n1s3"));
+    }
+
+    #[test]
+    fn ndv2_shares_single_nic() {
+        let topo = Topology::ndv2(2);
+        let mut rt = ResourceTable::new(&topo, Protocol::Simple);
+        let r1 = rt.route(&topo, 0, 8);
+        let r2 = rt.route(&topo, 3, 11);
+        // Same NIC resources on both routes.
+        assert_eq!(r1.resources[1], r2.resources[1], "one NIC out shared");
+        assert_eq!(r1.resources[2], r2.resources[2], "one NIC in shared");
+    }
+
+    #[test]
+    fn shm_route_allocated_lazily() {
+        let topo = Topology::ndv2(1);
+        let mut rt = ResourceTable::new(&topo, Protocol::Simple);
+        let before = rt.caps.len();
+        let r = rt.route(&topo, 0, 3); // non-neighbors
+        assert_eq!(rt.caps.len(), before + 1);
+        assert_eq!(r.resources.len(), 3);
+        // Same pair reuses the link.
+        let r2 = rt.route(&topo, 3, 0);
+        assert_eq!(rt.caps.len(), before + 1);
+        assert_eq!(r.resources[1], r2.resources[1]);
+    }
+}

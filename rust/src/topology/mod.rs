@@ -1,0 +1,225 @@
+//! Multi-GPU / multi-node network topologies (§2 Fig. 2, §6 setup).
+//!
+//! A [`Topology`] carries the link inventory the simulator prices flows
+//! against. Two presets match the paper's testbeds:
+//!
+//! * [`Topology::a100`] — the Fig. 2 node: 8×A100, 12 NVLink3 links per GPU
+//!   into 6 NVSwitches (300 GB/s per GPU per direction), and per *pair* of
+//!   GPUs a shared PCIe switch fronting 2 HDR InfiniBand NICs at 25 GB/s
+//!   each (one NIC per GPU in the balanced case).
+//! * [`Topology::ndv2`] — Azure NDv2: 8×V100 (NVLink2, 150 GB/s per GPU)
+//!   and a **single** 100 Gb/s IB NIC per node shared by all 8 GPUs.
+//!
+//! All bandwidths are bytes/second, latencies seconds. The calibration
+//! rationale for each constant is in DESIGN.md §6.
+
+use crate::core::Rank;
+
+/// Physical link classes a connection can ride (§4.2).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LinkType {
+    /// Peer-to-peer over NVLink/NVSwitch (intra-node, fastest).
+    NvLink,
+    /// Host-memory bounce when no p2p path exists (intra-node, slow).
+    Shm,
+    /// NIC/InfiniBand (inter-node).
+    Ib,
+}
+
+/// A cluster topology: `nodes` × `gpus_per_node` ranks plus link capacities.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Streaming multiprocessors per GPU (threadblock cap, §4.4).
+    pub sm_count: usize,
+    /// Whether an NVSwitch provides full-bandwidth any-to-any within the
+    /// node. Without it, only ring neighbors have direct NVLinks and other
+    /// pairs fall back to shared-memory connections.
+    pub has_nvswitch: bool,
+    /// Per-GPU NVLink bandwidth, each direction (aggregate over links).
+    pub nvlink_gpu_bw: f64,
+    /// Host shared-memory bounce bandwidth (per connection).
+    pub shm_bw: f64,
+    /// Bandwidth of one IB NIC (per direction).
+    pub ib_nic_bw: f64,
+    /// NICs per node.
+    pub nics_per_node: usize,
+    /// GPUs sharing one PCIe switch (Fig. 2: 2 GPUs per switch, 2 NICs).
+    pub gpus_per_pcie_switch: usize,
+    /// PCIe switch capacity per direction (caps GPU↔NIC traffic).
+    pub pcie_switch_bw: f64,
+    /// Peak bandwidth a single threadblock can push/drain (Simple
+    /// protocol); the §5.3.2 motivation — one tb cannot saturate NVLink.
+    pub tb_bw: f64,
+    /// Cap of a single IB connection (one QP + proxy thread); multiple
+    /// channels are needed to saturate a NIC. Limits the AllToNext
+    /// baseline's lone send (§6.4).
+    pub ib_conn_bw: f64,
+}
+
+impl Topology {
+    /// The paper's A100 evaluation cluster (Fig. 2), `nodes` nodes.
+    pub fn a100(nodes: usize) -> Topology {
+        Topology {
+            name: format!("a100x{nodes}"),
+            nodes,
+            gpus_per_node: 8,
+            sm_count: 108,
+            has_nvswitch: true,
+            nvlink_gpu_bw: 300.0e9,       // 12 × NVLink3 @ 25 GB/s
+            shm_bw: 10.0e9,
+            ib_nic_bw: 25.0e9,            // HDR 200 Gb/s
+            nics_per_node: 8,
+            gpus_per_pcie_switch: 2,
+            pcie_switch_bw: 50.0e9,       // 2 NICs behind each switch
+            tb_bw: 23.0e9,                // measured single-tb copy rate
+            ib_conn_bw: 6.0e9,            // single QP + proxy channel
+        }
+    }
+
+    /// Azure NDv2: 8×V100 + a single 100 Gb/s NIC per node (§6.3).
+    pub fn ndv2(nodes: usize) -> Topology {
+        Topology {
+            name: format!("ndv2x{nodes}"),
+            nodes,
+            gpus_per_node: 8,
+            sm_count: 80,
+            has_nvswitch: false,
+            nvlink_gpu_bw: 150.0e9,       // NVLink2 hypercube mesh
+            shm_bw: 8.0e9,
+            ib_nic_bw: 12.5e9,            // 100 Gb/s EDR
+            nics_per_node: 1,
+            gpus_per_pcie_switch: 8,
+            pcie_switch_bw: 12.5e9,
+            tb_bw: 20.0e9,
+            ib_conn_bw: 5.0e9,
+        }
+    }
+
+    /// Single A100 node (the §6.2 inference testbed).
+    pub fn a100_single() -> Topology {
+        Topology::a100(1)
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, r: Rank) -> usize {
+        r / self.gpus_per_node
+    }
+
+    /// GPU index within its node.
+    pub fn gpu_of(&self, r: Rank) -> usize {
+        r % self.gpus_per_node
+    }
+
+    pub fn rank_of(&self, node: usize, gpu: usize) -> Rank {
+        node * self.gpus_per_node + gpu
+    }
+
+    pub fn same_node(&self, a: Rank, b: Rank) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// NIC index (within the node) rank `r` uses for IB traffic. With one
+    /// NIC per GPU this is the GPU index; with fewer NICs, GPUs share.
+    pub fn nic_of(&self, r: Rank) -> usize {
+        self.gpu_of(r) * self.nics_per_node / self.gpus_per_node
+    }
+
+    /// PCIe switch index (within the node) of rank `r`.
+    pub fn pcie_switch_of(&self, r: Rank) -> usize {
+        self.gpu_of(r) / self.gpus_per_pcie_switch
+    }
+
+    /// Whether two intra-node GPUs have a direct p2p path (§4.2 connection
+    /// type 1). With NVSwitch: always. Without: ring neighbors only (a
+    /// simplification of the NDv2 hypercube-mesh; documented in DESIGN.md).
+    pub fn p2p_reachable(&self, a: Rank, b: Rank) -> bool {
+        debug_assert!(self.same_node(a, b));
+        if self.has_nvswitch {
+            return true;
+        }
+        let (ga, gb) = (self.gpu_of(a), self.gpu_of(b));
+        let g = self.gpus_per_node;
+        (ga + 1) % g == gb || (gb + 1) % g == ga
+    }
+
+    /// Connection type NCCL would establish between two ranks (§4.2).
+    pub fn link_type(&self, a: Rank, b: Rank) -> LinkType {
+        if !self.same_node(a, b) {
+            LinkType::Ib
+        } else if self.p2p_reachable(a, b) {
+            LinkType::NvLink
+        } else {
+            LinkType::Shm
+        }
+    }
+
+    /// Theoretical AllToAll algorithmic-bandwidth bound (§6.1):
+    /// `IB_bw · N/(N−1)` with one NIC per GPU.
+    pub fn alltoall_bound(&self) -> f64 {
+        let n = self.nodes as f64;
+        self.ib_nic_bw * n / (n - 1.0)
+    }
+
+    /// Theoretical ring-AllReduce algorithmic-bandwidth bound on one node:
+    /// `link_bw · R / (2(R−1))`.
+    pub fn allreduce_ring_bound(&self) -> f64 {
+        let r = self.gpus_per_node as f64;
+        self.nvlink_gpu_bw * r / (2.0 * (r - 1.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_shape() {
+        let t = Topology::a100(4);
+        assert_eq!(t.num_ranks(), 32);
+        assert_eq!(t.node_of(17), 2);
+        assert_eq!(t.gpu_of(17), 1);
+        assert_eq!(t.rank_of(2, 1), 17);
+        assert!(t.same_node(8, 15));
+        assert!(!t.same_node(7, 8));
+    }
+
+    #[test]
+    fn link_types() {
+        let t = Topology::a100(2);
+        assert_eq!(t.link_type(0, 3), LinkType::NvLink);
+        assert_eq!(t.link_type(0, 8), LinkType::Ib);
+        let v = Topology::ndv2(2);
+        assert_eq!(v.link_type(0, 1), LinkType::NvLink);
+        assert_eq!(v.link_type(0, 7), LinkType::NvLink, "ring wraps");
+        assert_eq!(v.link_type(0, 3), LinkType::Shm, "no NVSwitch");
+        assert_eq!(v.link_type(3, 9), LinkType::Ib);
+    }
+
+    #[test]
+    fn nic_and_pcie_mapping() {
+        let t = Topology::a100(1);
+        assert_eq!(t.nic_of(0), 0);
+        assert_eq!(t.nic_of(7), 7);
+        assert_eq!(t.pcie_switch_of(0), 0);
+        assert_eq!(t.pcie_switch_of(1), 0);
+        assert_eq!(t.pcie_switch_of(2), 1);
+        let v = Topology::ndv2(1);
+        assert_eq!(v.nic_of(0), 0);
+        assert_eq!(v.nic_of(7), 0, "all GPUs share the single NIC");
+    }
+
+    #[test]
+    fn bounds_match_paper_formulas() {
+        let t = Topology::a100(8);
+        // 25 GB/s × 8/7 ≈ 28.6 GB/s.
+        assert!((t.alltoall_bound() - 25.0e9 * 8.0 / 7.0).abs() < 1.0);
+        // 300 × 8/14 ≈ 171 GB/s.
+        assert!((t.allreduce_ring_bound() - 300.0e9 * 8.0 / 14.0).abs() < 1.0);
+    }
+}

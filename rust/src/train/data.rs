@@ -1,0 +1,99 @@
+//! Synthetic tiny-corpus data pipeline for the end-to-end driver.
+//!
+//! A byte-level LM over a small embedded corpus: enough structure that the
+//! loss curve visibly bends (character statistics, then words, then short
+//! phrases) within a few hundred steps on CPU, with zero external data
+//! dependencies. Batches are sampled as random windows; each data-parallel
+//! rank draws from a disjoint stream of the shared generator, which is the
+//! usual sharded-sampler shape.
+
+use crate::util::rng::Rng;
+
+/// Embedded corpus: a few KB of original prose on — fittingly — collective
+/// communication, cycled with numeric and punctuation variety so the byte
+/// distribution is not degenerate.
+pub const CORPUS: &str = "\
+In a cluster of machines, no gradient travels alone. Every step of training \
+ends with a vote: eight accelerators, each holding a shard of the answer, \
+must agree on a single sum before any of them may continue. The ring was the \
+first constitution written for this parliament. Pass your chunk to the right, \
+add what arrives from the left, and after two laps every member holds the \
+total. It is fair, it is simple, and it wastes not a byte of bandwidth; its \
+only sin is latency, thirty short meetings where four long ones would do. \
+The tree answered with hierarchy: leaders gather their nodes, leaders confer, \
+leaders return. Fewer meetings, faster verdicts, but heavier luggage on every \
+trip. Between these two constitutions lies a continent of compromise, and the \
+map of that continent is drawn by the network itself: how many lanes the \
+switch offers, how long a packet dawdles in the card, whether the fabric \
+forgives a burst or punishes it. A schedule that triumphs at two megabytes \
+may crawl at two gigabytes; a protocol that whispers in microseconds may \
+choke a link at scale. So the compiler becomes a cartographer. It traces \
+each chunk from source to destination, counts the hops, prices the links, \
+and writes an itinerary per threadblock: send 0, receive 3, reduce 5, copy 7. \
+The interpreter on the device reads the itinerary and moves the bytes, \
+tile by tile, slice by slice, never asking Python for directions. \
+When the itinerary is good, the wires sing at line rate: 25 gigabytes per \
+second through the card, 300 across the switch, 48 percent faster at the \
+sizes the model actually uses. When it is bad, the profiler tells on it \
+within minutes, and a new itinerary costs one compile, not one PhD. \
+Numbers to remember: 1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024. \
+Quotes to keep: \"measure, then schedule\"; \"the topology is the algorithm\"; \
+\"latency hides in the count of messages, bandwidth in their size\". \
+";
+
+/// Random-window batch sampler over the corpus bytes.
+pub struct Sampler {
+    bytes: Vec<u8>,
+    rng: Rng,
+}
+
+impl Sampler {
+    /// `rank`-seeded stream so data-parallel ranks see different batches.
+    pub fn new(seed: u64, rank: usize) -> Sampler {
+        Sampler { bytes: CORPUS.as_bytes().to_vec(), rng: Rng::new(seed ^ (rank as u64) << 32 | rank as u64) }
+    }
+
+    /// One batch of `batch` windows of `seq_len + 1` tokens (i32 bytes).
+    pub fn batch(&mut self, batch: usize, seq_len: usize) -> Vec<i32> {
+        let window = seq_len + 1;
+        let mut out = Vec::with_capacity(batch * window);
+        for _ in 0..batch {
+            let start = self.rng.below(self.bytes.len() - window);
+            out.extend(self.bytes[start..start + window].iter().map(|&b| b as i32));
+        }
+        out
+    }
+
+    pub fn corpus_len(&self) -> usize {
+        self.bytes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_big_enough() {
+        let s = Sampler::new(0, 0);
+        assert!(s.corpus_len() > 512 + 2, "corpus must exceed the big seq_len");
+    }
+
+    #[test]
+    fn batches_shape_and_range() {
+        let mut s = Sampler::new(1, 0);
+        let b = s.batch(4, 32);
+        assert_eq!(b.len(), 4 * 33);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn ranks_draw_different_data() {
+        let mut a = Sampler::new(7, 0);
+        let mut b = Sampler::new(7, 1);
+        assert_ne!(a.batch(2, 16), b.batch(2, 16));
+        // Same rank + seed reproduces.
+        let mut a2 = Sampler::new(7, 0);
+        assert_eq!(Sampler::new(7, 0).batch(2, 16), a2.batch(2, 16));
+    }
+}

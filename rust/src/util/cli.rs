@@ -1,0 +1,111 @@
+//! Tiny CLI argument helper (no `clap` in the vendored crate set).
+//!
+//! Supports `--flag`, `--key value` and `--key=value` forms plus trailing
+//! positional arguments, which covers everything the `gc3` binary,
+//! examples and benches need.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — flags must be declared
+    /// so `--key value` vs `--flag` is unambiguous.
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(rest.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.options.insert(rest.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse process args, skipping argv[0].
+    pub fn parse(flag_names: &[&str]) -> Args {
+        Args::parse_from(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    /// Parse a size option like `--size 2MB`.
+    pub fn bytes(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(super::parse_bytes).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse_from(
+            strs(&["run", "--nodes", "8", "--size=2MB", "--verbose", "alltoall"]),
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["run", "alltoall"]);
+        assert_eq!(a.usize("nodes", 0), 8);
+        assert_eq!(a.bytes("size", 0), 2 * 1024 * 1024);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_option_and_defaults() {
+        let a = Args::parse_from(strs(&["--check", "--steps", "10"]), &["check"]);
+        assert!(a.flag("check"));
+        assert_eq!(a.usize("steps", 1), 10);
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.f64("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse_from(strs(&["--quiet"]), &[]);
+        assert!(a.flag("quiet"));
+    }
+}

@@ -1,0 +1,61 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline and the vendored crate set does
+//! not include `serde_json`, `rand` or `clap`, so this module carries the
+//! minimal replacements the rest of the crate needs: a JSON value type with
+//! parser/printer ([`json`]), a deterministic PRNG ([`rng`]), and tiny CLI
+//! argument helpers ([`cli`]).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+/// Pretty-print a byte count the way the paper's figures label sizes.
+pub fn human_bytes(bytes: u64) -> String {
+    const KB: u64 = 1024;
+    const MB: u64 = 1024 * KB;
+    const GB: u64 = 1024 * MB;
+    if bytes >= GB && bytes % GB == 0 {
+        format!("{}GB", bytes / GB)
+    } else if bytes >= MB && bytes % MB == 0 {
+        format!("{}MB", bytes / MB)
+    } else if bytes >= KB && bytes % KB == 0 {
+        format!("{}KB", bytes / KB)
+    } else {
+        format!("{}B", bytes)
+    }
+}
+
+/// Parse sizes like `1K`, `32M`, `1G`, `4MB`, `512`, case-insensitive.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim().to_ascii_uppercase();
+    let s = s.strip_suffix('B').unwrap_or(&s);
+    let (num, mult) = if let Some(n) = s.strip_suffix('K') {
+        (n, 1024u64)
+    } else if let Some(n) = s.strip_suffix('M') {
+        (n, 1024 * 1024)
+    } else if let Some(n) = s.strip_suffix('G') {
+        (n, 1024 * 1024 * 1024)
+    } else {
+        (s, 1)
+    };
+    num.trim().parse::<f64>().ok().map(|v| (v * mult as f64) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        assert_eq!(human_bytes(2 * 1024 * 1024), "2MB");
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(1024), "1KB");
+        assert_eq!(human_bytes(3 * 1024 * 1024 * 1024), "3GB");
+        assert_eq!(parse_bytes("2MB"), Some(2 * 1024 * 1024));
+        assert_eq!(parse_bytes("1g"), Some(1024 * 1024 * 1024));
+        assert_eq!(parse_bytes("512"), Some(512));
+        assert_eq!(parse_bytes("0.5K"), Some(512));
+        assert_eq!(parse_bytes("junk"), None);
+    }
+}

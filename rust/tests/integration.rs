@@ -1,0 +1,164 @@
+//! Cross-module integration: the public API path a downstream user takes —
+//! DSL → compile → GC3-EF JSON round-trip → byte-accurate execution →
+//! simulation — over the whole program library and randomized custom
+//! programs (property-style, seeded).
+
+use gc3::chunkdag::{validate::validate, ChunkDag};
+use gc3::compiler::{compile, CompileOpts};
+use gc3::core::BufferId;
+use gc3::dsl::collective::CollectiveSpec;
+use gc3::dsl::{Program, SchedHint};
+use gc3::ef::EfProgram;
+use gc3::exec::{verify, NativeReducer};
+use gc3::sim::{simulate, Protocol};
+use gc3::topology::Topology;
+use gc3::util::rng::Rng;
+
+/// Library programs survive EF JSON round-trips and still verify + price.
+#[test]
+fn library_roundtrip_verify_simulate() {
+    let mut topo = Topology::a100(2);
+    topo.gpus_per_node = 2;
+    for prog in gc3::collectives::library(&topo).unwrap() {
+        let c = compile(&prog.trace, prog.name, &CompileOpts::default()).unwrap();
+        // JSON round-trip must be lossless.
+        let json = c.ef.to_json_string();
+        let back = EfProgram::from_json_str(&json).unwrap();
+        assert_eq!(c.ef, back, "{} EF round-trip", prog.name);
+        // The round-tripped EF still executes correctly...
+        verify(&back, &prog.trace.spec, 4, &mut NativeReducer)
+            .unwrap_or_else(|e| panic!("{}: {e}", prog.name));
+        // ...and prices to a sane time at two sizes.
+        for size in [64 * 1024u64, 16 * 1024 * 1024] {
+            let rep = simulate(&back, &topo, size).unwrap();
+            assert!(rep.time > 1e-7 && rep.time < 10.0, "{} at {size}: {}", prog.name, rep.time);
+        }
+    }
+}
+
+/// Property test: random scatter/gather/reduce programs — correct by
+/// construction — always trace, validate, compile, and verify, across
+/// protocols and instance counts.
+#[test]
+fn random_programs_compile_and_verify() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..25 {
+        let ranks = rng.range(2, 6);
+        // Random reduction tree: every rank's chunk is pulled into rank 0's
+        // scratch, reduced, and broadcast to every output.
+        let mut post = std::collections::BTreeMap::new();
+        let full: Vec<(usize, usize)> = (0..ranks).map(|r| (r, 0)).collect();
+        for r in 0..ranks {
+            post.insert(
+                gc3::core::Slot { rank: r, buffer: BufferId::Output, index: 0 },
+                full.clone(),
+            );
+        }
+        let spec = CollectiveSpec::custom("rand", ranks, 1, 1, false, None, post);
+        let mut p = Program::new(spec);
+        // Gather in random order, reduce at a random accumulator rank.
+        let acc_rank = rng.below(ranks);
+        let mut order: Vec<usize> = (0..ranks).collect();
+        rng.shuffle(&mut order);
+        let mut acc = None;
+        for &r in &order {
+            let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
+            let staged = if r == acc_rank {
+                c
+            } else {
+                p.copy(c, BufferId::Scratch, acc_rank, r, SchedHint::none()).unwrap()
+            };
+            acc = Some(match acc {
+                None => staged,
+                Some(prev) => p.reduce(prev, staged, SchedHint::none()).unwrap(),
+            });
+        }
+        // Broadcast the total to every output.
+        let total = acc.unwrap();
+        let mut cur = p.copy(total, BufferId::Output, acc_rank, 0, SchedHint::none()).unwrap();
+        let mut rest: Vec<usize> = (0..ranks).filter(|&r| r != acc_rank).collect();
+        rng.shuffle(&mut rest);
+        for r in rest {
+            cur = p.copy(cur, BufferId::Output, r, 0, SchedHint::none()).unwrap();
+        }
+        let trace = p.finish().unwrap();
+        validate(&ChunkDag::build(&trace).unwrap()).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let protocol = *rng.choose(&[Protocol::Simple, Protocol::LL, Protocol::LL128]);
+        let instances = rng.range(1, 3);
+        let opts = CompileOpts { instances, protocol, ..Default::default() };
+        let c = compile(&trace, "rand", &opts).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let spec =
+            if instances > 1 { trace.spec.scaled(instances) } else { trace.spec.clone() };
+        verify(&c.ef, &spec, 4, &mut NativeReducer)
+            .unwrap_or_else(|e| panic!("case {case} (r={ranks} acc={acc_rank}): {e}"));
+    }
+}
+
+/// Failure injection: corrupting a compiled EF must be *detected* — either
+/// structurally, as a deadlock, or by the numeric postcondition — never
+/// silently accepted.
+#[test]
+fn corrupted_efs_are_detected() {
+    let trace = gc3::collectives::allreduce::ring(4, false).unwrap();
+    let good = compile(&trace, "ar", &CompileOpts::default()).unwrap().ef;
+    verify(&good, &trace.spec, 4, &mut NativeReducer).unwrap();
+
+    // 1. Drop one GPU's final instruction.
+    let mut ef = good.clone();
+    let tb = &mut ef.gpus[2].tbs[0];
+    tb.steps.pop();
+    assert!(
+        ef.validate().is_err() || verify(&ef, &trace.spec, 4, &mut NativeReducer).is_err(),
+        "dropped instruction must be detected"
+    );
+
+    // 2. Point a receive at the wrong slot.
+    let mut ef = good.clone();
+    'outer: for gpu in &mut ef.gpus {
+        for tb in &mut gpu.tbs {
+            for inst in &mut tb.steps {
+                if let Some((buf, idx)) = inst.dst {
+                    if inst.op.recvs() {
+                        inst.dst = Some((buf, idx ^ 1));
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        verify(&ef, &trace.spec, 4, &mut NativeReducer).is_err(),
+        "mis-addressed receive must fail the postcondition"
+    );
+
+    // 3. Flip a cross-tb dependence to a bogus target.
+    let mut ef = good;
+    if let Some(inst) =
+        ef.gpus[0].tbs.iter_mut().flat_map(|t| t.steps.iter_mut()).find(|i| i.depend.is_some())
+    {
+        inst.depend = Some((999, 0));
+    } else {
+        // No dependence in this schedule — inject one out of range.
+        ef.gpus[0].tbs[0].steps[0].depend = Some((999, 0));
+    }
+    assert!(ef.validate().is_err(), "bogus dependence target must fail validation");
+}
+
+/// The registry + simulator agree with the paper's dispatch story: the
+/// GC3 kernel serves the tuned window faster than the fallback would be,
+/// per the simulator.
+#[test]
+fn registry_dispatch_is_beneficial_in_window() {
+    let topo = Topology::a100_single();
+    let mut reg = gc3::coordinator::Registry::new(topo.clone());
+    let size = 1024 * 1024u64; // inside the window
+    let (gc3_ef, backend) = reg.allreduce(size).unwrap();
+    assert_eq!(backend, gc3::coordinator::Backend::Gc3);
+    let t_gc3 = simulate(&gc3_ef, &topo, size).unwrap().time;
+    let (nccl_ef, _) = gc3::nccl::allreduce::build(&topo, size).unwrap();
+    let t_nccl = simulate(&nccl_ef, &topo, size).unwrap().time;
+    assert!(
+        t_gc3 < t_nccl * 1.05,
+        "in-window GC3 ring ({t_gc3}) should not lose to the static-tuner NCCL ({t_nccl})"
+    );
+}
