@@ -6,6 +6,12 @@
 //! grouped-p2p structure can't be expressed as GC3-EF (see
 //! [`crate::nccl::alltoall`]). `benches/*.rs` and `gc3 figures` print
 //! them; EXPERIMENTS.md records paper-vs-measured shapes.
+//!
+//! [`perf`] is the compiler/simulator throughput harness behind
+//! `cargo bench --bench compiler_perf` and `BENCH_compiler_perf.json`
+//! (EXPERIMENTS.md §Perf).
+
+pub mod perf;
 
 use crate::collectives::{allreduce, alltonext, basics};
 use crate::compiler::{compile, CompileOpts, Compiled};

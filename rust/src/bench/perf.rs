@@ -1,0 +1,255 @@
+//! Compiler + simulator throughput harness with machine-readable output.
+//!
+//! Measures, per scenario: compile wall-clock, simulate wall-clock, and
+//! simulator events/s — the numbers EXPERIMENTS.md §Perf tracks across
+//! PRs — and serializes them to `BENCH_compiler_perf.json` so CI can
+//! archive the trajectory. A head-to-head run prices the 64-rank AllToAll
+//! scenario on both the optimized engine and the preserved
+//! pre-optimization engine ([`crate::sim::reference`]) and reports the
+//! events/s ratio (the PR gate is ≥ 3×).
+//!
+//! Driven by `benches/compiler_perf.rs`; usable from any harness.
+
+use crate::collectives::{allreduce, alltoall};
+use crate::compiler::{compile, CompileOpts, Compiled};
+use crate::core::Result;
+use crate::dsl::Trace;
+use crate::sim::{simulate, simulate_reference, Protocol};
+use crate::topology::Topology;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// One measured scenario.
+#[derive(Clone, Debug)]
+pub struct PerfCase {
+    pub name: String,
+    /// Best-of-N wall-clock for one `compile` call, milliseconds.
+    pub compile_ms: f64,
+    /// Best-of-N wall-clock for one `simulate` call, milliseconds.
+    pub simulate_ms: f64,
+    pub size_bytes: u64,
+    /// Simulated collective completion time, seconds.
+    pub sim_time_s: f64,
+    pub events: usize,
+    pub flows: usize,
+    /// Simulator throughput: events retired per wall-clock second.
+    pub events_per_sec: f64,
+}
+
+/// Optimized-vs-reference engine comparison on one scenario.
+#[derive(Clone, Debug)]
+pub struct HeadToHead {
+    pub scenario: String,
+    pub events_per_sec_new: f64,
+    pub events_per_sec_reference: f64,
+    pub speedup: f64,
+}
+
+/// Best-of-`n` wall-clock seconds (one warmup call first).
+pub fn best_of<T>(n: usize, mut f: impl FnMut() -> T) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..n.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+struct Scenario {
+    name: &'static str,
+    trace: Trace,
+    opts: CompileOpts,
+    topo: Topology,
+    size: u64,
+    compile_reps: usize,
+    sim_reps: usize,
+}
+
+fn scenarios() -> Result<Vec<Scenario>> {
+    Ok(vec![
+        Scenario {
+            name: "ring_allreduce_8r_x4inst",
+            trace: allreduce::ring(8, true)?,
+            opts: CompileOpts::default().with_instances(4).with_protocol(Protocol::LL128),
+            topo: Topology::a100_single(),
+            size: 1 << 30,
+            compile_reps: 10,
+            sim_reps: 5,
+        },
+        Scenario {
+            name: "alltoall_two_step_8n_64r",
+            trace: alltoall::two_step(8, 8)?,
+            opts: CompileOpts::default(),
+            topo: Topology::a100(8),
+            size: 256 << 20,
+            compile_reps: 3,
+            sim_reps: 3,
+        },
+        // Twice the scale of the paper's largest AllToAll: exercises the
+        // incremental-rate and indexed-completion fast paths where the old
+        // engine's O(live_flows)-per-event cost dominated.
+        Scenario {
+            name: "alltoall_two_step_16n_128r",
+            trace: alltoall::two_step(16, 8)?,
+            opts: CompileOpts::default(),
+            topo: Topology::a100(16),
+            size: 64 << 20,
+            compile_reps: 2,
+            sim_reps: 2,
+        },
+    ])
+}
+
+fn measure(sc: &Scenario) -> Result<PerfCase> {
+    let t_compile = best_of(sc.compile_reps, || {
+        compile(&sc.trace, sc.name, &sc.opts).expect("scenario compiles")
+    });
+    let compiled: Compiled = compile(&sc.trace, sc.name, &sc.opts)?;
+    let t_sim = best_of(sc.sim_reps, || {
+        simulate(&compiled.ef, &sc.topo, sc.size).expect("scenario simulates")
+    });
+    let rep = simulate(&compiled.ef, &sc.topo, sc.size)?;
+    Ok(PerfCase {
+        name: sc.name.to_string(),
+        compile_ms: t_compile * 1e3,
+        simulate_ms: t_sim * 1e3,
+        size_bytes: sc.size,
+        sim_time_s: rep.time,
+        events: rep.events,
+        flows: rep.flows,
+        events_per_sec: rep.events as f64 / t_sim.max(1e-12),
+    })
+}
+
+/// The scenario the optimized-vs-reference head-to-head runs on.
+pub const HEAD_TO_HEAD_SCENARIO: &str = "alltoall_two_step_8n_64r";
+
+/// Run every scenario; optionally run the reference-engine head-to-head on
+/// the 64-rank AllToAll (slow by design — it is the pre-optimization
+/// engine). The optimized side reuses the already-measured [`PerfCase`];
+/// only the reference engine is run extra, once.
+pub fn run_suite(head_to_head: bool) -> Result<(Vec<PerfCase>, Option<HeadToHead>)> {
+    let scs = scenarios()?;
+    let mut cases = Vec::with_capacity(scs.len());
+    for sc in &scs {
+        cases.push(measure(sc)?);
+    }
+    let h2h = if head_to_head {
+        let sc = scs
+            .iter()
+            .find(|s| s.name == HEAD_TO_HEAD_SCENARIO)
+            .expect("head-to-head scenario present");
+        let case = cases
+            .iter()
+            .find(|c| c.name == HEAD_TO_HEAD_SCENARIO)
+            .expect("head-to-head case measured");
+        let compiled = compile(&sc.trace, sc.name, &sc.opts)?;
+        // Single timed run: the baseline pays O(live_flows) per event plus
+        // per-round allocations sized by the total flow count.
+        let t0 = Instant::now();
+        let rep_ref = simulate_reference(&compiled.ef, &sc.topo, sc.size)?;
+        let t_ref = t0.elapsed().as_secs_f64();
+        let ref_eps = rep_ref.events as f64 / t_ref.max(1e-12);
+        Some(HeadToHead {
+            scenario: sc.name.to_string(),
+            events_per_sec_new: case.events_per_sec,
+            events_per_sec_reference: ref_eps,
+            speedup: case.events_per_sec / ref_eps.max(1e-12),
+        })
+    } else {
+        None
+    };
+    Ok((cases, h2h))
+}
+
+/// Serialize results as the `BENCH_compiler_perf.json` payload.
+pub fn to_json(cases: &[PerfCase], h2h: Option<&HeadToHead>) -> Json {
+    let mut root = Json::obj();
+    root.set("bench", Json::Str("compiler_perf".into()));
+    root.set("schema_version", Json::Num(1.0));
+    let rows: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("name", Json::Str(c.name.clone()));
+            o.set("compile_ms", Json::Num(c.compile_ms));
+            o.set("simulate_ms", Json::Num(c.simulate_ms));
+            o.set("size_bytes", Json::Num(c.size_bytes as f64));
+            o.set("sim_time_s", Json::Num(c.sim_time_s));
+            o.set("events", Json::Num(c.events as f64));
+            o.set("flows", Json::Num(c.flows as f64));
+            o.set("events_per_sec", Json::Num(c.events_per_sec));
+            o
+        })
+        .collect();
+    root.set("cases", Json::Arr(rows));
+    if let Some(h) = h2h {
+        let mut o = Json::obj();
+        o.set("scenario", Json::Str(h.scenario.clone()));
+        o.set("events_per_sec_new", Json::Num(h.events_per_sec_new));
+        o.set("events_per_sec_reference", Json::Num(h.events_per_sec_reference));
+        o.set("speedup", Json::Num(h.speedup));
+        root.set("head_to_head", o);
+    }
+    root
+}
+
+/// Human-readable rendering of the same results.
+pub fn render(cases: &[PerfCase], h2h: Option<&HeadToHead>) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>12} {:>12} {:>10} {:>14}\n",
+        "scenario", "compile ms", "simulate ms", "events", "events/s"
+    ));
+    for c in cases {
+        out.push_str(&format!(
+            "{:<28} {:>12.3} {:>12.3} {:>10} {:>14.0}\n",
+            c.name, c.compile_ms, c.simulate_ms, c.events, c.events_per_sec
+        ));
+    }
+    if let Some(h) = h2h {
+        out.push_str(&format!(
+            "head-to-head on {}: {:.0} events/s (optimized) vs {:.0} events/s (reference) \
+             = {:.1}x\n",
+            h.scenario, h.events_per_sec_new, h.events_per_sec_reference, h.speedup
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_payload_has_per_scenario_fields() {
+        let cases = vec![PerfCase {
+            name: "x".into(),
+            compile_ms: 1.5,
+            simulate_ms: 2.5,
+            size_bytes: 1024,
+            sim_time_s: 0.001,
+            events: 42,
+            flows: 7,
+            events_per_sec: 16800.0,
+        }];
+        let h = HeadToHead {
+            scenario: "x".into(),
+            events_per_sec_new: 300.0,
+            events_per_sec_reference: 100.0,
+            speedup: 3.0,
+        };
+        let j = to_json(&cases, Some(&h));
+        let s = j.to_string();
+        for field in
+            ["compile_ms", "simulate_ms", "events_per_sec", "head_to_head", "speedup", "cases"]
+        {
+            assert!(s.contains(field), "missing {field} in {s}");
+        }
+        let arr = j.get("cases").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("events").and_then(|e| e.as_usize()), Some(42));
+    }
+}

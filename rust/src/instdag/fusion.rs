@@ -13,6 +13,20 @@
 //! When the program uses manual threadblock assignment (§5.4) a fusion is
 //! only applied if the receive half's `recvtb` and the send half's `sendtb`
 //! agree — a fused instruction executes on a single threadblock.
+//!
+//! The dependents (reverse-edge) table is built **once per [`fuse`] call**
+//! and maintained incrementally as pairs merge: each fusion re-points only
+//! the dead send's known dependents instead of rescanning every
+//! instruction, so a pass is linear in edges rather than quadratic in
+//! instructions. Entries pointing at dead instructions are left in place
+//! and filtered at query time. Maintenance is decision-equivalent to a
+//! per-pass rebuild because a fusable send's `same_range` condition
+//! (`s.src == r.dst`) forces its dependence set to be exactly `{r}` —
+//! every slot of the range it reads was last written by that receive — so
+//! merges never introduce *new* reverse edges mid-pass; re-pointing only
+//! renames an edge's endpoint, which both representations see identically
+//! (the `gained` bookkeeping below is defensive, for DAGs a future
+//! lowering might produce).
 
 use super::{InstDag, InstId, OpCode};
 use crate::core::BufferId;
@@ -28,16 +42,18 @@ pub struct FusionStats {
 /// Run all three passes to fixpoint order (rcs, rrcs, then rrs) and compact
 /// the instruction list.
 pub fn fuse(dag: &mut InstDag) -> FusionStats {
+    let mut rev = dependents(dag);
     let mut stats = FusionStats::default();
-    stats.rcs = fuse_recv_send(dag, OpCode::Recv, OpCode::Rcs);
-    stats.rrcs = fuse_recv_send(dag, OpCode::Rrc, OpCode::Rrcs);
-    stats.rrs = demote_rrcs(dag);
+    stats.rcs = fuse_recv_send(dag, &mut rev, OpCode::Recv, OpCode::Rcs);
+    stats.rrcs = fuse_recv_send(dag, &mut rev, OpCode::Rrc, OpCode::Rrcs);
+    stats.rrs = demote_rrcs(dag, &rev);
     dag.compact();
     debug_assert!(dag.check().is_ok());
     stats
 }
 
-/// Direct dependents of every instruction (reverse processing edges).
+/// Direct dependents of every instruction (reverse processing edges),
+/// built once and maintained across passes by [`fuse_recv_send`].
 fn dependents(dag: &InstDag) -> Vec<Vec<InstId>> {
     let mut rev: Vec<Vec<InstId>> = vec![Vec::new(); dag.insts.len()];
     for inst in dag.live() {
@@ -50,20 +66,33 @@ fn dependents(dag: &InstDag) -> Vec<Vec<InstId>> {
 
 /// Fuse `first_op` (a receive-type) with a directly-following `send` into
 /// `fused_op`. Returns the number of fusions applied.
-fn fuse_recv_send(dag: &mut InstDag, first_op: OpCode, fused_op: OpCode) -> usize {
-    let rev = dependents(dag);
+fn fuse_recv_send(
+    dag: &mut InstDag,
+    rev: &mut [Vec<InstId>],
+    first_op: OpCode,
+    fused_op: OpCode,
+) -> usize {
     let mut count = 0;
     for r_id in 0..dag.insts.len() {
         if dag.insts[r_id].dead || dag.insts[r_id].op != first_op {
             continue;
         }
-        // The paper's condition: exactly one direct dependent, and it is a
-        // send of the slot range the receive produced.
-        let live_deps: Vec<InstId> = rev[r_id].iter().copied().filter(|&d| !dag.insts[d].dead).collect();
-        if live_deps.len() != 1 {
+        // The paper's condition: exactly one live direct dependent, and it
+        // is a send of the slot range the receive produced.
+        let mut s_id = usize::MAX;
+        let mut n_live = 0;
+        for &d in rev[r_id].iter() {
+            if !dag.insts[d].dead {
+                n_live += 1;
+                s_id = d;
+                if n_live > 1 {
+                    break;
+                }
+            }
+        }
+        if n_live != 1 {
             continue;
         }
-        let s_id = live_deps[0];
         let (ok, send_peer, s_paired, s_deps, s_hint) = {
             let r = &dag.insts[r_id];
             let s = &dag.insts[s_id];
@@ -83,7 +112,9 @@ fn fuse_recv_send(dag: &mut InstDag, first_op: OpCode, fused_op: OpCode) -> usiz
         if !ok {
             continue;
         }
-        // Merge the send into the receive.
+        // Merge the send into the receive; the receive inherits the send's
+        // extra dependences (and becomes their dependent in `rev`).
+        let mut gained: Vec<InstId> = Vec::new();
         {
             let r = &mut dag.insts[r_id];
             r.op = fused_op;
@@ -96,25 +127,38 @@ fn fuse_recv_send(dag: &mut InstDag, first_op: OpCode, fused_op: OpCode) -> usiz
             for d in s_deps {
                 if d != r_id && !r.deps.contains(&d) {
                     r.deps.push(d);
+                    gained.push(d);
                 }
             }
             r.deps.sort_unstable();
         }
+        for d in gained {
+            if !rev[d].contains(&r_id) {
+                rev[d].push(r_id);
+            }
+        }
         dag.insts[s_id].dead = true;
-        // Re-point edges at the dead send.
         if let Some(p) = s_paired {
             dag.insts[p].comm_dep = Some(r_id);
         }
-        for inst in dag.insts.iter_mut() {
-            if !inst.dead {
-                for d in inst.deps.iter_mut() {
-                    if *d == s_id {
-                        *d = r_id;
-                    }
+        // Re-point edges at the dead send: its dependents are known
+        // exactly, so only they are touched.
+        let dependents_of_s = std::mem::take(&mut rev[s_id]);
+        for &x in &dependents_of_s {
+            if dag.insts[x].dead {
+                continue;
+            }
+            let inst = &mut dag.insts[x];
+            for d in inst.deps.iter_mut() {
+                if *d == s_id {
+                    *d = r_id;
                 }
-                inst.deps.sort_unstable();
-                inst.deps.dedup();
-                inst.deps.retain(|&d| d != inst.id);
+            }
+            inst.deps.sort_unstable();
+            inst.deps.dedup();
+            inst.deps.retain(|&d| d != inst.id);
+            if inst.deps.binary_search(&r_id).is_ok() && !rev[r_id].contains(&x) {
+                rev[r_id].push(x);
             }
         }
         count += 1;
@@ -125,8 +169,7 @@ fn fuse_recv_send(dag: &mut InstDag, first_op: OpCode, fused_op: OpCode) -> usiz
 /// §5.3.1 rrs: an `rrcs` whose local result is dead (no dependents, and the
 /// destination is not a slot the collective's postcondition constrains)
 /// needs no local copy.
-fn demote_rrcs(dag: &mut InstDag) -> usize {
-    let rev = dependents(dag);
+fn demote_rrcs(dag: &mut InstDag, rev: &[Vec<InstId>]) -> usize {
     let mut count = 0;
     for id in 0..dag.insts.len() {
         if dag.insts[id].dead || dag.insts[id].op != OpCode::Rrcs {
@@ -264,5 +307,28 @@ mod tests {
         let stats = fuse(&mut dag);
         assert_eq!(stats.rrcs, 1);
         assert_eq!(stats.rrs, 0, "result slot write must stay rrcs");
+    }
+
+    /// A chain of relays fuses every interior hop in one pass — exercises
+    /// the incremental reverse-table maintenance across repeated fusions.
+    #[test]
+    fn long_relay_chain_fuses_every_interior_hop() {
+        let n = 6;
+        let mut dag = lowered(
+            |p| {
+                let mut c = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+                for r in 1..n - 1 {
+                    c = p.copy(c, BufferId::Scratch, r, 0, SchedHint::none()).unwrap();
+                }
+                p.copy(c, BufferId::Output, n - 1, 0, SchedHint::none()).unwrap();
+            },
+            CollectiveSpec::custom("chain", n, 1, 1, false, None, Default::default()),
+        );
+        let stats = fuse(&mut dag);
+        assert_eq!(stats.rcs, n - 2, "every interior rank fuses recv;send");
+        let rcs = dag.insts.iter().filter(|i| i.op == OpCode::Rcs).count();
+        assert_eq!(rcs, n - 2);
+        // Comm pairings survived the chained re-pointing.
+        dag.check().unwrap();
     }
 }

@@ -29,10 +29,23 @@ struct SlotDeps {
     readers_since: Vec<InstId>,
 }
 
+/// Lowering state: the growing instruction list, the per-slot dependence
+/// table, and a reusable dependence-assembly buffer so the inner loop
+/// allocates exactly once per instruction (the final exact-size `deps`
+/// vector) instead of growth-reallocating a fresh vector each time.
+#[derive(Default)]
+struct Lowerer {
+    insts: Vec<Inst>,
+    slots: HashMap<Slot, SlotDeps>,
+    scratch: Vec<InstId>,
+}
+
 /// Lower a validated Chunk DAG into the Instruction DAG.
 pub fn lower(dag: &ChunkDag) -> Result<InstDag> {
-    let mut insts: Vec<Inst> = Vec::with_capacity(dag.num_ops() * 2);
-    let mut slots: HashMap<Slot, SlotDeps> = HashMap::new();
+    let mut lo = Lowerer::default();
+    lo.insts.reserve(dag.num_ops() * 2);
+    // ~2 slots touched per op is typical; oversizing just wastes a grow.
+    lo.slots.reserve(dag.num_ops() * 2);
     let mut any_manual = false;
 
     // Start nodes seed the writer table with "nobody": input data is
@@ -48,25 +61,17 @@ pub fn lower(dag: &ChunkDag) -> Result<InstDag> {
         let dst = node.dst;
         let remote = src.rank != dst.rank;
         match (node.op, remote) {
-            (ChunkOpKind::Copy, false) => {
-                push_local(&mut insts, &mut slots, OpCode::Copy, src, dst, hint);
-            }
-            (ChunkOpKind::Reduce, false) => {
-                push_local(&mut insts, &mut slots, OpCode::Reduce, src, dst, hint);
-            }
-            (ChunkOpKind::Copy, true) => {
-                push_pair(&mut insts, &mut slots, OpCode::Recv, src, dst, hint);
-            }
-            (ChunkOpKind::Reduce, true) => {
-                push_pair(&mut insts, &mut slots, OpCode::Rrc, src, dst, hint);
-            }
+            (ChunkOpKind::Copy, false) => lo.push_local(OpCode::Copy, src, dst, hint),
+            (ChunkOpKind::Reduce, false) => lo.push_local(OpCode::Reduce, src, dst, hint),
+            (ChunkOpKind::Copy, true) => lo.push_pair(OpCode::Recv, src, dst, hint),
+            (ChunkOpKind::Reduce, true) => lo.push_pair(OpCode::Rrc, src, dst, hint),
             (ChunkOpKind::Start, _) => unreachable!(),
         }
     }
 
     let out = InstDag {
         spec: dag.spec.clone(),
-        insts,
+        insts: lo.insts,
         scratch_chunks: dag.scratch_chunks.clone(),
         any_manual,
     };
@@ -74,58 +79,50 @@ pub fn lower(dag: &ChunkDag) -> Result<InstDag> {
     Ok(out)
 }
 
-/// Record read/write dependences for an instruction and register it.
-fn finish_inst(insts: &mut Vec<Inst>, slots: &mut HashMap<Slot, SlotDeps>, mut inst: Inst) -> InstId {
-    let id = inst.id;
-    let mut deps: Vec<InstId> = Vec::new();
-    if inst.op.reads_src() {
-        if let Some(src) = inst.src {
-            for s in src.slots() {
-                let sd = slots.entry(s).or_default();
-                if let Some(w) = sd.last_writer {
-                    deps.push(w);
+impl Lowerer {
+    /// Record read/write dependences for an instruction and register it.
+    fn finish_inst(&mut self, mut inst: Inst) -> InstId {
+        let id = inst.id;
+        let deps = &mut self.scratch;
+        deps.clear();
+        if inst.op.reads_src() {
+            if let Some(src) = inst.src {
+                for s in src.slots() {
+                    let sd = self.slots.entry(s).or_default();
+                    if let Some(w) = sd.last_writer {
+                        deps.push(w);
+                    }
+                    sd.readers_since.push(id);
                 }
-                sd.readers_since.push(id);
             }
         }
-    }
-    // Rrc/Rrcs read dst as the in-place reduce operand even though it is
-    // recorded as `src` above (src == dst for accumulation); plain writes
-    // need WAW/WAR edges on dst regardless.
-    if inst.op.writes_dst() {
-        if let Some(dst) = inst.dst {
-            for s in dst.slots() {
-                let sd = slots.entry(s).or_default();
-                if let Some(w) = sd.last_writer {
-                    deps.push(w);
+        // Rrc/Rrcs read dst as the in-place reduce operand even though it
+        // is recorded as `src` above (src == dst for accumulation); plain
+        // writes need WAW/WAR edges on dst regardless.
+        if inst.op.writes_dst() {
+            if let Some(dst) = inst.dst {
+                for s in dst.slots() {
+                    let sd = self.slots.entry(s).or_default();
+                    if let Some(w) = sd.last_writer {
+                        deps.push(w);
+                    }
+                    deps.extend(sd.readers_since.iter().copied());
+                    sd.last_writer = Some(id);
+                    sd.readers_since.clear();
                 }
-                deps.extend(sd.readers_since.iter().copied());
-                sd.last_writer = Some(id);
-                sd.readers_since.clear();
             }
         }
+        deps.retain(|&d| d != id);
+        deps.sort_unstable();
+        deps.dedup();
+        inst.deps = deps.as_slice().to_vec();
+        self.insts.push(inst);
+        id
     }
-    deps.retain(|&d| d != id);
-    deps.sort_unstable();
-    deps.dedup();
-    inst.deps = deps;
-    insts.push(inst);
-    id
-}
 
-fn push_local(
-    insts: &mut Vec<Inst>,
-    slots: &mut HashMap<Slot, SlotDeps>,
-    op: OpCode,
-    src: SlotRange,
-    dst: SlotRange,
-    hint: SchedHint,
-) {
-    let id = insts.len();
-    finish_inst(
-        insts,
-        slots,
-        Inst {
+    fn push_local(&mut self, op: OpCode, src: SlotRange, dst: SlotRange, hint: SchedHint) {
+        let id = self.insts.len();
+        self.finish_inst(Inst {
             id,
             rank: dst.rank,
             op,
@@ -138,27 +135,18 @@ fn push_local(
             paired_recv: None,
             hint,
             dead: false,
-        },
-    );
-}
+        });
+    }
 
-/// Emit `send` on the source rank paired with `recv_op` on the destination.
-fn push_pair(
-    insts: &mut Vec<Inst>,
-    slots: &mut HashMap<Slot, SlotDeps>,
-    recv_op: OpCode,
-    src: SlotRange,
-    dst: SlotRange,
-    hint: SchedHint,
-) {
-    let send_id = insts.len();
-    // The send half keeps the sendtb/ch hints; the receive half the recvtb/ch.
-    let send_hint = SchedHint { sendtb: hint.sendtb, recvtb: None, ch: hint.ch };
-    let recv_hint = SchedHint { sendtb: None, recvtb: hint.recvtb, ch: hint.ch };
-    finish_inst(
-        insts,
-        slots,
-        Inst {
+    /// Emit `send` on the source rank paired with `recv_op` on the
+    /// destination.
+    fn push_pair(&mut self, recv_op: OpCode, src: SlotRange, dst: SlotRange, hint: SchedHint) {
+        let send_id = self.insts.len();
+        // The send half keeps the sendtb/ch hints; the receive half the
+        // recvtb/ch.
+        let send_hint = SchedHint { sendtb: hint.sendtb, recvtb: None, ch: hint.ch };
+        let recv_hint = SchedHint { sendtb: None, recvtb: hint.recvtb, ch: hint.ch };
+        self.finish_inst(Inst {
             id: send_id,
             rank: src.rank,
             op: OpCode::Send,
@@ -171,16 +159,13 @@ fn push_pair(
             paired_recv: Some(send_id + 1),
             hint: send_hint,
             dead: false,
-        },
-    );
-    let recv_id = insts.len();
-    debug_assert_eq!(recv_id, send_id + 1);
-    // recvReduceCopy accumulates into dst: it reads dst as local operand.
-    let local_src = if recv_op == OpCode::Rrc { Some(dst) } else { None };
-    finish_inst(
-        insts,
-        slots,
-        Inst {
+        });
+        let recv_id = self.insts.len();
+        debug_assert_eq!(recv_id, send_id + 1);
+        // recvReduceCopy accumulates into dst: it reads dst as local
+        // operand.
+        let local_src = if recv_op == OpCode::Rrc { Some(dst) } else { None };
+        self.finish_inst(Inst {
             id: recv_id,
             rank: dst.rank,
             op: recv_op,
@@ -193,8 +178,8 @@ fn push_pair(
             paired_recv: None,
             hint: recv_hint,
             dead: false,
-        },
-    );
+        });
+    }
 }
 
 #[cfg(test)]

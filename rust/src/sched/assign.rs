@@ -4,7 +4,7 @@
 use super::{global_order, Schedule, Threadblock};
 use crate::core::{ChanId, Gc3Error, Rank, Result, TbId};
 use crate::instdag::{InstDag, InstId};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Channel of the communication edge rooted at send-type instruction `s`:
 /// the sender's channel directive, defaulting to 0.
@@ -71,9 +71,12 @@ pub fn auto_assign_capped(dag: &InstDag, sm_cap: usize) -> Result<Schedule> {
             let id = tbs[rank].len();
             tbs[rank].push(Threadblock { rank, id, send: Some(s), recv: Some(r), insts: vec![] });
         }
-        // Deduplicate demands and drop those already covered.
-        let covered_s: Vec<(Rank, ChanId)> = tbs[rank].iter().filter_map(|t| t.send).collect();
-        let covered_r: Vec<(Rank, ChanId)> = tbs[rank].iter().filter_map(|t| t.recv).collect();
+        // Deduplicate demands and drop those already covered. Hashed
+        // lookups: the old `Vec::contains` filter was O(demands × tbs).
+        let covered_s: HashSet<(Rank, ChanId)> =
+            tbs[rank].iter().filter_map(|t| t.send).collect();
+        let covered_r: HashSet<(Rank, ChanId)> =
+            tbs[rank].iter().filter_map(|t| t.recv).collect();
         let mut s_left: Vec<(Rank, ChanId)> = send_demands[rank]
             .iter()
             .copied()
@@ -120,29 +123,67 @@ pub fn auto_assign_capped(dag: &InstDag, sm_cap: usize) -> Result<Schedule> {
     }
 
     // -- Step 5: assign instructions in the global topological order. --
+    // Candidate threadblocks are found through per-rank signature indexes
+    // instead of a linear sweep over every threadblock per instruction
+    // (which was O(instructions × threadblocks)). Candidate lists are
+    // built in threadblock id order, so the strict `<` min below keeps the
+    // sweep's tie-break: earliest id among equally late threadblocks.
+    // Purely local ops still scan the whole rank — any threadblock
+    // qualifies for them, including connection-less ones created below.
+    let mut by_both: Vec<HashMap<((Rank, ChanId), (Rank, ChanId)), Vec<TbId>>> =
+        (0..nranks).map(|_| HashMap::new()).collect();
+    let mut by_send: Vec<HashMap<(Rank, ChanId), Vec<TbId>>> =
+        (0..nranks).map(|_| HashMap::new()).collect();
+    let mut by_recv: Vec<HashMap<(Rank, ChanId), Vec<TbId>>> =
+        (0..nranks).map(|_| HashMap::new()).collect();
+    for rank in 0..nranks {
+        for tb in &tbs[rank] {
+            if let Some(s) = tb.send {
+                by_send[rank].entry(s).or_default().push(tb.id);
+            }
+            if let Some(r) = tb.recv {
+                by_recv[rank].entry(r).or_default().push(tb.id);
+            }
+            if let (Some(s), Some(r)) = (tb.send, tb.recv) {
+                by_both[rank].entry((s, r)).or_default().push(tb.id);
+            }
+        }
+    }
     let n = dag.insts.len();
     let mut placement: Vec<(Rank, TbId, usize)> = vec![(usize::MAX, usize::MAX, usize::MAX); n];
     // Position (in `order`) of each tb's latest assigned instruction.
     let mut last_pos: Vec<Vec<i64>> = (0..nranks).map(|r| vec![-1i64; tbs[r].len()]).collect();
+    let empty: Vec<TbId> = Vec::new();
     for (pos, &id) in order.iter().enumerate() {
         let inst = &dag.insts[id];
         let rank = inst.rank;
         let (s_need, r_need) = needs(dag, id);
-        // Candidate threadblocks whose connections satisfy the needs.
+        // "The one whose latest assigned instruction is earliest."
         let mut best: Option<TbId> = None;
-        for tb in &tbs[rank] {
-            let ok_s = match s_need {
-                Some(s) => tb.send == Some(s),
-                None => true,
-            };
-            let ok_r = match r_need {
-                Some(r) => tb.recv == Some(r),
-                None => true,
-            };
-            if ok_s && ok_r {
-                // "The one whose latest assigned instruction is earliest."
-                if best.map(|b| last_pos[rank][tb.id] < last_pos[rank][b]).unwrap_or(true) {
-                    best = Some(tb.id);
+        let mut consider = |cands: &[TbId], last_pos: &[i64], best: &mut Option<TbId>| {
+            for &t in cands {
+                if best.map(|b| last_pos[t] < last_pos[b]).unwrap_or(true) {
+                    *best = Some(t);
+                }
+            }
+        };
+        match (s_need, r_need) {
+            (Some(s), Some(r)) => consider(
+                by_both[rank].get(&(s, r)).unwrap_or(&empty),
+                &last_pos[rank],
+                &mut best,
+            ),
+            (Some(s), None) => {
+                consider(by_send[rank].get(&s).unwrap_or(&empty), &last_pos[rank], &mut best)
+            }
+            (None, Some(r)) => {
+                consider(by_recv[rank].get(&r).unwrap_or(&empty), &last_pos[rank], &mut best)
+            }
+            (None, None) => {
+                for t in 0..tbs[rank].len() {
+                    if best.map(|b| last_pos[rank][t] < last_pos[rank][b]).unwrap_or(true) {
+                        best = Some(t);
+                    }
                 }
             }
         }

@@ -32,6 +32,9 @@ pub fn emit_ef(
         Nop(InstId),                  // wait on this instruction
     }
     let mut tb_items: Vec<Vec<Vec<Item>>> = Vec::with_capacity(nranks);
+    // Scratch reused across instructions — the old code allocated a fresh
+    // vector per instruction inside the inner loop.
+    let mut per_tb_dep: Vec<(TbId, usize, InstId)> = Vec::new();
     for rank in 0..nranks {
         let mut per_tb = Vec::with_capacity(sched.tbs[rank].len());
         for tb in &sched.tbs[rank] {
@@ -40,7 +43,7 @@ pub fn emit_ef(
                 let inst = &dag.insts[id];
                 // Cross-tb processing deps: keep the latest dep per foreign
                 // tb (earlier ones are subsumed by sequential execution).
-                let mut per_tb_dep: Vec<(TbId, usize, InstId)> = Vec::new();
+                per_tb_dep.clear();
                 for &d in &inst.deps {
                     let (drank, dtb, dstep) = sched.placement[d];
                     if drank != rank {
@@ -50,8 +53,9 @@ pub fn emit_ef(
                     }
                     if dtb == tb.id {
                         // Same threadblock: program order must satisfy it.
-                        let dpos = tb.insts.iter().position(|&x| x == d).unwrap();
-                        if dpos >= pos {
+                        // `placement` already records the position, so no
+                        // O(tb length) scan is needed.
+                        if dstep >= pos {
                             return Err(Gc3Error::Sched(format!(
                                 "inst {id} placed before its same-tb dependency {d}"
                             )));
@@ -68,7 +72,7 @@ pub fn emit_ef(
                 // last dependence, nops carry the rest.
                 per_tb_dep.sort_unstable();
                 let main_dep = per_tb_dep.pop().map(|(_, _, d)| d);
-                for (_, _, d) in per_tb_dep {
+                for &(_, _, d) in per_tb_dep.iter() {
                     items.push(Item::Nop(d));
                 }
                 items.push(Item::Real(id, main_dep));

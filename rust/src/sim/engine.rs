@@ -16,9 +16,38 @@
 //!   counters (the spin-lock of §4.4);
 //! * **max-min fair bandwidth sharing** over the Fig. 2 resource
 //!   inventory, with per-flow threadblock/QP caps (two-round progressive
-//!   filling — see `recompute_rates`).
+//!   filling — see [`RateState`]).
+//!
+//! # Hot-loop structure (EXPERIMENTS.md §Perf)
+//!
+//! Event throughput is the product here — every ROADMAP search/autotuning
+//! feature prices candidate schedules on this loop — so the per-event cost
+//! must not scale with the number of live flows. Relative to the
+//! pre-optimization engine (preserved in [`super::reference`] and pinned
+//! by golden parity tests):
+//!
+//! * the per-event linear argmin over `live_flows` is replaced by two lazy
+//!   min-heaps of **projected completion times** (one keyed on full
+//!   completion for the argmin/clock, one on the 1e-6-byte completion
+//!   threshold for same-round batch completion). Projections stay valid
+//!   while a flow's rate is unchanged — fluid flows drain linearly — so
+//!   entries are only re-pushed on rate changes and invalidated by a
+//!   per-flow epoch stamp;
+//! * flow `remaining` is advanced **lazily** from `(remaining, touch)`
+//!   instead of an O(live_flows) sweep per event;
+//! * `live_flows` removal is O(1) swap-remove through a position index
+//!   instead of `Vec::retain`;
+//! * rate recomputation is **incremental**: per-resource and per-route
+//!   live-flow counts are maintained as flows start/finish, and the
+//!   two-round progressive fill is skipped entirely when the live set's
+//!   resource footprint is unchanged since the last fill (the steady-state
+//!   case: a completed slice immediately replaced by the next slice on the
+//!   same connection). When dirty, the fill runs once per *route class*
+//!   (routes are interned — [`super::resources`]) rather than once per
+//!   flow, and reuses preallocated scratch instead of allocating vectors
+//!   sized by the ever-growing total flow count.
 
-use super::resources::{ResourceTable, Route};
+use super::resources::{ResourceTable, RouteId};
 use crate::core::{Gc3Error, Rank, Result};
 use crate::ef::EfProgram;
 use crate::instdag::OpCode;
@@ -37,7 +66,7 @@ pub const STAGING_BYTES: f64 = 4.0 * 1024.0 * 1024.0;
 /// mechanism ("dividing the base ring among multiple threadblocks results
 /// in noticeable performance [gain] even if the amount of threadblocks
 /// and channels stays the same").
-fn inst_overhead(proto: super::Protocol) -> f64 {
+pub(crate) fn inst_overhead(proto: super::Protocol) -> f64 {
     match proto {
         super::Protocol::Simple => 2.0e-6,
         super::Protocol::LL128 => 0.8e-6,
@@ -45,7 +74,7 @@ fn inst_overhead(proto: super::Protocol) -> f64 {
     }
 }
 /// Throughput derating for reducing receives (reads two streams).
-const REDUCE_DERATE: f64 = 0.7;
+pub(crate) const REDUCE_DERATE: f64 = 0.7;
 
 /// Simulation result.
 #[derive(Clone, Debug)]
@@ -80,7 +109,7 @@ enum Unit {
 }
 
 struct Conn {
-    route: Route,
+    route: RouteId,
     window: usize,
     outstanding: usize,
     arrivals: usize,
@@ -89,8 +118,14 @@ struct Conn {
 }
 
 struct Flow {
+    /// Payload bytes left at time `touch` (advanced lazily).
     remaining: f64,
     rate: f64,
+    /// Simulation time at which `remaining`/`rate` were last materialized.
+    touch: f64,
+    /// Bumped whenever `rate` changes or the flow dies; stale heap entries
+    /// (older epochs) are discarded on pop.
+    epoch: u64,
     conn: usize,
     owner: usize,
 }
@@ -108,8 +143,158 @@ struct TbRun {
     progress: usize,
     /// (threshold, waiting tb) entries parked on this tb's progress.
     waiters: Vec<(usize, usize)>,
+    /// True while this tb sits in some other tb's `waiters` list — a tb
+    /// blocks at exactly one unit, so one flag replaces the reference
+    /// engine's O(waiters) `contains` duplicate scan.
+    parked: bool,
     /// Global tb table index of this tb's GPU/rank (for reports).
     rank: Rank,
+}
+
+/// Incrementally maintained state for max-min rate recomputation.
+///
+/// Per-resource and per-route live-flow counts are updated as flows start
+/// and finish; `refill` runs the two-round progressive fill once per
+/// active route class. The `delta`/`touched` log records the net footprint
+/// change since the last fill: when it is zero (every removed flow was
+/// replaced by one with the identical route), the previously computed
+/// class rates are still exact and the fill is skipped.
+struct RateState {
+    /// Live flows crossing each resource (incremental; see unit test).
+    res_count: Vec<u32>,
+    /// Live flows per interned route.
+    route_count: Vec<u32>,
+    /// Routes with `route_count > 0`, unordered, with a position index for
+    /// O(1) removal.
+    active_routes: Vec<RouteId>,
+    route_pos: Vec<usize>,
+    /// Per-route rate from the last fill; exact while the footprint log is
+    /// net-zero.
+    class_rate: Vec<f64>,
+    class_frozen: Vec<bool>,
+    have_rates: bool,
+    /// Net per-route live-count change since the last fill.
+    delta: Vec<i32>,
+    touched: Vec<RouteId>,
+    // Scratch for the two-round fill (reused, never reallocated).
+    residual: Vec<f64>,
+    count2: Vec<u32>,
+}
+
+impl RateState {
+    fn new(nres: usize, nroutes: usize) -> RateState {
+        RateState {
+            res_count: vec![0; nres],
+            route_count: vec![0; nroutes],
+            active_routes: Vec::with_capacity(nroutes),
+            route_pos: vec![usize::MAX; nroutes],
+            class_rate: vec![0.0; nroutes],
+            class_frozen: vec![false; nroutes],
+            have_rates: false,
+            delta: vec![0; nroutes],
+            touched: Vec::new(),
+            residual: vec![0.0; nres],
+            count2: vec![0; nres],
+        }
+    }
+
+    fn add(&mut self, route: RouteId, rt: &ResourceTable) {
+        if self.route_count[route] == 0 {
+            self.route_pos[route] = self.active_routes.len();
+            self.active_routes.push(route);
+        }
+        self.route_count[route] += 1;
+        for &r in rt.resources_of(route) {
+            self.res_count[r] += 1;
+        }
+        if self.delta[route] == 0 {
+            self.touched.push(route);
+        }
+        self.delta[route] += 1;
+    }
+
+    fn remove(&mut self, route: RouteId, rt: &ResourceTable) {
+        self.route_count[route] -= 1;
+        if self.route_count[route] == 0 {
+            let pos = self.route_pos[route];
+            self.active_routes.swap_remove(pos);
+            if pos < self.active_routes.len() {
+                self.route_pos[self.active_routes[pos]] = pos;
+            }
+            self.route_pos[route] = usize::MAX;
+        }
+        for &r in rt.resources_of(route) {
+            self.res_count[r] -= 1;
+        }
+        if self.delta[route] == 0 {
+            self.touched.push(route);
+        }
+        self.delta[route] -= 1;
+    }
+
+    /// True when the live set's resource footprint equals the one the
+    /// current `class_rate`s were computed for.
+    fn footprint_unchanged(&self) -> bool {
+        self.touched.iter().all(|&r| self.delta[r] == 0)
+    }
+
+    fn clear_deltas(&mut self) {
+        for r in self.touched.drain(..) {
+            self.delta[r] = 0;
+        }
+    }
+
+    /// Two-round progressive filling: a cheap max-min approximation.
+    ///
+    /// Round 1 computes naive equal shares per resource; route classes
+    /// whose private cap is below every resource share freeze at the cap.
+    /// Round 2 redistributes the slack among the rest. Exact max-min would
+    /// iterate to a fixpoint; two rounds capture the dominant effect
+    /// (tb-capped flows leaving NVLink/NIC headroom) at
+    /// O(route classes × route length). All flows sharing a route receive
+    /// bitwise-identical rates, matching the per-flow reference fill.
+    fn refill(&mut self, rt: &ResourceTable) {
+        self.residual.copy_from_slice(&rt.caps);
+        self.count2.copy_from_slice(&self.res_count);
+        // Round 1: naive share; freeze cap-limited classes.
+        for i in 0..self.active_routes.len() {
+            let route = self.active_routes[i];
+            let cap = rt.cap_of(route);
+            let mut share = cap;
+            let mut capped = true;
+            for &r in rt.resources_of(route) {
+                let s = rt.caps[r] / self.res_count[r] as f64;
+                if s < share {
+                    share = s;
+                    capped = false;
+                }
+            }
+            self.class_frozen[route] = capped;
+            if capped {
+                self.class_rate[route] = cap;
+                let k = self.route_count[route];
+                for &r in rt.resources_of(route) {
+                    self.residual[r] -= cap * k as f64;
+                    self.count2[r] -= k;
+                }
+            }
+        }
+        // Round 2: redistribute slack among unfrozen classes.
+        for i in 0..self.active_routes.len() {
+            let route = self.active_routes[i];
+            if self.class_frozen[route] {
+                continue;
+            }
+            let mut share = rt.cap_of(route);
+            for &r in rt.resources_of(route) {
+                if self.count2[r] > 0 {
+                    share = share.min((self.residual[r] / self.count2[r] as f64).max(0.0));
+                }
+            }
+            self.class_rate[route] = share.max(1e3); // never fully starve
+        }
+        self.have_rates = true;
+    }
 }
 
 /// Simulate `ef` moving `size_bytes` per input buffer on `topo`.
@@ -167,7 +352,7 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
                         rtable: &mut ResourceTable|
      -> usize {
         *conn_ids.entry((src, ch, dst)).or_insert_with(|| {
-            let route = rtable.route(topo, src, dst);
+            let route = rtable.route_id(topo, src, dst);
             conns.push(Conn {
                 route,
                 window: base_window,
@@ -275,6 +460,7 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
                 done: false,
                 progress: 0,
                 waiters: Vec::new(),
+                parked: false,
                 rank: gpu.rank,
             });
         }
@@ -302,14 +488,27 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
     };
 
     let mut flows: Vec<Flow> = Vec::new();
-    let mut live_flows: Vec<usize> = Vec::new();
+    // Live flow ids + per-flow position index for O(1) swap-removal.
+    let mut live: Vec<usize> = Vec::new();
+    let mut live_pos: Vec<usize> = Vec::new();
+    // Projected completion heaps, lazily invalidated by flow epochs:
+    // `proj_heap` is keyed on full completion (`touch + remaining/rate`)
+    // and drives the clock + forced argmin completion; `thr_heap` is keyed
+    // on crossing the 1e-6-byte completion threshold and drives same-round
+    // batch completion. Ties break toward the lowest flow id, matching the
+    // reference engine's in-order linear argmin.
+    let mut proj_heap: BinaryHeap<Reverse<(u64, usize, u64)>> = BinaryHeap::new();
+    let mut thr_heap: BinaryHeap<Reverse<(u64, usize, u64)>> = BinaryHeap::new();
+    let mut rs = RateState::new(rtable.caps.len(), rtable.num_routes());
+    // Flows created since the last rate update (they carry rate 0 until
+    // the next update assigns their class rate).
+    let mut pending: Vec<usize> = Vec::new();
+    let mut completed: Vec<usize> = Vec::new();
     let mut rates_dirty = false;
     let mut now = 0.0f64;
     let mut n_events = 0usize;
     let mut n_flows = 0usize;
     let mut res_bytes: Vec<f64> = vec![0.0; rtable.caps.len()];
-    // Flow whose completion unblocks a sender: conn -> sender tb recorded
-    // in flow.owner.
 
     // Kick off every threadblock at t=0.
     let all: Vec<usize> = (0..tbs.len()).collect();
@@ -332,7 +531,11 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
                         if tbs[tb].progress >= threshold {
                             tbs[t_id].idx += 1;
                         } else {
-                            if !tbs[tb].waiters.contains(&(threshold, t_id)) {
+                            // Idempotent parking: a tb blocks at exactly
+                            // one unit, so the flag suffices and spurious
+                            // wakeups re-park without a duplicate scan.
+                            if !tbs[t_id].parked {
+                                tbs[t_id].parked = true;
                                 tbs[tb].waiters.push((threshold, t_id));
                             }
                             break;
@@ -344,21 +547,32 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
                         break;
                     }
                     Unit::SendSlice { conn, bytes } => {
-                        let c = &mut conns[conn];
-                        if c.outstanding < c.window {
-                            c.outstanding += 1;
-                            for &r in &c.route.resources {
+                        if conns[conn].outstanding < conns[conn].window {
+                            conns[conn].outstanding += 1;
+                            let route = conns[conn].route;
+                            for &r in rtable.resources_of(route) {
                                 res_bytes[r] += bytes;
                             }
-                            flows.push(Flow { remaining: bytes, rate: 0.0, conn, owner: t_id });
-                            live_flows.push(flows.len() - 1);
+                            let f = flows.len();
+                            flows.push(Flow {
+                                remaining: bytes,
+                                rate: 0.0,
+                                touch: now,
+                                epoch: 0,
+                                conn,
+                                owner: t_id,
+                            });
+                            live_pos.push(live.len());
+                            live.push(f);
+                            rs.add(route, &rtable);
+                            pending.push(f);
                             n_flows += 1;
                             rates_dirty = true;
                             tbs[t_id].idx += 1;
                             break; // blocked until the flow completes
                         } else {
                             // Idempotent parking: spurious wakeups re-park.
-                            c.send_waiter = Some(t_id);
+                            conns[conn].send_waiter = Some(t_id);
                             break;
                         }
                     }
@@ -375,10 +589,8 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
                     Unit::Drain { conn, dur } => {
                         push_event(&mut heap, &mut event_table, now + dur, Event::Resume(t_id));
                         // Slot frees when the drain finishes; model by
-                        // releasing at resume time via a Release unit the
-                        // expansion placed? We inline it: release now-ish
-                        // is too early, so mutate: replace with Release
-                        // executed on resume.
+                        // mutating the unit into a Release executed on
+                        // resume (releasing now would be too early).
                         tbs[t_id].units[idx] = Unit::Release { conn };
                         break;
                     }
@@ -398,6 +610,7 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
                         while i < tbs[t_id].waiters.len() {
                             if tbs[t_id].waiters[i].0 <= p {
                                 let (_, w) = tbs[t_id].waiters.swap_remove(i);
+                                tbs[w].parked = false;
                                 ready.push(w);
                             } else {
                                 i += 1;
@@ -412,20 +625,57 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
             break;
         }
 
-        // Pick the next moment something happens.
+        // Refresh rates. Cache-hit rounds (footprint unchanged) only
+        // assign class rates to newly created flows; dirty rounds refill
+        // per route class and re-project exactly the flows whose rate
+        // actually changed.
         if rates_dirty {
-            recompute_rates(&mut flows, &live_flows, &conns, &rtable);
+            if rs.have_rates && rs.footprint_unchanged() {
+                for &f in &pending {
+                    let nr = rs.class_rate[conns[flows[f].conn].route];
+                    let fl = &mut flows[f];
+                    fl.remaining -= fl.rate * (now - fl.touch); // no-op at rate 0
+                    fl.touch = now;
+                    fl.rate = nr;
+                    fl.epoch += 1;
+                    proj_heap.push(Reverse((key(now + fl.remaining / nr.max(1e-3)), f, fl.epoch)));
+                    thr_heap.push(Reverse((key(now + (fl.remaining - 1e-6) / nr), f, fl.epoch)));
+                }
+            } else {
+                rs.refill(&rtable);
+                for &f in &live {
+                    let nr = rs.class_rate[conns[flows[f].conn].route];
+                    if nr.to_bits() != flows[f].rate.to_bits() {
+                        let fl = &mut flows[f];
+                        fl.remaining -= fl.rate * (now - fl.touch);
+                        fl.touch = now;
+                        fl.rate = nr;
+                        fl.epoch += 1;
+                        proj_heap
+                            .push(Reverse((key(now + fl.remaining / nr.max(1e-3)), f, fl.epoch)));
+                        thr_heap
+                            .push(Reverse((key(now + (fl.remaining - 1e-6) / nr), f, fl.epoch)));
+                    }
+                }
+            }
+            pending.clear();
+            rs.clear_deltas();
             rates_dirty = false;
         }
-        let mut t_flow = f64::INFINITY;
-        let mut argmin: Option<usize> = None;
-        for &f in &live_flows {
-            let t = now + flows[f].remaining / flows[f].rate.max(1e-3);
-            if t < t_flow {
-                t_flow = t;
-                argmin = Some(f);
+
+        // Earliest projected flow completion (lazy heap peek).
+        let (t_flow, argmin) = loop {
+            match proj_heap.peek().copied() {
+                None => break (f64::INFINITY, None),
+                Some(Reverse((tb, f, ep))) => {
+                    if live_pos[f] == usize::MAX || ep != flows[f].epoch {
+                        proj_heap.pop();
+                        continue;
+                    }
+                    break (f64::from_bits(tb), Some(f));
+                }
             }
-        }
+        };
         let t_event = heap.peek().map(|Reverse((t, _, _))| f64::from_bits(*t));
         let t_next = t_event.map(|t| t.min(t_flow)).unwrap_or(t_flow);
         if !t_next.is_finite() {
@@ -442,38 +692,67 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
             )));
         }
         let dt = (t_next - now).max(0.0);
-        // Advance fluid flows. The argmin flow is force-completed when the
-        // flow event wins the race: floating-point residue must never stall
-        // the clock. Zero-dt rounds (batched same-time events) skip the
-        // O(flows) sweep entirely — see EXPERIMENTS.md §Perf.
+        // The argmin flow is force-completed when the flow event wins the
+        // race: floating-point residue must never stall the clock.
+        // Zero-dt rounds (batched same-time events) never complete flows
+        // unless the flow event itself fired — see EXPERIMENTS.md §Perf.
         let flow_event = t_flow <= t_next + 1e-15;
-        let mut completed: Vec<usize> = Vec::new();
-        if dt > 0.0 {
-            for &f in &live_flows {
-                flows[f].remaining -= flows[f].rate * dt;
-                if flows[f].remaining <= 1e-6 || (flow_event && Some(f) == argmin) {
+        completed.clear();
+        if dt > 0.0 || flow_event {
+            // Every flow whose remaining crosses the 1e-6-byte completion
+            // threshold by t_next finishes this round.
+            while let Some(Reverse((tb, f, ep))) = thr_heap.peek().copied() {
+                if live_pos[f] == usize::MAX || ep != flows[f].epoch {
+                    thr_heap.pop();
+                    continue;
+                }
+                if f64::from_bits(tb) <= t_next {
+                    thr_heap.pop();
                     completed.push(f);
+                } else {
+                    break;
                 }
             }
-        } else if flow_event {
-            completed.extend(argmin);
-            for &f in &live_flows {
-                if flows[f].remaining <= 1e-6 && Some(f) != argmin {
-                    completed.push(f);
+            if flow_event {
+                let a = argmin.expect("flow event implies a live projection");
+                if !completed.contains(&a) {
+                    completed.push(a);
                 }
+            }
+            if dt > 0.0 {
+                // The reference engine collects completions by scanning
+                // `live_flows` in insertion (= flow id) order; replicate.
+                completed.sort_unstable();
+            } else if flow_event {
+                // Zero-dt reference order: forced argmin first, then the
+                // threshold-crossers ascending.
+                let a = argmin.expect("checked above");
+                completed.retain(|&f| f != a);
+                completed.sort_unstable();
+                completed.insert(0, a);
             }
         }
         now = t_next;
         n_events += 1;
         if !completed.is_empty() {
-            for f in completed {
-                live_flows.retain(|&x| x != f);
+            for i in 0..completed.len() {
+                let f = completed[i];
+                // O(1) removal via the position index.
+                let lp = live_pos[f];
+                live.swap_remove(lp);
+                if lp < live.len() {
+                    live_pos[live[lp]] = lp;
+                }
+                live_pos[f] = usize::MAX;
                 let conn = flows[f].conn;
                 let owner = flows[f].owner;
+                let route = conns[conn].route;
+                rs.remove(route, &rtable);
+                flows[f].epoch += 1; // drop any queued projections
                 // Sender proceeds immediately; the slice arrives at the
                 // receiver after the hop latency.
                 ready.push(owner);
-                let alpha = conns[conn].route.alpha;
+                let alpha = rtable.alpha_of(route);
                 push_event(&mut heap, &mut event_table, now + alpha, Event::Arrival(conn));
                 rates_dirty = true;
             }
@@ -503,7 +782,7 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
         .filter(|(_, &b)| b > 0.0)
         .map(|(i, &b)| (rtable.names[i].clone(), b / (now.max(1e-12) * rtable.caps[i])))
         .collect();
-    utilization.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    utilization.sort_by(|a, b| b.1.total_cmp(&a.1));
     utilization.truncate(8);
 
     Ok(SimReport {
@@ -513,61 +792,6 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
         flows: n_flows,
         utilization,
     })
-}
-
-/// Two-round progressive filling: a cheap max-min approximation.
-///
-/// Round 1 computes naive equal shares per resource; flows whose private
-/// cap is below their share freeze at the cap. Round 2 redistributes the
-/// slack among the rest. Exact max-min would iterate to a fixpoint; two
-/// rounds capture the dominant effect (tb-capped flows leaving NVLink/NIC
-/// headroom) at O(flows × route).
-fn recompute_rates(flows: &mut [Flow], live: &[usize], conns: &[Conn], rt: &ResourceTable) {
-    let nres = rt.caps.len();
-    let mut count = vec![0u32; nres];
-    for &f in live {
-        for &r in &conns[flows[f].conn].route.resources {
-            count[r] += 1;
-        }
-    }
-    // Round 1: naive share; freeze cap-limited flows.
-    let mut residual = rt.caps.to_vec();
-    let mut count2 = count.clone();
-    let mut frozen = vec![false; flows.len()];
-    for &f in live {
-        let route = &conns[flows[f].conn].route;
-        let mut share = route.cap;
-        let mut capped = true;
-        for &r in &route.resources {
-            let s = rt.caps[r] / count[r] as f64;
-            if s < share {
-                share = s;
-                capped = false;
-            }
-        }
-        if capped {
-            flows[f].rate = route.cap;
-            frozen[f] = true;
-            for &r in &route.resources {
-                residual[r] -= route.cap;
-                count2[r] -= 1;
-            }
-        }
-    }
-    // Round 2: redistribute slack among unfrozen flows.
-    for &f in live {
-        if frozen[f] {
-            continue;
-        }
-        let route = &conns[flows[f].conn].route;
-        let mut share = route.cap;
-        for &r in &route.resources {
-            if count2[r] > 0 {
-                share = share.min((residual[r] / count2[r] as f64).max(0.0));
-            }
-        }
-        flows[f].rate = share.max(1e3); // never fully starve
-    }
 }
 
 #[cfg(test)]
@@ -656,5 +880,86 @@ mod tests {
         // collective can't beat that bound.
         let bound = 64.0 * 1024.0 * 1024.0 / topo.ib_conn_bw;
         assert!(rep.time > bound * 0.9, "{} vs {}", rep.time, bound);
+    }
+
+    #[test]
+    fn matches_reference_engine_on_small_collectives() {
+        // The fast engine must agree with the preserved baseline; the full
+        // golden suite lives in rust/tests/integration.rs.
+        use crate::sim::reference::simulate_reference;
+        let topo = mini_topo();
+        let t = allgather_ring(4).unwrap();
+        let c = compile(&t, "ag", &CompileOpts::default().with_instances(2)).unwrap();
+        for size in [64 * 1024u64, 16 * 1024 * 1024] {
+            let fast = simulate(&c.ef, &topo, size).unwrap();
+            let gold = simulate_reference(&c.ef, &topo, size).unwrap();
+            let rel = (fast.time - gold.time).abs() / gold.time;
+            assert!(rel <= 1e-9, "time parity at {size}: {} vs {} (rel {rel:e})", fast.time, gold.time);
+            assert_eq!(fast.events, gold.events, "event count at {size}");
+            assert_eq!(fast.flows, gold.flows, "flow count at {size}");
+        }
+    }
+
+    #[test]
+    fn incremental_counts_match_from_scratch() {
+        // Randomized add/remove churn: the incrementally maintained
+        // per-resource and per-route counts must equal a from-scratch
+        // recount at every checkpoint, and a net-zero add/remove pair must
+        // register as an unchanged footprint (the rate-cache hit case).
+        use crate::util::rng::Rng;
+        let topo = Topology::a100(2);
+        let mut rt = ResourceTable::new(&topo, Protocol::Simple);
+        let n = topo.num_ranks();
+        let mut routes = Vec::new();
+        for s in 0..n {
+            for d in 0..n {
+                if s != d {
+                    routes.push(rt.route_id(&topo, s, d));
+                }
+            }
+        }
+        let mut rs = RateState::new(rt.caps.len(), rt.num_routes());
+        let mut live: Vec<RouteId> = Vec::new();
+        let mut rng = Rng::new(0x5EED);
+        for step in 0..2000 {
+            if live.is_empty() || rng.below(2) == 0 {
+                let r = routes[rng.below(routes.len())];
+                rs.add(r, &rt);
+                live.push(r);
+            } else {
+                let i = rng.below(live.len());
+                let r = live.swap_remove(i);
+                rs.remove(r, &rt);
+            }
+            if step % 97 == 0 {
+                let mut res = vec![0u32; rt.caps.len()];
+                let mut per_route = vec![0u32; rt.num_routes()];
+                for &r in &live {
+                    per_route[r] += 1;
+                    for &x in rt.resources_of(r) {
+                        res[x] += 1;
+                    }
+                }
+                assert_eq!(rs.res_count, res, "res counts diverged at step {step}");
+                assert_eq!(rs.route_count, per_route, "route counts diverged at step {step}");
+                // Active-route set matches the nonzero counts.
+                let mut active: Vec<RouteId> = rs.active_routes.clone();
+                active.sort_unstable();
+                let mut expect: Vec<RouteId> =
+                    (0..rt.num_routes()).filter(|&r| per_route[r] > 0).collect();
+                expect.sort_unstable();
+                assert_eq!(active, expect, "active routes diverged at step {step}");
+            }
+        }
+        // A fill followed by a net-zero churn is a cache hit; any net
+        // change is not.
+        rs.refill(&rt);
+        rs.clear_deltas();
+        let r = routes[0];
+        rs.add(r, &rt);
+        rs.remove(r, &rt);
+        assert!(rs.footprint_unchanged(), "net-zero churn must be a cache hit");
+        rs.add(r, &rt);
+        assert!(!rs.footprint_unchanged(), "net add must dirty the footprint");
     }
 }

@@ -2,13 +2,18 @@
 //! (§4.2–4.4) over the Fig. 2 network model.
 //!
 //! * [`protocol`] — Simple / LL / LL128 latency-bandwidth economics.
-//! * [`resources`] — the shared-resource inventory and flow routing.
+//! * [`resources`] — the shared-resource inventory and interned flow routes.
 //! * [`engine`] — the event loop: tile loop, slicing, staging windows,
-//!   spin-lock dependences, max-min fair bandwidth sharing.
+//!   spin-lock dependences, max-min fair bandwidth sharing. Hot paths are
+//!   indexed + incremental (see the module docs / EXPERIMENTS.md §Perf).
+//! * [`reference`] — the pre-optimization engine, preserved verbatim as
+//!   the golden-parity oracle and the perf baseline.
 
 pub mod engine;
 pub mod protocol;
+pub mod reference;
 pub mod resources;
 
 pub use engine::{simulate, SimReport, STAGING_BYTES};
 pub use protocol::Protocol;
+pub use reference::simulate_reference;

@@ -1,0 +1,484 @@
+//! The pre-optimization discrete-event engine, kept verbatim.
+//!
+//! [`simulate_reference`] is the original O(live_flows)-per-event loop:
+//! linear argmin over live flows for the next completion, `Vec::retain`
+//! removal, and a from-scratch two-round max-min rate fill on every dirty
+//! round (O(live_flows × route_len) plus per-call allocations sized by the
+//! *total* flow count). It exists for two reasons:
+//!
+//! 1. **Golden parity** — `rust/tests/integration.rs` pins the optimized
+//!    [`super::engine::simulate`] against this engine: `SimReport.time`
+//!    must agree to ≤ 1e-9 relative error and `events`/`flows` counts must
+//!    match exactly on the bench scenarios. Any hot-loop change that drifts
+//!    semantics fails those tests, not a code review.
+//! 2. **Perf accounting** — `benches/compiler_perf.rs` runs the 64-rank
+//!    AllToAll scenario on both engines and records the events/s ratio in
+//!    `BENCH_compiler_perf.json` and EXPERIMENTS.md §Perf.
+//!
+//! Do not optimize this file; that is the whole point of it.
+
+use super::engine::{inst_overhead, SimReport, REDUCE_DERATE, STAGING_BYTES};
+use super::resources::{ResourceTable, Route};
+use crate::core::{Gc3Error, Rank, Result};
+use crate::ef::EfProgram;
+use crate::instdag::OpCode;
+use crate::topology::Topology;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+#[derive(Clone, Copy, Debug)]
+enum Unit {
+    Dep { tb: usize, threshold: usize },
+    Local { dur: f64 },
+    SendSlice { conn: usize, bytes: f64 },
+    RecvWait { conn: usize },
+    Drain { conn: usize, dur: f64 },
+    Release { conn: usize },
+    InstDone,
+}
+
+struct Conn {
+    route: Route,
+    window: usize,
+    outstanding: usize,
+    arrivals: usize,
+    recv_waiter: Option<usize>,
+    send_waiter: Option<usize>,
+}
+
+struct Flow {
+    remaining: f64,
+    rate: f64,
+    conn: usize,
+    owner: usize,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Event {
+    Resume(usize),
+    Arrival(usize),
+}
+
+struct TbRun {
+    units: Vec<Unit>,
+    idx: usize,
+    done: bool,
+    progress: usize,
+    waiters: Vec<(usize, usize)>,
+    rank: Rank,
+}
+
+/// Simulate `ef` moving `size_bytes` per input buffer on `topo` with the
+/// pre-optimization engine. Semantics documented on
+/// [`super::engine::simulate`]; this function is the behavioral baseline.
+pub fn simulate_reference(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimReport> {
+    ef.validate()?;
+    if ef.num_ranks != topo.num_ranks() {
+        return Err(Gc3Error::Exec(format!(
+            "EF has {} ranks, topology {} has {}",
+            ef.num_ranks,
+            topo.name,
+            topo.num_ranks()
+        )));
+    }
+    let proto = ef.protocol;
+    let chunk_payload = size_bytes as f64 / ef.in_chunks as f64;
+    let tiles = (chunk_payload / STAGING_BYTES).ceil().max(1.0) as usize;
+    let tile_payload = chunk_payload / tiles as f64;
+    let slices: usize = ((tile_payload / 2048.0).ceil() as usize).clamp(8, 16);
+    let base_window =
+        ((STAGING_BYTES / (tile_payload / slices as f64)) as usize).clamp(2, 64);
+
+    // ---- Flatten threadblocks and connections. ----
+    let mut rtable = ResourceTable::new(topo, proto);
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut conn_ids: HashMap<(Rank, usize, Rank), usize> = HashMap::new();
+    let mut tb_key: Vec<Vec<usize>> = Vec::new(); // [rank][tb] -> flat id
+    let mut flat = 0usize;
+    for gpu in &ef.gpus {
+        let mut row = Vec::new();
+        for _ in &gpu.tbs {
+            row.push(flat);
+            flat += 1;
+        }
+        tb_key.push(row);
+    }
+    let mut get_conn = |src: Rank, ch: usize, dst: Rank,
+                        conns: &mut Vec<Conn>,
+                        rtable: &mut ResourceTable|
+     -> usize {
+        *conn_ids.entry((src, ch, dst)).or_insert_with(|| {
+            let route = rtable.route(topo, src, dst);
+            conns.push(Conn {
+                route,
+                window: base_window,
+                outstanding: 0,
+                arrivals: 0,
+                recv_waiter: None,
+                send_waiter: None,
+            });
+            conns.len() - 1
+        })
+    };
+
+    // ---- Expand instructions into per-tb unit lists. ----
+    let overhead = inst_overhead(proto);
+    let mut conn_tile_slices: Vec<usize> = Vec::new();
+    let mut tbs: Vec<TbRun> = Vec::with_capacity(flat);
+    for gpu in &ef.gpus {
+        for tb in &gpu.tbs {
+            let send_conn = tb.send.map(|(peer, ch)| {
+                get_conn(gpu.rank, ch, peer, &mut conns, &mut rtable)
+            });
+            let recv_conn = tb.recv.map(|(peer, ch)| {
+                get_conn(peer, ch, gpu.rank, &mut conns, &mut rtable)
+            });
+            conn_tile_slices.resize(conns.len(), 0);
+            let n_insts = tb.steps.len();
+            let mut units = Vec::with_capacity(n_insts * tiles * (slices + 1));
+            for tile in 0..tiles {
+                for (step, inst) in tb.steps.iter().enumerate() {
+                    let _ = step;
+                    if let Some((dep_tb, dep_step)) = inst.depend {
+                        let dep_flat = tb_key[gpu.rank][dep_tb];
+                        let dep_insts = ef.gpus[gpu.rank].tbs[dep_tb].steps.len();
+                        units.push(Unit::Dep {
+                            tb: dep_flat,
+                            threshold: tile * dep_insts + dep_step + 1,
+                        });
+                    }
+                    if inst.op != OpCode::Nop {
+                        units.push(Unit::Local { dur: overhead });
+                    }
+                    let n_slices = inst.count * slices;
+                    let slice_bytes = tile_payload / slices as f64;
+                    match inst.op {
+                        OpCode::Nop => {}
+                        OpCode::Copy | OpCode::Reduce => {
+                            let rate = if inst.op == OpCode::Reduce {
+                                topo.tb_bw * REDUCE_DERATE
+                            } else {
+                                topo.tb_bw
+                            };
+                            units.push(Unit::Local {
+                                dur: inst.count as f64 * tile_payload / rate,
+                            });
+                        }
+                        OpCode::Send => {
+                            let c = send_conn.expect("validated");
+                            if tile == 0 {
+                                conn_tile_slices[c] += n_slices;
+                            }
+                            for _ in 0..n_slices {
+                                units.push(Unit::SendSlice { conn: c, bytes: slice_bytes });
+                            }
+                        }
+                        OpCode::Recv | OpCode::Rrc => {
+                            let c = recv_conn.expect("validated");
+                            let rate = if inst.op == OpCode::Rrc {
+                                topo.tb_bw * REDUCE_DERATE
+                            } else {
+                                topo.tb_bw
+                            };
+                            for _ in 0..n_slices {
+                                units.push(Unit::RecvWait { conn: c });
+                                units.push(Unit::Drain {
+                                    conn: c,
+                                    dur: slice_bytes / rate,
+                                });
+                            }
+                        }
+                        OpCode::Rcs | OpCode::Rrcs | OpCode::Rrs => {
+                            let ci = recv_conn.expect("validated");
+                            let co = send_conn.expect("validated");
+                            if tile == 0 {
+                                conn_tile_slices[co] += n_slices;
+                            }
+                            for _ in 0..n_slices {
+                                units.push(Unit::RecvWait { conn: ci });
+                                units.push(Unit::SendSlice { conn: co, bytes: slice_bytes });
+                                units.push(Unit::Release { conn: ci });
+                            }
+                        }
+                    }
+                    units.push(Unit::InstDone);
+                }
+            }
+            tbs.push(TbRun {
+                units,
+                idx: 0,
+                done: false,
+                progress: 0,
+                waiters: Vec::new(),
+                rank: gpu.rank,
+            });
+        }
+    }
+
+    for (c, conn) in conns.iter_mut().enumerate() {
+        let per_tile = conn_tile_slices.get(c).copied().unwrap_or(0);
+        conn.window = conn.window.max(per_tile + 1);
+    }
+
+    // ---- Event loop. ----
+    let mut heap: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
+    let mut event_table: Vec<Event> = Vec::new();
+    let mut seq = 0u64;
+    let key = |t: f64| -> u64 { t.max(0.0).to_bits() };
+    let mut push_event = |heap: &mut BinaryHeap<Reverse<(u64, u64, usize)>>,
+                          event_table: &mut Vec<Event>,
+                          t: f64,
+                          e: Event| {
+        event_table.push(e);
+        heap.push(Reverse((key(t), seq, event_table.len() - 1)));
+        seq += 1;
+    };
+
+    let mut flows: Vec<Flow> = Vec::new();
+    let mut live_flows: Vec<usize> = Vec::new();
+    let mut rates_dirty = false;
+    let mut now = 0.0f64;
+    let mut n_events = 0usize;
+    let mut n_flows = 0usize;
+    let mut res_bytes: Vec<f64> = vec![0.0; rtable.caps.len()];
+
+    let all: Vec<usize> = (0..tbs.len()).collect();
+    let mut ready: Vec<usize> = all;
+
+    loop {
+        // Advance every ready threadblock as far as it can go.
+        while let Some(t_id) = ready.pop() {
+            if tbs[t_id].done {
+                continue;
+            }
+            loop {
+                let idx = tbs[t_id].idx;
+                if idx >= tbs[t_id].units.len() {
+                    tbs[t_id].done = true;
+                    break;
+                }
+                match tbs[t_id].units[idx] {
+                    Unit::Dep { tb, threshold } => {
+                        if tbs[tb].progress >= threshold {
+                            tbs[t_id].idx += 1;
+                        } else {
+                            if !tbs[tb].waiters.contains(&(threshold, t_id)) {
+                                tbs[tb].waiters.push((threshold, t_id));
+                            }
+                            break;
+                        }
+                    }
+                    Unit::Local { dur } => {
+                        push_event(&mut heap, &mut event_table, now + dur, Event::Resume(t_id));
+                        tbs[t_id].idx += 1;
+                        break;
+                    }
+                    Unit::SendSlice { conn, bytes } => {
+                        let c = &mut conns[conn];
+                        if c.outstanding < c.window {
+                            c.outstanding += 1;
+                            for &r in &c.route.resources {
+                                res_bytes[r] += bytes;
+                            }
+                            flows.push(Flow { remaining: bytes, rate: 0.0, conn, owner: t_id });
+                            live_flows.push(flows.len() - 1);
+                            n_flows += 1;
+                            rates_dirty = true;
+                            tbs[t_id].idx += 1;
+                            break; // blocked until the flow completes
+                        } else {
+                            c.send_waiter = Some(t_id);
+                            break;
+                        }
+                    }
+                    Unit::RecvWait { conn } => {
+                        let c = &mut conns[conn];
+                        if c.arrivals > 0 {
+                            c.arrivals -= 1;
+                            tbs[t_id].idx += 1;
+                        } else {
+                            c.recv_waiter = Some(t_id);
+                            break;
+                        }
+                    }
+                    Unit::Drain { conn, dur } => {
+                        push_event(&mut heap, &mut event_table, now + dur, Event::Resume(t_id));
+                        tbs[t_id].units[idx] = Unit::Release { conn };
+                        break;
+                    }
+                    Unit::Release { conn } => {
+                        let c = &mut conns[conn];
+                        c.outstanding = c.outstanding.saturating_sub(1);
+                        if let Some(s) = c.send_waiter.take() {
+                            ready.push(s);
+                        }
+                        tbs[t_id].idx += 1;
+                    }
+                    Unit::InstDone => {
+                        tbs[t_id].progress += 1;
+                        tbs[t_id].idx += 1;
+                        let p = tbs[t_id].progress;
+                        let mut i = 0;
+                        while i < tbs[t_id].waiters.len() {
+                            if tbs[t_id].waiters[i].0 <= p {
+                                let (_, w) = tbs[t_id].waiters.swap_remove(i);
+                                ready.push(w);
+                            } else {
+                                i += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        if tbs.iter().all(|t| t.done) {
+            break;
+        }
+
+        // Pick the next moment something happens.
+        if rates_dirty {
+            recompute_rates(&mut flows, &live_flows, &conns, &rtable);
+            rates_dirty = false;
+        }
+        let mut t_flow = f64::INFINITY;
+        let mut argmin: Option<usize> = None;
+        for &f in &live_flows {
+            let t = now + flows[f].remaining / flows[f].rate.max(1e-3);
+            if t < t_flow {
+                t_flow = t;
+                argmin = Some(f);
+            }
+        }
+        let t_event = heap.peek().map(|Reverse((t, _, _))| f64::from_bits(*t));
+        let t_next = t_event.map(|t| t.min(t_flow)).unwrap_or(t_flow);
+        if !t_next.is_finite() {
+            let stuck: Vec<String> = tbs
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| !t.done)
+                .map(|(i, t)| format!("tb{i}(r{})@unit{}", t.rank, t.idx))
+                .take(8)
+                .collect();
+            return Err(Gc3Error::Deadlock(format!(
+                "simulation stalled at t={now:.6}s with no pending events; stuck: {}",
+                stuck.join(", ")
+            )));
+        }
+        let dt = (t_next - now).max(0.0);
+        let flow_event = t_flow <= t_next + 1e-15;
+        let mut completed: Vec<usize> = Vec::new();
+        if dt > 0.0 {
+            for &f in &live_flows {
+                flows[f].remaining -= flows[f].rate * dt;
+                if flows[f].remaining <= 1e-6 || (flow_event && Some(f) == argmin) {
+                    completed.push(f);
+                }
+            }
+        } else if flow_event {
+            completed.extend(argmin);
+            for &f in &live_flows {
+                if flows[f].remaining <= 1e-6 && Some(f) != argmin {
+                    completed.push(f);
+                }
+            }
+        }
+        now = t_next;
+        n_events += 1;
+        if !completed.is_empty() {
+            for f in completed {
+                live_flows.retain(|&x| x != f);
+                let conn = flows[f].conn;
+                let owner = flows[f].owner;
+                ready.push(owner);
+                let alpha = conns[conn].route.alpha;
+                push_event(&mut heap, &mut event_table, now + alpha, Event::Arrival(conn));
+                rates_dirty = true;
+            }
+            continue;
+        }
+        while let Some(Reverse((t, _, eid))) = heap.peek().copied() {
+            if f64::from_bits(t) > now + 1e-12 {
+                break;
+            }
+            heap.pop();
+            match event_table[eid] {
+                Event::Resume(t_id) => ready.push(t_id),
+                Event::Arrival(conn) => {
+                    conns[conn].arrivals += 1;
+                    if let Some(r) = conns[conn].recv_waiter.take() {
+                        ready.push(r);
+                    }
+                }
+            }
+        }
+    }
+
+    let mut utilization: Vec<(String, f64)> = res_bytes
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b > 0.0)
+        .map(|(i, &b)| (rtable.names[i].clone(), b / (now.max(1e-12) * rtable.caps[i])))
+        .collect();
+    utilization.sort_by(|a, b| b.1.total_cmp(&a.1));
+    utilization.truncate(8);
+
+    Ok(SimReport {
+        time: now,
+        algbw: size_bytes as f64 / now.max(1e-12),
+        events: n_events,
+        flows: n_flows,
+        utilization,
+    })
+}
+
+/// Two-round progressive filling, from-scratch on every call: a cheap
+/// max-min approximation (see the optimized engine for the incremental
+/// version, which must agree with this one to the last few bits).
+fn recompute_rates(flows: &mut [Flow], live: &[usize], conns: &[Conn], rt: &ResourceTable) {
+    let nres = rt.caps.len();
+    let mut count = vec![0u32; nres];
+    for &f in live {
+        for &r in &conns[flows[f].conn].route.resources {
+            count[r] += 1;
+        }
+    }
+    // Round 1: naive share; freeze cap-limited flows.
+    let mut residual = rt.caps.to_vec();
+    let mut count2 = count.clone();
+    let mut frozen = vec![false; flows.len()];
+    for &f in live {
+        let route = &conns[flows[f].conn].route;
+        let mut share = route.cap;
+        let mut capped = true;
+        for &r in &route.resources {
+            let s = rt.caps[r] / count[r] as f64;
+            if s < share {
+                share = s;
+                capped = false;
+            }
+        }
+        if capped {
+            flows[f].rate = route.cap;
+            frozen[f] = true;
+            for &r in &route.resources {
+                residual[r] -= route.cap;
+                count2[r] -= 1;
+            }
+        }
+    }
+    // Round 2: redistribute slack among unfrozen flows.
+    for &f in live {
+        if frozen[f] {
+            continue;
+        }
+        let route = &conns[flows[f].conn].route;
+        let mut share = route.cap;
+        for &r in &route.resources {
+            if count2[r] > 0 {
+                share = share.min((residual[r] / count2[r] as f64).max(0.0));
+            }
+        }
+        flows[f].rate = share.max(1e3); // never fully starve
+    }
+}

@@ -11,18 +11,35 @@
 //! * host shared-memory links for non-p2p intra-node pairs;
 //! * per-flow caps that are not shared: the sending threadblock's copy
 //!   bandwidth and, across nodes, the single-connection (QP + proxy) limit.
+//!
+//! Routes are **interned**: every `(src, dst)` pair resolves to one
+//! [`RouteId`], and all per-route state (resource list, private cap, hop
+//! latency) lives in flat arrays indexed by it. The engine's hot paths —
+//! rate recomputation, per-resource flow counting, utilization accounting —
+//! therefore touch contiguous memory and never allocate per lookup; a
+//! connection stores a single `usize` instead of an owned resource vector.
 
 use super::Protocol;
 use crate::core::Rank;
 use crate::topology::{LinkType, Topology};
 use std::collections::HashMap;
 
-/// Indexed capacity table + lazily allocated shm links.
+/// Index of an interned route — see [`ResourceTable::route_id`].
+pub type RouteId = usize;
+
+/// Indexed capacity table + lazily allocated shm links + interned routes.
 pub struct ResourceTable {
     pub caps: Vec<f64>,
     /// Human-readable names for profiling / utilization reports.
     pub names: Vec<String>,
     shm: HashMap<(Rank, Rank), usize>,
+    route_ids: HashMap<(Rank, Rank), RouteId>,
+    /// Flat route storage: route `i` crosses
+    /// `route_res[route_start[i]..route_start[i + 1]]`.
+    route_res: Vec<usize>,
+    route_start: Vec<usize>,
+    route_cap: Vec<f64>,
+    route_alpha: Vec<f64>,
     proto: Protocol,
     nranks: usize,
     switches_per_node: usize,
@@ -32,7 +49,9 @@ pub struct ResourceTable {
     nic_in0: usize,
 }
 
-/// A flow's static routing information.
+/// A flow's static routing information, materialized from the interned
+/// tables. Kept for callers that want an owned view (tests, debugging);
+/// the engine works with [`RouteId`] directly.
 #[derive(Clone, Debug)]
 pub struct Route {
     /// Shared resources the flow crosses.
@@ -97,6 +116,11 @@ impl ResourceTable {
             caps,
             names,
             shm: HashMap::new(),
+            route_ids: HashMap::new(),
+            route_res: Vec::new(),
+            route_start: vec![0],
+            route_cap: Vec::new(),
+            route_alpha: Vec::new(),
             proto,
             nranks: n,
             switches_per_node,
@@ -119,24 +143,26 @@ impl ResourceTable {
         id
     }
 
-    /// Build the route for a `src → dst` connection.
-    pub fn route(&mut self, topo: &Topology, src: Rank, dst: Rank) -> Route {
+    /// Intern the route for a `src → dst` connection and return its id.
+    /// Identical pairs share one id (and therefore one resource list).
+    pub fn route_id(&mut self, topo: &Topology, src: Rank, dst: Rank) -> RouteId {
+        if let Some(&id) = self.route_ids.get(&(src, dst)) {
+            return id;
+        }
         let proto = self.proto;
         let tb_cap = topo.tb_bw * proto.tb_eff();
-        match topo.link_type(src, dst) {
-            LinkType::NvLink => Route {
-                resources: vec![src, self.nranks + dst],
-                cap: tb_cap,
-                alpha: proto.nvlink_latency(),
-            },
+        let (resources, cap, alpha): (Vec<usize>, f64, f64) = match topo.link_type(src, dst) {
+            LinkType::NvLink => {
+                (vec![src, self.nranks + dst], tb_cap, proto.nvlink_latency())
+            }
             LinkType::Shm => {
                 let link = self.shm_link(topo, src, dst);
-                Route {
-                    resources: vec![src, link, self.nranks + dst],
-                    cap: tb_cap.min(topo.shm_bw),
+                (
+                    vec![src, link, self.nranks + dst],
+                    tb_cap.min(topo.shm_bw),
                     // Host bounce: two hops worth of latency.
-                    alpha: 2.0 * proto.nvlink_latency(),
-                }
+                    2.0 * proto.nvlink_latency(),
+                )
             }
             LinkType::Ib => {
                 let (sn, dn) = (topo.node_of(src), topo.node_of(dst));
@@ -144,17 +170,54 @@ impl ResourceTable {
                 let d_sw = topo.pcie_switch_of(dst);
                 let s_nic = topo.nic_of(src);
                 let d_nic = topo.nic_of(dst);
-                Route {
-                    resources: vec![
+                (
+                    vec![
                         self.pcie_up0 + sn * self.switches_per_node + s_sw,
                         self.nic_out0 + sn * topo.nics_per_node + s_nic,
                         self.nic_in0 + dn * topo.nics_per_node + d_nic,
                         self.pcie_down0 + dn * self.switches_per_node + d_sw,
                     ],
-                    cap: tb_cap.min(topo.ib_conn_bw * proto.ib_eff()),
-                    alpha: proto.ib_latency(),
-                }
+                    tb_cap.min(topo.ib_conn_bw * proto.ib_eff()),
+                    proto.ib_latency(),
+                )
             }
+        };
+        let id = self.route_cap.len();
+        self.route_res.extend_from_slice(&resources);
+        self.route_start.push(self.route_res.len());
+        self.route_cap.push(cap);
+        self.route_alpha.push(alpha);
+        self.route_ids.insert((src, dst), id);
+        id
+    }
+
+    /// Number of interned routes so far.
+    pub fn num_routes(&self) -> usize {
+        self.route_cap.len()
+    }
+
+    /// Shared resources route `id` crosses.
+    pub fn resources_of(&self, id: RouteId) -> &[usize] {
+        &self.route_res[self.route_start[id]..self.route_start[id + 1]]
+    }
+
+    /// Un-shared per-flow rate cap of route `id`, payload bytes/s.
+    pub fn cap_of(&self, id: RouteId) -> f64 {
+        self.route_cap[id]
+    }
+
+    /// One-way latency of route `id`.
+    pub fn alpha_of(&self, id: RouteId) -> f64 {
+        self.route_alpha[id]
+    }
+
+    /// Build an owned route view for a `src → dst` connection.
+    pub fn route(&mut self, topo: &Topology, src: Rank, dst: Rank) -> Route {
+        let id = self.route_id(topo, src, dst);
+        Route {
+            resources: self.resources_of(id).to_vec(),
+            cap: self.route_cap[id],
+            alpha: self.route_alpha[id],
         }
     }
 }
@@ -212,5 +275,23 @@ mod tests {
         let r2 = rt.route(&topo, 3, 0);
         assert_eq!(rt.caps.len(), before + 1);
         assert_eq!(r.resources[1], r2.resources[1]);
+    }
+
+    #[test]
+    fn routes_are_interned() {
+        let topo = Topology::a100(2);
+        let mut rt = ResourceTable::new(&topo, Protocol::Simple);
+        let a = rt.route_id(&topo, 1, 5);
+        let b = rt.route_id(&topo, 1, 5);
+        assert_eq!(a, b, "same pair, same id");
+        let c = rt.route_id(&topo, 5, 1);
+        assert_ne!(a, c, "routes are directional");
+        assert_eq!(rt.num_routes(), 2);
+        assert_eq!(rt.resources_of(a), &[1, 16 + 5]);
+        // Flat views agree with the owned view.
+        let owned = rt.route(&topo, 1, 5);
+        assert_eq!(owned.resources, rt.resources_of(a));
+        assert_eq!(owned.cap, rt.cap_of(a));
+        assert_eq!(owned.alpha, rt.alpha_of(a));
     }
 }

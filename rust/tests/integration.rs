@@ -10,9 +10,75 @@ use gc3::dsl::collective::CollectiveSpec;
 use gc3::dsl::{Program, SchedHint};
 use gc3::ef::EfProgram;
 use gc3::exec::{verify, NativeReducer};
-use gc3::sim::{simulate, Protocol};
+use gc3::sim::{simulate, simulate_reference, Protocol};
 use gc3::topology::Topology;
 use gc3::util::rng::Rng;
+
+/// Pin the optimized engine against the preserved pre-optimization engine:
+/// completion time and algbw to ≤ 1e-9 relative error, event and flow
+/// counts exactly.
+fn assert_sim_parity(ef: &EfProgram, topo: &Topology, size: u64, label: &str) {
+    let fast = simulate(ef, topo, size).unwrap();
+    let gold = simulate_reference(ef, topo, size).unwrap();
+    let rel = (fast.time - gold.time).abs() / gold.time.max(1e-300);
+    assert!(
+        rel <= 1e-9,
+        "{label} @ {size}B: time {} vs golden {} (rel err {rel:e})",
+        fast.time,
+        gold.time
+    );
+    let rel_bw = (fast.algbw - gold.algbw).abs() / gold.algbw.max(1e-300);
+    assert!(
+        rel_bw <= 1e-9,
+        "{label} @ {size}B: algbw {} vs golden {} (rel err {rel_bw:e})",
+        fast.algbw,
+        gold.algbw
+    );
+    assert_eq!(fast.events, gold.events, "{label} @ {size}B: event count");
+    assert_eq!(fast.flows, gold.flows, "{label} @ {size}B: flow count");
+}
+
+/// Golden parity on the fig8 bench scenario: manual ring AllReduce on 8
+/// ranks, 4 instances, LL128, at a latency-bound and a bandwidth-bound
+/// size (the second crosses the 4 MB staging tile boundary).
+#[test]
+fn golden_parity_ring_allreduce_8() {
+    let topo = Topology::a100_single();
+    let ring = gc3::collectives::allreduce::ring(8, true).unwrap();
+    let opts = CompileOpts::default().with_instances(4).with_protocol(Protocol::LL128);
+    let c = compile(&ring, "gc3_ring", &opts).unwrap();
+    for size in [8 * 1024 * 1024u64, 256 * 1024 * 1024] {
+        assert_sim_parity(&c.ef, &topo, size, "ring_allreduce@8");
+    }
+}
+
+/// Golden parity on the 64-rank Two-Step AllToAll bench scenario — the
+/// case the de-quadratized hot loop targets, at two sizes covering the
+/// 8-slice and 16-slice pipelining regimes.
+#[test]
+fn golden_parity_two_step_alltoall_64() {
+    let topo = Topology::a100(8);
+    let t = gc3::collectives::alltoall::two_step(8, 8).unwrap();
+    let c = compile(&t, "gc3_alltoall", &CompileOpts::default()).unwrap();
+    for size in [256 * 1024u64, 4 * 1024 * 1024] {
+        assert_sim_parity(&c.ef, &topo, size, "two_step_alltoall@64");
+    }
+}
+
+/// Parity sweep across the whole program library (small topology, two
+/// sizes): any engine hot-loop change that shifts semantics anywhere shows
+/// up here, not just on the two pinned scenarios.
+#[test]
+fn golden_parity_library_sweep() {
+    let mut topo = Topology::a100(2);
+    topo.gpus_per_node = 2;
+    for prog in gc3::collectives::library(&topo).unwrap() {
+        let c = compile(&prog.trace, prog.name, &CompileOpts::default()).unwrap();
+        for size in [64 * 1024u64, 16 * 1024 * 1024] {
+            assert_sim_parity(&c.ef, &topo, size, prog.name);
+        }
+    }
+}
 
 /// Library programs survive EF JSON round-trips and still verify + price.
 #[test]
