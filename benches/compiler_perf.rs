@@ -4,9 +4,9 @@
 //! numbers tracked in EXPERIMENTS.md.
 //!
 //! Emits `BENCH_compiler_perf.json` (per-scenario compile ms, simulate ms,
-//! events/s, plus the optimized-vs-reference head-to-head) so the perf
-//! trajectory is machine-checkable across PRs; CI archives it as an
-//! artifact.
+//! events/s, the optimized-vs-reference head-to-head, and the autotuner's
+//! tuned-vs-default rows — EXPERIMENTS.md §TUNE) plus the tuned table
+//! itself as `TUNED_bench_allreduce.json`; CI archives both as artifacts.
 //!
 //! Run: `cargo bench --bench compiler_perf`
 //! Skip the slow reference-engine head-to-head: set `GC3_BENCH_FAST=1`
@@ -27,10 +27,33 @@ fn main() {
     }
     let (cases, h2h) = perf::run_suite(head_to_head).expect("perf suite");
     print!("{}", perf::render(&cases, h2h.as_ref()));
-    let json = perf::to_json(&cases, h2h.as_ref());
+    println!("== Tuned-vs-default (simulator-driven autotuner, allreduce on 8xA100)");
+    let (tuned_table, tuned_rows) = perf::tuned_vs_default().expect("tuned-vs-default");
+    print!("{}", perf::render_tuned(&tuned_rows));
+    let json = perf::to_json(&cases, h2h.as_ref(), &tuned_rows);
     let path = "BENCH_compiler_perf.json";
     std::fs::write(path, json.to_string()).expect("write BENCH_compiler_perf.json");
     println!("wrote {path}");
+    let tuned_path = "TUNED_bench_allreduce.json";
+    std::fs::write(tuned_path, tuned_table.to_json_string()).expect("write tuned table");
+    println!("wrote {tuned_path}");
+    // Gate: the search space contains the default configuration, so tuned
+    // plans can never lose to default-`CompileOpts` plans — and the LL-band
+    // sizes must show a strict win (argmin actually moved off the default).
+    for r in &tuned_rows {
+        assert!(
+            r.tuned_s <= r.default_s * 1.0001,
+            "tuned plan loses to default at {} bytes: {}s vs {}s",
+            r.size,
+            r.tuned_s,
+            r.default_s
+        );
+    }
+    assert!(
+        tuned_rows.iter().any(|r| r.tuned_s < r.default_s * 0.999),
+        "tuned plans never beat the default anywhere: {tuned_rows:?}"
+    );
+    println!("tuned-vs-default gate passed: never worse, strictly better somewhere");
     if let Some(h) = &h2h {
         // Hard gate: a speedup ratio is machine-independent, so enforce it
         // here where CI runs the bench (EXPERIMENTS.md §Perf).

@@ -9,7 +9,10 @@ use gc3::util::cli::Args;
 use std::time::Instant;
 
 fn main() {
-    let args = Args::parse_from(std::env::args().skip(1), &["quick"]);
+    let args = Args::parse_from(std::env::args().skip(1), &["quick"]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
     let node_counts: Vec<usize> = match args.opt("nodes") {
         Some(n) => vec![n.parse().expect("--nodes N")],
         // 32 nodes = 256 simulated ranks; --quick stops at 8.

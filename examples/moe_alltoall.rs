@@ -16,7 +16,10 @@ use gc3::topology::Topology;
 use gc3::util::cli::Args;
 
 fn main() -> gc3::core::Result<()> {
-    let args = Args::parse_from(std::env::args().skip(1), &[]);
+    let args = Args::parse_from(std::env::args().skip(1), &[]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
     let nodes = args.usize("nodes", 8);
     let topo = Topology::a100(nodes);
 

@@ -14,7 +14,11 @@ use gc3::train::{train, TrainOpts};
 use gc3::util::cli::Args;
 
 fn main() {
-    let args = Args::parse_from(std::env::args().skip(1), &["pjrt-reduce", "quick"]);
+    let args = Args::parse_from(std::env::args().skip(1), &["pjrt-reduce", "quick"])
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        });
     let opts = TrainOpts {
         ranks: args.usize("ranks", 8),
         steps: args.usize("steps", if args.flag("quick") { 30 } else { 300 }),

@@ -1,0 +1,53 @@
+//! Autotuner end-to-end: search the compile space on the simulator, save
+//! the tuned table, load it into a coordinator registry, and dispatch.
+//!
+//! Run: `cargo run --release --example tune_allreduce -- [--gpus 8] [--quick]`
+
+use gc3::coordinator::Registry;
+use gc3::sim::simulate;
+use gc3::topology::Topology;
+use gc3::tune::{tune, Collective, TuneOpts, TunedTable};
+use gc3::util::cli::Args;
+
+fn main() -> gc3::core::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1), &["quick"]).unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    });
+    let mut topo = Topology::a100_single();
+    topo.gpus_per_node = args.usize("gpus", 8);
+
+    let sizes: Vec<u64> = if args.flag("quick") {
+        vec![64 * 1024, 4 * 1024 * 1024]
+    } else {
+        vec![16 * 1024, 256 * 1024, 4 * 1024 * 1024, 64 * 1024 * 1024, 512 * 1024 * 1024]
+    };
+    let out = tune(&topo, Collective::AllReduce, &sizes, &TuneOpts::default())?;
+    print!("{}", out.table.render());
+    println!(
+        "({} candidates, {} feasible, {} simulations)\n",
+        out.candidates, out.feasible, out.simulations
+    );
+
+    // Round-trip the table through JSON — what `gc3 tune --out` persists
+    // and a later process loads.
+    let reloaded = TunedTable::from_json_str(&out.table.to_json_string())?;
+    assert_eq!(reloaded, out.table);
+
+    // Serve it: the registry answers every call from the tuned table.
+    let mut reg = Registry::new(topo.clone());
+    reg.load_tuned(reloaded)?;
+    for &size in &sizes {
+        let (ef, backend) = reg.allreduce(size)?;
+        let t = simulate(&ef, &topo, size)?.time;
+        println!(
+            "allreduce {:>8}: {:?} -> {} ({}) {:.1} us",
+            gc3::util::human_bytes(size),
+            backend,
+            ef.name,
+            ef.protocol,
+            t * 1e6
+        );
+    }
+    Ok(())
+}

@@ -16,6 +16,7 @@ use crate::core::Result;
 use crate::dsl::Trace;
 use crate::sim::{simulate, simulate_reference, Protocol};
 use crate::topology::Topology;
+use crate::tune::{tune, Collective, TuneOpts, TunedTable};
 use crate::util::json::Json;
 use std::time::Instant;
 
@@ -43,6 +44,50 @@ pub struct HeadToHead {
     pub events_per_sec_new: f64,
     pub events_per_sec_reference: f64,
     pub speedup: f64,
+}
+
+/// One tuned-vs-default measurement point (EXPERIMENTS.md §TUNE).
+#[derive(Clone, Debug)]
+pub struct TunedRow {
+    pub size: u64,
+    /// Simulated completion time of the autotuned plan, seconds.
+    pub tuned_s: f64,
+    /// Simulated completion time of the default-`CompileOpts` plan.
+    pub default_s: f64,
+    /// `default_s / tuned_s` — ≥ 1.0 whenever the search space contains
+    /// the default configuration (it does).
+    pub speedup: f64,
+    pub choice: String,
+}
+
+/// The tuned-vs-default scenario: autotune AllReduce on the default
+/// topology across a size sweep, then price the plan a user gets *without*
+/// tuning — the library ring compiled under plain `CompileOpts::default()`
+/// — at the same sizes. The candidate grid contains that exact default
+/// configuration, so tuned can never lose; the bench gate additionally
+/// requires a strict win at ≥ 1 size (the LL/LL128 latency range).
+pub fn tuned_vs_default() -> Result<(TunedTable, Vec<TunedRow>)> {
+    let topo = Topology::a100_single();
+    let sizes = super::size_sweep(64 * 1024, 256 * 1024 * 1024);
+    let out = tune(&topo, Collective::AllReduce, &sizes, &TuneOpts::default())?;
+    let default_ef = compile(
+        &allreduce::ring(topo.num_ranks(), true)?,
+        "default_allreduce",
+        &CompileOpts::for_topo(&topo),
+    )?
+    .ef;
+    let mut rows = Vec::with_capacity(out.table.entries.len());
+    for entry in &out.table.entries {
+        let default_s = simulate(&default_ef, &topo, entry.size)?.time;
+        rows.push(TunedRow {
+            size: entry.size,
+            tuned_s: entry.time,
+            default_s,
+            speedup: default_s / entry.time.max(1e-300),
+            choice: entry.choice.key(),
+        });
+    }
+    Ok((out.table, rows))
 }
 
 /// Best-of-`n` wall-clock seconds (one warmup call first).
@@ -165,10 +210,10 @@ pub fn run_suite(head_to_head: bool) -> Result<(Vec<PerfCase>, Option<HeadToHead
 }
 
 /// Serialize results as the `BENCH_compiler_perf.json` payload.
-pub fn to_json(cases: &[PerfCase], h2h: Option<&HeadToHead>) -> Json {
+pub fn to_json(cases: &[PerfCase], h2h: Option<&HeadToHead>, tuned: &[TunedRow]) -> Json {
     let mut root = Json::obj();
     root.set("bench", Json::Str("compiler_perf".into()));
-    root.set("schema_version", Json::Num(1.0));
+    root.set("schema_version", Json::Num(2.0));
     let rows: Vec<Json> = cases
         .iter()
         .map(|c| {
@@ -193,7 +238,41 @@ pub fn to_json(cases: &[PerfCase], h2h: Option<&HeadToHead>) -> Json {
         o.set("speedup", Json::Num(h.speedup));
         root.set("head_to_head", o);
     }
+    if !tuned.is_empty() {
+        let rows: Vec<Json> = tuned
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("size_bytes", Json::Num(r.size as f64));
+                o.set("tuned_s", Json::Num(r.tuned_s));
+                o.set("default_s", Json::Num(r.default_s));
+                o.set("speedup", Json::Num(r.speedup));
+                o.set("choice", Json::Str(r.choice.clone()));
+                o
+            })
+            .collect();
+        root.set("tuned_vs_default", Json::Arr(rows));
+    }
     root
+}
+
+/// Human-readable rendering of the tuned-vs-default rows.
+pub fn render_tuned(rows: &[TunedRow]) -> String {
+    let mut out = format!(
+        "{:<12} {:>28} {:>12} {:>12} {:>9}\n",
+        "size", "tuned choice", "tuned us", "default us", "speedup"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:>28} {:>12.1} {:>12.1} {:>8.2}x\n",
+            crate::util::human_bytes(r.size),
+            r.choice,
+            r.tuned_s * 1e6,
+            r.default_s * 1e6,
+            r.speedup
+        ));
+    }
+    out
 }
 
 /// Human-readable rendering of the same results.
@@ -241,15 +320,33 @@ mod tests {
             events_per_sec_reference: 100.0,
             speedup: 3.0,
         };
-        let j = to_json(&cases, Some(&h));
+        let tuned = vec![TunedRow {
+            size: 65536,
+            tuned_s: 1.0e-5,
+            default_s: 3.0e-5,
+            speedup: 3.0,
+            choice: "ring x4 ll".into(),
+        }];
+        let j = to_json(&cases, Some(&h), &tuned);
         let s = j.to_string();
-        for field in
-            ["compile_ms", "simulate_ms", "events_per_sec", "head_to_head", "speedup", "cases"]
-        {
+        for field in [
+            "compile_ms",
+            "simulate_ms",
+            "events_per_sec",
+            "head_to_head",
+            "speedup",
+            "cases",
+            "tuned_vs_default",
+            "choice",
+        ] {
             assert!(s.contains(field), "missing {field} in {s}");
         }
         let arr = j.get("cases").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("events").and_then(|e| e.as_usize()), Some(42));
+        let tv = j.get("tuned_vs_default").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(tv[0].get("size_bytes").and_then(|e| e.as_usize()), Some(65536));
+        // No tuned rows → no section (old consumers keep working).
+        assert!(to_json(&cases, None, &[]).get("tuned_vs_default").is_none());
     }
 }

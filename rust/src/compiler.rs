@@ -39,6 +39,12 @@ impl Default for CompileOpts {
 }
 
 impl CompileOpts {
+    /// Defaults with the topology's SM cap — the construction every
+    /// topology-aware caller (CLI, registry, benches, tuner) needs.
+    pub fn for_topo(topo: &crate::topology::Topology) -> Self {
+        CompileOpts { sched: SchedOpts { sm_count: topo.sm_count }, ..Default::default() }
+    }
+
     pub fn with_protocol(mut self, p: Protocol) -> Self {
         self.protocol = p;
         self

@@ -8,6 +8,11 @@
 //! size-class), falling back to the NCCL baseline schedule when no custom
 //! program is registered or when the custom program's tuned size window
 //! doesn't cover the request.
+//!
+//! When an autotuner table ([`crate::tune::TunedTable`]) is loaded via
+//! [`Registry::load_tuned`], its per-size-bucket plan choice supersedes
+//! the static heuristics for that collective; without a table the NCCL
+//! tuner-derived path above is the fallback.
 
 pub mod metrics;
 
@@ -18,7 +23,7 @@ use crate::compiler::{compile, CompileOpts};
 use crate::core::{Gc3Error, Result};
 use crate::ef::EfProgram;
 use crate::nccl;
-use crate::sched::SchedOpts;
+use crate::tune::{Collective, TunedTable};
 use crate::sim::Protocol;
 use crate::topology::Topology;
 use std::collections::HashMap;
@@ -30,12 +35,17 @@ pub enum Backend {
     Gc3,
     /// NCCL fallback (baseline schedule).
     NcclFallback,
+    /// A plan chosen by a loaded autotuner table ([`crate::tune`]).
+    Tuned,
 }
 
 /// Keyed cache of compiled programs.
 pub struct Registry {
     topo: Topology,
     cache: HashMap<String, EfProgram>,
+    /// Loaded autotuner tables, keyed by collective name. When a table is
+    /// present its per-size-bucket choice wins over the static heuristics.
+    tuned: HashMap<String, TunedTable>,
     /// GC3 Ring AllReduce is tuned for this size window (§6.2: "optimized
     /// … for these buffer sizes", 128 KB – 32 MB); outside it the registry
     /// falls back to NCCL, which wins at >32 MB.
@@ -47,6 +57,7 @@ impl Registry {
         Registry {
             topo,
             cache: HashMap::new(),
+            tuned: HashMap::new(),
             allreduce_window: (128 * 1024, 32 * 1024 * 1024),
         }
     }
@@ -56,17 +67,82 @@ impl Registry {
     }
 
     fn gc3_opts(&self, instances: usize, proto: Protocol) -> CompileOpts {
-        CompileOpts {
-            instances,
-            protocol: proto,
-            fuse: true,
-            sched: SchedOpts { sm_count: self.topo.sm_count },
-        }
+        CompileOpts { instances, protocol: proto, ..CompileOpts::for_topo(&self.topo) }
     }
 
-    /// AllReduce dispatch: GC3's tuned ring inside the window, NCCL
+    /// Load an autotuner table; subsequent dispatches for its collective
+    /// answer from the table instead of the static heuristics — via
+    /// [`Registry::allreduce`] / [`Registry::alltoall_sized`] for the
+    /// NCCL-compatible entry points, and [`Registry::tuned_collective`]
+    /// for the rest (allgather, reduce_scatter). The table must have been
+    /// tuned for this registry's topology (same name and rank count —
+    /// plans don't transfer across link fabrics), and only sizes its grid
+    /// covers ([`TunedTable::covers`]) are served from it.
+    pub fn load_tuned(&mut self, table: TunedTable) -> Result<()> {
+        if table.num_ranks != self.topo.num_ranks() {
+            return Err(Gc3Error::Invalid(format!(
+                "tuned table for {} ranks ({}) loaded into a {}-rank registry",
+                table.num_ranks,
+                table.topology,
+                self.topo.num_ranks()
+            )));
+        }
+        if table.topology != self.topo.name {
+            return Err(Gc3Error::Invalid(format!(
+                "tuned table for topology '{}' loaded into a '{}' registry — plans tuned \
+                 on one link fabric don't transfer",
+                table.topology, self.topo.name
+            )));
+        }
+        self.tuned.insert(table.collective.clone(), table);
+        Ok(())
+    }
+
+    /// The loaded table for `collective`, if any.
+    pub fn tuned_table(&self, collective: &str) -> Option<&TunedTable> {
+        self.tuned.get(collective)
+    }
+
+    /// Serve `collective` at `size` from a loaded tuned table. `None` when
+    /// no table is loaded or the table's measured grid doesn't cover the
+    /// size (callers fall back to the NCCL-style heuristics — a table
+    /// tuned at 64 KB–4 MB must not extrapolate its edge plan to 1 GB) —
+    /// `Some(Err)` only for real compile failures.
+    fn tuned_ef(
+        &mut self,
+        collective: Collective,
+        size: u64,
+    ) -> Option<Result<(EfProgram, Backend)>> {
+        let choice = match self.tuned.get(collective.name()) {
+            Some(t) if t.covers(size) => match t.lookup(size) {
+                Some(entry) => entry.choice.clone(),
+                None => return None,
+            },
+            _ => return None,
+        };
+        let key = format!("tuned_{}_{}", collective.name(), choice.key());
+        if !self.cache.contains_key(&key) {
+            let built = crate::tune::variant_trace(&self.topo, collective, &choice.variant)
+                .and_then(|trace| {
+                    compile(&trace, &key, &self.gc3_opts(choice.instances, choice.protocol))
+                });
+            match built {
+                Ok(c) => {
+                    self.cache.insert(key.clone(), c.ef);
+                }
+                Err(e) => return Some(Err(e)),
+            }
+        }
+        Some(Ok((self.cache[&key].clone(), Backend::Tuned)))
+    }
+
+    /// AllReduce dispatch: a loaded tuned table wins; otherwise GC3's
+    /// static ring inside the window and the NCCL-heuristic fallback
     /// outside it.
     pub fn allreduce(&mut self, size: u64) -> Result<(EfProgram, Backend)> {
+        if let Some(served) = self.tuned_ef(Collective::AllReduce, size) {
+            return served;
+        }
         let (lo, hi) = self.allreduce_window;
         if size < lo || size > hi {
             let key = format!("nccl_ar_{size}");
@@ -91,6 +167,27 @@ impl Registry {
             self.cache.insert(key.clone(), ef);
         }
         Ok((self.cache[&key].clone(), Backend::Gc3))
+    }
+
+    /// Size-aware AllToAll dispatch: a loaded tuned table wins for sizes
+    /// it covers; otherwise the static topology rule of
+    /// [`Registry::alltoall`].
+    pub fn alltoall_sized(&mut self, size: u64) -> Result<(EfProgram, Backend)> {
+        if let Some(served) = self.tuned_ef(Collective::AllToAll, size) {
+            return served;
+        }
+        self.alltoall()
+    }
+
+    /// Serve any loaded tuned table by collective kind and size — the
+    /// lookup path for collectives without an NCCL-compatible static entry
+    /// point (allgather, reduce_scatter). `None` = no covering table.
+    pub fn tuned_collective(
+        &mut self,
+        collective: Collective,
+        size: u64,
+    ) -> Option<Result<(EfProgram, Backend)>> {
+        self.tuned_ef(collective, size)
     }
 
     /// AllToAll dispatch: the two-step program across nodes; single-node
@@ -182,6 +279,102 @@ mod tests {
     fn unknown_custom_collective_errors() {
         let mut reg = Registry::new(topo());
         assert!(reg.custom("frobnicate").is_err());
+    }
+
+    #[test]
+    fn tuned_table_wins_over_heuristics() {
+        use crate::tune::{tune, Collective, TuneOpts};
+        let topo = topo(); // 4 ranks
+        let sizes = [64 * 1024u64, 16 * 1024 * 1024];
+        let out = tune(&topo, Collective::AllReduce, &sizes, &TuneOpts::default()).unwrap();
+        let table = out.table.clone();
+        let mut reg = Registry::new(topo);
+        // No table loaded: heuristic dispatch (64 KB is below the window).
+        let (_, b) = reg.allreduce(64 * 1024).unwrap();
+        assert_eq!(b, Backend::NcclFallback);
+        reg.load_tuned(table.clone()).unwrap();
+        for &size in &sizes {
+            let (ef, b) = reg.allreduce(size).unwrap();
+            assert_eq!(b, Backend::Tuned);
+            let expect = table.lookup(size).unwrap();
+            assert_eq!(ef.protocol, expect.choice.protocol, "at {size}");
+            ef.validate().unwrap();
+        }
+        // Repeat requests hit the EF cache.
+        let n = reg.cached();
+        reg.allreduce(64 * 1024).unwrap();
+        assert_eq!(reg.cached(), n);
+        assert!(reg.tuned_table("allreduce").is_some());
+        assert!(reg.tuned_table("alltoall").is_none());
+        // Sizes far outside the measured grid (64 KB–16 MB here) must NOT
+        // extrapolate the edge plan — heuristics win again at 1 GB.
+        let (_, b) = reg.allreduce(1 << 30).unwrap();
+        assert_eq!(b, Backend::NcclFallback, "out-of-span size extrapolated");
+    }
+
+    #[test]
+    fn tuned_tables_serve_other_collectives() {
+        use crate::tune::{tune, Collective, TuneOpts};
+        let topo = topo(); // 4 ranks, single node
+        let sizes = [256 * 1024u64, 4 * 1024 * 1024];
+        let mut reg = Registry::new(topo.clone());
+        // Without tables: static paths.
+        let (_, b) = reg.alltoall_sized(1024 * 1024).unwrap();
+        assert_eq!(b, Backend::NcclFallback, "single-node alltoall heuristic");
+        assert!(reg.tuned_collective(Collective::AllGather, 1024 * 1024).is_none());
+        // Load alltoall + allgather tables; both now serve tuned plans.
+        let a2a = tune(&topo, Collective::AllToAll, &sizes, &TuneOpts::default()).unwrap();
+        let ag = tune(&topo, Collective::AllGather, &sizes, &TuneOpts::default()).unwrap();
+        reg.load_tuned(a2a.table).unwrap();
+        reg.load_tuned(ag.table).unwrap();
+        let (ef, b) = reg.alltoall_sized(1024 * 1024).unwrap();
+        assert_eq!(b, Backend::Tuned);
+        ef.validate().unwrap();
+        let (ef, b) = reg.tuned_collective(Collective::AllGather, 1024 * 1024).unwrap().unwrap();
+        assert_eq!(b, Backend::Tuned);
+        ef.validate().unwrap();
+    }
+
+    #[test]
+    fn tuned_table_rank_mismatch_rejected() {
+        use crate::tune::TunedTable;
+        let mut reg = Registry::new(topo()); // 4 ranks
+        let table = TunedTable {
+            collective: "allreduce".into(),
+            topology: "a100x1".into(),
+            num_ranks: 8,
+            entries: Vec::new(),
+        };
+        assert!(reg.load_tuned(table).is_err());
+    }
+
+    #[test]
+    fn tuned_table_topology_mismatch_rejected() {
+        use crate::tune::TunedTable;
+        let mut reg = Registry::new(topo()); // a100x1, 4 ranks
+        let table = TunedTable {
+            collective: "allreduce".into(),
+            topology: "asymx1".into(), // right rank count, wrong fabric
+            num_ranks: 4,
+            entries: Vec::new(),
+        };
+        assert!(reg.load_tuned(table).is_err());
+    }
+
+    #[test]
+    fn empty_tuned_table_falls_back() {
+        use crate::tune::TunedTable;
+        let mut reg = Registry::new(topo());
+        reg.load_tuned(TunedTable {
+            collective: "allreduce".into(),
+            topology: "a100x1".into(),
+            num_ranks: 4,
+            entries: Vec::new(),
+        })
+        .unwrap();
+        // Empty table has no buckets: dispatch falls through to heuristics.
+        let (_, b) = reg.allreduce(64 * 1024).unwrap();
+        assert_eq!(b, Backend::NcclFallback);
     }
 
     #[test]

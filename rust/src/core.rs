@@ -120,35 +120,61 @@ impl fmt::Display for SlotRange {
 }
 
 /// Errors produced by the GC3 compiler pipeline.
-#[derive(thiserror::Error, Debug)]
+///
+/// `Display` and `std::error::Error` are implemented by hand: the vendored
+/// crate set is empty by design (no `thiserror`), like the hand-rolled
+/// JSON/rng/CLI replacements in [`crate::util`].
+#[derive(Debug)]
 pub enum Gc3Error {
     /// Program reads a buffer slot that no chunk was ever assigned to (§3.2).
-    #[error("invalid GC3 program: read of uninitialized slot {0}")]
     UninitializedRead(Slot),
     /// Program uses a chunk reference whose slot has been overwritten (§3.2).
-    #[error("invalid GC3 program: chunk at {0} was overwritten (stale reference, version {expected} != current {found})", expected = .1, found = .2)]
     StaleChunk(Slot, u64, u64),
     /// reduce() operands of different sizes (§3.2 "need to be the same size").
-    #[error("invalid GC3 program: reduce operands {0} and {1} differ in size")]
     SizeMismatch(SlotRange, SlotRange),
-    #[error("invalid GC3 program: {0}")]
     Invalid(String),
     /// Postcondition of the declared collective does not hold.
-    #[error("collective postcondition violated at {slot}: expected {expected}, got {found}")]
     Postcondition { slot: Slot, expected: String, found: String },
     /// Threadblock connection invariant (§4.1) violated.
-    #[error("scheduling error: {0}")]
     Sched(String),
     /// More threadblocks than streaming multiprocessors (§4.4).
-    #[error("GPU {rank} needs {tbs} threadblocks but the GPU has only {sms} SMs")]
     TooManyThreadblocks { rank: Rank, tbs: usize, sms: usize },
-    #[error("GC3-EF error: {0}")]
     Ef(String),
-    #[error("execution error: {0}")]
     Exec(String),
-    #[error("deadlock detected: {0}")]
     Deadlock(String),
 }
+
+impl fmt::Display for Gc3Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Gc3Error::UninitializedRead(s) => {
+                write!(f, "invalid GC3 program: read of uninitialized slot {s}")
+            }
+            Gc3Error::StaleChunk(s, expected, found) => write!(
+                f,
+                "invalid GC3 program: chunk at {s} was overwritten (stale reference, \
+                 version {expected} != current {found})"
+            ),
+            Gc3Error::SizeMismatch(a, b) => {
+                write!(f, "invalid GC3 program: reduce operands {a} and {b} differ in size")
+            }
+            Gc3Error::Invalid(m) => write!(f, "invalid GC3 program: {m}"),
+            Gc3Error::Postcondition { slot, expected, found } => write!(
+                f,
+                "collective postcondition violated at {slot}: expected {expected}, got {found}"
+            ),
+            Gc3Error::Sched(m) => write!(f, "scheduling error: {m}"),
+            Gc3Error::TooManyThreadblocks { rank, tbs, sms } => {
+                write!(f, "GPU {rank} needs {tbs} threadblocks but the GPU has only {sms} SMs")
+            }
+            Gc3Error::Ef(m) => write!(f, "GC3-EF error: {m}"),
+            Gc3Error::Exec(m) => write!(f, "execution error: {m}"),
+            Gc3Error::Deadlock(m) => write!(f, "deadlock detected: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Gc3Error {}
 
 pub type Result<T> = std::result::Result<T, Gc3Error>;
 
@@ -192,5 +218,24 @@ mod tests {
         assert_eq!(format!("{s}"), "r3:out[7]");
         let r = SlotRange::new(1, BufferId::Input, 2, 3);
         assert_eq!(format!("{r}"), "r1:in[2..5]");
+    }
+
+    #[test]
+    fn error_messages() {
+        let s = Slot { rank: 0, buffer: BufferId::Input, index: 1 };
+        assert_eq!(
+            Gc3Error::UninitializedRead(s).to_string(),
+            "invalid GC3 program: read of uninitialized slot r0:in[1]"
+        );
+        assert_eq!(
+            Gc3Error::StaleChunk(s, 2, 5).to_string(),
+            "invalid GC3 program: chunk at r0:in[1] was overwritten (stale reference, \
+             version 2 != current 5)"
+        );
+        let e = Gc3Error::TooManyThreadblocks { rank: 3, tbs: 130, sms: 108 };
+        assert!(e.to_string().contains("threadblocks"));
+        assert!(Gc3Error::Deadlock("x".into()).to_string().contains("deadlock"));
+        // Boxing as a std error object works (no external error crate).
+        let _: Box<dyn std::error::Error> = Box::new(Gc3Error::Ef("y".into()));
     }
 }

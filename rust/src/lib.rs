@@ -35,6 +35,9 @@
 //! * [`nccl`] — the baseline: NCCL-style ring/tree AllReduce schedules, the
 //!   size-based (algorithm, protocol, nchannels) tuner, p2p AllToAll and
 //!   p2p send, all emitted as GC3-EF and run on the same substrates.
+//! * [`tune`] — the simulator-driven autotuner: searches the
+//!   variant × instances × protocol grid with [`sim`] as the cost oracle
+//!   and emits serializable [`tune::TunedTable`]s the coordinator serves.
 //! * [`collectives`] — the GC3 program library: Two-Step AllToAll (§2),
 //!   Ring AllReduce (§6.2), Hierarchical AllReduce (§6.3), AllToNext
 //!   (§6.4), plus AllGather / ReduceScatter / Broadcast.
@@ -58,6 +61,7 @@ pub mod topology;
 pub mod sim;
 pub mod exec;
 pub mod nccl;
+pub mod tune;
 pub mod collectives;
 pub mod runtime;
 pub mod coordinator;

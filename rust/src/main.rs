@@ -8,6 +8,7 @@
 //! gc3 simulate  <program> --size S [--nodes N]  price a schedule
 //! gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]
 //! gc3 figures   [--fig 7|8|9|11|loc|abl]        regenerate §6 figures
+//! gc3 tune      --collective C [--sizes ...]    autotune + emit a TunedTable
 //! ```
 
 use gc3::collectives;
@@ -20,15 +21,17 @@ use gc3::sched::SchedOpts;
 use gc3::sim::{simulate, Protocol};
 use gc3::topology::Topology;
 use gc3::train::{train, TrainOpts};
+use gc3::tune;
 use gc3::util::cli::Args;
 use gc3::{bench, util};
 
 fn topo_from(args: &Args) -> Topology {
     let nodes = args.usize("nodes", 1);
-    let mut t = if args.str_or("topo", "a100") == "ndv2" {
-        Topology::ndv2(nodes)
-    } else {
-        Topology::a100(nodes)
+    let mut t = match args.str_or("topo", "a100") {
+        "ndv2" => Topology::ndv2(nodes),
+        "ndv4" => Topology::ndv4(nodes),
+        "asym" => Topology::asym(nodes),
+        _ => Topology::a100(nodes),
     };
     t.gpus_per_node = args.usize("gpus", t.gpus_per_node);
     t
@@ -223,6 +226,52 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "tune" => {
+            let topo = topo_from(args);
+            let coll_name = args.str_or("collective", "allreduce");
+            let coll = tune::Collective::parse(coll_name).ok_or_else(|| {
+                gc3::core::Gc3Error::Invalid(format!(
+                    "unknown collective '{coll_name}' \
+                     (allreduce|allgather|reduce_scatter|alltoall)"
+                ))
+            })?;
+            let sizes: Vec<u64> = match args.opt("sizes") {
+                Some(list) => {
+                    let mut v = Vec::new();
+                    for part in list.split(',') {
+                        v.push(util::parse_bytes(part).ok_or_else(|| {
+                            gc3::core::Gc3Error::Invalid(format!("bad size '{part}' in --sizes"))
+                        })?);
+                    }
+                    v
+                }
+                None => bench::size_sweep(4 * 1024, 1 << 30),
+            };
+            let t0 = std::time::Instant::now();
+            let out = tune::tune(&topo, coll, &sizes, &tune::TuneOpts::default())?;
+            print!("{}", out.table.render());
+            println!(
+                "searched {} candidates ({} feasible, {} skipped, {} memo hits), \
+                 {} simulations in {:.1}s",
+                out.candidates,
+                out.feasible,
+                out.skipped.len(),
+                out.cache_hits,
+                out.simulations,
+                t0.elapsed().as_secs_f64()
+            );
+            if args.flag("v") {
+                for (key, err) in &out.skipped {
+                    println!("  skipped {key}: {err}");
+                }
+            }
+            let default_path = format!("TUNED_{}_{}.json", coll.name(), topo.name);
+            let path = args.str_or("out", &default_path);
+            std::fs::write(path, out.table.to_json_string())
+                .map_err(|e| gc3::core::Gc3Error::Ef(e.to_string()))?;
+            println!("wrote {path}");
+            Ok(())
+        }
         "registry" => {
             // Demo of the NCCL-fallback dispatch.
             let mut reg = Registry::new(topo_from(args));
@@ -256,4 +305,9 @@ usage:
   gc3 simulate  <program> --size 2MB [--nodes N] [--gpus G] [--topo a100|ndv2]
   gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]   (needs `make artifacts`)
   gc3 figures   [--fig 7|8|9|11|abl|loc]
+  gc3 tune      [--collective allreduce|allgather|reduce_scatter|alltoall]
+                [--nodes N] [--gpus G] [--topo a100|ndv2|ndv4|asym]
+                [--sizes 64KB,4MB,...] [--out TUNED.json] [--v]
+                searches variant x instances x protocol on the simulator and
+                writes the best-plan-per-size TunedTable as JSON
   gc3 registry  [--nodes N]";

@@ -110,6 +110,17 @@ impl Protocol {
     pub fn all() -> [Protocol; 3] {
         [Protocol::Simple, Protocol::LL, Protocol::LL128]
     }
+
+    /// Position in NCCL's size ladder (LL → LL128 → Simple). The autotuner
+    /// tests assert chosen protocols are monotone in this rank as buffer
+    /// size grows — the shape NCCL's static tuner hard-codes.
+    pub fn ladder_rank(&self) -> usize {
+        match self {
+            Protocol::LL => 0,
+            Protocol::LL128 => 1,
+            Protocol::Simple => 2,
+        }
+    }
 }
 
 impl std::fmt::Display for Protocol {
@@ -129,6 +140,12 @@ mod tests {
         }
         assert_eq!(Protocol::parse("LL128"), Some(Protocol::LL128));
         assert_eq!(Protocol::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ladder_rank_orders_protocols() {
+        assert!(Protocol::LL.ladder_rank() < Protocol::LL128.ladder_rank());
+        assert!(Protocol::LL128.ladder_rank() < Protocol::Simple.ladder_rank());
     }
 
     #[test]

@@ -103,6 +103,54 @@ impl Topology {
         Topology::a100(1)
     }
 
+    /// Azure NDv4-style cluster: 8×A100 per node behind NVSwitch, one HDR
+    /// 200 Gb/s NIC *per GPU* on PCIe Gen4 switches (2 GPUs + 2 NICs each).
+    /// Similar skeleton to [`Topology::a100`] but with Gen4 switch headroom
+    /// and slightly faster host paths — the 4-node instance of this preset
+    /// is an autotuner scenario (`gc3 tune --topo ndv4 --nodes 4`).
+    pub fn ndv4(nodes: usize) -> Topology {
+        Topology {
+            name: format!("ndv4x{nodes}"),
+            nodes,
+            gpus_per_node: 8,
+            sm_count: 108,
+            has_nvswitch: true,
+            nvlink_gpu_bw: 300.0e9,       // NVLink3, 12 links per GPU
+            shm_bw: 12.0e9,
+            ib_nic_bw: 25.0e9,            // HDR 200 Gb/s per GPU
+            nics_per_node: 8,
+            gpus_per_pcie_switch: 2,
+            pcie_switch_bw: 64.0e9,       // PCIe Gen4 switch, per direction
+            tb_bw: 24.0e9,
+            ib_conn_bw: 7.0e9,
+        }
+    }
+
+    /// Asymmetric mixed-bandwidth topology: no NVSwitch, so ring neighbors
+    /// get direct NVLinks while every other intra-node pair bounces through
+    /// slow host shared memory, and a node's handful of mid-rate NICs is
+    /// shared unevenly (4 GPUs per PCIe switch). Every link class in the
+    /// inventory runs at a different rate — the stress case the autotuner's
+    /// scenario grid uses to check tuned plans generalize beyond
+    /// full-bandwidth symmetric fabrics.
+    pub fn asym(nodes: usize) -> Topology {
+        Topology {
+            name: format!("asymx{nodes}"),
+            nodes,
+            gpus_per_node: 8,
+            sm_count: 108,
+            has_nvswitch: false,
+            nvlink_gpu_bw: 200.0e9,
+            shm_bw: 6.0e9,
+            ib_nic_bw: 10.0e9,
+            nics_per_node: 2,
+            gpus_per_pcie_switch: 4,
+            pcie_switch_bw: 20.0e9,
+            tb_bw: 20.0e9,
+            ib_conn_bw: 4.0e9,
+        }
+    }
+
     pub fn num_ranks(&self) -> usize {
         self.nodes * self.gpus_per_node
     }
@@ -212,6 +260,35 @@ mod tests {
         let v = Topology::ndv2(1);
         assert_eq!(v.nic_of(0), 0);
         assert_eq!(v.nic_of(7), 0, "all GPUs share the single NIC");
+    }
+
+    #[test]
+    fn ndv4_one_nic_per_gpu() {
+        let t = Topology::ndv4(4);
+        assert_eq!(t.num_ranks(), 32);
+        assert!(t.has_nvswitch);
+        // NIC per GPU, 2 GPUs per Gen4 switch.
+        assert_eq!(t.nic_of(5), 5);
+        assert_eq!(t.pcie_switch_of(5), 2);
+        assert_eq!(t.link_type(0, 5), LinkType::NvLink);
+        assert_eq!(t.link_type(0, 9), LinkType::Ib);
+    }
+
+    #[test]
+    fn asym_mixes_link_classes() {
+        let t = Topology::asym(2);
+        // Ring neighbors ride NVLink, non-neighbors bounce through shm,
+        // cross-node goes IB — three different rates in one node pair.
+        assert_eq!(t.link_type(0, 1), LinkType::NvLink);
+        assert_eq!(t.link_type(0, 7), LinkType::NvLink, "ring wraps");
+        assert_eq!(t.link_type(0, 3), LinkType::Shm);
+        assert_eq!(t.link_type(2, 10), LinkType::Ib);
+        assert!(t.shm_bw < t.ib_nic_bw && t.ib_nic_bw < t.nvlink_gpu_bw);
+        // 8 GPUs share 2 NICs and 2 PCIe switches.
+        assert_eq!(t.nic_of(0), 0);
+        assert_eq!(t.nic_of(7), 1);
+        assert_eq!(t.pcie_switch_of(3), 0);
+        assert_eq!(t.pcie_switch_of(4), 1);
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! Simulator-driven autotuner: search the compile space, cache the plans.
+//!
+//! The paper's §6 sweeps hand-enumerate (instances, protocol, schedule)
+//! points per collective and size; NCCL's tuner hard-codes the resulting
+//! decision ladder. This module closes the loop instead, in the
+//! TACCL-style "search guided by a cost model" shape: for a given
+//! (collective, topology, size grid) it enumerates candidate plans
+//! ([`space`]), compiles each through [`crate::compiler::compile`] once
+//! (memoized by topology fingerprint + `(program variant, opts)` — the
+//! size grid reuses EFs),
+//! prices every `(candidate, size)` cell on the discrete-event simulator
+//! [`crate::sim::simulate`] with a scoped `std::thread` worker pool, and
+//! emits a [`TunedTable`] — best plan per size bucket with crossover
+//! points — that serializes via [`crate::util::json`] and round-trips like
+//! GC3-EF does.
+//!
+//! Consumers: the `gc3 tune` CLI verb writes the table to disk;
+//! [`crate::coordinator::Registry`] answers "best EF for this call" from a
+//! loaded table (falling back to the NCCL heuristics when none is
+//! loaded); `bench::perf` reports tuned-vs-default speedups into
+//! `BENCH_compiler_perf.json` (EXPERIMENTS.md §TUNE).
+
+mod space;
+mod table;
+
+pub use space::{enumerate, variant_trace, variants, Candidate, Collective, TuneOpts};
+pub use table::{TunedChoice, TunedEntry, TunedTable};
+
+use crate::compiler::{compile, Compiled};
+use crate::core::{Gc3Error, Result};
+use crate::sim::{simulate, Protocol};
+use crate::topology::Topology;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Compiled-candidate memo keyed by the topology fingerprint plus the
+/// `(collective, variant, instances, protocol)` identity of a candidate —
+/// i.e. `(program, opts)` *on a specific machine shape*. A cache can be
+/// carried across [`tune_with_cache`] calls (overlapping grids, repeated
+/// tuning runs) so identical candidates never recompile; candidates from a
+/// different rank count / SM budget never alias.
+#[derive(Default)]
+pub struct CompileCache {
+    map: HashMap<(String, &'static str, &'static str, usize, Protocol), Arc<Compiled>>,
+}
+
+impl CompileCache {
+    pub fn new() -> CompileCache {
+        CompileCache::default()
+    }
+
+    /// Everything about a topology that a compiled EF depends on: the
+    /// trace shape (nodes × gpus) and the scheduler's SM cap. (Link
+    /// bandwidths only matter at simulation time, not compile time.)
+    fn fingerprint(topo: &Topology) -> String {
+        format!("{}n{}g{}sm{}", topo.name, topo.nodes, topo.gpus_per_node, topo.sm_count)
+    }
+
+    fn key(
+        topo: &Topology,
+        cand: &Candidate,
+    ) -> (String, &'static str, &'static str, usize, Protocol) {
+        (
+            Self::fingerprint(topo),
+            cand.collective.name(),
+            cand.variant,
+            cand.instances,
+            cand.protocol,
+        )
+    }
+
+    pub fn get(&self, topo: &Topology, cand: &Candidate) -> Option<Arc<Compiled>> {
+        self.map.get(&Self::key(topo, cand)).cloned()
+    }
+
+    pub fn insert(&mut self, topo: &Topology, cand: &Candidate, compiled: Arc<Compiled>) {
+        self.map.insert(Self::key(topo, cand), compiled);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// What a tuning run did, beyond the table itself.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub table: TunedTable,
+    /// Grid points enumerated.
+    pub candidates: usize,
+    /// Candidates that compiled (the rest are in `skipped`).
+    pub feasible: usize,
+    /// `(candidate key, error)` for candidates that don't compile on this
+    /// topology (e.g. replicated manual threadblocks past the SM cap).
+    pub skipped: Vec<(String, String)>,
+    /// Candidates served from the compile memo instead of recompiling.
+    pub cache_hits: usize,
+    /// Simulator calls made (`feasible × sizes`).
+    pub simulations: usize,
+}
+
+/// Run `f(0..n)` on a scoped worker pool and collect the results in order.
+/// Plain `std::thread::scope` — the vendored crate set has no rayon.
+fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                *slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+fn resolve_workers(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8)
+    }
+}
+
+/// Tune with a fresh compile cache. See [`tune_with_cache`].
+pub fn tune(
+    topo: &Topology,
+    collective: Collective,
+    sizes: &[u64],
+    opts: &TuneOpts,
+) -> Result<TuneOutcome> {
+    let mut cache = CompileCache::new();
+    tune_with_cache(topo, collective, sizes, opts, &mut cache)
+}
+
+/// The search driver: enumerate → compile (parallel, memoized) → simulate
+/// every `(candidate, size)` cell (parallel) → argmin per size.
+pub fn tune_with_cache(
+    topo: &Topology,
+    collective: Collective,
+    sizes: &[u64],
+    opts: &TuneOpts,
+    cache: &mut CompileCache,
+) -> Result<TuneOutcome> {
+    let mut sizes: Vec<u64> = sizes.to_vec();
+    sizes.sort_unstable();
+    sizes.dedup();
+    if sizes.is_empty() {
+        return Err(Gc3Error::Invalid("tune: empty size grid".to_string()));
+    }
+    let cands = enumerate(topo, collective, opts);
+    if cands.is_empty() {
+        return Err(Gc3Error::Invalid(format!(
+            "tune: no candidates for {} on {}",
+            collective.name(),
+            topo.name
+        )));
+    }
+    let workers = resolve_workers(opts.workers);
+
+    // ---- Compile phase: memo hits are free, misses compile in parallel.
+    let misses: Vec<usize> =
+        (0..cands.len()).filter(|&i| cache.get(topo, &cands[i]).is_none()).collect();
+    let cache_hits = cands.len() - misses.len();
+    let compiled: Vec<Result<Compiled>> = parallel_map(misses.len(), workers, |k| {
+        let cand = &cands[misses[k]];
+        let trace = variant_trace(topo, collective, cand.variant)?;
+        let name = format!(
+            "tuned_{}_{}_x{}_{}",
+            collective.name(),
+            cand.variant,
+            cand.instances,
+            cand.protocol.name()
+        );
+        compile(&trace, &name, &cand.opts(topo))
+    });
+    let mut skipped: Vec<(String, String)> = Vec::new();
+    for (&i, res) in misses.iter().zip(compiled) {
+        match res {
+            Ok(c) => cache.insert(topo, &cands[i], Arc::new(c)),
+            Err(e) => skipped.push((cands[i].key(), e.to_string())),
+        }
+    }
+    let feasible: Vec<(&Candidate, Arc<Compiled>)> =
+        cands.iter().filter_map(|c| cache.get(topo, c).map(|a| (c, a))).collect();
+    if feasible.is_empty() {
+        return Err(Gc3Error::Invalid(format!(
+            "tune: no feasible candidate for {} on {} ({} skipped)",
+            collective.name(),
+            topo.name,
+            skipped.len()
+        )));
+    }
+
+    // ---- Price phase: the whole (candidate × size) grid in parallel.
+    let cells = feasible.len() * sizes.len();
+    let reports = parallel_map(cells, workers, |k| {
+        let (ci, si) = (k / sizes.len(), k % sizes.len());
+        simulate(&feasible[ci].1.ef, topo, sizes[si])
+    });
+
+    // ---- Argmin per size; ties keep the earliest candidate, and the
+    // protocol sweep is in ladder order, so ties break low-latency-first.
+    let mut entries = Vec::with_capacity(sizes.len());
+    for (si, &size) in sizes.iter().enumerate() {
+        let mut best: Option<(usize, f64, f64)> = None;
+        for ci in 0..feasible.len() {
+            if let Ok(rep) = &reports[ci * sizes.len() + si] {
+                if best.map(|(_, t, _)| rep.time < t).unwrap_or(true) {
+                    best = Some((ci, rep.time, rep.algbw));
+                }
+            }
+        }
+        let (ci, time, algbw) = best.ok_or_else(|| {
+            Gc3Error::Invalid(format!("tune: no candidate simulates at size {size}"))
+        })?;
+        entries.push(TunedEntry { size, choice: feasible[ci].0.choice(), time, algbw });
+    }
+
+    Ok(TuneOutcome {
+        table: TunedTable {
+            collective: collective.name().to_string(),
+            topology: topo.name.clone(),
+            num_ranks: topo.num_ranks(),
+            entries,
+        },
+        candidates: cands.len(),
+        feasible: feasible.len(),
+        skipped,
+        cache_hits,
+        simulations: cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite differential test: for every table entry, re-simulate the
+    /// whole enumerated grid; no candidate may beat the recorded winner by
+    /// more than 1% — the search is a true argmin, not arbitrary.
+    #[test]
+    fn tuned_choice_is_argmin_over_the_grid() {
+        let mut topo = Topology::a100_single();
+        topo.gpus_per_node = 4;
+        let sizes = [64 * 1024u64, 4 << 20, 64 << 20];
+        let opts = TuneOpts::default();
+        let out = tune(&topo, Collective::AllReduce, &sizes, &opts).unwrap();
+        assert_eq!(out.table.entries.len(), sizes.len());
+        // Compile the grid once (entry-independent); only simulation varies
+        // per table entry.
+        let mut grid = Vec::new();
+        for cand in enumerate(&topo, Collective::AllReduce, &opts) {
+            let trace = variant_trace(&topo, Collective::AllReduce, cand.variant).unwrap();
+            match compile(&trace, "diff", &cand.opts(&topo)) {
+                Ok(c) => grid.push((cand, c)),
+                Err(_) => continue, // infeasible in the driver too — consistent
+            }
+        }
+        for entry in &out.table.entries {
+            for (cand, compiled) in &grid {
+                let t = simulate(&compiled.ef, &topo, entry.size).unwrap().time;
+                assert!(
+                    t >= entry.time * 0.99,
+                    "{} ({t}s) beats recorded winner {} ({}s) at {} bytes",
+                    cand.key(),
+                    entry.choice.key(),
+                    entry.time,
+                    entry.size
+                );
+                if cand.choice() == entry.choice {
+                    let rel = (t - entry.time).abs() / entry.time.max(1e-300);
+                    assert!(rel <= 1e-9, "winner re-simulation drifted by {rel:e}");
+                }
+            }
+        }
+    }
+
+    /// The acceptance ladder: on the default topology the per-bucket
+    /// protocol choices reproduce NCCL's shape — LL at the small end,
+    /// Simple at the large end, monotone in between (LL128 carries the
+    /// mid range).
+    #[test]
+    fn allreduce_ladder_on_default_topology() {
+        let topo = Topology::a100_single();
+        let sizes =
+            [16 * 1024u64, 256 * 1024, 2 * 1024 * 1024, 32 * 1024 * 1024, 256 * 1024 * 1024];
+        let out = tune(&topo, Collective::AllReduce, &sizes, &TuneOpts::default()).unwrap();
+        let protos: Vec<Protocol> =
+            out.table.entries.iter().map(|e| e.choice.protocol).collect();
+        assert_eq!(protos.first(), Some(&Protocol::LL), "small buffers: LL ({protos:?})");
+        assert_eq!(protos.last(), Some(&Protocol::Simple), "large buffers: Simple ({protos:?})");
+        for w in protos.windows(2) {
+            assert!(
+                w[0].ladder_rank() <= w[1].ladder_rank(),
+                "protocol ladder not monotone: {protos:?}"
+            );
+        }
+    }
+
+    /// The compile memo makes repeat runs free: a second grid over the
+    /// same candidates hits the cache for every point.
+    #[test]
+    fn compile_cache_reused_across_calls() {
+        let mut topo = Topology::a100_single();
+        topo.gpus_per_node = 2;
+        let mut cache = CompileCache::new();
+        let opts = TuneOpts::default();
+        let o1 =
+            tune_with_cache(&topo, Collective::AllGather, &[64 * 1024, 1 << 20], &opts, &mut cache)
+                .unwrap();
+        assert_eq!(o1.cache_hits, 0);
+        assert_eq!(o1.feasible + o1.skipped.len(), o1.candidates);
+        assert_eq!(o1.simulations, o1.feasible * 2);
+        let o2 = tune_with_cache(&topo, Collective::AllGather, &[256 * 1024], &opts, &mut cache)
+            .unwrap();
+        assert_eq!(o2.cache_hits, o2.candidates, "every candidate reused");
+        assert_eq!(cache.len(), o1.feasible);
+    }
+
+    /// The memo is topology-keyed: the same candidate names on a different
+    /// machine shape must recompile, never serve another topology's EF.
+    #[test]
+    fn compile_cache_is_topology_keyed() {
+        let mut cache = CompileCache::new();
+        let opts = TuneOpts::default();
+        let mut t2 = Topology::a100_single();
+        t2.gpus_per_node = 2;
+        let mut t4 = Topology::a100_single();
+        t4.gpus_per_node = 4;
+        tune_with_cache(&t2, Collective::AllGather, &[64 * 1024], &opts, &mut cache).unwrap();
+        let o = tune_with_cache(&t4, Collective::AllGather, &[64 * 1024], &opts, &mut cache)
+            .unwrap();
+        assert_eq!(o.cache_hits, 0, "2-rank EFs must not serve the 4-rank topology");
+        assert_eq!(o.table.num_ranks, 4);
+    }
+
+    /// Candidates that exceed the SM cap are skipped, not fatal; the
+    /// duplicate/unsorted size grid is normalized.
+    #[test]
+    fn infeasible_candidates_are_skipped() {
+        let mut topo = Topology::a100_single();
+        topo.sm_count = 6; // manual 8-tb ring cannot fit; one-tb ring can
+        let sizes = [1 << 20, 64 * 1024, 1 << 20];
+        let out = tune(&topo, Collective::AllReduce, &sizes, &TuneOpts::default()).unwrap();
+        assert!(!out.skipped.is_empty(), "some candidates must be infeasible");
+        assert!(out.feasible > 0);
+        assert_eq!(out.table.entries.len(), 2, "sizes deduped and sorted");
+        assert!(out.table.entries[0].size < out.table.entries[1].size);
+        for (key, err) in &out.skipped {
+            assert!(key.contains('x'), "{key}");
+            assert!(!err.is_empty());
+        }
+    }
+
+    /// The table the driver emits round-trips through JSON losslessly —
+    /// the same guarantee GC3-EF gives.
+    #[test]
+    fn driver_output_roundtrips() {
+        let mut topo = Topology::a100_single();
+        topo.gpus_per_node = 2;
+        let out =
+            tune(&topo, Collective::ReduceScatter, &[64 * 1024, 4 << 20], &TuneOpts::default())
+                .unwrap();
+        let back = TunedTable::from_json_str(&out.table.to_json_string()).unwrap();
+        assert_eq!(out.table, back);
+        assert_eq!(back.topology, topo.name);
+        assert_eq!(back.num_ranks, 2);
+    }
+
+    #[test]
+    fn empty_grid_is_an_error() {
+        let topo = Topology::a100_single();
+        assert!(tune(&topo, Collective::AllReduce, &[], &TuneOpts::default()).is_err());
+    }
+}

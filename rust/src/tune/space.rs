@@ -1,0 +1,219 @@
+//! The autotuner's search space: collective kinds, library program
+//! variants, and the compile-configuration grid.
+//!
+//! A [`Candidate`] is one point of the grid the search driver prices:
+//! `variant × instances × protocol`. Instance replication (§5.3.2) is
+//! GC3's channel-count knob — NCCL's `nchannels` maps onto it exactly
+//! (see [`crate::nccl::allreduce::build_choice`]) — so sweeping instances
+//! sweeps channels. Variants that need multiple nodes (hierarchical,
+//! two-step) only appear when the topology has them; candidates that fail
+//! to compile on a topology (e.g. a manual ring whose replicated
+//! threadblocks exceed the SM cap) are skipped by the driver, not errors.
+
+use crate::collectives::{allreduce, alltoall, basics};
+use crate::compiler::CompileOpts;
+use crate::core::{Gc3Error, Result};
+use crate::dsl::Trace;
+use crate::nccl;
+use crate::sim::Protocol;
+use crate::topology::Topology;
+
+/// Collective kinds the tuner knows how to enumerate programs for.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Collective {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+}
+
+impl Collective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Collective::AllReduce => "allreduce",
+            Collective::AllGather => "allgather",
+            Collective::ReduceScatter => "reduce_scatter",
+            Collective::AllToAll => "alltoall",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Collective> {
+        match s.to_ascii_lowercase().as_str() {
+            "allreduce" => Some(Collective::AllReduce),
+            "allgather" => Some(Collective::AllGather),
+            "reduce_scatter" | "reducescatter" => Some(Collective::ReduceScatter),
+            "alltoall" => Some(Collective::AllToAll),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Collective; 4] {
+        [
+            Collective::AllReduce,
+            Collective::AllGather,
+            Collective::ReduceScatter,
+            Collective::AllToAll,
+        ]
+    }
+}
+
+/// Program variants available for `collective` on `topo`.
+pub fn variants(topo: &Topology, collective: Collective) -> Vec<&'static str> {
+    let multi = topo.nodes > 1;
+    match collective {
+        Collective::AllReduce => {
+            let mut v = vec!["ring", "ring_auto", "ring_one_tb"];
+            if multi {
+                v.push("hierarchical");
+                v.push("tree");
+            }
+            v
+        }
+        Collective::AllGather => vec!["ring"],
+        Collective::ReduceScatter => vec!["ring"],
+        Collective::AllToAll => {
+            let mut v = vec!["direct"];
+            if multi {
+                v.push("two_step");
+            }
+            v
+        }
+    }
+}
+
+/// Build the DSL trace for one `(collective, variant)` pair on `topo`.
+pub fn variant_trace(topo: &Topology, collective: Collective, variant: &str) -> Result<Trace> {
+    let r = topo.num_ranks();
+    let (nodes, gpus) = (topo.nodes, topo.gpus_per_node);
+    match (collective, variant) {
+        (Collective::AllReduce, "ring") => allreduce::ring(r, true),
+        (Collective::AllReduce, "ring_auto") => allreduce::ring(r, false),
+        (Collective::AllReduce, "ring_one_tb") => allreduce::ring_one_tb(r),
+        (Collective::AllReduce, "hierarchical") => allreduce::hierarchical(nodes, gpus),
+        (Collective::AllReduce, "tree") => nccl::allreduce::tree(nodes, gpus),
+        (Collective::AllGather, "ring") => basics::allgather_ring(r),
+        (Collective::ReduceScatter, "ring") => basics::reduce_scatter_ring(r),
+        (Collective::AllToAll, "direct") => alltoall::direct(r),
+        (Collective::AllToAll, "two_step") => alltoall::two_step(nodes, gpus),
+        _ => Err(Gc3Error::Invalid(format!(
+            "no variant '{variant}' for {} on {}",
+            collective.name(),
+            topo.name
+        ))),
+    }
+}
+
+/// One point of the compile-configuration grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Candidate {
+    pub collective: Collective,
+    pub variant: &'static str,
+    pub instances: usize,
+    pub protocol: Protocol,
+}
+
+impl Candidate {
+    /// Compile options for this candidate on `topo`.
+    pub fn opts(&self, topo: &Topology) -> CompileOpts {
+        CompileOpts {
+            instances: self.instances,
+            protocol: self.protocol,
+            ..CompileOpts::for_topo(topo)
+        }
+    }
+
+    /// Stable display / memoization key, e.g. `ring x4 ll128` — delegates
+    /// to [`super::TunedChoice::key`] so tuner logs, table renderings, and
+    /// the registry's EF-cache keys can never drift apart.
+    pub fn key(&self) -> String {
+        self.choice().key()
+    }
+
+    pub fn choice(&self) -> super::TunedChoice {
+        super::TunedChoice {
+            variant: self.variant.to_string(),
+            instances: self.instances,
+            protocol: self.protocol,
+        }
+    }
+}
+
+/// Grid knobs for the search driver.
+#[derive(Clone, Debug)]
+pub struct TuneOpts {
+    /// Instance replication factors to sweep (§5.3.2 / channel counts).
+    pub instances: Vec<usize>,
+    /// Protocols to sweep, in ladder order so argmin ties break toward the
+    /// lower-latency protocol deterministically.
+    pub protocols: Vec<Protocol>,
+    /// Worker threads for the scoped pool; 0 = one per available core
+    /// (capped at 8).
+    pub workers: usize,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        TuneOpts {
+            instances: vec![1, 2, 4, 8],
+            protocols: vec![Protocol::LL, Protocol::LL128, Protocol::Simple],
+            workers: 0,
+        }
+    }
+}
+
+/// Enumerate the candidate grid for `collective` on `topo`.
+pub fn enumerate(topo: &Topology, collective: Collective, opts: &TuneOpts) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for variant in variants(topo, collective) {
+        for &instances in &opts.instances {
+            for &protocol in &opts.protocols {
+                out.push(Candidate { collective, variant, instances, protocol });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collective_names_roundtrip() {
+        for c in Collective::all() {
+            assert_eq!(Collective::parse(c.name()), Some(c));
+        }
+        assert_eq!(Collective::parse("AllReduce"), Some(Collective::AllReduce));
+        assert_eq!(Collective::parse("bogus"), None);
+    }
+
+    #[test]
+    fn multi_node_widens_the_space() {
+        let single = Topology::a100_single();
+        let multi = Topology::a100(2);
+        assert_eq!(variants(&single, Collective::AllReduce), vec![
+            "ring",
+            "ring_auto",
+            "ring_one_tb"
+        ]);
+        assert!(variants(&multi, Collective::AllReduce).contains(&"hierarchical"));
+        assert!(variants(&multi, Collective::AllToAll).contains(&"two_step"));
+        let opts = TuneOpts::default();
+        assert_eq!(enumerate(&single, Collective::AllReduce, &opts).len(), 3 * 4 * 3);
+        assert_eq!(enumerate(&multi, Collective::AllReduce, &opts).len(), 5 * 4 * 3);
+    }
+
+    #[test]
+    fn every_variant_traces() {
+        let mut topo = Topology::a100(2);
+        topo.gpus_per_node = 2;
+        for coll in Collective::all() {
+            for v in variants(&topo, coll) {
+                let t = variant_trace(&topo, coll, v)
+                    .unwrap_or_else(|e| panic!("{}/{v}: {e}", coll.name()));
+                assert_eq!(t.spec.num_ranks, topo.num_ranks());
+            }
+        }
+        assert!(variant_trace(&topo, Collective::AllReduce, "nope").is_err());
+    }
+}

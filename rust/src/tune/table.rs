@@ -1,0 +1,291 @@
+//! The tuned-plan table: the autotuner's serializable product.
+//!
+//! A [`TunedTable`] records, for one (collective, topology) pair, the best
+//! compile configuration per size bucket — the same decision shape NCCL
+//! bakes into static tables ([`crate::nccl::tuner`]), but derived by
+//! simulator-backed search instead of hand calibration. Tables serialize
+//! through [`crate::util::json`] and round-trip losslessly, like GC3-EF
+//! does, so a tuning run can be archived, diffed, and loaded by a
+//! [`crate::coordinator::Registry`] in a later process.
+
+use crate::core::{Gc3Error, Result};
+use crate::sim::Protocol;
+use crate::util::json::Json;
+
+/// One winning compile configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedChoice {
+    /// Library program variant (see [`super::variants`]).
+    pub variant: String,
+    /// Instance replication factor (§5.3.2) — GC3's channel-count knob.
+    pub instances: usize,
+    pub protocol: Protocol,
+}
+
+impl TunedChoice {
+    /// Compact display / cache key, e.g. `ring x4 ll128`.
+    pub fn key(&self) -> String {
+        format!("{} x{} {}", self.variant, self.instances, self.protocol.name())
+    }
+}
+
+/// The winner at one measured size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedEntry {
+    pub size: u64,
+    pub choice: TunedChoice,
+    /// Simulated completion time of the chosen plan, seconds.
+    pub time: f64,
+    /// Algorithmic bandwidth of the chosen plan, bytes/s.
+    pub algbw: f64,
+}
+
+/// Best plan per size bucket for one (collective, topology) pair.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedTable {
+    /// Collective kind name (see [`super::Collective::name`]).
+    pub collective: String,
+    /// Topology name the table was tuned on (e.g. `a100x2`).
+    pub topology: String,
+    pub num_ranks: usize,
+    /// Ascending by `size`.
+    pub entries: Vec<TunedEntry>,
+}
+
+impl TunedTable {
+    /// Bucket lookup: the entry whose measured size is nearest to `size`
+    /// in log space (sizes between two grid points resolve to the closer
+    /// one, matching how NCCL's tables bucket by size class).
+    pub fn lookup(&self, size: u64) -> Option<&TunedEntry> {
+        let s = (size.max(1)) as f64;
+        let mut best: Option<(&TunedEntry, f64)> = None;
+        for e in &self.entries {
+            let d = ((e.size.max(1)) as f64 / s).ln().abs();
+            if best.as_ref().map(|&(_, bd)| d < bd).unwrap_or(true) {
+                best = Some((e, d));
+            }
+        }
+        best.map(|(e, _)| e)
+    }
+
+    /// Whether `size` falls inside the measured grid span, with one ×4
+    /// grid step of slack on each side — the range where the log-nearest
+    /// bucket is an interpolation. Outside it, [`TunedTable::lookup`]
+    /// would blindly extrapolate the edge entry, so consumers (the
+    /// registry) fall back to their static heuristics instead.
+    pub fn covers(&self, size: u64) -> bool {
+        match (self.entries.first(), self.entries.last()) {
+            (Some(lo), Some(hi)) => {
+                let s = size.max(1) as f64;
+                s >= lo.size.max(1) as f64 / 4.0 && s <= hi.size.max(1) as f64 * 4.0
+            }
+            _ => false,
+        }
+    }
+
+    /// Crossover points: `(size, previous choice, new choice)` for every
+    /// grid point where the winning configuration changes — the boundaries
+    /// the paper's §6 sweeps locate by hand.
+    pub fn crossovers(&self) -> Vec<(u64, String, String)> {
+        let mut out = Vec::new();
+        for w in self.entries.windows(2) {
+            if w[0].choice != w[1].choice {
+                out.push((w[1].size, w[0].choice.key(), w[1].choice.key()));
+            }
+        }
+        out
+    }
+
+    /// Human-readable rendering (CLI + example output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "tuned table: {} on {} ({} ranks)\n{:>12} {:>28} {:>12} {:>12}\n",
+            self.collective, self.topology, self.num_ranks, "size", "choice", "time us", "GB/s"
+        );
+        for e in &self.entries {
+            out.push_str(&format!(
+                "{:>12} {:>28} {:>12.1} {:>12.2}\n",
+                crate::util::human_bytes(e.size),
+                e.choice.key(),
+                e.time * 1e6,
+                e.algbw / 1e9
+            ));
+        }
+        for (size, from, to) in self.crossovers() {
+            out.push_str(&format!(
+                "  crossover at {}: {from} -> {to}\n",
+                crate::util::human_bytes(size)
+            ));
+        }
+        out
+    }
+
+    // ---------------- JSON serialization ----------------
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("kind", Json::str("gc3_tuned_table"))
+            .set("schema_version", Json::num(1))
+            .set("collective", Json::str(&self.collective))
+            .set("topology", Json::str(&self.topology))
+            .set("num_ranks", Json::num(self.num_ranks));
+        let rows: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut o = Json::obj();
+                o.set("size", Json::Num(e.size as f64))
+                    .set("variant", Json::str(&e.choice.variant))
+                    .set("instances", Json::num(e.choice.instances))
+                    .set("protocol", Json::str(e.choice.protocol.name()))
+                    .set("time_s", Json::Num(e.time))
+                    .set("algbw", Json::Num(e.algbw));
+                o
+            })
+            .collect();
+        root.set("entries", Json::Arr(rows));
+        root
+    }
+
+    pub fn from_json(j: &Json) -> std::result::Result<TunedTable, String> {
+        if j.req_str("kind")? != "gc3_tuned_table" {
+            return Err("not a gc3_tuned_table document".to_string());
+        }
+        let mut entries = Vec::new();
+        for (i, row) in j.req_arr("entries")?.iter().enumerate() {
+            let proto_name = row.req_str("protocol")?;
+            let protocol = Protocol::parse(proto_name)
+                .ok_or_else(|| format!("entry {i}: unknown protocol '{proto_name}'"))?;
+            entries.push(TunedEntry {
+                size: row.req_usize("size")? as u64,
+                choice: TunedChoice {
+                    variant: row.req_str("variant")?.to_string(),
+                    instances: row.req_usize("instances")?,
+                    protocol,
+                },
+                time: row
+                    .req("time_s")?
+                    .as_f64()
+                    .ok_or_else(|| format!("entry {i}: time_s is not a number"))?,
+                algbw: row
+                    .req("algbw")?
+                    .as_f64()
+                    .ok_or_else(|| format!("entry {i}: algbw is not a number"))?,
+            });
+        }
+        if !entries.windows(2).all(|w| w[0].size < w[1].size) {
+            return Err("entries must be strictly ascending by size".to_string());
+        }
+        Ok(TunedTable {
+            collective: j.req_str("collective")?.to_string(),
+            topology: j.req_str("topology")?.to_string(),
+            num_ranks: j.req_usize("num_ranks")?,
+            entries,
+        })
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json_str(text: &str) -> Result<TunedTable> {
+        let j = Json::parse(text).map_err(Gc3Error::Ef)?;
+        TunedTable::from_json(&j).map_err(Gc3Error::Ef)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TunedTable {
+        let mk = |size: u64, variant: &str, instances: usize, protocol: Protocol| TunedEntry {
+            size,
+            choice: TunedChoice { variant: variant.to_string(), instances, protocol },
+            time: 1.25e-5 * size as f64 / 65536.0,
+            algbw: size as f64 / 1.25e-5,
+        };
+        TunedTable {
+            collective: "allreduce".to_string(),
+            topology: "a100x1".to_string(),
+            num_ranks: 8,
+            entries: vec![
+                mk(64 * 1024, "ring", 1, Protocol::LL),
+                mk(4 * 1024 * 1024, "ring", 4, Protocol::LL128),
+                mk(256 * 1024 * 1024, "ring", 4, Protocol::Simple),
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let t = sample();
+        let back = TunedTable::from_json_str(&t.to_json_string()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn rejects_foreign_documents() {
+        assert!(TunedTable::from_json_str("{}").is_err());
+        assert!(TunedTable::from_json_str(r#"{"kind":"other"}"#).is_err());
+        let mut j = sample().to_json();
+        j.set("entries", Json::Arr(vec![Json::obj()]));
+        assert!(TunedTable::from_json(&j).is_err(), "entry missing fields");
+    }
+
+    #[test]
+    fn rejects_unsorted_entries() {
+        // covers()/lookup()/crossovers() all assume ascending sizes; a
+        // hand-merged document that breaks the invariant must not load.
+        let mut t = sample();
+        t.entries.reverse();
+        let err = TunedTable::from_json_str(&t.to_json_string()).unwrap_err();
+        assert!(err.to_string().contains("ascending"), "{err}");
+    }
+
+    #[test]
+    fn lookup_buckets_in_log_space() {
+        let t = sample();
+        // Exact grid points hit their own entry.
+        assert_eq!(t.lookup(64 * 1024).unwrap().choice.protocol, Protocol::LL);
+        assert_eq!(t.lookup(256 * 1024 * 1024).unwrap().choice.protocol, Protocol::Simple);
+        // Off-grid sizes resolve to the log-nearest bucket.
+        assert_eq!(t.lookup(100 * 1024).unwrap().choice.protocol, Protocol::LL);
+        assert_eq!(t.lookup(2 * 1024 * 1024).unwrap().choice.protocol, Protocol::LL128);
+        // Out-of-range sizes clamp to the edge entries.
+        assert_eq!(t.lookup(1).unwrap().choice.protocol, Protocol::LL);
+        assert_eq!(t.lookup(8 << 30).unwrap().choice.protocol, Protocol::Simple);
+    }
+
+    #[test]
+    fn covers_is_the_grid_span_plus_one_step() {
+        let t = sample(); // 64 KB .. 256 MB
+        assert!(t.covers(64 * 1024));
+        assert!(t.covers(256 * 1024 * 1024));
+        assert!(t.covers(16 * 1024), "one x4 step below the grid");
+        assert!(t.covers(1 << 30), "one x4 step above the grid");
+        assert!(!t.covers(4 * 1024), "two steps below: extrapolation");
+        assert!(!t.covers(8u64 << 30), "two steps above: extrapolation");
+    }
+
+    #[test]
+    fn crossovers_mark_choice_changes() {
+        let t = sample();
+        let x = t.crossovers();
+        assert_eq!(x.len(), 2);
+        assert_eq!(x[0].0, 4 * 1024 * 1024);
+        assert!(x[0].1.contains("ll") && x[0].2.contains("ll128"), "{:?}", x[0]);
+        assert_eq!(x[1].0, 256 * 1024 * 1024);
+    }
+
+    #[test]
+    fn empty_table_lookup_is_none() {
+        let t = TunedTable {
+            collective: "allreduce".into(),
+            topology: "x".into(),
+            num_ranks: 2,
+            entries: Vec::new(),
+        };
+        assert!(t.lookup(1024).is_none());
+    }
+}

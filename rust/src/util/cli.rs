@@ -3,6 +3,12 @@
 //! Supports `--flag`, `--key value` and `--key=value` forms plus trailing
 //! positional arguments, which covers everything the `gc3` binary,
 //! examples and benches need.
+//!
+//! Flags must be declared up front so `--key value` vs `--flag` is
+//! unambiguous. An *undeclared* `--key` that is not followed by a value is
+//! an error, not a silent flag: `gc3 tune --sizes --nodes 2` means the
+//! user forgot the `--sizes` value, and treating `--sizes` as a flag would
+//! silently tune the default grid.
 
 use std::collections::BTreeMap;
 
@@ -14,9 +20,12 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an explicit iterator (testable) — flags must be declared
-    /// so `--key value` vs `--flag` is unambiguous.
-    pub fn parse_from<I: IntoIterator<Item = String>>(args: I, flag_names: &[&str]) -> Args {
+    /// Parse from an explicit iterator (testable). Errors on an undeclared
+    /// `--key` with no value.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        args: I,
+        flag_names: &[&str],
+    ) -> Result<Args, String> {
         let mut out = Args::default();
         let mut it = args.into_iter().peekable();
         while let Some(a) = it.next() {
@@ -27,24 +36,33 @@ impl Args {
                     out.flags.push(rest.to_string());
                 } else if let Some(v) = it.peek() {
                     if v.starts_with("--") {
-                        out.flags.push(rest.to_string());
-                    } else {
-                        let v = it.next().unwrap();
-                        out.options.insert(rest.to_string(), v);
+                        return Err(format!(
+                            "option --{rest} requires a value (next argument is '{v}'; \
+                             write --{rest}=VALUE or --{rest} VALUE)"
+                        ));
                     }
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
                 } else {
-                    out.flags.push(rest.to_string());
+                    return Err(format!("option --{rest} requires a value"));
                 }
             } else {
                 out.positional.push(a);
             }
         }
-        out
+        Ok(out)
     }
 
-    /// Parse process args, skipping argv[0].
+    /// Parse process args, skipping argv[0]. Exits with code 2 on a
+    /// malformed command line (binaries have no meaningful recovery).
     pub fn parse(flag_names: &[&str]) -> Args {
-        Args::parse_from(std::env::args().skip(1), flag_names)
+        match Args::parse_from(std::env::args().skip(1), flag_names) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
     }
 
     pub fn opt(&self, key: &str) -> Option<&str> {
@@ -86,7 +104,8 @@ mod tests {
         let a = Args::parse_from(
             strs(&["run", "--nodes", "8", "--size=2MB", "--verbose", "alltoall"]),
             &["verbose"],
-        );
+        )
+        .unwrap();
         assert_eq!(a.positional, vec!["run", "alltoall"]);
         assert_eq!(a.usize("nodes", 0), 8);
         assert_eq!(a.bytes("size", 0), 2 * 1024 * 1024);
@@ -96,7 +115,7 @@ mod tests {
 
     #[test]
     fn flag_before_option_and_defaults() {
-        let a = Args::parse_from(strs(&["--check", "--steps", "10"]), &["check"]);
+        let a = Args::parse_from(strs(&["--check", "--steps", "10"]), &["check"]).unwrap();
         assert!(a.flag("check"));
         assert_eq!(a.usize("steps", 1), 10);
         assert_eq!(a.usize("missing", 7), 7);
@@ -104,8 +123,33 @@ mod tests {
     }
 
     #[test]
-    fn trailing_flag() {
-        let a = Args::parse_from(strs(&["--quiet"]), &[]);
+    fn declared_trailing_flag() {
+        let a = Args::parse_from(strs(&["--quiet"]), &["quiet"]).unwrap();
         assert!(a.flag("quiet"));
+    }
+
+    /// The misparse this guards against: `gc3 tune --sizes --nodes 2` used
+    /// to silently treat `--sizes` as a flag and tune the default grid.
+    #[test]
+    fn unknown_option_without_value_is_an_error() {
+        let err =
+            Args::parse_from(strs(&["tune", "--sizes", "--nodes", "2"]), &[]).unwrap_err();
+        assert!(err.contains("--sizes"), "{err}");
+        assert!(err.contains("--nodes"), "should name the swallowed argument: {err}");
+    }
+
+    #[test]
+    fn unknown_trailing_option_is_an_error() {
+        let err = Args::parse_from(strs(&["--out"]), &[]).unwrap_err();
+        assert!(err.contains("--out"), "{err}");
+        // The `=` form always works, declared or not.
+        let a = Args::parse_from(strs(&["--out=x.json"]), &[]).unwrap();
+        assert_eq!(a.opt("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn negative_values_are_values() {
+        let a = Args::parse_from(strs(&["--lr", "-0.5"]), &[]).unwrap();
+        assert_eq!(a.f64("lr", 0.0), -0.5);
     }
 }

@@ -80,6 +80,28 @@ fn golden_parity_library_sweep() {
     }
 }
 
+/// Parity sweep over the two topologies added for the autotuner's scenario
+/// grid: the NDv4-style preset (shrunk to 2 GPUs/node for test budget) and
+/// the asymmetric mixed-bandwidth topology (4 GPUs/node so the host-shm
+/// link class actually appears alongside NVLink and IB). Keeps the
+/// optimized engine pinned to `sim/reference.rs` on link inventories the
+/// original sweep never exercised.
+#[test]
+fn golden_parity_new_topologies() {
+    let mut ndv4 = Topology::ndv4(4);
+    ndv4.gpus_per_node = 2;
+    let mut asym = Topology::asym(2);
+    asym.gpus_per_node = 4;
+    for topo in [ndv4, asym] {
+        for prog in gc3::collectives::library(&topo).unwrap() {
+            let c = compile(&prog.trace, prog.name, &CompileOpts::default()).unwrap();
+            for size in [64 * 1024u64, 16 * 1024 * 1024] {
+                assert_sim_parity(&c.ef, &topo, size, &format!("{}@{}", prog.name, topo.name));
+            }
+        }
+    }
+}
+
 /// Library programs survive EF JSON round-trips and still verify + price.
 #[test]
 fn library_roundtrip_verify_simulate() {

@@ -1,0 +1,246 @@
+//! Property-test / fuzz layer: seeded random DSL programs, correct by
+//! construction, pushed through the whole pipeline.
+//!
+//! The generator builds random copy/reduce routings over 2–8 ranks while
+//! tracking the symbolic contents of every written slot, then *derives*
+//! the collective postcondition from the final state — so every generated
+//! program is valid by construction and every pipeline stage must agree:
+//!
+//! 1. `chunkdag::validate` passes (symbolic postcondition check);
+//! 2. `exec::verify` passes with `NativeReducer` (numeric postcondition);
+//! 3. the compiled EF JSON round-trips to an identical `EfProgram`;
+//! 4. fused and unfused compiles (`CompileOpts.fuse` on/off) produce
+//!    byte-identical output buffers. (Output buffers specifically: the
+//!    `rrs` pass is *allowed* to elide dead intermediate writes outside
+//!    the postcondition, and the generator constrains every written
+//!    output slot, so fusion may never change an output byte.)
+//!
+//! ≥ 200 generated cases, deterministic under a fixed seed.
+
+use gc3::chunkdag::{validate::validate, ChunkDag};
+use gc3::compiler::{compile, CompileOpts};
+use gc3::core::{BufferId, Slot};
+use gc3::dsl::collective::{reduce_vals, val, ChunkValue, CollectiveSpec};
+use gc3::dsl::{Program, SchedHint, Trace};
+use gc3::ef::EfProgram;
+use gc3::exec::{execute, test_pattern, verify, Memory, NativeReducer};
+use gc3::sim::Protocol;
+use gc3::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One abstract routing step; replayed through the DSL recorder once the
+/// postcondition is known.
+#[derive(Clone, Copy, Debug)]
+enum PlanOp {
+    Copy { src: Slot, dst: Slot },
+    /// `dst = reduce(dst, src)` — generated only for slots holding
+    /// *disjoint* contribution sets, matching the DSL's "each input chunk
+    /// reduced at most once" validity model.
+    Reduce { dst: Slot, src: Slot },
+}
+
+struct GeneratedCase {
+    trace: Trace,
+    spec: CollectiveSpec,
+    reduces: usize,
+}
+
+fn disjoint(a: &ChunkValue, b: &ChunkValue) -> bool {
+    a.iter().all(|x| !b.contains(x))
+}
+
+/// Generate one random valid program + its derived postcondition.
+fn generate(rng: &mut Rng, case: usize) -> GeneratedCase {
+    let ranks = rng.range(2, 8);
+    let in_chunks = rng.range(1, 2);
+    let out_chunks = rng.range(1, 2);
+
+    // The symbolic machine state: slot → set of input chunks reduced in.
+    let mut state: BTreeMap<Slot, ChunkValue> = BTreeMap::new();
+    for r in 0..ranks {
+        for i in 0..in_chunks {
+            state.insert(Slot { rank: r, buffer: BufferId::Input, index: i }, val(r, i));
+        }
+    }
+    let mut scratch_next = vec![0usize; ranks];
+    let mut out_free: Vec<Slot> = (0..ranks)
+        .flat_map(|r| {
+            (0..out_chunks).map(move |i| Slot { rank: r, buffer: BufferId::Output, index: i })
+        })
+        .collect();
+    rng.shuffle(&mut out_free);
+
+    let mut plan: Vec<PlanOp> = Vec::new();
+    let mut reduces = 0usize;
+    // Seeding phase: every rank relays its first input chunk to its ring
+    // neighbor's scratch. Guarantees every rank participates (no idle GPU
+    // sections) and plants remote relay chains for the fusion passes.
+    for r in 0..ranks {
+        let src = Slot { rank: r, buffer: BufferId::Input, index: 0 };
+        let nbr = (r + 1) % ranks;
+        let dst = Slot { rank: nbr, buffer: BufferId::Scratch, index: scratch_next[nbr] };
+        scratch_next[nbr] += 1;
+        let v = state[&src].clone();
+        state.insert(dst, v);
+        plan.push(PlanOp::Copy { src, dst });
+    }
+    let n_ops = rng.range(ranks + 2, 3 * ranks + 8);
+    for _ in 0..n_ops {
+        let slots: Vec<Slot> = state.keys().copied().collect();
+        // 1-in-3: try a reduce between two disjoint live values.
+        if slots.len() >= 2 && rng.below(3) == 0 {
+            let mut found = None;
+            for _ in 0..8 {
+                let i = rng.below(slots.len());
+                let j = rng.below(slots.len());
+                if i == j {
+                    continue;
+                }
+                if disjoint(&state[&slots[i]], &state[&slots[j]]) {
+                    found = Some((slots[i], slots[j]));
+                    break;
+                }
+            }
+            if let Some((dst, src)) = found {
+                let merged = reduce_vals(&state[&dst], &state[&src]);
+                state.insert(dst, merged);
+                plan.push(PlanOp::Reduce { dst, src });
+                reduces += 1;
+                continue;
+            }
+        }
+        // Copy a random live chunk somewhere fresh: an unwritten output
+        // slot (half the time, while any remain) or a new scratch index.
+        let src = slots[rng.below(slots.len())];
+        let dst = if !out_free.is_empty() && rng.bool() {
+            out_free.pop().unwrap()
+        } else {
+            let r = rng.below(ranks);
+            let idx = scratch_next[r];
+            scratch_next[r] += 1;
+            Slot { rank: r, buffer: BufferId::Scratch, index: idx }
+        };
+        let v = state[&src].clone();
+        state.insert(dst, v);
+        plan.push(PlanOp::Copy { src, dst });
+    }
+    // Guarantee the postcondition is non-empty.
+    if state.keys().all(|s| s.buffer != BufferId::Output) {
+        let slots: Vec<Slot> = state.keys().copied().collect();
+        let src = slots[rng.below(slots.len())];
+        let dst = Slot { rank: rng.below(ranks), buffer: BufferId::Output, index: 0 };
+        let v = state[&src].clone();
+        state.insert(dst, v);
+        plan.push(PlanOp::Copy { src, dst });
+    }
+
+    // The generated postcondition: exactly the final symbolic contents of
+    // every written output slot.
+    let post: BTreeMap<Slot, ChunkValue> = state
+        .iter()
+        .filter(|(s, _)| s.buffer == BufferId::Output)
+        .map(|(s, v)| (*s, v.clone()))
+        .collect();
+    assert!(!post.is_empty());
+    let spec = CollectiveSpec::custom(
+        &format!("prop_{case}"),
+        ranks,
+        in_chunks,
+        out_chunks,
+        false,
+        None,
+        post,
+    );
+
+    // Replay the plan through the DSL recorder (fresh chunk refs each op,
+    // so the recorder's staleness tracking is exercised but never tripped).
+    let mut p = Program::new(spec.clone());
+    for op in &plan {
+        match *op {
+            PlanOp::Copy { src, dst } => {
+                let c = p.chunk(src.buffer, src.rank, src.index, 1).unwrap();
+                p.copy(c, dst.buffer, dst.rank, dst.index, SchedHint::none()).unwrap();
+            }
+            PlanOp::Reduce { dst, src } => {
+                let acc = p.chunk(dst.buffer, dst.rank, dst.index, 1).unwrap();
+                let other = p.chunk(src.buffer, src.rank, src.index, 1).unwrap();
+                p.reduce(acc, other, SchedHint::none()).unwrap();
+            }
+        }
+    }
+    GeneratedCase { trace: p.finish().unwrap(), spec, reduces }
+}
+
+/// Execute an EF over pattern-filled memory and return the output buffers
+/// as exact bit patterns.
+fn output_bits(ef: &EfProgram) -> Vec<Vec<u32>> {
+    let mut mem = Memory::for_ef(ef, 4);
+    mem.fill_pattern(test_pattern);
+    execute(ef, &mut mem, &mut NativeReducer).unwrap();
+    mem.output.iter().map(|buf| buf.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// The ≥ 200-case sweep: every generated program passes all four
+/// cross-checks.
+#[test]
+fn random_programs_pass_all_cross_checks() {
+    const CASES: usize = 220;
+    let mut rng = Rng::new(0x6C3_7E57_F42);
+    let mut total_reduces = 0usize;
+    let mut total_fused_away = 0usize;
+    let mut rank_counts = BTreeSet::new();
+    for case in 0..CASES {
+        let g = generate(&mut rng, case);
+        rank_counts.insert(g.spec.num_ranks);
+        total_reduces += g.reduces;
+
+        // (1) Symbolic validation.
+        let dag = ChunkDag::build(&g.trace).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        validate(&dag).unwrap_or_else(|e| panic!("case {case}: validate: {e}"));
+
+        // (2) Compile + numeric verification, random protocol.
+        let protocol = *rng.choose(&[Protocol::Simple, Protocol::LL, Protocol::LL128]);
+        let opts = CompileOpts { protocol, ..Default::default() };
+        let fused = compile(&g.trace, &g.spec.name, &opts)
+            .unwrap_or_else(|e| panic!("case {case}: compile: {e}"));
+        verify(&fused.ef, &g.spec, 4, &mut NativeReducer)
+            .unwrap_or_else(|e| panic!("case {case}: verify: {e}\n{}", fused.ef.listing()));
+
+        // (3) EF JSON round-trip is lossless.
+        let back = EfProgram::from_json_str(&fused.ef.to_json_string())
+            .unwrap_or_else(|e| panic!("case {case}: EF json: {e}"));
+        assert_eq!(fused.ef, back, "case {case}: EF JSON round-trip");
+
+        // (4) Fusion differential: byte-identical output buffers.
+        let unfused = compile(&g.trace, &g.spec.name, &opts.clone().without_fusion())
+            .unwrap_or_else(|e| panic!("case {case}: unfused compile: {e}"));
+        verify(&unfused.ef, &g.spec, 4, &mut NativeReducer)
+            .unwrap_or_else(|e| panic!("case {case}: unfused verify: {e}"));
+        assert_eq!(
+            output_bits(&fused.ef),
+            output_bits(&unfused.ef),
+            "case {case}: fused vs unfused output buffers differ"
+        );
+        total_fused_away +=
+            fused.stats.insts_before_fusion - fused.stats.insts_after_fusion;
+    }
+    // The generator is not degenerate: reductions happen, fusion fires,
+    // and the rank range is actually swept.
+    assert!(total_reduces > CASES / 4, "generator produced too few reduces: {total_reduces}");
+    assert!(total_fused_away > 0, "no case ever fused — differential is vacuous");
+    assert!(rank_counts.len() >= 5, "rank sweep too narrow: {rank_counts:?}");
+    assert!(*rank_counts.iter().min().unwrap() >= 2);
+    assert!(*rank_counts.iter().max().unwrap() <= 8);
+}
+
+/// The generator's determinism contract: same seed, same programs.
+#[test]
+fn generator_is_deterministic() {
+    let (mut a, mut b) = (Rng::new(42), Rng::new(42));
+    for case in 0..10 {
+        let ga = generate(&mut a, case);
+        let gb = generate(&mut b, case);
+        assert_eq!(ga.trace.ops, gb.trace.ops, "case {case}");
+        assert_eq!(ga.spec.postcondition, gb.spec.postcondition, "case {case}");
+    }
+}
