@@ -8,10 +8,10 @@
 //! Run: `cargo run --release --example moe_alltoall -- [--nodes 8]`
 
 use gc3::compiler::{compile, CompileOpts};
-use gc3::coordinator::Registry;
 use gc3::nccl;
-use gc3::sched::SchedOpts;
+use gc3::planner::Planner;
 use gc3::sim::simulate;
+use gc3::tune::Collective;
 use gc3::topology::Topology;
 use gc3::util::cli::Args;
 
@@ -23,14 +23,15 @@ fn main() -> gc3::core::Result<()> {
     let nodes = args.usize("nodes", 8);
     let topo = Topology::a100(nodes);
 
-    // The coordinator's registry dispatches alltoall to the GC3 two-step
-    // kernel on this topology (NCCL fallback would apply on one node).
-    let mut reg = Registry::new(topo.clone());
-    let (ef, backend) = reg.alltoall()?;
+    // The planner dispatches alltoall to the GC3 two-step kernel on this
+    // topology (NCCL fallback would apply on one node) — and says why.
+    let mut planner = Planner::new(topo.clone());
+    let plan = planner.plan(Collective::AllToAll, 16384 * 4096 * 2)?;
     println!(
-        "MoE dispatch on {}: {} via {:?}\n",
-        topo.name, ef.name, backend
+        "MoE dispatch on {}: {} via {:?}\n  why: {}\n",
+        topo.name, plan.ef.name, plan.backend, plan.choice.reason
     );
+    let ef = plan.ef;
 
     // MoE sizing: tokens × hidden × 2 bytes routed per layer, twice
     // (dispatch + combine). GShard-ish shapes.
@@ -60,7 +61,7 @@ fn main() -> gc3::core::Result<()> {
     let two_step = compile(
         &gc3::collectives::alltoall::two_step(nodes, topo.gpus_per_node)?,
         "a2a",
-        &CompileOpts { sched: SchedOpts { sm_count: topo.sm_count }, ..Default::default() },
+        &CompileOpts::for_topo(&topo),
     )?;
     let t_gc3 = simulate(&two_step.ef, &topo, size)?.time;
     println!(

@@ -12,14 +12,13 @@
 use gc3::collectives::alltonext;
 use gc3::compiler::{compile, CompileOpts};
 use gc3::exec::{verify, NativeReducer};
-use gc3::sched::SchedOpts;
 use gc3::sim::simulate;
 use gc3::topology::Topology;
 
 fn main() -> gc3::core::Result<()> {
     let topo = Topology::a100(3);
     let (n, g) = (topo.nodes, topo.gpus_per_node);
-    let opts = CompileOpts { sched: SchedOpts { sm_count: topo.sm_count }, ..Default::default() };
+    let opts = CompileOpts::for_topo(&topo);
 
     let a2n_trace = alltonext::alltonext(n, g)?;
     let a2n = compile(&a2n_trace, "alltonext", &opts)?;

@@ -1,16 +1,20 @@
-//! Quickstart: write a custom collective in the GC3 DSL, compile it,
-//! inspect the GC3-EF, verify it byte-accurately, and price it on the
-//! simulated 8×A100 node.
+//! Quickstart: write a custom collective in the GC3 DSL, drive it through
+//! the staged compiler `Pipeline` (inspecting the intermediate IR and the
+//! per-stage timings), verify it byte-accurately, price it on the
+//! simulated 8×A100 node — then let the `Planner` facade pick a plan for
+//! a standard collective and explain its choice.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use gc3::compiler::{compile, CompileOpts};
+use gc3::compiler::{CompileOpts, Pipeline};
 use gc3::core::BufferId;
 use gc3::dsl::collective::CollectiveSpec;
-use gc3::dsl::{Program, SchedHint};
+use gc3::dsl::Program;
 use gc3::exec::{verify, NativeReducer};
+use gc3::planner::Planner;
 use gc3::sim::{simulate, Protocol};
 use gc3::topology::Topology;
+use gc3::tune::Collective;
 
 fn main() -> gc3::core::Result<()> {
     // --- 1. Write a collective: ring AllGather over 8 GPUs (7 DSL lines,
@@ -19,28 +23,35 @@ fn main() -> gc3::core::Result<()> {
     let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
     for r in 0..ranks {
         let c = p.chunk(BufferId::Input, r, 0, 1)?;
-        let mut cur = p.copy(c, BufferId::Output, r, r, SchedHint::none())?;
+        let mut cur = p.copy_to(c, BufferId::Output, r, r)?;
         for step in 1..ranks {
-            cur = p.copy(cur, BufferId::Output, (r + step) % ranks, r, SchedHint::none())?;
+            cur = p.copy_to(cur, BufferId::Output, (r + step) % ranks, r)?;
         }
     }
     let trace = p.finish()?;
 
-    // --- 2. Compile: trace → Chunk DAG → Instruction DAG → fusion →
-    //     threadblock assignment → GC3-EF. -------------------------------
+    // --- 2. Compile, stage by stage: trace → Chunk DAG → Instruction DAG
+    //     → schedule → GC3-EF. Each artifact is inspectable; `gc3 compile
+    //     --dump-ir=<stage>` prints the same renderings. ------------------
     let opts = CompileOpts::default().with_protocol(Protocol::LL128).with_instances(2);
-    let compiled = compile(&trace, "my_allgather", &opts)?;
+    let pipe = Pipeline::new(&opts);
+    let traced = pipe.trace(&trace)?;
+    let cdag = pipe.chunk_dag(traced)?;
+    let idag = pipe.inst_dag(cdag)?;
+    println!("instruction DAG after fusion (first 8 lines):");
+    println!("{}\n  ...\n", idag.dump().lines().take(8).collect::<Vec<_>>().join("\n"));
+    let sched = pipe.schedule(idag)?;
+    let compiled = pipe.emit(sched, "my_allgather")?;
     println!(
-        "compiled: {} chunk ops -> {} instructions ({} fused away), {} tbs/GPU\n",
+        "compiled: {} chunk ops -> {} instructions ({} fused away), {} tbs/GPU",
         compiled.stats.chunk_ops,
         compiled.stats.insts_after_fusion,
         compiled.stats.insts_before_fusion - compiled.stats.insts_after_fusion,
         compiled.stats.max_tbs
     );
-    // The Fig.-4-style listing of GPU 0's program.
-    let listing = compiled.ef.listing();
-    println!("{}", listing.lines().take(14).collect::<Vec<_>>().join("\n"));
-    println!("  ...\n");
+    println!("per-stage compile time:");
+    print!("{}", compiled.stats.render_stage_times());
+    println!();
 
     // --- 3. Verify functionally: execute the EF over host buffers and
     //     check every output slot holds exactly the right chunk. ---------
@@ -60,6 +71,24 @@ fn main() -> gc3::core::Result<()> {
             "{:>10}  {:>9.2} GB/s",
             gc3::util::human_bytes(size),
             rep.algbw / 1e9
+        );
+    }
+
+    // --- 5. For standard collectives, skip all of the above: the Planner
+    //     facade goes from (collective, size) to an executable plan and
+    //     records why each backend won. ----------------------------------
+    println!("\nplanner dispatch on {}:", topo.name);
+    let mut planner = Planner::new(topo);
+    for size in [32 * 1024u64, 2 << 20, 256 << 20] {
+        let plan = planner.plan(Collective::AllReduce, size)?;
+        let rep = plan.simulate()?;
+        println!(
+            "allreduce {:>8}: {:?} -> {} ({:.1} us)\n  why: {}",
+            gc3::util::human_bytes(size),
+            plan.backend,
+            plan.ef.name,
+            rep.time * 1e6,
+            plan.choice.reason
         );
     }
     Ok(())

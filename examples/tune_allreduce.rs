@@ -1,10 +1,9 @@
 //! Autotuner end-to-end: search the compile space on the simulator, save
-//! the tuned table, load it into a coordinator registry, and dispatch.
+//! the tuned table, load it into the Planner facade, and dispatch.
 //!
 //! Run: `cargo run --release --example tune_allreduce -- [--gpus 8] [--quick]`
 
-use gc3::coordinator::Registry;
-use gc3::sim::simulate;
+use gc3::planner::Planner;
 use gc3::topology::Topology;
 use gc3::tune::{tune, Collective, TuneOpts, TunedTable};
 use gc3::util::cli::Args;
@@ -34,19 +33,20 @@ fn main() -> gc3::core::Result<()> {
     let reloaded = TunedTable::from_json_str(&out.table.to_json_string())?;
     assert_eq!(reloaded, out.table);
 
-    // Serve it: the registry answers every call from the tuned table.
-    let mut reg = Registry::new(topo.clone());
-    reg.load_tuned(reloaded)?;
+    // Serve it: the planner answers every call from the tuned table and
+    // records the provenance of each choice.
+    let mut planner = Planner::new(topo.clone()).with_tuned(reloaded)?;
     for &size in &sizes {
-        let (ef, backend) = reg.allreduce(size)?;
-        let t = simulate(&ef, &topo, size)?.time;
+        let plan = planner.plan(Collective::AllReduce, size)?;
+        let t = plan.simulate()?.time;
         println!(
-            "allreduce {:>8}: {:?} -> {} ({}) {:.1} us",
+            "allreduce {:>8}: {:?} -> {} ({}) {:.1} us\n  why: {}",
             gc3::util::human_bytes(size),
-            backend,
-            ef.name,
-            ef.protocol,
-            t * 1e6
+            plan.backend,
+            plan.ef.name,
+            plan.ef.protocol,
+            t * 1e6,
+            plan.choice.reason
         );
     }
     Ok(())

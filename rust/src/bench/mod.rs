@@ -14,12 +14,11 @@
 pub mod perf;
 
 use crate::collectives::{allreduce, alltonext, basics};
-use crate::compiler::{compile, CompileOpts, Compiled};
+use crate::compiler::{compile, CompileOpts};
 use crate::core::Result;
 use crate::dsl::Trace;
 use crate::ef::EfProgram;
 use crate::nccl;
-use crate::sched::SchedOpts;
 use crate::sim::{simulate, Protocol};
 use crate::topology::Topology;
 use crate::util::human_bytes;
@@ -47,30 +46,22 @@ fn gbps(size: u64, time: f64) -> f64 {
     size as f64 / time / 1e9
 }
 
-fn opts_for(topo: &Topology) -> CompileOpts {
-    CompileOpts { sched: SchedOpts { sm_count: topo.sm_count }, ..Default::default() }
-}
-
-fn compile_cached(trace: &Trace, name: &str, opts: &CompileOpts) -> Result<Compiled> {
-    compile(trace, name, opts)
-}
-
 /// Fig. 7: AllToAll algorithmic bandwidth on `nodes` × 8 A100.
 /// Series: GC3 two-step, handwritten two-step, NCCL p2p, theoretical bound.
 pub fn fig7(nodes: usize, sizes: &[u64]) -> Result<Vec<Row>> {
     let topo = Topology::a100(nodes);
     let trace = crate::collectives::alltoall::two_step(nodes, topo.gpus_per_node)?;
-    let gc3 = compile_cached(&trace, "gc3_alltoall", &opts_for(&topo))?.ef;
-    let hw1 = compile_cached(
+    let gc3 = compile(&trace, "gc3_alltoall", &CompileOpts::for_topo(&topo))?.ef;
+    let hw1 = compile(
         &nccl::alltoall::handwritten_step1(nodes, topo.gpus_per_node)?,
         "hw1",
-        &opts_for(&topo),
+        &CompileOpts::for_topo(&topo),
     )?
     .ef;
-    let hw2 = compile_cached(
+    let hw2 = compile(
         &nccl::alltoall::handwritten_step2(nodes, topo.gpus_per_node)?,
         "hw2",
-        &opts_for(&topo),
+        &CompileOpts::for_topo(&topo),
     )?
     .ef;
     let bound = topo.alltoall_bound() / 1e9;
@@ -105,7 +96,7 @@ pub fn fig8(sizes: &[u64]) -> Result<Vec<Row>> {
     let gc3 = compile(
         &ring,
         "gc3_ring",
-        &CompileOpts { instances: 4, protocol: Protocol::LL128, ..opts_for(&topo) },
+        &CompileOpts::for_topo(&topo).with_instances(4).with_protocol(Protocol::LL128),
     )?
     .ef;
     let mut rows = Vec::new();
@@ -132,7 +123,7 @@ pub fn fig9(sizes: &[u64]) -> Result<Vec<Row>> {
     let hier = allreduce::hierarchical(2, topo.gpus_per_node)?;
     let gc3_efs: Vec<EfProgram> = Protocol::all()
         .iter()
-        .map(|&p| Ok(compile(&hier, "gc3_hier", &CompileOpts { protocol: p, ..opts_for(&topo) })?.ef))
+        .map(|&p| Ok(compile(&hier, "gc3_hier", &CompileOpts::for_topo(&topo).with_protocol(p))?.ef))
         .collect::<Result<_>>()?;
     let mut rows = Vec::new();
     for &size in sizes {
@@ -171,8 +162,8 @@ pub fn fig9(sizes: &[u64]) -> Result<Vec<Row>> {
 pub fn fig11(sizes: &[u64]) -> Result<Vec<Row>> {
     let topo = Topology::a100(3);
     let g = topo.gpus_per_node;
-    let a2n = compile_cached(&alltonext::alltonext(3, g)?, "gc3_alltonext", &opts_for(&topo))?.ef;
-    let base = compile_cached(&alltonext::baseline(3, g)?, "baseline", &opts_for(&topo))?.ef;
+    let a2n = compile(&alltonext::alltonext(3, g)?, "gc3_alltonext", &CompileOpts::for_topo(&topo))?.ef;
+    let base = compile(&alltonext::baseline(3, g)?, "baseline", &CompileOpts::for_topo(&topo))?.ef;
     let mut rows = Vec::new();
     for &size in sizes {
         let t_gc3 = simulate(&a2n, &topo, size)?.time;
@@ -196,7 +187,7 @@ pub fn abl_schedule(sizes: &[u64]) -> Result<Vec<Row>> {
         Ok(compile(
             trace,
             "abl",
-            &CompileOpts { instances: inst, protocol: Protocol::LL128, ..opts_for(&topo) },
+            &CompileOpts::for_topo(&topo).with_instances(inst).with_protocol(Protocol::LL128),
         )?
         .ef)
     };
@@ -232,7 +223,7 @@ pub fn abl_protocols(sizes: &[u64]) -> Result<Vec<Row>> {
                 compile(
                     &ring,
                     "abl",
-                    &CompileOpts { instances: 4, protocol: p, ..opts_for(&topo) },
+                    &CompileOpts::for_topo(&topo).with_instances(4).with_protocol(p),
                 )?
                 .ef,
             ))
@@ -260,12 +251,9 @@ pub fn abl_fusion(size: u64) -> Result<Vec<(String, usize, usize, f64, f64)>> {
     ];
     let mut out = Vec::new();
     for (name, trace) in cases {
-        let fused = compile(&trace, name, &CompileOpts { protocol: Protocol::LL128, ..opts_for(&topo) })?;
-        let raw = compile(
-            &trace,
-            name,
-            &CompileOpts { protocol: Protocol::LL128, ..opts_for(&topo) }.without_fusion(),
-        )?;
+        let ll128 = CompileOpts::for_topo(&topo).with_protocol(Protocol::LL128);
+        let fused = compile(&trace, name, &ll128)?;
+        let raw = compile(&trace, name, &ll128.clone().without_fusion())?;
         let t_fused = simulate(&fused.ef, &topo, size)?.time;
         let t_raw = simulate(&raw.ef, &topo, size)?.time;
         out.push((

@@ -11,7 +11,7 @@
 //! Driven by `benches/compiler_perf.rs`; usable from any harness.
 
 use crate::collectives::{allreduce, alltoall};
-use crate::compiler::{compile, CompileOpts, Compiled};
+use crate::compiler::{compile, CompileOpts, Compiled, StageTiming};
 use crate::core::Result;
 use crate::dsl::Trace;
 use crate::sim::{simulate, simulate_reference, Protocol};
@@ -35,6 +35,9 @@ pub struct PerfCase {
     pub flows: usize,
     /// Simulator throughput: events retired per wall-clock second.
     pub events_per_sec: f64,
+    /// Per-pipeline-stage compile wall-clock from [`crate::compiler::CompileStats`]
+    /// (one representative compile, not best-of-N) — EXPERIMENTS.md §API.
+    pub stages: Vec<StageTiming>,
 }
 
 /// Optimized-vs-reference engine comparison on one scenario.
@@ -165,6 +168,7 @@ fn measure(sc: &Scenario) -> Result<PerfCase> {
         events: rep.events,
         flows: rep.flows,
         events_per_sec: rep.events as f64 / t_sim.max(1e-12),
+        stages: compiled.stats.stage_times.clone(),
     })
 }
 
@@ -213,7 +217,7 @@ pub fn run_suite(head_to_head: bool) -> Result<(Vec<PerfCase>, Option<HeadToHead
 pub fn to_json(cases: &[PerfCase], h2h: Option<&HeadToHead>, tuned: &[TunedRow]) -> Json {
     let mut root = Json::obj();
     root.set("bench", Json::Str("compiler_perf".into()));
-    root.set("schema_version", Json::Num(2.0));
+    root.set("schema_version", Json::Num(3.0));
     let rows: Vec<Json> = cases
         .iter()
         .map(|c| {
@@ -226,6 +230,17 @@ pub fn to_json(cases: &[PerfCase], h2h: Option<&HeadToHead>, tuned: &[TunedRow])
             o.set("events", Json::Num(c.events as f64));
             o.set("flows", Json::Num(c.flows as f64));
             o.set("events_per_sec", Json::Num(c.events_per_sec));
+            let stages: Vec<Json> = c
+                .stages
+                .iter()
+                .map(|t| {
+                    let mut row = Json::obj();
+                    row.set("stage", Json::Str(t.stage.to_string()));
+                    row.set("ms", Json::Num(t.ms));
+                    row
+                })
+                .collect();
+            o.set("stages", Json::Arr(stages));
             o
         })
         .collect();
@@ -313,6 +328,10 @@ mod tests {
             events: 42,
             flows: 7,
             events_per_sec: 16800.0,
+            stages: vec![
+                StageTiming { stage: "trace", ms: 0.1 },
+                StageTiming { stage: "ef", ms: 0.4 },
+            ],
         }];
         let h = HeadToHead {
             scenario: "x".into(),
@@ -338,12 +357,16 @@ mod tests {
             "cases",
             "tuned_vs_default",
             "choice",
+            "stages",
         ] {
             assert!(s.contains(field), "missing {field} in {s}");
         }
         let arr = j.get("cases").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("events").and_then(|e| e.as_usize()), Some(42));
+        let stages = arr[0].get("stages").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].get("stage").and_then(|e| e.as_str()), Some("trace"));
         let tv = j.get("tuned_vs_default").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(tv[0].get("size_bytes").and_then(|e| e.as_usize()), Some(65536));
         // No tuned rows → no section (old consumers keep working).

@@ -12,7 +12,7 @@
 
 use crate::core::{BufferId, Rank, Result};
 use crate::dsl::collective::CollectiveSpec;
-use crate::dsl::{Program, SchedHint, Trace};
+use crate::dsl::{Program, Trace};
 
 /// Fig. 1a: Two-Step AllToAll over `nodes × gpus` ranks.
 ///
@@ -30,7 +30,7 @@ pub fn two_step(nodes: usize, gpus: usize) -> Result<Trace> {
                 for i in 0..g_ {
                     for g in 0..g_ {
                         let c = p.chunk(BufferId::Input, rank(m, i), rank(n, g), 1)?;
-                        p.copy(c, BufferId::Output, rank(n, g), rank(m, i), SchedHint::none())?;
+                        p.copy_to(c, BufferId::Output, rank(n, g), rank(m, i))?;
                     }
                 }
             } else {
@@ -39,13 +39,13 @@ pub fn two_step(nodes: usize, gpus: usize) -> Result<Trace> {
                 for i in 0..g_ {
                     for g in 0..g_ {
                         let c = p.chunk(BufferId::Input, rank(m, i), rank(n, g), 1)?;
-                        p.copy(c, BufferId::Scratch, rank(m, g), n * g_ + i, SchedHint::none())?;
+                        p.copy_to(c, BufferId::Scratch, rank(m, g), n * g_ + i)?;
                     }
                 }
                 // Step 2: one G-chunk IB transfer per (m,g) → (n,g).
                 for g in 0..g_ {
                     let c = p.chunk(BufferId::Scratch, rank(m, g), n * g_, g_)?;
-                    p.copy(c, BufferId::Output, rank(n, g), m * g_, SchedHint::none())?;
+                    p.copy_to(c, BufferId::Output, rank(n, g), m * g_)?;
                 }
             }
         }
@@ -60,7 +60,7 @@ pub fn direct(ranks: usize) -> Result<Trace> {
     for src in 0..ranks {
         for dst in 0..ranks {
             let c = p.chunk(BufferId::Input, src, dst, 1)?;
-            p.copy(c, BufferId::Output, dst, src, SchedHint::none())?;
+            p.copy_to(c, BufferId::Output, dst, src)?;
         }
     }
     p.finish()

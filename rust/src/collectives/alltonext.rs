@@ -23,7 +23,7 @@ pub fn alltonext(nodes: usize, gpus: usize) -> Result<Trace> {
             if g != g_ - 1 {
                 // Direct intra-node send: whole buffer in one NVLink copy.
                 let c = p.chunk(BufferId::Input, rank(n, g), 0, g_)?;
-                p.copy(c, BufferId::Output, rank(n, g + 1), 0, SchedHint::none())?;
+                p.copy_to(c, BufferId::Output, rank(n, g + 1), 0)?;
                 continue;
             }
             if n == nodes - 1 {
@@ -37,14 +37,14 @@ pub fn alltonext(nodes: usize, gpus: usize) -> Result<Trace> {
                     // The boundary GPU's own NIC: direct IB, then NVLink
                     // into the destination's output.
                     let c = p.copy(c, BufferId::Scratch, rank(n + 1, i), 0, SchedHint::chan(1))?;
-                    p.copy(c, BufferId::Output, rank(n + 1, 0), i, SchedHint::none())?;
+                    p.copy_to(c, BufferId::Output, rank(n + 1, 0), i)?;
                 } else {
                     // Scatter over NVLink, IB on the helper's own link
                     // (channel directive keeps the IB sends parallel),
                     // gather over NVLink.
-                    let c = p.copy(c, BufferId::Scratch, rank(n, i), 0, SchedHint::none())?;
+                    let c = p.copy_to(c, BufferId::Scratch, rank(n, i), 0)?;
                     let c = p.copy(c, BufferId::Scratch, rank(n + 1, i), 1, SchedHint::chan(1))?;
-                    p.copy(c, BufferId::Output, rank(n + 1, 0), i, SchedHint::none())?;
+                    p.copy_to(c, BufferId::Output, rank(n + 1, 0), i)?;
                 }
             }
         }
@@ -56,11 +56,10 @@ pub fn alltonext(nodes: usize, gpus: usize) -> Result<Trace> {
 /// GPU (one NCCL p2p send) — the cross-node hop uses a single IB link.
 pub fn baseline(nodes: usize, gpus: usize) -> Result<Trace> {
     let ranks = nodes * gpus;
-    let mut p = Program::new(CollectiveSpec::alltonext(ranks, gpus))
-;
+    let mut p = Program::new(CollectiveSpec::alltonext(ranks, gpus));
     for r in 0..ranks - 1 {
         let c = p.chunk(BufferId::Input, r, 0, gpus)?;
-        p.copy(c, BufferId::Output, r + 1, 0, SchedHint::none())?;
+        p.copy_to(c, BufferId::Output, r + 1, 0)?;
     }
     p.finish()
 }

@@ -4,16 +4,16 @@
 
 use crate::core::{BufferId, Result};
 use crate::dsl::collective::CollectiveSpec;
-use crate::dsl::{Program, SchedHint, Trace};
+use crate::dsl::{Program, Trace};
 
 /// Ring AllGather: rank `r`'s chunk hops around the ring `R−1` times.
 pub fn allgather_ring(ranks: usize) -> Result<Trace> {
     let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
     for r in 0..ranks {
         let c = p.chunk(BufferId::Input, r, 0, 1)?;
-        let mut cur = p.copy(c, BufferId::Output, r, r, SchedHint::none())?;
+        let mut cur = p.copy_to(c, BufferId::Output, r, r)?;
         for step in 1..ranks {
-            cur = p.copy(cur, BufferId::Output, (r + step) % ranks, r, SchedHint::none())?;
+            cur = p.copy_to(cur, BufferId::Output, (r + step) % ranks, r)?;
         }
     }
     p.finish()
@@ -29,10 +29,10 @@ pub fn reduce_scatter_ring(ranks: usize) -> Result<Trace> {
         let mut c = p.chunk(BufferId::Input, first, d, 1)?;
         for step in 2..=ranks {
             let at = p.chunk(BufferId::Input, (d + step) % ranks, d, 1)?;
-            c = p.reduce(at, c, SchedHint::none())?;
+            c = p.reduce_into(at, c)?;
         }
         // c is the full sum, resident at rank d's input; move to output.
-        p.copy(c, BufferId::Output, d, 0, SchedHint::none())?;
+        p.copy_to(c, BufferId::Output, d, 0)?;
     }
     p.finish()
 }
@@ -41,9 +41,9 @@ pub fn reduce_scatter_ring(ranks: usize) -> Result<Trace> {
 pub fn broadcast_ring(ranks: usize, root: usize) -> Result<Trace> {
     let mut p = Program::new(CollectiveSpec::broadcast(ranks, root, 1));
     let c = p.chunk(BufferId::Input, root, 0, 1)?;
-    let mut cur = p.copy(c, BufferId::Output, root, 0, SchedHint::none())?;
+    let mut cur = p.copy_to(c, BufferId::Output, root, 0)?;
     for step in 1..ranks {
-        cur = p.copy(cur, BufferId::Output, (root + step) % ranks, 0, SchedHint::none())?;
+        cur = p.copy_to(cur, BufferId::Output, (root + step) % ranks, 0)?;
     }
     p.finish()
 }
@@ -55,13 +55,13 @@ pub fn broadcast_tree(ranks: usize, root: usize) -> Result<Trace> {
     // Relabel so the root is rank 0 of a heap-ordered binary tree.
     let relabel = |v: usize| (v + root) % ranks;
     let c = p.chunk(BufferId::Input, root, 0, 1)?;
-    p.copy(c, BufferId::Output, root, 0, SchedHint::none())?;
+    p.copy_to(c, BufferId::Output, root, 0)?;
     // BFS order guarantees parents are written before children read.
     for v in 0..ranks {
         for child in [2 * v + 1, 2 * v + 2] {
             if child < ranks {
                 let c = p.chunk(BufferId::Output, relabel(v), 0, 1)?;
-                p.copy(c, BufferId::Output, relabel(child), 0, SchedHint::none())?;
+                p.copy_to(c, BufferId::Output, relabel(child), 0)?;
             }
         }
     }

@@ -25,6 +25,7 @@ pub mod basics;
 use crate::core::Result;
 use crate::dsl::Trace;
 use crate::topology::Topology;
+use std::collections::HashMap;
 
 /// A named, ready-to-compile GC3 program.
 pub struct NamedProgram {
@@ -32,6 +33,44 @@ pub struct NamedProgram {
     /// Lines of DSL a user writes (the paper's Figure programs).
     pub dsl_lines: usize,
     pub trace: Trace,
+}
+
+/// The program library with a name-keyed index: O(1) lookup by name
+/// instead of the linear scan every CLI verb used to do.
+pub struct Library {
+    programs: Vec<NamedProgram>,
+    index: HashMap<&'static str, usize>,
+}
+
+impl Library {
+    /// Build every library program for `topo` and index them by name.
+    pub fn build(topo: &Topology) -> Result<Library> {
+        let programs = library(topo)?;
+        let index = programs.iter().enumerate().map(|(i, p)| (p.name, i)).collect();
+        Ok(Library { programs, index })
+    }
+
+    /// Name-keyed lookup.
+    pub fn get(&self, name: &str) -> Option<&NamedProgram> {
+        self.index.get(name).map(|&i| &self.programs[i])
+    }
+
+    /// Program names in library order — error messages list these.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.programs.iter().map(|p| p.name).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &NamedProgram> {
+        self.programs.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.programs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.programs.is_empty()
+    }
 }
 
 /// Build every library program for a topology (used by `gc3 list` and the
@@ -113,6 +152,25 @@ mod tests {
                     .unwrap_or_else(|e| panic!("{}: {e}\n{}", prog.name, c.ef.listing()));
             }
         }
+    }
+
+    /// The indexed library resolves every program it lists, and nothing
+    /// else — same contents as the flat `library()` vector.
+    #[test]
+    fn library_index_matches_flat_list() {
+        let topo = Topology::a100_single();
+        let lib = Library::build(&topo).unwrap();
+        let flat = library(&topo).unwrap();
+        assert_eq!(lib.len(), flat.len());
+        assert!(!lib.is_empty());
+        assert_eq!(lib.names(), flat.iter().map(|p| p.name).collect::<Vec<_>>());
+        for p in &flat {
+            let hit = lib.get(p.name).unwrap();
+            assert_eq!(hit.dsl_lines, p.dsl_lines);
+            assert_eq!(hit.trace.op_count(), p.trace.op_count());
+        }
+        assert!(lib.get("frobnicate").is_none());
+        assert_eq!(lib.iter().count(), flat.len());
     }
 
     /// The same library also survives instance replication ×2.

@@ -1,17 +1,35 @@
 //! The end-to-end GC3 compiler driver (Fig. 3 / Fig. 6).
 //!
-//! Chains every stage: instance replication (§5.3.2) → Chunk DAG tracing +
-//! validation (§5.1) → instruction generation (§5.2) → peephole fusion
-//! (§5.3.1) → threadblock assignment + synchronization insertion (§5.2,
-//! §5.4) → GC3-EF (§4.1).
+//! The compiler is a staged [`Pipeline`] with typed intermediate
+//! artifacts, one per arrow of the paper's Fig. 3:
+//!
+//! ```text
+//!   Trace ──replicate──▶ Traced ──build+validate──▶ ChunkDagStage
+//!         ──lower+fuse──▶ InstDagStage ──assign+sync──▶ ScheduledStage
+//!         ──emit──▶ Compiled (GC3-EF + CompileStats)
+//! ```
+//!
+//! Callers that just want an EF use [`compile`] — a thin wrapper over
+//! [`Pipeline::run`] with identical semantics. Callers that want to stop
+//! at a stage, disable either optional pass (instance replication
+//! §5.3.2, peephole fusion §5.3.1 — each is anchored to the stage it
+//! rewrites), or print an intermediate IR (`gc3 compile
+//! --dump-ir=<stage>`) construct a [`Pipeline`] directly. Every stage
+//! records its wall-clock into [`CompileStats::stage_times`], which
+//! `bench::perf` serializes into `BENCH_compiler_perf.json`
+//! (EXPERIMENTS.md §API).
 
-use crate::chunkdag::{validate::validate, ChunkDag};
+pub mod pipeline;
+
+pub use pipeline::{
+    ChunkDagStage, InstDagStage, IrStage, Pass, Pipeline, ScheduledStage, Traced,
+};
+
 use crate::core::Result;
 use crate::dsl::Trace;
 use crate::ef::EfProgram;
-use crate::instdag::fusion::{fuse, FusionStats};
-use crate::instdag::{instances::replicate, lower::lower};
-use crate::sched::{emit_ef, SchedOpts, Schedule};
+use crate::instdag::fusion::FusionStats;
+use crate::sched::SchedOpts;
 use crate::sim::Protocol;
 
 /// Compiler options.
@@ -40,7 +58,9 @@ impl Default for CompileOpts {
 
 impl CompileOpts {
     /// Defaults with the topology's SM cap — the construction every
-    /// topology-aware caller (CLI, registry, benches, tuner) needs.
+    /// topology-aware caller (CLI, planner, benches, tuner) needs. Combine
+    /// with the `with_*` builders; outside this module and its tests,
+    /// options are built exclusively through these constructors.
     pub fn for_topo(topo: &crate::topology::Topology) -> Self {
         CompileOpts { sched: SchedOpts { sm_count: topo.sm_count }, ..Default::default() }
     }
@@ -61,8 +81,16 @@ impl CompileOpts {
     }
 }
 
-/// Statistics collected along the pipeline — surfaced by `gc3 compile -v`
-/// and the ablation benches.
+/// Wall-clock of one pipeline stage, in run order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageTiming {
+    /// Stage name — one of [`IrStage::name`].
+    pub stage: &'static str,
+    pub ms: f64,
+}
+
+/// Statistics collected along the pipeline — surfaced by `gc3 compile -v`,
+/// the ablation benches, and (per-stage timings) `BENCH_compiler_perf.json`.
 #[derive(Clone, Debug, Default)]
 pub struct CompileStats {
     pub chunk_ops: usize,
@@ -72,6 +100,31 @@ pub struct CompileStats {
     pub max_tbs: usize,
     pub max_channels: usize,
     pub nops_inserted: usize,
+    /// Per-stage wall-clock, appended as each stage completes. A full
+    /// [`Pipeline::run`] yields exactly the five [`IrStage`] entries.
+    pub stage_times: Vec<StageTiming>,
+}
+
+impl CompileStats {
+    /// Wall-clock of one stage by name, if that stage ran.
+    pub fn stage_ms(&self, stage: &str) -> Option<f64> {
+        self.stage_times.iter().find(|t| t.stage == stage).map(|t| t.ms)
+    }
+
+    /// Total wall-clock across all recorded stages.
+    pub fn total_ms(&self) -> f64 {
+        self.stage_times.iter().map(|t| t.ms).sum()
+    }
+
+    /// Aligned per-stage timing table, one indented line per stage — the
+    /// rendering `gc3 compile -v`, `gc3 plan -v` and the examples print.
+    pub fn render_stage_times(&self) -> String {
+        let mut out = String::new();
+        for t in &self.stage_times {
+            out.push_str(&format!("  {:10} {:9.3} ms\n", t.stage, t.ms));
+        }
+        out
+    }
 }
 
 /// A compiled program: the GC3-EF plus pipeline statistics.
@@ -81,30 +134,11 @@ pub struct Compiled {
     pub stats: CompileStats,
 }
 
-/// Compile a traced GC3 program to GC3-EF.
+/// Compile a traced GC3 program to GC3-EF — a thin wrapper over
+/// [`Pipeline::run`]; the staged API and this function emit bit-identical
+/// EFs (pinned by the golden snapshot suite in `rust/tests/golden_api.rs`).
 pub fn compile(trace: &Trace, name: &str, opts: &CompileOpts) -> Result<Compiled> {
-    let trace = replicate(trace, opts.instances);
-    let cdag = ChunkDag::build(&trace)?;
-    validate(&cdag)?;
-    let mut idag = lower(&cdag)?;
-    let mut stats = CompileStats {
-        chunk_ops: cdag.num_ops(),
-        insts_before_fusion: idag.live_count(),
-        ..Default::default()
-    };
-    if opts.fuse {
-        stats.fusion = fuse(&mut idag);
-    } else {
-        idag.compact();
-    }
-    stats.insts_after_fusion = idag.live_count();
-    let sched = Schedule::build(&idag, &opts.sched)?;
-    stats.max_tbs = sched.max_tbs();
-    stats.max_channels =
-        (0..idag.spec.num_ranks).map(|r| sched.channels_at(r)).max().unwrap_or(0);
-    let ef = emit_ef(&idag, &sched, opts.protocol, name)?;
-    stats.nops_inserted = ef.num_insts() - stats.insts_after_fusion;
-    Ok(Compiled { ef, stats })
+    Pipeline::new(opts).run(trace, name)
 }
 
 #[cfg(test)]
@@ -112,15 +146,15 @@ mod tests {
     use super::*;
     use crate::core::BufferId;
     use crate::dsl::collective::CollectiveSpec;
-    use crate::dsl::{Program, SchedHint};
+    use crate::dsl::Program;
 
     fn ring_allgather(ranks: usize) -> Trace {
         let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
         for r in 0..ranks {
             let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
-            let mut cur = p.copy(c, BufferId::Output, r, r, SchedHint::none()).unwrap();
+            let mut cur = p.copy_to(c, BufferId::Output, r, r).unwrap();
             for s in 1..ranks {
-                cur = p.copy(cur, BufferId::Output, (r + s) % ranks, r, SchedHint::none()).unwrap();
+                cur = p.copy_to(cur, BufferId::Output, (r + s) % ranks, r).unwrap();
             }
         }
         p.finish().unwrap()
@@ -159,5 +193,16 @@ mod tests {
         opts.sched.sm_count = 4;
         let err = compile(&ring_allgather(8), "ag8", &opts).unwrap_err();
         assert!(err.to_string().contains("threadblocks"), "{err}");
+    }
+
+    #[test]
+    fn every_stage_is_timed() {
+        let c = compile(&ring_allgather(4), "ag4", &CompileOpts::default()).unwrap();
+        let names: Vec<&str> = c.stats.stage_times.iter().map(|t| t.stage).collect();
+        assert_eq!(names, vec!["trace", "chunkdag", "instdag", "schedule", "ef"]);
+        assert!(c.stats.stage_times.iter().all(|t| t.ms >= 0.0));
+        assert_eq!(c.stats.stage_ms("chunkdag"), Some(c.stats.stage_times[1].ms));
+        assert!(c.stats.total_ms() >= c.stats.stage_times[0].ms);
+        assert_eq!(c.stats.stage_ms("nope"), None);
     }
 }

@@ -1,0 +1,498 @@
+//! The staged compiler pipeline: typed artifacts, optional passes,
+//! per-stage timing, and Fig.-4-style IR dumps.
+//!
+//! Each stage method consumes the previous artifact and returns the next,
+//! so a caller can stop anywhere, inspect the intermediate IR
+//! ([`Traced::dump`], [`ChunkDagStage::dump`], …) and hand the artifact
+//! back to the pipeline to continue. [`Pipeline::run`] chains all five
+//! stages — exactly the sequence the legacy [`super::compile`] free
+//! function performed, so both paths emit bit-identical EFs.
+//!
+//! The two *optional* passes — instance replication (§5.3.2) and peephole
+//! fusion (§5.3.1) — are modeled explicitly as [`Pass`] values: the
+//! pipeline executes each enabled pass exactly once, anchored at the
+//! stage it rewrites (replication rewrites the trace, fusion rewrites the
+//! Instruction DAG), so the pass list is a *set* of enabled rewrites and
+//! the stage anchoring fixes execution order. Disabling fusion falls back
+//! to a plain dead-instruction compaction, matching
+//! `CompileOpts::fuse = false`.
+
+use std::time::Instant;
+
+use super::{Compiled, CompileOpts, CompileStats, StageTiming};
+use crate::chunkdag::{validate::validate, ChunkDag, ChunkOpKind};
+use crate::core::Result;
+use crate::dsl::{SchedHint, Trace, TraceOp};
+use crate::instdag::fusion::fuse;
+use crate::instdag::{instances::replicate, lower::lower, InstDag};
+use crate::sched::{emit_ef, Schedule};
+
+/// An optional, re-orderable compiler pass. The mandatory stages (tracing,
+/// lowering, scheduling, emission) are not passes — they always run.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Pass {
+    /// Instance replication (§5.3.2): rewrite the trace into
+    /// `opts.instances` parallel copies over subdivided chunks. A no-op at
+    /// `instances = 1`.
+    Replicate,
+    /// Peephole fusion (§5.3.1): rcs/rrcs/rrs rewriting on the
+    /// Instruction DAG. When absent, the DAG is compacted instead.
+    Fuse,
+}
+
+impl Pass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pass::Replicate => "replicate",
+            Pass::Fuse => "fuse",
+        }
+    }
+}
+
+/// Names one pipeline stage — the `--dump-ir=<stage>` argument and the
+/// key of [`CompileStats::stage_times`] rows.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum IrStage {
+    /// The (possibly replicated) chunk-op trace.
+    Trace,
+    /// The Chunk DAG (§5.1) with true/false dependences.
+    ChunkDag,
+    /// The Instruction DAG (§5.2) after the instruction-level passes.
+    InstDag,
+    /// Threadblock assignment (§5.2, §5.4).
+    Schedule,
+    /// The final GC3-EF listing (Fig. 4).
+    Ef,
+}
+
+impl IrStage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IrStage::Trace => "trace",
+            IrStage::ChunkDag => "chunkdag",
+            IrStage::InstDag => "instdag",
+            IrStage::Schedule => "schedule",
+            IrStage::Ef => "ef",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<IrStage> {
+        match s.to_ascii_lowercase().as_str() {
+            "trace" => Some(IrStage::Trace),
+            "chunkdag" => Some(IrStage::ChunkDag),
+            "instdag" => Some(IrStage::InstDag),
+            "schedule" => Some(IrStage::Schedule),
+            "ef" => Some(IrStage::Ef),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [IrStage; 5] {
+        [IrStage::Trace, IrStage::ChunkDag, IrStage::InstDag, IrStage::Schedule, IrStage::Ef]
+    }
+}
+
+fn fmt_hint(h: &SchedHint) -> String {
+    if *h == SchedHint::none() {
+        return String::new();
+    }
+    let part = |name: &str, v: Option<usize>| v.map(|x| format!(" {name}={x}")).unwrap_or_default();
+    format!(
+        "  [{}{}{} ]",
+        part("sendtb", h.sendtb),
+        part("recvtb", h.recvtb),
+        part("ch", h.ch)
+    )
+}
+
+/// Stage 1 artifact: the trace after the trace-level passes (replication).
+#[derive(Clone, Debug)]
+pub struct Traced {
+    pub trace: Trace,
+    pub stats: CompileStats,
+}
+
+impl Traced {
+    /// Chunk-op listing, one line per DSL operation.
+    pub fn dump(&self) -> String {
+        let spec = &self.trace.spec;
+        let mut out = format!(
+            "== trace: {} ({} ranks, {} in / {} out chunks), {} ops\n",
+            spec.name,
+            spec.num_ranks,
+            spec.in_chunks,
+            spec.out_chunks,
+            self.trace.ops.len()
+        );
+        for (i, op) in self.trace.ops.iter().enumerate() {
+            let kind = match op {
+                TraceOp::Copy { .. } => "copy  ",
+                TraceOp::Reduce { .. } => "reduce",
+            };
+            out.push_str(&format!(
+                "{i:5}: {kind} {} -> {}{}\n",
+                op.src(),
+                op.dst(),
+                fmt_hint(op.hint())
+            ));
+        }
+        out
+    }
+}
+
+/// Stage 2 artifact: the validated Chunk DAG (§5.1).
+#[derive(Clone, Debug)]
+pub struct ChunkDagStage {
+    pub dag: ChunkDag,
+    pub stats: CompileStats,
+}
+
+impl ChunkDagStage {
+    /// Node listing with dependence edges (true and false alike).
+    pub fn dump(&self) -> String {
+        let mut out = format!(
+            "== chunkdag: {} nodes ({} chunk ops)\n",
+            self.dag.nodes.len(),
+            self.dag.num_ops()
+        );
+        for n in &self.dag.nodes {
+            let kind = match n.op {
+                ChunkOpKind::Start => "start ",
+                ChunkOpKind::Copy => "copy  ",
+                ChunkOpKind::Reduce => "reduce",
+            };
+            let src = n.src.map(|s| format!("{s} -> ")).unwrap_or_default();
+            let deps = if n.deps.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    "  deps=[{}]",
+                    n.deps.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+                )
+            };
+            out.push_str(&format!("n{:<4} {kind} {src}{}{deps}\n", n.id, n.dst));
+        }
+        out
+    }
+}
+
+/// Stage 3 artifact: the Instruction DAG (§5.2) after the
+/// instruction-level passes (fusion or compaction).
+#[derive(Clone, Debug)]
+pub struct InstDagStage {
+    pub dag: InstDag,
+    pub stats: CompileStats,
+}
+
+impl InstDagStage {
+    /// Per-rank instruction listing with processing/communication edges.
+    pub fn dump(&self) -> String {
+        let mut out = format!(
+            "== instdag: {} live instructions ({} before fusion)\n",
+            self.dag.live_count(),
+            self.stats.insts_before_fusion
+        );
+        for rank in 0..self.dag.spec.num_ranks {
+            out.push_str(&format!("rank {rank}:\n"));
+            for i in self.dag.rank_insts(rank) {
+                let src = i.src.map(|s| format!(" src={s}")).unwrap_or_default();
+                let dst = i.dst.map(|d| format!(" dst={d}")).unwrap_or_default();
+                let speer = i.send_peer.map(|p| format!(" send->r{p}")).unwrap_or_default();
+                let rpeer = i.recv_peer.map(|p| format!(" recv<-r{p}")).unwrap_or_default();
+                let deps = if i.deps.is_empty() {
+                    String::new()
+                } else {
+                    format!(
+                        " deps=[{}]",
+                        i.deps.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+                    )
+                };
+                out.push_str(&format!(
+                    "  i{:<4} {:6}{src}{dst}{speer}{rpeer}{deps}{}\n",
+                    i.id,
+                    i.op.name(),
+                    fmt_hint(&i.hint)
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Stage 4 artifact: the Instruction DAG plus its threadblock schedule.
+#[derive(Clone, Debug)]
+pub struct ScheduledStage {
+    pub dag: InstDag,
+    pub schedule: Schedule,
+    pub stats: CompileStats,
+}
+
+impl ScheduledStage {
+    /// Per-threadblock placement: connections and instruction order.
+    pub fn dump(&self) -> String {
+        let mut out = format!(
+            "== schedule: max {} tbs/GPU\n",
+            self.schedule.max_tbs()
+        );
+        for (rank, tbs) in self.schedule.tbs.iter().enumerate() {
+            for tb in tbs {
+                let conn = |c: Option<(usize, usize)>, tag: &str| {
+                    c.map(|(peer, ch)| format!(" {tag}=(r{peer},ch{ch})")).unwrap_or_default()
+                };
+                let insts = tb
+                    .insts
+                    .iter()
+                    .map(|&i| format!("i{i}:{}", self.dag.insts[i].op.name()))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                out.push_str(&format!(
+                    "rank {rank} tb{}{}{}: {insts}\n",
+                    tb.id,
+                    conn(tb.send, "send"),
+                    conn(tb.recv, "recv")
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// The staged compiler (Fig. 3). See the module docs for the stage map.
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    opts: CompileOpts,
+    passes: Vec<Pass>,
+}
+
+impl Pipeline {
+    /// A pipeline matching `opts` exactly: replication always in the pass
+    /// list (a no-op at `instances = 1`), fusion iff `opts.fuse`.
+    pub fn new(opts: &CompileOpts) -> Pipeline {
+        let mut passes = vec![Pass::Replicate];
+        if opts.fuse {
+            passes.push(Pass::Fuse);
+        }
+        Pipeline { opts: opts.clone(), passes }
+    }
+
+    /// Default options for `topo` — shorthand for
+    /// `Pipeline::new(&CompileOpts::for_topo(topo))`.
+    pub fn for_topo(topo: &crate::topology::Topology) -> Pipeline {
+        Pipeline::new(&CompileOpts::for_topo(topo))
+    }
+
+    /// Replace the pass list wholesale. The list is a set of enabled
+    /// passes: each runs at most once, at the stage it is anchored to.
+    pub fn with_passes(mut self, passes: Vec<Pass>) -> Pipeline {
+        self.passes = passes;
+        self
+    }
+
+    /// Remove every occurrence of `pass` from the pass list.
+    pub fn without_pass(mut self, pass: Pass) -> Pipeline {
+        self.passes.retain(|&p| p != pass);
+        self
+    }
+
+    pub fn opts(&self) -> &CompileOpts {
+        &self.opts
+    }
+
+    pub fn passes(&self) -> &[Pass] {
+        &self.passes
+    }
+
+    fn enabled(&self, pass: Pass) -> bool {
+        self.passes.contains(&pass)
+    }
+
+    /// Stage 1 — trace-level passes: instance replication (§5.3.2).
+    pub fn trace(&self, trace: &Trace) -> Result<Traced> {
+        let t0 = Instant::now();
+        let trace = if self.enabled(Pass::Replicate) {
+            replicate(trace, self.opts.instances)
+        } else {
+            trace.clone()
+        };
+        let mut stats = CompileStats::default();
+        stats.stage_times.push(StageTiming {
+            stage: IrStage::Trace.name(),
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(Traced { trace, stats })
+    }
+
+    /// Stage 2 — build the Chunk DAG and validate it symbolically (§5.1).
+    pub fn chunk_dag(&self, t: Traced) -> Result<ChunkDagStage> {
+        let Traced { trace, mut stats } = t;
+        let t0 = Instant::now();
+        let dag = ChunkDag::build(&trace)?;
+        validate(&dag)?;
+        stats.chunk_ops = dag.num_ops();
+        stats.stage_times.push(StageTiming {
+            stage: IrStage::ChunkDag.name(),
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(ChunkDagStage { dag, stats })
+    }
+
+    /// Stage 3 — lower to instructions (§5.2), then the instruction-level
+    /// passes: fusion if in the pass list (§5.3.1), else compaction.
+    pub fn inst_dag(&self, s: ChunkDagStage) -> Result<InstDagStage> {
+        let ChunkDagStage { dag: cdag, mut stats } = s;
+        let t0 = Instant::now();
+        let mut dag = lower(&cdag)?;
+        stats.insts_before_fusion = dag.live_count();
+        if self.enabled(Pass::Fuse) {
+            stats.fusion = fuse(&mut dag);
+        } else {
+            dag.compact();
+        }
+        stats.insts_after_fusion = dag.live_count();
+        stats.stage_times.push(StageTiming {
+            stage: IrStage::InstDag.name(),
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(InstDagStage { dag, stats })
+    }
+
+    /// Stage 4 — threadblock assignment + synchronization (§5.2, §5.4).
+    pub fn schedule(&self, s: InstDagStage) -> Result<ScheduledStage> {
+        let InstDagStage { dag, mut stats } = s;
+        let t0 = Instant::now();
+        let schedule = Schedule::build(&dag, &self.opts.sched)?;
+        stats.max_tbs = schedule.max_tbs();
+        stats.max_channels =
+            (0..dag.spec.num_ranks).map(|r| schedule.channels_at(r)).max().unwrap_or(0);
+        stats.stage_times.push(StageTiming {
+            stage: IrStage::Schedule.name(),
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(ScheduledStage { dag, schedule, stats })
+    }
+
+    /// Stage 5 — emit GC3-EF (§4.1).
+    pub fn emit(&self, s: ScheduledStage, name: &str) -> Result<Compiled> {
+        let ScheduledStage { dag, schedule, mut stats } = s;
+        let t0 = Instant::now();
+        let ef = emit_ef(&dag, &schedule, self.opts.protocol, name)?;
+        stats.nops_inserted = ef.num_insts() - stats.insts_after_fusion;
+        stats.stage_times.push(StageTiming {
+            stage: IrStage::Ef.name(),
+            ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(Compiled { ef, stats })
+    }
+
+    /// Run all five stages. Semantics are identical to the legacy
+    /// [`super::compile`] free function (which now delegates here).
+    pub fn run(&self, trace: &Trace, name: &str) -> Result<Compiled> {
+        let traced = self.trace(trace)?;
+        let cdag = self.chunk_dag(traced)?;
+        let idag = self.inst_dag(cdag)?;
+        let sched = self.schedule(idag)?;
+        self.emit(sched, name)
+    }
+
+    /// Render the intermediate IR at `stage` — the `gc3 compile
+    /// --dump-ir=<stage>` backend (Fig.-4-style listing for `ef`).
+    pub fn dump_ir(&self, trace: &Trace, name: &str, stage: IrStage) -> Result<String> {
+        let traced = self.trace(trace)?;
+        if stage == IrStage::Trace {
+            return Ok(traced.dump());
+        }
+        let cdag = self.chunk_dag(traced)?;
+        if stage == IrStage::ChunkDag {
+            return Ok(cdag.dump());
+        }
+        let idag = self.inst_dag(cdag)?;
+        if stage == IrStage::InstDag {
+            return Ok(idag.dump());
+        }
+        let sched = self.schedule(idag)?;
+        if stage == IrStage::Schedule {
+            return Ok(sched.dump());
+        }
+        Ok(self.emit(sched, name)?.listing())
+    }
+}
+
+impl Compiled {
+    /// The Fig.-4-style EF listing — the `--dump-ir=ef` rendering.
+    pub fn listing(&self) -> String {
+        self.ef.listing()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::basics;
+    use crate::sim::Protocol;
+
+    fn opts() -> CompileOpts {
+        CompileOpts::default().with_protocol(Protocol::LL128)
+    }
+
+    #[test]
+    fn staged_run_matches_one_shot_run() {
+        let trace = basics::allgather_ring(4).unwrap();
+        let pipe = Pipeline::new(&opts());
+        let staged = {
+            let t = pipe.trace(&trace).unwrap();
+            let c = pipe.chunk_dag(t).unwrap();
+            let i = pipe.inst_dag(c).unwrap();
+            let s = pipe.schedule(i).unwrap();
+            pipe.emit(s, "ag").unwrap()
+        };
+        let oneshot = pipe.run(&trace, "ag").unwrap();
+        assert_eq!(staged.ef.to_json_string(), oneshot.ef.to_json_string());
+        assert_eq!(staged.stats.max_tbs, oneshot.stats.max_tbs);
+    }
+
+    #[test]
+    fn disabling_fusion_pass_equals_fuse_false() {
+        let trace = basics::allgather_ring(4).unwrap();
+        let via_pass = Pipeline::new(&opts())
+            .without_pass(Pass::Fuse)
+            .run(&trace, "ag")
+            .unwrap();
+        let via_opts = Pipeline::new(&opts().without_fusion()).run(&trace, "ag").unwrap();
+        assert_eq!(via_pass.ef.to_json_string(), via_opts.ef.to_json_string());
+        assert_eq!(via_pass.stats.fusion, Default::default());
+    }
+
+    #[test]
+    fn replication_pass_is_honored() {
+        let trace = basics::allgather_ring(4).unwrap();
+        let with = Pipeline::new(&opts().with_instances(2)).run(&trace, "ag").unwrap();
+        let without = Pipeline::new(&opts().with_instances(2))
+            .without_pass(Pass::Replicate)
+            .run(&trace, "ag")
+            .unwrap();
+        assert_eq!(with.ef.in_chunks, 2 * without.ef.in_chunks);
+    }
+
+    #[test]
+    fn dumps_render_every_stage() {
+        let trace = basics::reduce_scatter_ring(3).unwrap();
+        let pipe = Pipeline::new(&opts());
+        for stage in IrStage::all() {
+            let text = pipe.dump_ir(&trace, "rs", stage).unwrap();
+            assert!(!text.is_empty(), "{stage:?} dump empty");
+        }
+        assert!(pipe.dump_ir(&trace, "rs", IrStage::Trace).unwrap().contains("reduce"));
+        assert!(pipe.dump_ir(&trace, "rs", IrStage::ChunkDag).unwrap().contains("deps="));
+        assert!(pipe.dump_ir(&trace, "rs", IrStage::InstDag).unwrap().contains("rank 0:"));
+        assert!(pipe.dump_ir(&trace, "rs", IrStage::Schedule).unwrap().contains("tb0"));
+    }
+
+    #[test]
+    fn stage_names_roundtrip() {
+        for s in IrStage::all() {
+            assert_eq!(IrStage::parse(s.name()), Some(s));
+        }
+        assert_eq!(IrStage::parse("EF"), Some(IrStage::Ef));
+        assert_eq!(IrStage::parse("bogus"), None);
+    }
+}

@@ -1,252 +1,112 @@
-//! The Layer-3 coordinator: collective registry, metrics, rank drivers.
+//! The Layer-3 coordinator: NCCL-compatible collective API, metrics, rank
+//! drivers.
 //!
 //! The paper positions GC3 as *API-compatible with NCCL*: frameworks keep
 //! calling `allReduce`/`allToAll`, and "in the case where there is no GC3
 //! custom kernel for a given collective … our runtime falls back on
-//! NCCL's implementation" (§1). [`Registry`] implements exactly that
-//! dispatch: a lookup of compiled GC3-EFs per (collective, topology,
-//! size-class), falling back to the NCCL baseline schedule when no custom
-//! program is registered or when the custom program's tuned size window
-//! doesn't cover the request.
-//!
-//! When an autotuner table ([`crate::tune::TunedTable`]) is loaded via
-//! [`Registry::load_tuned`], its per-size-bucket plan choice supersedes
-//! the static heuristics for that collective; without a table the NCCL
-//! tuner-derived path above is the fallback.
+//! NCCL's implementation" (§1). [`Registry`] is that NCCL-shaped surface —
+//! a thin shim over the [`crate::planner::Planner`] facade, which owns all
+//! dispatch (tuned table → GC3 static heuristics → NCCL fallback), plan
+//! compilation, caching, and provenance. Callers that want the full
+//! [`crate::planner::Plan`] (stats, provenance, `.simulate()` /
+//! `.verify()`) use the planner directly via [`Registry::planner`] or by
+//! constructing one themselves.
 
 pub mod metrics;
 
 pub use metrics::Metrics;
 
-use crate::collectives::{allreduce, alltoall};
-use crate::compiler::{compile, CompileOpts};
-use crate::core::{Gc3Error, Result};
+pub use crate::planner::Backend;
+
+use crate::core::Result;
 use crate::ef::EfProgram;
-use crate::nccl;
-use crate::tune::{Collective, TunedTable};
-use crate::sim::Protocol;
+use crate::planner::Planner;
 use crate::topology::Topology;
-use std::collections::HashMap;
+use crate::tune::{Collective, TunedTable};
 
-/// Which implementation served a request.
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
-pub enum Backend {
-    /// A GC3-compiled custom kernel.
-    Gc3,
-    /// NCCL fallback (baseline schedule).
-    NcclFallback,
-    /// A plan chosen by a loaded autotuner table ([`crate::tune`]).
-    Tuned,
-}
-
-/// Keyed cache of compiled programs.
+/// NCCL-compatible keyed dispatch: each method answers with the EF to run
+/// and which backend served it. All logic lives in [`Planner`]; this type
+/// only adapts the return shape to the NCCL-style `(ef, backend)` pairs
+/// the rank drivers consume.
 pub struct Registry {
-    topo: Topology,
-    cache: HashMap<String, EfProgram>,
-    /// Loaded autotuner tables, keyed by collective name. When a table is
-    /// present its per-size-bucket choice wins over the static heuristics.
-    tuned: HashMap<String, TunedTable>,
-    /// GC3 Ring AllReduce is tuned for this size window (§6.2: "optimized
-    /// … for these buffer sizes", 128 KB – 32 MB); outside it the registry
-    /// falls back to NCCL, which wins at >32 MB.
-    pub allreduce_window: (u64, u64),
+    planner: Planner,
 }
 
 impl Registry {
     pub fn new(topo: Topology) -> Registry {
-        Registry {
-            topo,
-            cache: HashMap::new(),
-            tuned: HashMap::new(),
-            allreduce_window: (128 * 1024, 32 * 1024 * 1024),
-        }
+        Registry { planner: Planner::new(topo) }
+    }
+
+    /// The planning engine behind this registry.
+    pub fn planner(&mut self) -> &mut Planner {
+        &mut self.planner
     }
 
     pub fn topo(&self) -> &Topology {
-        &self.topo
+        self.planner.topo()
     }
 
-    fn gc3_opts(&self, instances: usize, proto: Protocol) -> CompileOpts {
-        CompileOpts { instances, protocol: proto, ..CompileOpts::for_topo(&self.topo) }
-    }
-
-    /// Load an autotuner table; subsequent dispatches for its collective
-    /// answer from the table instead of the static heuristics — via
-    /// [`Registry::allreduce`] / [`Registry::alltoall_sized`] for the
-    /// NCCL-compatible entry points, and [`Registry::tuned_collective`]
-    /// for the rest (allgather, reduce_scatter). The table must have been
-    /// tuned for this registry's topology (same name and rank count —
-    /// plans don't transfer across link fabrics), and only sizes its grid
-    /// covers ([`TunedTable::covers`]) are served from it.
+    /// Load an autotuner table; see [`Planner::load_tuned`].
     pub fn load_tuned(&mut self, table: TunedTable) -> Result<()> {
-        if table.num_ranks != self.topo.num_ranks() {
-            return Err(Gc3Error::Invalid(format!(
-                "tuned table for {} ranks ({}) loaded into a {}-rank registry",
-                table.num_ranks,
-                table.topology,
-                self.topo.num_ranks()
-            )));
-        }
-        if table.topology != self.topo.name {
-            return Err(Gc3Error::Invalid(format!(
-                "tuned table for topology '{}' loaded into a '{}' registry — plans tuned \
-                 on one link fabric don't transfer",
-                table.topology, self.topo.name
-            )));
-        }
-        self.tuned.insert(table.collective.clone(), table);
-        Ok(())
+        self.planner.load_tuned(table)
     }
 
     /// The loaded table for `collective`, if any.
     pub fn tuned_table(&self, collective: &str) -> Option<&TunedTable> {
-        self.tuned.get(collective)
-    }
-
-    /// Serve `collective` at `size` from a loaded tuned table. `None` when
-    /// no table is loaded or the table's measured grid doesn't cover the
-    /// size (callers fall back to the NCCL-style heuristics — a table
-    /// tuned at 64 KB–4 MB must not extrapolate its edge plan to 1 GB) —
-    /// `Some(Err)` only for real compile failures.
-    fn tuned_ef(
-        &mut self,
-        collective: Collective,
-        size: u64,
-    ) -> Option<Result<(EfProgram, Backend)>> {
-        let choice = match self.tuned.get(collective.name()) {
-            Some(t) if t.covers(size) => match t.lookup(size) {
-                Some(entry) => entry.choice.clone(),
-                None => return None,
-            },
-            _ => return None,
-        };
-        let key = format!("tuned_{}_{}", collective.name(), choice.key());
-        if !self.cache.contains_key(&key) {
-            let built = crate::tune::variant_trace(&self.topo, collective, &choice.variant)
-                .and_then(|trace| {
-                    compile(&trace, &key, &self.gc3_opts(choice.instances, choice.protocol))
-                });
-            match built {
-                Ok(c) => {
-                    self.cache.insert(key.clone(), c.ef);
-                }
-                Err(e) => return Some(Err(e)),
-            }
-        }
-        Some(Ok((self.cache[&key].clone(), Backend::Tuned)))
+        self.planner.tuned_table(collective)
     }
 
     /// AllReduce dispatch: a loaded tuned table wins; otherwise GC3's
     /// static ring inside the window and the NCCL-heuristic fallback
     /// outside it.
     pub fn allreduce(&mut self, size: u64) -> Result<(EfProgram, Backend)> {
-        if let Some(served) = self.tuned_ef(Collective::AllReduce, size) {
-            return served;
-        }
-        let (lo, hi) = self.allreduce_window;
-        if size < lo || size > hi {
-            let key = format!("nccl_ar_{size}");
-            if !self.cache.contains_key(&key) {
-                let (ef, _) = nccl::allreduce::build(&self.topo, size)?;
-                self.cache.insert(key.clone(), ef);
-            }
-            return Ok((self.cache[&key].clone(), Backend::NcclFallback));
-        }
-        let key = "gc3_ar".to_string();
-        if !self.cache.contains_key(&key) {
-            let ranks = self.topo.num_ranks();
-            let ef = if self.topo.nodes > 1 {
-                // Multi-node: hierarchical AllReduce (§6.3).
-                let t = allreduce::hierarchical(self.topo.nodes, self.topo.gpus_per_node)?;
-                compile(&t, "gc3_allreduce_hier", &self.gc3_opts(1, Protocol::LL128))?.ef
-            } else {
-                // Single node: the paper's ring — 8 tb × 4 instances, LL128.
-                let t = allreduce::ring(ranks, true)?;
-                compile(&t, "gc3_allreduce_ring", &self.gc3_opts(4, Protocol::LL128))?.ef
-            };
-            self.cache.insert(key.clone(), ef);
-        }
-        Ok((self.cache[&key].clone(), Backend::Gc3))
+        self.planner.plan(Collective::AllReduce, size).map(|p| (p.ef, p.backend))
     }
 
     /// Size-aware AllToAll dispatch: a loaded tuned table wins for sizes
     /// it covers; otherwise the static topology rule of
     /// [`Registry::alltoall`].
     pub fn alltoall_sized(&mut self, size: u64) -> Result<(EfProgram, Backend)> {
-        if let Some(served) = self.tuned_ef(Collective::AllToAll, size) {
-            return served;
-        }
-        self.alltoall()
+        self.planner.plan(Collective::AllToAll, size).map(|p| (p.ef, p.backend))
     }
 
     /// Serve any loaded tuned table by collective kind and size — the
     /// lookup path for collectives without an NCCL-compatible static entry
-    /// point (allgather, reduce_scatter). `None` = no covering table.
+    /// point. `None` = no covering table.
     pub fn tuned_collective(
         &mut self,
         collective: Collective,
         size: u64,
     ) -> Option<Result<(EfProgram, Backend)>> {
-        self.tuned_ef(collective, size)
+        self.planner.plan_tuned(collective, size).map(|r| r.map(|p| (p.ef, p.backend)))
     }
 
-    /// AllToAll dispatch: the two-step program across nodes; single-node
-    /// AllToAll is pure NVSwitch traffic where NCCL's direct pattern is
-    /// already optimal, so it falls back.
+    /// AllToAll dispatch by topology rule alone (no size, no table): the
+    /// two-step program across nodes, NCCL fallback on a single node.
     pub fn alltoall(&mut self) -> Result<(EfProgram, Backend)> {
-        if self.topo.nodes == 1 {
-            let key = "nccl_a2a".to_string();
-            if !self.cache.contains_key(&key) {
-                let t = alltoall::direct(self.topo.num_ranks())?;
-                let ef = compile(&t, "nccl_alltoall", &self.gc3_opts(1, Protocol::Simple))?.ef;
-                self.cache.insert(key.clone(), ef);
-            }
-            return Ok((self.cache[&key].clone(), Backend::NcclFallback));
-        }
-        let key = "gc3_a2a".to_string();
-        if !self.cache.contains_key(&key) {
-            let t = alltoall::two_step(self.topo.nodes, self.topo.gpus_per_node)?;
-            let ef = compile(&t, "gc3_alltoall", &self.gc3_opts(1, Protocol::Simple))?.ef;
-            self.cache.insert(key.clone(), ef);
-        }
-        Ok((self.cache[&key].clone(), Backend::Gc3))
+        self.planner.plan_alltoall().map(|p| (p.ef, p.backend))
     }
 
     /// Application-specific collectives by name — the §6.4 AllToNext plus
     /// anything user-registered.
     pub fn custom(&mut self, name: &str) -> Result<(EfProgram, Backend)> {
-        match name {
-            "alltonext" => {
-                let key = "gc3_a2n".to_string();
-                if !self.cache.contains_key(&key) {
-                    let t = crate::collectives::alltonext::alltonext(
-                        self.topo.nodes,
-                        self.topo.gpus_per_node,
-                    )?;
-                    let ef = compile(&t, "gc3_alltonext", &self.gc3_opts(1, Protocol::Simple))?.ef;
-                    self.cache.insert(key.clone(), ef);
-                }
-                Ok((self.cache[&key].clone(), Backend::Gc3))
-            }
-            other => Err(Gc3Error::Invalid(format!(
-                "no GC3 kernel registered for '{other}' and no NCCL fallback exists"
-            ))),
-        }
+        self.planner.plan_custom(name).map(|p| (p.ef, p.backend))
     }
 
     /// Register a pre-compiled EF under a custom name.
     pub fn register(&mut self, name: &str, ef: EfProgram) {
-        self.cache.insert(name.to_string(), ef);
+        self.planner.register(name, ef);
     }
 
     pub fn cached(&self) -> usize {
-        self.cache.len()
+        self.planner.cached()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::Protocol;
 
     fn topo() -> Topology {
         let mut t = Topology::a100_single();
@@ -281,14 +141,36 @@ mod tests {
         assert!(reg.custom("frobnicate").is_err());
     }
 
+    /// A hand-built table (no tuner search — the end-to-end tune→dispatch
+    /// path is covered by `rust/tests/golden_api.rs`) entry for the 4-rank
+    /// ring; the shim must serve it verbatim through the planner.
+    fn ring_table(collective: &str, variant: &str, sizes: &[(u64, Protocol)]) -> TunedTable {
+        use crate::tune::{TunedChoice, TunedEntry};
+        TunedTable {
+            collective: collective.into(),
+            topology: "a100x1".into(),
+            num_ranks: 4,
+            entries: sizes
+                .iter()
+                .map(|&(size, protocol)| TunedEntry {
+                    size,
+                    choice: TunedChoice { variant: variant.into(), instances: 2, protocol },
+                    time: 1.0e-5,
+                    algbw: size as f64 / 1.0e-5,
+                })
+                .collect(),
+        }
+    }
+
     #[test]
     fn tuned_table_wins_over_heuristics() {
-        use crate::tune::{tune, Collective, TuneOpts};
-        let topo = topo(); // 4 ranks
         let sizes = [64 * 1024u64, 16 * 1024 * 1024];
-        let out = tune(&topo, Collective::AllReduce, &sizes, &TuneOpts::default()).unwrap();
-        let table = out.table.clone();
-        let mut reg = Registry::new(topo);
+        let table = ring_table(
+            "allreduce",
+            "ring",
+            &[(sizes[0], Protocol::LL), (sizes[1], Protocol::LL128)],
+        );
+        let mut reg = Registry::new(topo());
         // No table loaded: heuristic dispatch (64 KB is below the window).
         let (_, b) = reg.allreduce(64 * 1024).unwrap();
         assert_eq!(b, Backend::NcclFallback);
@@ -314,19 +196,16 @@ mod tests {
 
     #[test]
     fn tuned_tables_serve_other_collectives() {
-        use crate::tune::{tune, Collective, TuneOpts};
-        let topo = topo(); // 4 ranks, single node
-        let sizes = [256 * 1024u64, 4 * 1024 * 1024];
-        let mut reg = Registry::new(topo.clone());
+        let mut reg = Registry::new(topo()); // 4 ranks, single node
         // Without tables: static paths.
         let (_, b) = reg.alltoall_sized(1024 * 1024).unwrap();
         assert_eq!(b, Backend::NcclFallback, "single-node alltoall heuristic");
         assert!(reg.tuned_collective(Collective::AllGather, 1024 * 1024).is_none());
         // Load alltoall + allgather tables; both now serve tuned plans.
-        let a2a = tune(&topo, Collective::AllToAll, &sizes, &TuneOpts::default()).unwrap();
-        let ag = tune(&topo, Collective::AllGather, &sizes, &TuneOpts::default()).unwrap();
-        reg.load_tuned(a2a.table).unwrap();
-        reg.load_tuned(ag.table).unwrap();
+        let a2a = ring_table("alltoall", "direct", &[(1024 * 1024, Protocol::Simple)]);
+        let ag = ring_table("allgather", "ring", &[(1024 * 1024, Protocol::LL128)]);
+        reg.load_tuned(a2a).unwrap();
+        reg.load_tuned(ag).unwrap();
         let (ef, b) = reg.alltoall_sized(1024 * 1024).unwrap();
         assert_eq!(b, Backend::Tuned);
         ef.validate().unwrap();

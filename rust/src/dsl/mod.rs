@@ -3,7 +3,7 @@
 //! A [`Program`] is written by routing chunks between buffer slots:
 //!
 //! ```
-//! use gc3::dsl::{Program, SchedHint};
+//! use gc3::dsl::Program;
 //! use gc3::core::BufferId;
 //! use gc3::dsl::collective::CollectiveSpec;
 //!
@@ -12,19 +12,21 @@
 //! for r in 0..2 {
 //!     let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
 //!     // keep own chunk ...
-//!     let c_out = p.copy(c, BufferId::Output, r, r, SchedHint::none()).unwrap();
+//!     let c_out = p.copy_to(c, BufferId::Output, r, r).unwrap();
 //!     // ... and send it to the peer.
-//!     p.copy(c_out, BufferId::Output, 1 - r, r, SchedHint::none()).unwrap();
+//!     p.copy_to(c_out, BufferId::Output, 1 - r, r).unwrap();
 //! }
 //! let trace = p.finish().unwrap();
 //! assert_eq!(trace.ops.len(), 4);
 //! ```
 //!
-//! The paper's `c.assign(buffer, rank, index)` is [`Program::copy`] here
-//! (`assign` collides with Rust naming conventions); `c1.reduce(c2)` is
-//! [`Program::reduce`]. Both accept a [`SchedHint`] carrying the §5.4
-//! extensions: manual `sendtb`/`recvtb` threadblock assignment and `ch`
-//! channel directives.
+//! The paper's `c.assign(buffer, rank, index)` is [`Program::copy_to`]
+//! here (`assign` collides with Rust naming conventions); `c1.reduce(c2)`
+//! is [`Program::reduce_into`]. The hinted variants [`Program::copy`] and
+//! [`Program::reduce`] additionally take a [`SchedHint`] carrying the
+//! §5.4 extensions — manual `sendtb`/`recvtb` threadblock assignment and
+//! `ch` channel directives — for manually-scheduled programs like the
+//! Fig. 8a ring; the common path uses the hint-free forms.
 //!
 //! The DSL performs the §3.2 validity checks *while recording*: reading an
 //! uninitialized slot or using a stale (overwritten) chunk reference is an
@@ -164,9 +166,28 @@ impl Program {
         Ok(ChunkRef { range, versions })
     }
 
-    /// The paper's `c.assign(buffer, rank, index)`: copy `c` into the slot
-    /// range starting at `(buffer, rank, index)` and return a reference to
-    /// the new chunk(s).
+    /// Hint-free [`Program::copy`] — the paper's
+    /// `c.assign(buffer, rank, index)` as the common path writes it, with
+    /// fully automatic scheduling ([`SchedHint::none`]).
+    pub fn copy_to(
+        &mut self,
+        c: ChunkRef,
+        buffer: BufferId,
+        rank: Rank,
+        index: usize,
+    ) -> Result<ChunkRef> {
+        self.copy(c, buffer, rank, index, SchedHint::none())
+    }
+
+    /// Hint-free [`Program::reduce`] — the paper's `c1.reduce(c2)` with
+    /// fully automatic scheduling ([`SchedHint::none`]).
+    pub fn reduce_into(&mut self, c1: ChunkRef, other: ChunkRef) -> Result<ChunkRef> {
+        self.reduce(c1, other, SchedHint::none())
+    }
+
+    /// The paper's `c.assign(buffer, rank, index)` with a manual §5.4
+    /// scheduling hint: copy `c` into the slot range starting at
+    /// `(buffer, rank, index)` and return a reference to the new chunk(s).
     pub fn copy(
         &mut self,
         c: ChunkRef,
@@ -283,6 +304,18 @@ mod tests {
         assert_eq!(r.range, SlotRange::slot(1, BufferId::Input, 0));
         let t_ops = p.ops.len();
         assert_eq!(t_ops, 1);
+    }
+
+    #[test]
+    fn hint_free_forms_record_automatic_hints() {
+        let mut p = Program::new(CollectiveSpec::allreduce(2, 1));
+        let a = p.chunk(BufferId::Input, 0, 0, 1).unwrap();
+        let b = p.chunk(BufferId::Input, 1, 0, 1).unwrap();
+        let r = p.reduce_into(b, a).unwrap();
+        p.copy_to(r, BufferId::Scratch, 0, 0).unwrap();
+        let t = p.finish().unwrap();
+        assert_eq!(t.ops.len(), 2);
+        assert!(t.ops.iter().all(|op| *op.hint() == SchedHint::none()));
     }
 
     #[test]

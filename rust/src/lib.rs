@@ -3,17 +3,37 @@
 //! Reproduction of "GC3: An Optimizing Compiler for GPU Collective
 //! Communication" (CS.DC 2022) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! The crate is organised around the paper's pipeline (Fig. 3):
+//! ## The two entrypoints
+//!
+//! Everything in the crate is reached through two typed facades:
+//!
+//! * [`compiler::Pipeline`] — the staged compiler (Fig. 3). One program in,
+//!   one GC3-EF out, with typed intermediate artifacts
+//!   (`Traced → ChunkDagStage → InstDagStage → ScheduledStage → Compiled`),
+//!   optional passes (fusion §5.3.1, instance replication §5.3.2), per-stage
+//!   wall-clock in [`compiler::CompileStats`], and `--dump-ir` renderings of
+//!   every IR. `compiler::compile` is a thin convenience wrapper.
+//! * [`planner::Planner`] — the planning facade. One call from
+//!   `(collective, topology, size)` to an executable [`planner::Plan`]
+//!   (EF + backend + provenance + stats, with `.simulate()` / `.verify()`
+//!   conveniences), dispatching tuned table → GC3 heuristics → NCCL
+//!   fallback. The coordinator's NCCL-compatible [`coordinator::Registry`]
+//!   is a thin shim over it.
 //!
 //! ```text
-//!   dsl  ──trace──▶  chunkdag  ──lower──▶  instdag  ──fuse/instances──▶
-//!        ──schedule (sched)──▶  ef (GC3-EF)  ──▶  { sim, exec }
+//!   dsl ──trace──▶ chunkdag ──lower──▶ instdag ──fuse/instances──▶
+//!       ──schedule (sched)──▶ ef (GC3-EF) ──▶ { sim, exec }
+//!            └────────────── compiler::Pipeline ──────────────┘
+//!   (collective, size) ─▶ planner::Planner ─▶ Plan { ef, backend, why }
+//!                          ▲ tuned tables (tune)   ▲ NCCL fallback (nccl)
 //! ```
 //!
+//! ## Layer map
+//!
 //! * [`dsl`] — the chunk-oriented dataflow language (§3): programs route
-//!   chunks between `(buffer, rank, index)` slots with `copy` (the paper's
-//!   `assign`) and `reduce`, optionally carrying manual `sendtb`/`recvtb`/
-//!   `ch` scheduling hints (§5.4).
+//!   chunks between `(buffer, rank, index)` slots with `copy_to` (the
+//!   paper's `assign`) and `reduce_into`; the hinted `copy`/`reduce`
+//!   variants carry manual `sendtb`/`recvtb`/`ch` hints (§5.4).
 //! * [`chunkdag`] — the tracing frontend (§5.1): builds the Chunk DAG with
 //!   true and false dependences, validates the program (no uninitialized
 //!   reads, no use of overwritten chunks) and checks collective
@@ -22,9 +42,12 @@
 //!   fusion passes rcs/rrcs/rrs (§5.3.1) and instance replication (§5.3.2).
 //! * [`sched`] — threadblock assignment (automatic heuristic and manual),
 //!   channel directives, and synchronization insertion (§5.2, §5.4).
+//! * [`compiler`] — the staged [`compiler::Pipeline`] driving all of the
+//!   above, stage by stage, with timings and IR dumps.
 //! * [`ef`] — the GC3-EF executable format (§4.1) with JSON ser/de.
 //! * [`topology`] — multi-GPU/multi-node network descriptions: the A100
-//!   node of Fig. 2, Azure NDv2 nodes, and N-node IB clusters.
+//!   node of Fig. 2, Azure NDv2/NDv4 nodes, mixed-bandwidth `asym`, and
+//!   N-node IB clusters.
 //! * [`sim`] — the performance substrate: a discrete-event, max-min-fair
 //!   flow simulator of the GC3 runtime (§4.2–4.4): connections, channels,
 //!   4 MB staging tiles, slice pipelining, protocols (Simple/LL/LL128) and
@@ -37,17 +60,23 @@
 //!   p2p send, all emitted as GC3-EF and run on the same substrates.
 //! * [`tune`] — the simulator-driven autotuner: searches the
 //!   variant × instances × protocol grid with [`sim`] as the cost oracle
-//!   and emits serializable [`tune::TunedTable`]s the coordinator serves.
-//! * [`collectives`] — the GC3 program library: Two-Step AllToAll (§2),
-//!   Ring AllReduce (§6.2), Hierarchical AllReduce (§6.3), AllToNext
-//!   (§6.4), plus AllGather / ReduceScatter / Broadcast.
+//!   and emits serializable [`tune::TunedTable`]s the planner serves.
+//! * [`planner`] — the planning facade: tuned-table, GC3-heuristic and
+//!   NCCL-fallback dispatch behind one `plan()` call, with provenance.
+//! * [`collectives`] — the GC3 program library (Two-Step AllToAll §2, Ring
+//!   AllReduce §6.2, Hierarchical AllReduce §6.3, AllToNext §6.4, plus
+//!   AllGather / ReduceScatter / Broadcast), name-indexed via
+//!   [`collectives::Library`].
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`
 //!   (AOT-lowered JAX/Pallas) and executes them from Rust.
-//! * [`coordinator`] — multi-rank launcher, collective registry with NCCL
-//!   fallback, and metrics.
+//! * [`coordinator`] — multi-rank launcher, the NCCL-compatible registry
+//!   shim over [`planner`], and metrics.
 //! * [`train`] — the end-to-end driver: data-parallel transformer training
-//!   where gradients move byte-accurately through a GC3 AllReduce.
-//! * [`bench`] — the evaluation harness regenerating every figure of §6.
+//!   where gradients move byte-accurately through a planner-served GC3
+//!   AllReduce.
+//! * [`bench`] — the evaluation harness regenerating every figure of §6,
+//!   plus the compiler/simulator throughput suite behind
+//!   `BENCH_compiler_perf.json`.
 
 pub mod util;
 pub mod core;
@@ -62,13 +91,16 @@ pub mod sim;
 pub mod exec;
 pub mod nccl;
 pub mod tune;
+pub mod planner;
 pub mod collectives;
 pub mod runtime;
 pub mod coordinator;
 pub mod train;
 pub mod bench;
 
+pub use crate::compiler::Pipeline;
 pub use crate::core::{BufferId, ChanId, Rank, Slot, SlotRange};
 pub use crate::dsl::{Program, SchedHint};
 pub use crate::ef::EfProgram;
+pub use crate::planner::{Plan, Planner};
 pub use crate::sim::Protocol;

@@ -2,26 +2,27 @@
 //!
 //! ```text
 //! gc3 list      [--nodes N] [--gpus G]          list library programs
-//! gc3 compile   <program> [--instances R] [--protocol P] [--out EF.json] [-v]
+//! gc3 compile   <program> [--instances R] [--protocol P] [--dump-ir STAGE]
+//!               [--out EF.json] [-v]
 //! gc3 inspect   <EF.json>                       print a Fig.-4-style listing
 //! gc3 verify    <program> [--instances R]       byte-accurate correctness
 //! gc3 simulate  <program> --size S [--nodes N]  price a schedule
 //! gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]
 //! gc3 figures   [--fig 7|8|9|11|loc|abl]        regenerate §6 figures
 //! gc3 tune      --collective C [--sizes ...]    autotune + emit a TunedTable
+//! gc3 plan      [--collective C] [--size S] [--tuned TABLE.json]
 //! ```
 
-use gc3::collectives;
-use gc3::compiler::{compile, CompileOpts};
-use gc3::coordinator::Registry;
-use gc3::core::Result;
+use gc3::collectives::{self, Library};
+use gc3::compiler::{CompileOpts, IrStage, Pipeline};
+use gc3::core::{Gc3Error, Result};
 use gc3::ef::EfProgram;
 use gc3::exec::{verify, NativeReducer};
-use gc3::sched::SchedOpts;
+use gc3::planner::Planner;
 use gc3::sim::{simulate, Protocol};
 use gc3::topology::Topology;
 use gc3::train::{train, TrainOpts};
-use gc3::tune;
+use gc3::tune::{self, Collective, TunedTable};
 use gc3::util::cli::Args;
 use gc3::{bench, util};
 
@@ -38,32 +39,39 @@ fn topo_from(args: &Args) -> Topology {
 }
 
 fn find_program(topo: &Topology, name: &str) -> Result<gc3::dsl::Trace> {
-    let lib = collectives::library(topo)?;
-    for p in &lib {
-        if p.name == name {
-            return Ok(p.trace.clone());
-        }
+    let lib = Library::build(topo)?;
+    match lib.get(name) {
+        Some(p) => Ok(p.trace.clone()),
+        None => Err(Gc3Error::Invalid(format!(
+            "unknown program '{name}'; available: {}",
+            lib.names().join(", ")
+        ))),
     }
-    let names: Vec<&str> = lib.iter().map(|p| p.name).collect();
-    Err(gc3::core::Gc3Error::Invalid(format!(
-        "unknown program '{name}'; available: {}",
-        names.join(", ")
-    )))
 }
 
-fn opts_from(args: &Args, topo: &Topology) -> CompileOpts {
-    let mut o = CompileOpts {
-        instances: args.usize("instances", 1),
-        sched: SchedOpts { sm_count: topo.sm_count },
-        ..Default::default()
-    };
-    if let Some(p) = args.opt("protocol").and_then(Protocol::parse) {
-        o.protocol = p;
+fn collective_from(args: &Args) -> Result<Collective> {
+    let name = args.str_or("collective", "allreduce");
+    Collective::parse(name).ok_or_else(|| {
+        Gc3Error::Invalid(format!(
+            "unknown collective '{name}' (allreduce|allgather|reduce_scatter|alltoall)"
+        ))
+    })
+}
+
+fn opts_from(args: &Args, topo: &Topology) -> Result<CompileOpts> {
+    let mut o = CompileOpts::for_topo(topo).with_instances(args.usize("instances", 1));
+    if let Some(p) = args.opt("protocol") {
+        let proto = Protocol::parse(p).ok_or_else(|| {
+            Gc3Error::Invalid(format!(
+                "unknown protocol '{p}' (accepted: simple, ll, ll128)"
+            ))
+        })?;
+        o = o.with_protocol(proto);
     }
     if args.flag("no-fuse") {
-        o.fuse = false;
+        o = o.without_fusion();
     }
-    o
+    Ok(o)
 }
 
 fn main() {
@@ -98,9 +106,22 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let topo = topo_from(args);
             let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("allreduce_ring");
             let trace = find_program(&topo, name)?;
-            let c = compile(&trace, name, &opts_from(args, &topo))?;
+            let pipe = Pipeline::new(&opts_from(args, &topo)?);
+            if let Some(stage) = args.opt("dump-ir") {
+                let stage = IrStage::parse(stage).ok_or_else(|| {
+                    Gc3Error::Invalid(format!(
+                        "unknown IR stage '{stage}' (accepted: trace, chunkdag, instdag, \
+                         schedule, ef)"
+                    ))
+                })?;
+                print!("{}", pipe.dump_ir(&trace, name, stage)?);
+                return Ok(());
+            }
+            let c = pipe.run(&trace, name)?;
             if args.flag("v") {
                 println!("{:#?}", c.stats);
+                println!("per-stage compile time:");
+                print!("{}", c.stats.render_stage_times());
             }
             println!(
                 "compiled {name}: {} instructions, {} tbs, {} channels",
@@ -110,15 +131,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             if let Some(out) = args.opt("out") {
                 std::fs::write(out, c.ef.to_json_string())
-                    .map_err(|e| gc3::core::Gc3Error::Ef(e.to_string()))?;
+                    .map_err(|e| Gc3Error::Ef(e.to_string()))?;
                 println!("wrote {out}");
             }
             Ok(())
         }
         "inspect" => {
             let path = args.positional.get(1).expect("inspect <EF.json>");
-            let text = std::fs::read_to_string(path)
-                .map_err(|e| gc3::core::Gc3Error::Ef(e.to_string()))?;
+            let text =
+                std::fs::read_to_string(path).map_err(|e| Gc3Error::Ef(e.to_string()))?;
             let ef = EfProgram::from_json_str(&text)?;
             print!("{}", ef.listing());
             Ok(())
@@ -128,7 +149,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("allreduce_ring");
             let trace = find_program(&topo, name)?;
             let inst = args.usize("instances", 1);
-            let c = compile(&trace, name, &opts_from(args, &topo))?;
+            let c = Pipeline::new(&opts_from(args, &topo)?).run(&trace, name)?;
             let spec = if inst > 1 { trace.spec.scaled(inst) } else { trace.spec.clone() };
             let stats = verify(&c.ef, &spec, args.usize("elems", 8), &mut NativeReducer)?;
             println!(
@@ -142,7 +163,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("allreduce_ring");
             let size = args.bytes("size", 4 * 1024 * 1024);
             let trace = find_program(&topo, name)?;
-            let c = compile(&trace, name, &opts_from(args, &topo))?;
+            let c = Pipeline::new(&opts_from(args, &topo)?).run(&trace, name)?;
             let rep = simulate(&c.ef, &topo, size)?;
             println!(
                 "{name} @ {} on {}: {:.1} us, algbw {:.2} GB/s ({} events, {} flows)",
@@ -228,19 +249,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         "tune" => {
             let topo = topo_from(args);
-            let coll_name = args.str_or("collective", "allreduce");
-            let coll = tune::Collective::parse(coll_name).ok_or_else(|| {
-                gc3::core::Gc3Error::Invalid(format!(
-                    "unknown collective '{coll_name}' \
-                     (allreduce|allgather|reduce_scatter|alltoall)"
-                ))
-            })?;
+            let coll = collective_from(args)?;
             let sizes: Vec<u64> = match args.opt("sizes") {
                 Some(list) => {
                     let mut v = Vec::new();
                     for part in list.split(',') {
                         v.push(util::parse_bytes(part).ok_or_else(|| {
-                            gc3::core::Gc3Error::Invalid(format!("bad size '{part}' in --sizes"))
+                            Gc3Error::Invalid(format!("bad size '{part}' in --sizes"))
                         })?);
                     }
                     v
@@ -268,22 +283,42 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let default_path = format!("TUNED_{}_{}.json", coll.name(), topo.name);
             let path = args.str_or("out", &default_path);
             std::fs::write(path, out.table.to_json_string())
-                .map_err(|e| gc3::core::Gc3Error::Ef(e.to_string()))?;
+                .map_err(|e| Gc3Error::Ef(e.to_string()))?;
             println!("wrote {path}");
             Ok(())
         }
-        "registry" => {
-            // Demo of the NCCL-fallback dispatch.
-            let mut reg = Registry::new(topo_from(args));
-            for size in [32 * 1024u64, 2 << 20, 256 << 20] {
-                let (ef, backend) = reg.allreduce(size)?;
+        "plan" | "registry" => {
+            // The unified dispatch facade: tuned table -> GC3 -> NCCL.
+            let mut planner = Planner::new(topo_from(args));
+            if let Some(path) = args.opt("tuned") {
+                let text =
+                    std::fs::read_to_string(path).map_err(|e| Gc3Error::Ef(e.to_string()))?;
+                planner.load_tuned(TunedTable::from_json_str(&text)?)?;
+                println!("loaded tuned table {path}");
+            }
+            let coll = collective_from(args)?;
+            let sizes: Vec<u64> = match args.opt("size") {
+                Some(s) => vec![util::parse_bytes(s)
+                    .ok_or_else(|| Gc3Error::Invalid(format!("bad --size '{s}'")))?],
+                None => vec![32 * 1024, 2 << 20, 256 << 20],
+            };
+            for size in sizes {
+                let plan = planner.plan(coll, size)?;
+                let rep = plan.simulate()?;
                 println!(
-                    "allreduce {:>8}: {:?} -> {} ({})",
+                    "{} {:>8}: {:?} -> {} ({}) {:.1} us",
+                    coll.name(),
                     util::human_bytes(size),
-                    backend,
-                    ef.name,
-                    ef.protocol
+                    plan.backend,
+                    plan.ef.name,
+                    plan.ef.protocol,
+                    rep.time * 1e6
                 );
+                println!("  why: {}", plan.choice.reason);
+                if args.flag("v") {
+                    println!("  compile stages:");
+                    print!("{}", plan.stats.render_stage_times());
+                }
             }
             Ok(())
         }
@@ -299,7 +334,9 @@ gc3 — an optimizing compiler for GPU collective communication (reproduction)
 
 usage:
   gc3 list      [--nodes N] [--gpus G] [--topo a100|ndv2]
-  gc3 compile   <program> [--instances R] [--protocol simple|ll|ll128] [--out EF.json] [--v]
+  gc3 compile   <program> [--instances R] [--protocol simple|ll|ll128]
+                [--dump-ir trace|chunkdag|instdag|schedule|ef]
+                [--out EF.json] [--v]
   gc3 inspect   <EF.json>
   gc3 verify    <program> [--instances R] [--elems E]
   gc3 simulate  <program> --size 2MB [--nodes N] [--gpus G] [--topo a100|ndv2]
@@ -310,4 +347,67 @@ usage:
                 [--sizes 64KB,4MB,...] [--out TUNED.json] [--v]
                 searches variant x instances x protocol on the simulator and
                 writes the best-plan-per-size TunedTable as JSON
-  gc3 registry  [--nodes N]";
+  gc3 plan      [--collective C] [--size 4MB] [--tuned TABLE.json] [--nodes N]
+                dispatch through the Planner facade and explain the choice
+                (alias: gc3 registry)";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args_of(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string()), &["v", "no-fuse"]).unwrap()
+    }
+
+    /// Satellite bug fix: an invalid `--protocol` used to be silently
+    /// dropped (`.and_then(Protocol::parse)` swallowed the `None`) and the
+    /// compile ran under the default protocol. It must be a hard error
+    /// naming the accepted values.
+    #[test]
+    fn invalid_protocol_is_a_hard_error() {
+        let topo = Topology::a100_single();
+        let err = opts_from(&args_of(&["compile", "--protocol", "turbo"]), &topo).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("turbo"), "{msg}");
+        for accepted in ["simple", "ll", "ll128"] {
+            assert!(msg.contains(accepted), "error must list '{accepted}': {msg}");
+        }
+    }
+
+    #[test]
+    fn valid_protocol_and_flags_parse() {
+        let topo = Topology::a100_single();
+        let o = opts_from(
+            &args_of(&["compile", "--protocol", "ll128", "--instances", "4", "--no-fuse"]),
+            &topo,
+        )
+        .unwrap();
+        assert_eq!(o.protocol, Protocol::LL128);
+        assert_eq!(o.instances, 4);
+        assert!(!o.fuse);
+        assert_eq!(o.sched.sm_count, topo.sm_count);
+        // No --protocol: the default is kept.
+        let o = opts_from(&args_of(&["compile"]), &topo).unwrap();
+        assert_eq!(o.protocol, Protocol::Simple);
+    }
+
+    /// `find_program` answers from the name-keyed `Library` index and the
+    /// miss error still lists every available program.
+    #[test]
+    fn unknown_program_error_lists_library() {
+        let topo = Topology::a100_single();
+        let trace = find_program(&topo, "allreduce_ring").unwrap();
+        assert_eq!(trace.spec.num_ranks, topo.num_ranks());
+        let err = find_program(&topo, "nope").unwrap_err().to_string();
+        assert!(err.contains("unknown program 'nope'"), "{err}");
+        assert!(err.contains("allreduce_ring"), "{err}");
+        assert!(err.contains("allgather_ring"), "{err}");
+    }
+
+    #[test]
+    fn unknown_collective_is_an_error() {
+        let err = collective_from(&args_of(&["plan", "--collective", "gather"])).unwrap_err();
+        assert!(err.to_string().contains("gather"), "{err}");
+        assert_eq!(collective_from(&args_of(&["plan"])).unwrap(), Collective::AllReduce);
+    }
+}

@@ -12,12 +12,11 @@
 
 use super::tuner::{self, Algo, Choice};
 use crate::collectives::allreduce::ring_one_tb;
-use crate::compiler::{compile, CompileOpts};
+use crate::compiler::{compile, Compiled, CompileOpts};
 use crate::core::{BufferId, Result};
 use crate::dsl::collective::CollectiveSpec;
-use crate::dsl::{Program, SchedHint, Trace};
+use crate::dsl::{Program, Trace};
 use crate::ef::EfProgram;
-use crate::sched::SchedOpts;
 use crate::topology::Topology;
 
 /// Topology-aware tree AllReduce, NCCL-style: within each node a chain
@@ -34,7 +33,7 @@ pub fn tree(nodes: usize, gpus: usize) -> Result<Trace> {
         for g in (1..gpus).rev() {
             let at = p.chunk(BufferId::Input, rank(n, g - 1), 0, 1)?;
             let c = p.chunk(BufferId::Input, rank(n, g), 0, 1)?;
-            p.reduce(at, c, SchedHint::none())?;
+            p.reduce_into(at, c)?;
         }
     }
     // Inter-node binary tree reduce among leaders, deepest first.
@@ -42,14 +41,14 @@ pub fn tree(nodes: usize, gpus: usize) -> Result<Trace> {
         let parent = (v - 1) / 2;
         let at = p.chunk(BufferId::Input, rank(parent, 0), 0, 1)?;
         let c = p.chunk(BufferId::Input, rank(v, 0), 0, 1)?;
-        p.reduce(at, c, SchedHint::none())?;
+        p.reduce_into(at, c)?;
     }
     // Broadcast down the leader tree...
     for v in 0..nodes {
         for c in [2 * v + 1, 2 * v + 2] {
             if c < nodes {
                 let full = p.chunk(BufferId::Input, rank(v, 0), 0, 1)?;
-                p.copy(full, BufferId::Input, rank(c, 0), 0, SchedHint::none())?;
+                p.copy_to(full, BufferId::Input, rank(c, 0), 0)?;
             }
         }
     }
@@ -57,7 +56,7 @@ pub fn tree(nodes: usize, gpus: usize) -> Result<Trace> {
     for n in 0..nodes {
         for g in 1..gpus {
             let full = p.chunk(BufferId::Input, rank(n, g - 1), 0, 1)?;
-            p.copy(full, BufferId::Input, rank(n, g), 0, SchedHint::none())?;
+            p.copy_to(full, BufferId::Input, rank(n, g), 0)?;
         }
     }
     p.finish()
@@ -73,18 +72,25 @@ pub fn build(topo: &Topology, size: u64) -> Result<(EfProgram, Choice)> {
 
 /// Build the EF for an explicit tuner choice.
 pub fn build_choice(topo: &Topology, choice: Choice) -> Result<EfProgram> {
+    Ok(plan_choice(topo, choice)?.0.ef)
+}
+
+/// Like [`build_choice`], but returns the full [`Compiled`] (EF + pipeline
+/// stats) plus the replicated collective spec — what
+/// [`crate::planner::Planner`] needs to serve the fallback with the same
+/// provenance and verifiability as a GC3 custom plan.
+pub fn plan_choice(topo: &Topology, choice: Choice) -> Result<(Compiled, CollectiveSpec)> {
     let ranks = topo.num_ranks();
-    let opts = CompileOpts {
-        instances: choice.nchannels,
-        protocol: choice.proto,
-        fuse: true,
-        sched: SchedOpts { sm_count: topo.sm_count },
-    };
+    let opts = CompileOpts::for_topo(topo)
+        .with_instances(choice.nchannels)
+        .with_protocol(choice.proto);
     let trace = match choice.algo {
         Algo::Ring => ring_one_tb(ranks)?,
         Algo::Tree => tree(topo.nodes, topo.gpus_per_node)?,
     };
-    Ok(compile(&trace, &format!("nccl_allreduce_{}", choice.proto), &opts)?.ef)
+    let spec = trace.spec.scaled(choice.nchannels); // identity at nchannels = 1
+    let compiled = compile(&trace, &format!("nccl_allreduce_{}", choice.proto), &opts)?;
+    Ok((compiled, spec))
 }
 
 /// The *model-based* tuner NCCL actually is: evaluate the candidate

@@ -27,7 +27,7 @@ use crate::collectives::alltoall;
 use crate::compiler::{compile, CompileOpts};
 use crate::core::{BufferId, Result, Slot};
 use crate::dsl::collective::{val, CollectiveSpec};
-use crate::dsl::{Program, SchedHint, Trace};
+use crate::dsl::{Program, Trace};
 use crate::sim::{simulate, Protocol};
 use crate::topology::Topology;
 use std::collections::BTreeMap;
@@ -92,7 +92,7 @@ pub fn handwritten_step1(nodes: usize, gpus: usize) -> Result<Trace> {
             for i in 0..g_ {
                 for g in 0..g_ {
                     let c = p.chunk(BufferId::Input, rank(m, i), n * g_ + g, 1)?;
-                    p.copy(c, BufferId::Output, rank(m, g), n * g_ + i, SchedHint::none())?;
+                    p.copy_to(c, BufferId::Output, rank(m, g), n * g_ + i)?;
                 }
             }
         }
@@ -130,7 +130,7 @@ pub fn handwritten_step2(nodes: usize, gpus: usize) -> Result<Trace> {
             }
             for g in 0..g_ {
                 let c = p.chunk(BufferId::Input, rank(m, g), n * g_, g_)?;
-                p.copy(c, BufferId::Output, rank(n, g), m * g_, SchedHint::none())?;
+                p.copy_to(c, BufferId::Output, rank(n, g), m * g_)?;
             }
         }
     }
@@ -157,11 +157,7 @@ pub fn handwritten_time(topo: &Topology, size: u64) -> Result<f64> {
 /// GC3 two-step time on the simulator (the paper's headline line).
 pub fn gc3_two_step_time(topo: &Topology, size: u64) -> Result<f64> {
     let trace = alltoall::two_step(topo.nodes, topo.gpus_per_node)?;
-    let compiled = compile(
-        &trace,
-        "gc3_alltoall",
-        &CompileOpts { sched: crate::sched::SchedOpts { sm_count: topo.sm_count }, ..Default::default() },
-    )?;
+    let compiled = compile(&trace, "gc3_alltoall", &CompileOpts::for_topo(topo))?;
     Ok(simulate(&compiled.ef, topo, size)?.time)
 }
 

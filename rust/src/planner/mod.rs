@@ -1,0 +1,579 @@
+//! The planning facade: ONE way from `(collective, topology, size)` to an
+//! executable plan.
+//!
+//! The paper serves GC3 behind an NCCL-compatible API (§1): frameworks ask
+//! for a collective, and the runtime picks a GC3 custom kernel, a
+//! tuned-table plan, or the NCCL fallback. Before this module existed that
+//! dispatch was scattered across three parallel entrypoints — the
+//! coordinator registry, the autotuner table lookup, and hand-rolled
+//! `CompileOpts` at every call site. [`Planner`] absorbs all three:
+//!
+//! ```no_run
+//! use gc3::planner::Planner;
+//! use gc3::topology::Topology;
+//! use gc3::tune::Collective;
+//!
+//! let mut planner = Planner::new(Topology::a100_single());
+//! let plan = planner.plan(Collective::AllReduce, 4 << 20)?;
+//! println!("{}: {}", plan.ef.name, plan.choice.reason);
+//! let _report = plan.simulate()?;
+//! # Ok::<(), gc3::core::Gc3Error>(())
+//! ```
+//!
+//! Dispatch order, with full provenance recorded in
+//! [`PlanChoice::reason`]:
+//!
+//! 1. **Tuned table** ([`crate::tune::TunedTable`], loaded via
+//!    [`Planner::with_tuned`] / [`Planner::load_tuned`]): wins for every
+//!    size its measured grid covers. The table must match this planner's
+//!    topology (name and rank count — plans don't transfer across link
+//!    fabrics).
+//! 2. **GC3 static heuristics**: the §6.2 ring (or §6.3 hierarchical
+//!    program across nodes) inside the tuned size window for AllReduce;
+//!    the §2 two-step program across nodes for AllToAll; the library ring
+//!    for AllGather / ReduceScatter.
+//! 3. **NCCL fallback** (§1: "our runtime falls back on NCCL's
+//!    implementation"): the model-tuned baseline schedule everywhere else.
+//!
+//! Compiled plans are cached by choice, so repeated requests are free.
+//! [`crate::coordinator::Registry`] is now a thin NCCL-compatible shim
+//! over this type.
+
+use crate::collectives::{allreduce, alltoall, alltonext, basics};
+use crate::compiler::{CompileOpts, CompileStats, Pipeline};
+use crate::core::{Gc3Error, Result};
+use crate::dsl::collective::CollectiveSpec;
+use crate::dsl::Trace;
+use crate::ef::EfProgram;
+use crate::exec::{verify, ExecStats, NativeReducer};
+use crate::nccl;
+use crate::sim::{simulate, Protocol, SimReport};
+use crate::topology::Topology;
+use crate::tune::{variant_trace, Collective, TunedChoice, TunedTable};
+use crate::util::human_bytes;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Which implementation served a request.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Backend {
+    /// A GC3-compiled custom kernel.
+    Gc3,
+    /// NCCL fallback (baseline schedule).
+    NcclFallback,
+    /// A plan chosen by a loaded autotuner table ([`crate::tune`]).
+    Tuned,
+}
+
+/// Why a plan won: the winning variant plus a human-readable provenance
+/// trail of the dispatch decision.
+#[derive(Clone, Debug)]
+pub struct PlanChoice {
+    /// Compact variant key, e.g. `ring x4 ll128` or `nccl Ring/ll x2`.
+    pub variant: String,
+    /// The tuned-table entry that won, when a table served the request.
+    pub tuned: Option<TunedChoice>,
+    /// Full provenance: which dispatch rule fired and why.
+    pub reason: String,
+}
+
+/// An executable plan: the GC3-EF, who built it, why it won, and the
+/// pipeline statistics of its compilation.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub ef: EfProgram,
+    pub backend: Backend,
+    pub choice: PlanChoice,
+    pub stats: CompileStats,
+    topo: Topology,
+    spec: Option<Arc<CollectiveSpec>>,
+    /// The request size, when the dispatch had one (custom collectives
+    /// and the size-less registry AllToAll rule do not).
+    size: Option<u64>,
+}
+
+impl Plan {
+    /// Price this plan on the discrete-event simulator at the request
+    /// size. Plans made without one (custom collectives, the size-less
+    /// registry AllToAll rule) must use [`Plan::simulate_at`].
+    pub fn simulate(&self) -> Result<SimReport> {
+        let size = self.size.ok_or_else(|| {
+            Gc3Error::Invalid(format!(
+                "plan '{}' has no request size (custom/size-less dispatch) — \
+                 use simulate_at(size)",
+                self.ef.name
+            ))
+        })?;
+        self.simulate_at(size)
+    }
+
+    /// Price this plan at an arbitrary size.
+    pub fn simulate_at(&self, size: u64) -> Result<SimReport> {
+        simulate(&self.ef, &self.topo, size)
+    }
+
+    /// Byte-accurate functional verification on the host executor.
+    pub fn verify(&self, elems_per_chunk: usize) -> Result<ExecStats> {
+        let spec = self.spec.as_deref().ok_or_else(|| {
+            Gc3Error::Invalid(format!(
+                "plan '{}' was registered from a raw EF — no collective spec to verify against",
+                self.ef.name
+            ))
+        })?;
+        verify(&self.ef, spec, elems_per_chunk, &mut NativeReducer)
+    }
+
+    /// The request size the plan was made for, if the dispatch had one.
+    pub fn size(&self) -> Option<u64> {
+        self.size
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// One-line summary: backend, variant, and provenance.
+    pub fn describe(&self) -> String {
+        format!(
+            "{:?} {} @ {}: {} — {}",
+            self.backend,
+            self.ef.name,
+            self.size.map(human_bytes).unwrap_or_else(|| "-".to_string()),
+            self.choice.variant,
+            self.choice.reason
+        )
+    }
+}
+
+/// One compiled-and-cached plan body (everything size-independent). The
+/// spec sits behind an `Arc`: its postcondition map is O(ranks × chunks),
+/// and stamping a [`Plan`] per request must not re-clone it.
+#[derive(Clone, Debug)]
+struct Built {
+    ef: EfProgram,
+    stats: CompileStats,
+    spec: Option<Arc<CollectiveSpec>>,
+    variant: String,
+}
+
+/// The planning facade. See the module docs for the dispatch rules.
+pub struct Planner {
+    topo: Topology,
+    /// Loaded autotuner tables, keyed by collective name.
+    tuned: HashMap<String, TunedTable>,
+    /// Compiled plans, keyed by dispatch choice.
+    cache: HashMap<String, Built>,
+    /// GC3 Ring AllReduce is tuned for this size window (§6.2: "optimized
+    /// … for these buffer sizes", 128 KB – 32 MB); outside it the planner
+    /// falls back to NCCL, which wins at >32 MB.
+    pub allreduce_window: (u64, u64),
+}
+
+impl Planner {
+    pub fn new(topo: Topology) -> Planner {
+        Planner {
+            topo,
+            tuned: HashMap::new(),
+            cache: HashMap::new(),
+            allreduce_window: (128 * 1024, 32 * 1024 * 1024),
+        }
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// Builder form of [`Planner::load_tuned`].
+    pub fn with_tuned(mut self, table: TunedTable) -> Result<Planner> {
+        self.load_tuned(table)?;
+        Ok(self)
+    }
+
+    /// Load an autotuner table; subsequent [`Planner::plan`] calls for its
+    /// collective answer from the table for every size its measured grid
+    /// covers ([`TunedTable::covers`]). The table must have been tuned for
+    /// this planner's topology (same name and rank count — plans don't
+    /// transfer across link fabrics).
+    pub fn load_tuned(&mut self, table: TunedTable) -> Result<()> {
+        if table.num_ranks != self.topo.num_ranks() {
+            return Err(Gc3Error::Invalid(format!(
+                "tuned table for {} ranks ({}) loaded into a {}-rank planner",
+                table.num_ranks,
+                table.topology,
+                self.topo.num_ranks()
+            )));
+        }
+        if table.topology != self.topo.name {
+            return Err(Gc3Error::Invalid(format!(
+                "tuned table for topology '{}' loaded into a '{}' planner — plans tuned \
+                 on one link fabric don't transfer",
+                table.topology, self.topo.name
+            )));
+        }
+        self.tuned.insert(table.collective.clone(), table);
+        Ok(())
+    }
+
+    /// The loaded table for `collective`, if any.
+    pub fn tuned_table(&self, collective: &str) -> Option<&TunedTable> {
+        self.tuned.get(collective)
+    }
+
+    /// Number of distinct compiled plans in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Register a pre-compiled EF under a custom name, servable by
+    /// [`Planner::plan_custom`]. Registered plans live in their own
+    /// `custom:` key namespace so they can never alias (or be aliased by)
+    /// the planner's internal dispatch cache. No spec is attached, so such
+    /// a plan simulates but cannot [`Plan::verify`].
+    pub fn register(&mut self, name: &str, ef: EfProgram) {
+        self.cache.insert(
+            format!("custom:{name}"),
+            Built {
+                ef,
+                stats: CompileStats::default(),
+                spec: None,
+                variant: "registered".to_string(),
+            },
+        );
+    }
+
+    /// The one entrypoint: best plan for `collective` at `size` — tuned
+    /// table first, then the static GC3/NCCL heuristics.
+    pub fn plan(&mut self, collective: Collective, size: u64) -> Result<Plan> {
+        if let Some(served) = self.plan_tuned(collective, size) {
+            return served;
+        }
+        let mut plan = self.plan_static(collective, size)?;
+        plan.choice.reason = format!(
+            "no tuned table covers {}; {}",
+            human_bytes(size),
+            plan.choice.reason
+        );
+        Ok(plan)
+    }
+
+    /// Serve `collective` at `size` from a loaded tuned table only.
+    /// `None` when no table is loaded or the table's measured grid doesn't
+    /// cover the size (a table tuned at 64 KB–4 MB must not extrapolate
+    /// its edge plan to 1 GB) — `Some(Err)` only for real compile
+    /// failures.
+    pub fn plan_tuned(&mut self, collective: Collective, size: u64) -> Option<Result<Plan>> {
+        let (bucket, time, choice) = match self.tuned.get(collective.name()) {
+            Some(t) if t.covers(size) => match t.lookup(size) {
+                Some(e) => (e.size, e.time, e.choice.clone()),
+                None => return None,
+            },
+            _ => return None,
+        };
+        let key = format!("tuned_{}_{}", collective.name(), choice.key());
+        if !self.cache.contains_key(&key) {
+            let opts = CompileOpts::for_topo(&self.topo)
+                .with_instances(choice.instances)
+                .with_protocol(choice.protocol);
+            let built = variant_trace(&self.topo, collective, &choice.variant)
+                .and_then(|trace| self.build(&key, &trace, &key, &opts, &choice.key()));
+            if let Err(e) = built {
+                return Some(Err(e));
+            }
+        }
+        let reason = format!(
+            "tuned table for {} on {} covers {}: bucket {} argmin chose {} ({:.1} us simulated)",
+            collective.name(),
+            self.topo.name,
+            human_bytes(size),
+            human_bytes(bucket),
+            choice.key(),
+            time * 1e6
+        );
+        Some(Ok(self.finish(&key, Backend::Tuned, Some(choice), Some(size), reason)))
+    }
+
+    /// The static dispatch rules, skipping any loaded tuned table.
+    pub fn plan_static(&mut self, collective: Collective, size: u64) -> Result<Plan> {
+        match collective {
+            Collective::AllReduce => self.allreduce_static(size),
+            Collective::AllToAll => self.alltoall_static(Some(size)),
+            Collective::AllGather | Collective::ReduceScatter => {
+                self.library_ring_static(collective, Some(size))
+            }
+        }
+    }
+
+    /// AllToAll by topology rule alone, with no request size — the
+    /// NCCL-shim [`crate::coordinator::Registry::alltoall`] path. The
+    /// returned plan is size-less: price it with [`Plan::simulate_at`].
+    pub fn plan_alltoall(&mut self) -> Result<Plan> {
+        self.alltoall_static(None)
+    }
+
+    /// Application-specific collectives by name — the §6.4 AllToNext plus
+    /// anything [`Planner::register`]ed.
+    pub fn plan_custom(&mut self, name: &str) -> Result<Plan> {
+        if name == "alltonext" && !self.cache.contains_key("gc3_a2n") {
+            let t = alltonext::alltonext(self.topo.nodes, self.topo.gpus_per_node)?;
+            let opts = CompileOpts::for_topo(&self.topo);
+            self.build("gc3_a2n", &t, "gc3_alltonext", &opts, "alltonext")?;
+        }
+        // Registered plans live under `custom:`; internal dispatch keys
+        // (gc3_ar, nccl_a2a, tuned_…) are deliberately unreachable here.
+        let key =
+            if name == "alltonext" { "gc3_a2n".to_string() } else { format!("custom:{name}") };
+        if !self.cache.contains_key(&key) {
+            return Err(Gc3Error::Invalid(format!(
+                "no GC3 kernel registered for '{name}' and no NCCL fallback exists"
+            )));
+        }
+        let reason = format!("custom collective '{name}' served from the plan cache");
+        Ok(self.finish(&key, Backend::Gc3, None, None, reason))
+    }
+
+    // ---------------- static dispatch rules ----------------
+
+    /// AllReduce: GC3's ring (single node) / hierarchical program (§6.3)
+    /// inside the tuned window, the NCCL-heuristic fallback outside it.
+    fn allreduce_static(&mut self, size: u64) -> Result<Plan> {
+        let (lo, hi) = self.allreduce_window;
+        if size < lo || size > hi {
+            let key = format!("nccl_ar_{size}");
+            if !self.cache.contains_key(&key) {
+                let choice = nccl::tuner::allreduce(&self.topo, size);
+                let (compiled, spec) = nccl::allreduce::plan_choice(&self.topo, choice)?;
+                self.cache.insert(
+                    key.clone(),
+                    Built {
+                        ef: compiled.ef,
+                        stats: compiled.stats,
+                        spec: Some(Arc::new(spec)),
+                        variant: format!(
+                            "nccl {:?}/{} x{}",
+                            choice.algo,
+                            choice.proto.name(),
+                            choice.nchannels
+                        ),
+                    },
+                );
+            }
+            let side = if size < lo { "below" } else { "above" };
+            let reason = format!(
+                "{} is {side} the GC3 ring's tuned window [{}, {}] (§6.2) — NCCL \
+                 tuner-heuristic fallback",
+                human_bytes(size),
+                human_bytes(lo),
+                human_bytes(hi)
+            );
+            return Ok(self.finish(&key, Backend::NcclFallback, None, Some(size), reason));
+        }
+        let key = "gc3_ar";
+        if !self.cache.contains_key(key) {
+            if self.topo.nodes > 1 {
+                // Multi-node: hierarchical AllReduce (§6.3).
+                let t = allreduce::hierarchical(self.topo.nodes, self.topo.gpus_per_node)?;
+                let opts =
+                    CompileOpts::for_topo(&self.topo).with_protocol(Protocol::LL128);
+                self.build(key, &t, "gc3_allreduce_hier", &opts, "hierarchical ll128")?;
+            } else {
+                // Single node: the paper's ring — 8 tb × 4 instances, LL128.
+                let t = allreduce::ring(self.topo.num_ranks(), true)?;
+                let opts = CompileOpts::for_topo(&self.topo)
+                    .with_instances(4)
+                    .with_protocol(Protocol::LL128);
+                self.build(key, &t, "gc3_allreduce_ring", &opts, "ring x4 ll128")?;
+            }
+        }
+        let reason = format!(
+            "{} is inside the GC3 window [{}, {}] — the §6.2 schedule wins here",
+            human_bytes(size),
+            human_bytes(lo),
+            human_bytes(hi)
+        );
+        Ok(self.finish(key, Backend::Gc3, None, Some(size), reason))
+    }
+
+    /// AllToAll: the §2 two-step program across nodes; single-node
+    /// AllToAll is pure NVSwitch traffic where NCCL's direct pattern is
+    /// already optimal, so it falls back.
+    fn alltoall_static(&mut self, size: Option<u64>) -> Result<Plan> {
+        if self.topo.nodes == 1 {
+            let key = "nccl_a2a";
+            if !self.cache.contains_key(key) {
+                let t = alltoall::direct(self.topo.num_ranks())?;
+                let opts = CompileOpts::for_topo(&self.topo);
+                self.build(key, &t, "nccl_alltoall", &opts, "direct simple")?;
+            }
+            let reason = "single node: AllToAll is pure NVSwitch traffic, NCCL's direct \
+                          pattern is already optimal"
+                .to_string();
+            return Ok(self.finish(key, Backend::NcclFallback, None, size, reason));
+        }
+        let key = "gc3_a2a";
+        if !self.cache.contains_key(key) {
+            let t = alltoall::two_step(self.topo.nodes, self.topo.gpus_per_node)?;
+            let opts = CompileOpts::for_topo(&self.topo);
+            self.build(key, &t, "gc3_alltoall", &opts, "two_step simple")?;
+        }
+        let reason = format!(
+            "{} nodes: the §2 two-step program aggregates IB transfers — GC3 custom kernel",
+            self.topo.nodes
+        );
+        Ok(self.finish(key, Backend::Gc3, None, size, reason))
+    }
+
+    /// AllGather / ReduceScatter without a tuned table: the library ring
+    /// under default options.
+    fn library_ring_static(
+        &mut self,
+        collective: Collective,
+        size: Option<u64>,
+    ) -> Result<Plan> {
+        let key = format!("gc3_{}", collective.name());
+        if !self.cache.contains_key(&key) {
+            let r = self.topo.num_ranks();
+            let (trace, name) = match collective {
+                Collective::ReduceScatter => {
+                    (basics::reduce_scatter_ring(r)?, "gc3_reduce_scatter_ring")
+                }
+                // Only AllGather reaches here besides ReduceScatter.
+                _ => (basics::allgather_ring(r)?, "gc3_allgather_ring"),
+            };
+            let opts = CompileOpts::for_topo(&self.topo);
+            self.build(&key, &trace, name, &opts, "ring x1 simple")?;
+        }
+        let reason = "library ring under default options".to_string();
+        Ok(self.finish(&key, Backend::Gc3, None, size, reason))
+    }
+
+    // ---------------- internals ----------------
+
+    /// Compile `trace` through the staged pipeline and cache the result.
+    fn build(
+        &mut self,
+        key: &str,
+        trace: &Trace,
+        name: &str,
+        opts: &CompileOpts,
+        variant: &str,
+    ) -> Result<()> {
+        let compiled = Pipeline::new(opts).run(trace, name)?;
+        let spec = trace.spec.scaled(opts.instances); // identity at instances = 1
+        self.cache.insert(
+            key.to_string(),
+            Built {
+                ef: compiled.ef,
+                stats: compiled.stats,
+                spec: Some(Arc::new(spec)),
+                variant: variant.to_string(),
+            },
+        );
+        Ok(())
+    }
+
+    /// Stamp a cached body into a [`Plan`] for one request.
+    fn finish(
+        &self,
+        key: &str,
+        backend: Backend,
+        tuned: Option<TunedChoice>,
+        size: Option<u64>,
+        reason: String,
+    ) -> Plan {
+        let b = &self.cache[key];
+        Plan {
+            ef: b.ef.clone(),
+            backend,
+            choice: PlanChoice { variant: b.variant.clone(), tuned, reason },
+            stats: b.stats.clone(),
+            topo: self.topo.clone(),
+            spec: b.spec.clone(),
+            size,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo4() -> Topology {
+        let mut t = Topology::a100_single();
+        t.gpus_per_node = 4;
+        t
+    }
+
+    #[test]
+    fn window_dispatch_matches_registry_semantics() {
+        let mut p = Planner::new(topo4());
+        let small = p.plan(Collective::AllReduce, 32 * 1024).unwrap();
+        assert_eq!(small.backend, Backend::NcclFallback, "below window");
+        assert!(small.choice.reason.contains("below"), "{}", small.choice.reason);
+        let mid = p.plan(Collective::AllReduce, 2 << 20).unwrap();
+        assert_eq!(mid.backend, Backend::Gc3);
+        assert_eq!(mid.ef.protocol, Protocol::LL128);
+        assert!(mid.choice.reason.contains("inside"), "{}", mid.choice.reason);
+        let big = p.plan(Collective::AllReduce, 256 << 20).unwrap();
+        assert_eq!(big.backend, Backend::NcclFallback, "above window");
+    }
+
+    #[test]
+    fn plans_are_cached_and_self_describing() {
+        let mut p = Planner::new(topo4());
+        p.plan(Collective::AllReduce, 2 << 20).unwrap();
+        let n = p.cached();
+        let plan = p.plan(Collective::AllReduce, 4 << 20).unwrap();
+        assert_eq!(p.cached(), n, "same window entry reused");
+        assert!(plan.describe().contains("Gc3"), "{}", plan.describe());
+        assert!(plan.simulate().unwrap().time > 0.0);
+        plan.verify(4).unwrap();
+    }
+
+    #[test]
+    fn allgather_and_reduce_scatter_have_static_plans() {
+        let mut p = Planner::new(topo4());
+        for coll in [Collective::AllGather, Collective::ReduceScatter] {
+            let plan = p.plan(coll, 1 << 20).unwrap();
+            assert_eq!(plan.backend, Backend::Gc3);
+            plan.ef.validate().unwrap();
+            plan.verify(4).unwrap();
+        }
+    }
+
+    #[test]
+    fn custom_and_registered_plans() {
+        let mut t = Topology::a100(2);
+        t.gpus_per_node = 2;
+        let mut p = Planner::new(t);
+        let a2n = p.plan_custom("alltonext").unwrap();
+        assert_eq!(a2n.backend, Backend::Gc3);
+        assert!(a2n.ef.name.contains("alltonext"));
+        assert!(p.plan_custom("frobnicate").is_err());
+        // Internal dispatch keys must not leak through the custom API.
+        p.plan(Collective::AllReduce, 2 << 20).unwrap();
+        assert!(p.plan_custom("gc3_ar").is_err(), "internal cache key leaked");
+        let ef = a2n.ef.clone();
+        p.register("frobnicate", ef);
+        let reg = p.plan_custom("frobnicate").unwrap();
+        assert!(reg.verify(4).is_err(), "registered raw EFs have no spec");
+    }
+
+    #[test]
+    fn tuned_table_mismatches_rejected() {
+        let mut p = Planner::new(topo4());
+        let table = TunedTable {
+            collective: "allreduce".into(),
+            topology: "a100x1".into(),
+            num_ranks: 8,
+            entries: Vec::new(),
+        };
+        assert!(p.load_tuned(table).is_err(), "rank mismatch");
+        let table = TunedTable {
+            collective: "allreduce".into(),
+            topology: "asymx1".into(),
+            num_ranks: 4,
+            entries: Vec::new(),
+        };
+        assert!(p.load_tuned(table).is_err(), "fabric mismatch");
+    }
+}

@@ -16,7 +16,7 @@
 //!   counters (the spin-lock of §4.4);
 //! * **max-min fair bandwidth sharing** over the Fig. 2 resource
 //!   inventory, with per-flow threadblock/QP caps (two-round progressive
-//!   filling — see [`RateState`]).
+//!   filling — see `RateState`).
 //!
 //! # Hot-loop structure (EXPERIMENTS.md §Perf)
 //!

@@ -10,11 +10,13 @@
 
 pub mod data;
 
-use crate::coordinator::{Backend, Metrics, Registry};
+use crate::coordinator::Metrics;
 use crate::core::{Gc3Error, Result};
 use crate::exec::{self, Memory, NativeReducer, Reducer};
+use crate::planner::{Backend, Planner};
 use crate::runtime::{Artifacts, Engine, PjrtReducer};
 use crate::topology::Topology;
+use crate::tune::Collective;
 use data::Sampler;
 use std::time::Instant;
 
@@ -77,12 +79,13 @@ pub fn train(opts: &TrainOpts, log: impl Fn(&str)) -> Result<TrainReport> {
     // Topology: one node with `ranks` GPUs (the §6.2 inference box shape).
     let mut topo = Topology::a100_single();
     topo.gpus_per_node = opts.ranks;
-    let mut registry = Registry::new(topo);
+    let mut planner = Planner::new(topo);
     let grad_bytes = (meta.num_params * 4) as u64;
-    let (ef, backend) = registry.allreduce(grad_bytes)?;
+    let plan = planner.plan(Collective::AllReduce, grad_bytes)?;
+    let (ef, backend) = (plan.ef, plan.backend);
     log(&format!(
-        "allreduce: {} ({} chunks x {} ranks, {:?}, protocol {})",
-        ef.name, ef.in_chunks, ef.num_ranks, backend, ef.protocol
+        "allreduce: {} ({} chunks x {} ranks, {:?}, protocol {}) — {}",
+        ef.name, ef.in_chunks, ef.num_ranks, backend, ef.protocol, plan.choice.reason
     ));
 
     // Padded flat-gradient layout: in_chunks chunks per rank.

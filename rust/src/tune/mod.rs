@@ -5,7 +5,7 @@
 //! decision ladder. This module closes the loop instead, in the
 //! TACCL-style "search guided by a cost model" shape: for a given
 //! (collective, topology, size grid) it enumerates candidate plans
-//! ([`space`]), compiles each through [`crate::compiler::compile`] once
+//! (`space`), compiles each through [`crate::compiler::compile`] once
 //! (memoized by topology fingerprint + `(program variant, opts)` — the
 //! size grid reuses EFs),
 //! prices every `(candidate, size)` cell on the discrete-event simulator

@@ -115,11 +115,7 @@ pub struct Candidate {
 impl Candidate {
     /// Compile options for this candidate on `topo`.
     pub fn opts(&self, topo: &Topology) -> CompileOpts {
-        CompileOpts {
-            instances: self.instances,
-            protocol: self.protocol,
-            ..CompileOpts::for_topo(topo)
-        }
+        CompileOpts::for_topo(topo).with_instances(self.instances).with_protocol(self.protocol)
     }
 
     /// Stable display / memoization key, e.g. `ring x4 ll128` — delegates

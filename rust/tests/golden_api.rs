@@ -1,0 +1,115 @@
+//! Golden API-parity suite for the staged compiler + planner redesign.
+//!
+//! 1. `compile()`, `Pipeline::run`, and the stage-by-stage API must emit
+//!    **byte-identical** EF JSON for every library program on every
+//!    topology family (a100 / ndv2 / ndv4 / asym). `compile()` delegates
+//!    to `Pipeline::run`, so the real teeth are (a) the staged path —
+//!    artifact hand-offs, pass anchoring, stats threading — can never
+//!    drift from the one-shot path, and (b) any future divergence between
+//!    the wrapper and the pipeline (e.g. a default-opts change on one
+//!    side) is caught across the whole program × topology matrix.
+//! 2. `Planner` dispatch: a loaded tuned table beats the static
+//!    heuristics for covered sizes, and out-of-window sizes fall back.
+
+use gc3::collectives;
+use gc3::compiler::{compile, CompileOpts, Pipeline};
+use gc3::planner::{Backend, Planner};
+use gc3::sim::Protocol;
+use gc3::topology::Topology;
+use gc3::tune::{tune, Collective, TuneOpts};
+
+fn test_topologies() -> Vec<Topology> {
+    let mut topos = vec![
+        Topology::a100(2),
+        Topology::ndv2(2),
+        Topology::ndv4(2),
+        Topology::asym(2),
+    ];
+    for t in &mut topos {
+        t.gpus_per_node = 2; // keep the sweep fast; ranks = 4 per topology
+    }
+    topos.push(Topology::a100_single());
+    topos
+}
+
+/// Run the pipeline one stage at a time — the staged path the golden test
+/// exists to pin against the one-shot wrapper.
+fn staged(pipe: &Pipeline, trace: &gc3::dsl::Trace, name: &str) -> gc3::compiler::Compiled {
+    let t = pipe.trace(trace).unwrap();
+    let c = pipe.chunk_dag(t).unwrap();
+    let i = pipe.inst_dag(c).unwrap();
+    let s = pipe.schedule(i).unwrap();
+    pipe.emit(s, name).unwrap()
+}
+
+#[test]
+fn pipeline_and_legacy_compile_emit_identical_ef_json() {
+    for topo in test_topologies() {
+        let opt_sets = [
+            CompileOpts::for_topo(&topo),
+            CompileOpts::for_topo(&topo).with_instances(2).with_protocol(Protocol::LL128),
+        ];
+        for prog in collectives::library(&topo).unwrap() {
+            for opts in &opt_sets {
+                let legacy = compile(&prog.trace, prog.name, opts)
+                    .unwrap_or_else(|e| panic!("{} on {}: {e}", prog.name, topo.name));
+                let pipe = Pipeline::new(opts);
+                let st = staged(&pipe, &prog.trace, prog.name);
+                assert_eq!(
+                    legacy.ef.to_json_string(),
+                    st.ef.to_json_string(),
+                    "staged pipeline diverged from compile() for {} on {} (x{})",
+                    prog.name,
+                    topo.name,
+                    opts.instances
+                );
+                // The one-shot Pipeline::run must agree too, and carry the
+                // full five-stage timing breakdown.
+                let oneshot = pipe.run(&prog.trace, prog.name).unwrap();
+                assert_eq!(legacy.ef.to_json_string(), oneshot.ef.to_json_string());
+                let names: Vec<&str> =
+                    oneshot.stats.stage_times.iter().map(|t| t.stage).collect();
+                assert_eq!(names, vec!["trace", "chunkdag", "instdag", "schedule", "ef"]);
+            }
+        }
+    }
+}
+
+#[test]
+fn planner_tuned_table_beats_heuristic_and_falls_back() {
+    let mut topo = Topology::a100_single();
+    topo.gpus_per_node = 4;
+    let sizes = [64 * 1024u64, 16 * 1024 * 1024];
+    let out = tune(&topo, Collective::AllReduce, &sizes, &TuneOpts::default()).unwrap();
+
+    // Without a table: static window dispatch (64 KB is below the window).
+    let mut bare = Planner::new(topo.clone());
+    let plan = bare.plan(Collective::AllReduce, 64 * 1024).unwrap();
+    assert_eq!(plan.backend, Backend::NcclFallback);
+    let plan = bare.plan(Collective::AllReduce, 2 << 20).unwrap();
+    assert_eq!(plan.backend, Backend::Gc3);
+
+    // With the table: every covered size is served from it, with the
+    // table's own choice and full provenance.
+    let mut planner = Planner::new(topo).with_tuned(out.table.clone()).unwrap();
+    for &size in &sizes {
+        let plan = planner.plan(Collective::AllReduce, size).unwrap();
+        assert_eq!(plan.backend, Backend::Tuned, "at {size}");
+        let expect = out.table.lookup(size).unwrap();
+        assert_eq!(plan.ef.protocol, expect.choice.protocol, "at {size}");
+        assert_eq!(plan.choice.tuned.as_ref(), Some(&expect.choice));
+        assert!(plan.choice.reason.contains("tuned table"), "{}", plan.choice.reason);
+        plan.ef.validate().unwrap();
+        plan.verify(4).unwrap();
+    }
+    // Repeat requests answer from the plan cache.
+    let n = planner.cached();
+    planner.plan(Collective::AllReduce, sizes[0]).unwrap();
+    assert_eq!(planner.cached(), n);
+
+    // Far outside the measured grid (64 KB – 16 MB): the table must NOT
+    // extrapolate — static heuristics win again at 1 GB.
+    let plan = planner.plan(Collective::AllReduce, 1 << 30).unwrap();
+    assert_eq!(plan.backend, Backend::NcclFallback, "out-of-span size extrapolated");
+    assert!(plan.choice.reason.contains("NCCL"), "{}", plan.choice.reason);
+}
