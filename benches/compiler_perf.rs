@@ -30,7 +30,19 @@ fn main() {
     println!("== Tuned-vs-default (simulator-driven autotuner, allreduce on 8xA100)");
     let (tuned_table, tuned_rows) = perf::tuned_vs_default().expect("tuned-vs-default");
     print!("{}", perf::render_tuned(&tuned_rows));
-    let json = perf::to_json(&cases, h2h.as_ref(), &tuned_rows);
+    println!("== Executor throughput (session cooperative vs threaded vs pre-session reference)");
+    let exec_rows = perf::exec_suite(4).expect("exec suite");
+    print!("{}", perf::render_exec(&exec_rows));
+    // The ≥ 1.5× threaded-vs-cooperative target on ring-allreduce@8 is
+    // reported, not gated: EXPERIMENTS.md §EXEC records the measured ratio
+    // (and the explanation when a runner's core count can't deliver it).
+    if let Some(r) = exec_rows.iter().find(|r| r.scenario == "ring_allreduce_8r") {
+        println!(
+            "threaded-vs-cooperative on {}: {:.2}x (target >= 1.5x, see EXPERIMENTS.md §EXEC)",
+            r.scenario, r.threaded_speedup
+        );
+    }
+    let json = perf::to_json(&cases, h2h.as_ref(), &tuned_rows, &exec_rows);
     let path = "BENCH_compiler_perf.json";
     std::fs::write(path, json.to_string()).expect("write BENCH_compiler_perf.json");
     println!("wrote {path}");

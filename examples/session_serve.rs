@@ -1,0 +1,71 @@
+//! One running machine, many collectives: the paper's deployment shape
+//! (§4.4, §5) on the session executor.
+//!
+//! The `Planner` facade picks a plan per collective; every EF is
+//! registered into a single `exec::Session` — per-rank VMs over
+//! persistent connections — and launched back-to-back, first on the
+//! deterministic cooperative driver, then on the threaded driver, which
+//! must produce byte-identical results.
+//!
+//! Run: `cargo run --release --example session_serve`
+
+use gc3::exec::{test_pattern, Memory, Session};
+use gc3::planner::Planner;
+use gc3::topology::Topology;
+use gc3::tune::Collective;
+
+fn main() -> gc3::core::Result<()> {
+    let mut topo = Topology::a100_single();
+    topo.gpus_per_node = 8;
+    let mut planner = Planner::new(topo);
+
+    // --- 1. Plan three collectives and register them into one session. --
+    let size = 4 << 20;
+    let mut session = Session::named("serving");
+    let mut served = Vec::new();
+    for coll in [Collective::AllReduce, Collective::AllGather, Collective::ReduceScatter] {
+        let plan = planner.plan(coll, size)?;
+        println!("{}: {}", plan.ef.name, plan.choice.reason);
+        served.push((plan.ef.name.clone(), plan));
+    }
+    for (_, plan) in &served {
+        session.register(plan.ef.clone())?;
+    }
+    println!(
+        "session '{}': {} programs registered on a {}-rank machine\n",
+        session.label(),
+        session.programs().len(),
+        session.num_ranks().unwrap()
+    );
+
+    // --- 2. Serve them back-to-back over persistent connections, on both
+    //     drivers; the postcondition is checked against each plan's spec.
+    for threads in [1usize, 4] {
+        if threads > 1 {
+            session.run_threaded(threads);
+        }
+        for (name, plan) in &served {
+            let spec = plan.spec().expect("planned collectives carry a spec");
+            let ef = session.program(name).unwrap();
+            let mut mem = Memory::for_ef(ef, 1024);
+            mem.fill_pattern(test_pattern);
+            let t0 = std::time::Instant::now();
+            let stats = session.launch(name, &mut mem)?;
+            let dt = t0.elapsed().as_secs_f64();
+            gc3::exec::check_memory(&mem, spec)?;
+            println!(
+                "{name:24} threads={threads}: {:7} messages, {:9} elems in {:7.2} ms \
+                 ({:6.1} M elems/s), postcondition OK",
+                stats.messages,
+                stats.elems_moved,
+                dt * 1e3,
+                stats.elems_moved as f64 / dt.max(1e-12) / 1e6
+            );
+        }
+        println!(
+            "persistent connections open: {} (reused across all launches)\n",
+            session.connections()
+        );
+    }
+    Ok(())
+}

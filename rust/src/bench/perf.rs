@@ -10,10 +10,11 @@
 //!
 //! Driven by `benches/compiler_perf.rs`; usable from any harness.
 
-use crate::collectives::{allreduce, alltoall};
+use crate::collectives::{allreduce, alltoall, basics};
 use crate::compiler::{compile, CompileOpts, Compiled, StageTiming};
-use crate::core::Result;
+use crate::core::{Gc3Error, Result};
 use crate::dsl::Trace;
+use crate::exec::{execute_reference, test_pattern, Memory, NativeReducer, Session};
 use crate::sim::{simulate, simulate_reference, Protocol};
 use crate::topology::Topology;
 use crate::tune::{tune, Collective, TuneOpts, TunedTable};
@@ -91,6 +92,116 @@ pub fn tuned_vs_default() -> Result<(TunedTable, Vec<TunedRow>)> {
         });
     }
     Ok((out.table, rows))
+}
+
+/// One executor-throughput measurement point (EXPERIMENTS.md §EXEC): the
+/// same compiled EF driven by the session executor's cooperative and
+/// threaded drivers and by the preserved pre-session interpreter
+/// ([`crate::exec::execute_reference`]) — so both the allocation-churn fix
+/// and the threaded speedup are recorded per run.
+#[derive(Clone, Debug)]
+pub struct ExecRow {
+    pub scenario: String,
+    pub ranks: usize,
+    pub elems_per_chunk: usize,
+    /// Worker threads used by the threaded driver.
+    pub threads: usize,
+    /// Payload f32 elements moved through connections per launch.
+    pub elems_moved: usize,
+    /// Best-of-N wall-clock seconds, cooperative session driver.
+    pub cooperative_s: f64,
+    /// Best-of-N wall-clock seconds, threaded session driver.
+    pub threaded_s: f64,
+    /// Best-of-N wall-clock seconds, pre-session reference interpreter.
+    pub reference_s: f64,
+    /// `cooperative_s / threaded_s` — the rank-parallelism win.
+    pub threaded_speedup: f64,
+    /// `reference_s / cooperative_s` — the allocation-churn fix alone.
+    pub alloc_speedup: f64,
+}
+
+/// Run the executor-throughput scenarios. Per scenario, every driver
+/// executes the identical EF over identically filled memory; the session
+/// drivers' message/element counts are asserted equal so the comparison
+/// can never silently measure different work.
+pub fn exec_suite(threads: usize) -> Result<Vec<ExecRow>> {
+    let scenarios: Vec<(&str, Trace, usize)> = vec![
+        ("ring_allreduce_8r", allreduce::ring(8, true)?, 16 * 1024),
+        ("allgather_ring_8r", basics::allgather_ring(8)?, 16 * 1024),
+        ("alltoall_direct_8r", alltoall::direct(8)?, 8 * 1024),
+    ];
+    let reps = 3;
+    let mut rows = Vec::with_capacity(scenarios.len());
+    for (name, trace, elems) in scenarios {
+        let c = compile(&trace, name, &CompileOpts::default())?;
+
+        // Fresh memory per engine: fill_pattern rewrites inputs only, so
+        // sharing one Memory would leak the previous engine's output and
+        // scratch state into the next run.
+        let mut mem = Memory::for_ef(&c.ef, elems);
+        let mut coop = Session::named(name);
+        coop.register(c.ef.clone())?;
+        mem.fill_pattern(test_pattern);
+        let coop_stats = coop.launch(name, &mut mem)?; // warmup + work counts
+        let mut t_coop = f64::INFINITY;
+        for _ in 0..reps {
+            mem.fill_pattern(test_pattern);
+            let t0 = Instant::now();
+            coop.launch(name, &mut mem)?;
+            t_coop = t_coop.min(t0.elapsed().as_secs_f64());
+        }
+
+        let mut mem = Memory::for_ef(&c.ef, elems);
+        let mut thr = Session::named(name);
+        thr.register(c.ef.clone())?;
+        thr.run_threaded(threads);
+        mem.fill_pattern(test_pattern);
+        let thr_stats = thr.launch(name, &mut mem)?;
+        let mut t_thr = f64::INFINITY;
+        for _ in 0..reps {
+            mem.fill_pattern(test_pattern);
+            let t0 = Instant::now();
+            thr.launch(name, &mut mem)?;
+            t_thr = t_thr.min(t0.elapsed().as_secs_f64());
+        }
+        if coop_stats.messages != thr_stats.messages
+            || coop_stats.elems_moved != thr_stats.elems_moved
+        {
+            return Err(Gc3Error::Exec(format!(
+                "{name}: threaded driver diverged from cooperative \
+                 ({} vs {} messages, {} vs {} elems moved)",
+                coop_stats.messages,
+                thr_stats.messages,
+                coop_stats.elems_moved,
+                thr_stats.elems_moved
+            )));
+        }
+
+        let mut mem = Memory::for_ef(&c.ef, elems);
+        mem.fill_pattern(test_pattern);
+        execute_reference(&c.ef, &mut mem, &mut NativeReducer)?; // warmup
+        let mut t_ref = f64::INFINITY;
+        for _ in 0..reps {
+            mem.fill_pattern(test_pattern);
+            let t0 = Instant::now();
+            execute_reference(&c.ef, &mut mem, &mut NativeReducer)?;
+            t_ref = t_ref.min(t0.elapsed().as_secs_f64());
+        }
+
+        rows.push(ExecRow {
+            scenario: name.to_string(),
+            ranks: c.ef.num_ranks,
+            elems_per_chunk: elems,
+            threads,
+            elems_moved: coop_stats.elems_moved,
+            cooperative_s: t_coop,
+            threaded_s: t_thr,
+            reference_s: t_ref,
+            threaded_speedup: t_coop / t_thr.max(1e-12),
+            alloc_speedup: t_ref / t_coop.max(1e-12),
+        });
+    }
+    Ok(rows)
 }
 
 /// Best-of-`n` wall-clock seconds (one warmup call first).
@@ -214,10 +325,15 @@ pub fn run_suite(head_to_head: bool) -> Result<(Vec<PerfCase>, Option<HeadToHead
 }
 
 /// Serialize results as the `BENCH_compiler_perf.json` payload.
-pub fn to_json(cases: &[PerfCase], h2h: Option<&HeadToHead>, tuned: &[TunedRow]) -> Json {
+pub fn to_json(
+    cases: &[PerfCase],
+    h2h: Option<&HeadToHead>,
+    tuned: &[TunedRow],
+    exec: &[ExecRow],
+) -> Json {
     let mut root = Json::obj();
     root.set("bench", Json::Str("compiler_perf".into()));
-    root.set("schema_version", Json::Num(3.0));
+    root.set("schema_version", Json::Num(4.0));
     let rows: Vec<Json> = cases
         .iter()
         .map(|c| {
@@ -268,7 +384,56 @@ pub fn to_json(cases: &[PerfCase], h2h: Option<&HeadToHead>, tuned: &[TunedRow])
             .collect();
         root.set("tuned_vs_default", Json::Arr(rows));
     }
+    if !exec.is_empty() {
+        let rows: Vec<Json> = exec
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("scenario", Json::Str(r.scenario.clone()));
+                o.set("ranks", Json::Num(r.ranks as f64));
+                o.set("elems_per_chunk", Json::Num(r.elems_per_chunk as f64));
+                o.set("threads", Json::Num(r.threads as f64));
+                o.set("elems_moved", Json::Num(r.elems_moved as f64));
+                o.set("cooperative_s", Json::Num(r.cooperative_s));
+                o.set("threaded_s", Json::Num(r.threaded_s));
+                o.set("reference_s", Json::Num(r.reference_s));
+                o.set(
+                    "cooperative_elems_per_sec",
+                    Json::Num(r.elems_moved as f64 / r.cooperative_s.max(1e-12)),
+                );
+                o.set(
+                    "threaded_elems_per_sec",
+                    Json::Num(r.elems_moved as f64 / r.threaded_s.max(1e-12)),
+                );
+                o.set("threaded_speedup", Json::Num(r.threaded_speedup));
+                o.set("alloc_speedup", Json::Num(r.alloc_speedup));
+                o
+            })
+            .collect();
+        root.set("exec", Json::Arr(rows));
+    }
     root
+}
+
+/// Human-readable rendering of the executor-throughput rows.
+pub fn render_exec(rows: &[ExecRow]) -> String {
+    let mut out = format!(
+        "{:<20} {:>14} {:>12} {:>12} {:>12} {:>10} {:>10}\n",
+        "scenario", "elems moved", "coop ms", "threaded ms", "ref ms", "thr x", "alloc x"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<20} {:>14} {:>12.3} {:>12.3} {:>12.3} {:>9.2}x {:>9.2}x\n",
+            r.scenario,
+            r.elems_moved,
+            r.cooperative_s * 1e3,
+            r.threaded_s * 1e3,
+            r.reference_s * 1e3,
+            r.threaded_speedup,
+            r.alloc_speedup
+        ));
+    }
+    out
 }
 
 /// Human-readable rendering of the tuned-vs-default rows.
@@ -346,7 +511,19 @@ mod tests {
             speedup: 3.0,
             choice: "ring x4 ll".into(),
         }];
-        let j = to_json(&cases, Some(&h), &tuned);
+        let exec = vec![ExecRow {
+            scenario: "ring_allreduce_8r".into(),
+            ranks: 8,
+            elems_per_chunk: 16384,
+            threads: 4,
+            elems_moved: 1_835_008,
+            cooperative_s: 2.0e-3,
+            threaded_s: 1.0e-3,
+            reference_s: 4.0e-3,
+            threaded_speedup: 2.0,
+            alloc_speedup: 2.0,
+        }];
+        let j = to_json(&cases, Some(&h), &tuned, &exec);
         let s = j.to_string();
         for field in [
             "compile_ms",
@@ -358,6 +535,11 @@ mod tests {
             "tuned_vs_default",
             "choice",
             "stages",
+            "exec",
+            "cooperative_elems_per_sec",
+            "threaded_elems_per_sec",
+            "threaded_speedup",
+            "alloc_speedup",
         ] {
             assert!(s.contains(field), "missing {field} in {s}");
         }
@@ -369,7 +551,28 @@ mod tests {
         assert_eq!(stages[0].get("stage").and_then(|e| e.as_str()), Some("trace"));
         let tv = j.get("tuned_vs_default").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(tv[0].get("size_bytes").and_then(|e| e.as_usize()), Some(65536));
-        // No tuned rows → no section (old consumers keep working).
-        assert!(to_json(&cases, None, &[]).get("tuned_vs_default").is_none());
+        let ex = j.get("exec").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(ex[0].get("threads").and_then(|e| e.as_usize()), Some(4));
+        assert_eq!(ex[0].get("elems_moved").and_then(|e| e.as_usize()), Some(1_835_008));
+        // No tuned/exec rows → no sections (old consumers keep working).
+        let bare = to_json(&cases, None, &[], &[]);
+        assert!(bare.get("tuned_vs_default").is_none());
+        assert!(bare.get("exec").is_none());
+    }
+
+    /// The exec suite's scenarios are small enough to run here in full:
+    /// every row must carry consistent measurements from all three
+    /// engines (cooperative, threaded, pre-session reference).
+    #[test]
+    fn exec_suite_measures_all_three_engines() {
+        let rows = exec_suite(2).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().any(|r| r.scenario == "ring_allreduce_8r"));
+        for r in &rows {
+            assert_eq!(r.ranks, 8, "{}", r.scenario);
+            assert!(r.elems_moved > 0, "{}", r.scenario);
+            assert!(r.cooperative_s > 0.0 && r.threaded_s > 0.0 && r.reference_s > 0.0);
+            assert!(r.threaded_speedup > 0.0 && r.alloc_speedup > 0.0);
+        }
     }
 }

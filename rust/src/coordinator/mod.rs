@@ -18,8 +18,9 @@ pub use metrics::Metrics;
 
 pub use crate::planner::Backend;
 
-use crate::core::Result;
+use crate::core::{Gc3Error, Result};
 use crate::ef::EfProgram;
+use crate::exec::Session;
 use crate::planner::Planner;
 use crate::topology::Topology;
 use crate::tune::{Collective, TunedTable};
@@ -96,6 +97,38 @@ impl Registry {
     /// Register a pre-compiled EF under a custom name.
     pub fn register(&mut self, name: &str, ef: EfProgram) {
         self.planner.register(name, ef);
+    }
+
+    /// Open a long-lived executor [`Session`] serving the requested
+    /// collectives at `size`: each is planned through the registry's
+    /// dispatch and its EF registered into one session over persistent
+    /// connections — the paper's deployment shape, where one running
+    /// interpreter machine answers every collective call (§4.4, §5).
+    /// Returns the session plus the registered program name per
+    /// collective, in request order.
+    pub fn open_session(
+        &mut self,
+        collectives: &[Collective],
+        size: u64,
+    ) -> Result<(Session, Vec<String>)> {
+        let mut session = Session::named(&format!("registry:{}", self.topo().name));
+        let mut names: Vec<String> = Vec::with_capacity(collectives.len());
+        for &coll in collectives {
+            let plan = self.planner.plan(coll, size)?;
+            let name = plan.ef.name.clone();
+            // Session registration is latest-wins; a silent replace here
+            // would leave `names` claiming two served collectives while
+            // the session holds one program.
+            if names.contains(&name) {
+                return Err(Gc3Error::Invalid(format!(
+                    "open_session: two requested collectives resolve to the same program \
+                     '{name}' — deduplicate the request"
+                )));
+            }
+            names.push(name);
+            session.register(plan.ef)?;
+        }
+        Ok((session, names))
     }
 
     pub fn cached(&self) -> usize {
@@ -254,6 +287,34 @@ mod tests {
         // Empty table has no buckets: dispatch falls through to heuristics.
         let (_, b) = reg.allreduce(64 * 1024).unwrap();
         assert_eq!(b, Backend::NcclFallback);
+    }
+
+    /// One registry-opened session serves several planned collectives
+    /// back-to-back over persistent connections, with postconditions
+    /// checked against each plan's spec.
+    #[test]
+    fn open_session_serves_planned_collectives() {
+        let mut reg = Registry::new(topo());
+        let size = 2 * 1024 * 1024u64; // inside the AllReduce window
+        let colls = [Collective::AllReduce, Collective::AllGather];
+        let (mut session, names) = reg.open_session(&colls, size).unwrap();
+        assert_eq!(names.len(), 2);
+        assert_eq!(session.num_ranks(), Some(4));
+        assert_eq!(session.programs().len(), 2);
+        let mut opened_after_first = 0;
+        for (i, (&coll, name)) in colls.iter().zip(&names).enumerate() {
+            let plan = reg.planner().plan(coll, size).unwrap();
+            let spec = plan.spec().expect("planned collectives carry a spec");
+            let stats = session.verify(name, spec, 4).unwrap();
+            assert!(stats.messages > 0, "{name}");
+            if i == 0 {
+                opened_after_first = session.connections();
+                // Relaunch: the same persistent connections serve again.
+                session.verify(name, spec, 4).unwrap();
+                assert_eq!(session.connections(), opened_after_first);
+            }
+        }
+        assert!(session.connections() >= opened_after_first);
     }
 
     #[test]

@@ -96,6 +96,33 @@ impl EfProgram {
             if gpu.rank != r {
                 return Err(Gc3Error::Ef(format!("GPU section {r} labeled rank {}", gpu.rank)));
             }
+            // §4.1 connection ownership: no two threadblocks of one GPU
+            // share a send or a receive connection. The runtime's FIFO
+            // pairing (k-th send ↔ k-th receive) and the threaded
+            // executor's byte-determinism both depend on a single owner
+            // per connection side — the scheduler guarantees this for
+            // compiled EFs, but hand-built or JSON-loaded EFs reach the
+            // runtime through this check alone.
+            let mut send_owners = std::collections::HashSet::new();
+            let mut recv_owners = std::collections::HashSet::new();
+            for (t, tb) in gpu.tbs.iter().enumerate() {
+                if let Some((peer, ch)) = tb.send {
+                    if !send_owners.insert((peer, ch)) {
+                        return Err(Gc3Error::Ef(format!(
+                            "r{r}/tb{t}: send connection (peer {peer}, ch {ch}) is already \
+                             owned by another threadblock (§4.1)"
+                        )));
+                    }
+                }
+                if let Some((peer, ch)) = tb.recv {
+                    if !recv_owners.insert((peer, ch)) {
+                        return Err(Gc3Error::Ef(format!(
+                            "r{r}/tb{t}: receive connection (peer {peer}, ch {ch}) is already \
+                             owned by another threadblock (§4.1)"
+                        )));
+                    }
+                }
+            }
             for (t, tb) in gpu.tbs.iter().enumerate() {
                 for (s, inst) in tb.steps.iter().enumerate() {
                     if inst.op.sends() && tb.send.is_none() {
@@ -219,6 +246,21 @@ impl EfProgram {
         };
         ef.validate()?;
         Ok(ef)
+    }
+
+    /// The collective spec matching this EF's chunk counts, derived from
+    /// the original (pre-replication) trace: instance replication (§5.3.2)
+    /// multiplies the chunk counts, so a postcondition written against the
+    /// source program must be scaled by the same factor before it can be
+    /// checked against this EF's memory. Identity when the EF was compiled
+    /// at `instances = 1`.
+    pub fn ef_spec(&self, original: &crate::dsl::Trace) -> crate::dsl::collective::CollectiveSpec {
+        let factor = self.in_chunks / original.spec.in_chunks.max(1);
+        if factor > 1 {
+            original.spec.scaled(factor)
+        } else {
+            original.spec.clone()
+        }
     }
 
     /// Human-readable listing in the style of Fig. 4 — `gc3 inspect`.
@@ -436,6 +478,29 @@ mod tests {
         ef.gpus[0].tbs[0].send = None;
         let err = ef.validate().unwrap_err();
         assert!(err.to_string().contains("send connection"), "{err}");
+    }
+
+    /// The §4.1 ownership rule: a second threadblock claiming an already
+    /// owned send (or receive) connection side must fail validation —
+    /// this is what keeps dynamically loaded EFs safe for the threaded
+    /// executor, whose determinism needs one owner per FIFO side.
+    #[test]
+    fn validate_catches_shared_connection_ownership() {
+        let mut ef = tiny_ef();
+        // gpu 0's tb1 is connection-less in the fixture; give it tb0's
+        // send connection.
+        ef.gpus[0].tbs[1].send = Some((1, 0));
+        let err = ef.validate().unwrap_err().to_string();
+        assert!(err.contains("already"), "{err}");
+        let mut ef = tiny_ef();
+        ef.gpus[0].tbs[1].recv = Some((1, 0));
+        let err = ef.validate().unwrap_err().to_string();
+        assert!(err.contains("already"), "{err}");
+        // Distinct channels on the same peer are fine.
+        let mut ef = tiny_ef();
+        ef.gpus[0].tbs[1].send = Some((1, 1));
+        ef.gpus[0].tbs[1].recv = Some((1, 1));
+        ef.validate().unwrap();
     }
 
     #[test]

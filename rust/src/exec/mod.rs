@@ -1,20 +1,33 @@
-//! Functional executor: a byte-accurate interpreter of GC3-EF (§4.4).
+//! Functional executor: the byte-accurate GC3-EF runtime (§4.4, §5).
 //!
 //! This is the correctness half of the runtime substrate (the timing half
-//! is [`crate::sim`]). It executes a GC3-EF over host `f32` buffers with
-//! the exact semantics the CUDA interpreter implements: per-threadblock
-//! sequential instruction streams, FIFO connections, spin-lock cross-tb
-//! dependences — and verifies the collective's postcondition numerically.
+//! is [`crate::sim`]). The public facade is [`Session`] — a persistent
+//! multi-rank interpreter machine: per-rank [`RankVm`]s over explicit
+//! typed [`Channel`] endpoints, dynamic EF registration
+//! ([`Session::register`] / [`Session::launch`]), and two drivers — the
+//! deterministic cooperative sweep and a `std::thread` threaded driver
+//! ([`Session::run_threaded`]) that must produce byte-identical memory.
+//! See [`session`] for the design.
+//!
+//! [`execute`] and [`verify`] remain as thin one-shot wrappers over a
+//! throwaway session, and [`execute_reference`] preserves the pre-session
+//! monolithic interpreter as a parity oracle and bench baseline.
 //!
 //! Chunk reduction is pluggable through [`Reducer`]: the default is a
 //! native f32 loop; [`crate::runtime::PjrtReducer`] routes it through the
-//! AOT-compiled Pallas kernel, closing the three-layer loop.
+//! AOT-compiled Pallas kernel, closing the three-layer loop (cooperative
+//! driver only — see [`Session::launch_reduce`]).
+
+pub mod session;
+
+mod reference;
+
+pub use reference::execute_reference;
+pub use session::{Channel, ConnKey, Driver, RankMemory, RankVm, RecvPort, SendPort, Session};
 
 use crate::core::{BufferId, Gc3Error, Rank, Result, Slot};
 use crate::dsl::collective::CollectiveSpec;
 use crate::ef::EfProgram;
-use crate::instdag::OpCode;
-use std::collections::{HashMap, VecDeque};
 
 /// Pluggable chunk reduction: `acc[i] += src[i]`.
 pub trait Reducer {
@@ -41,11 +54,14 @@ pub struct ExecStats {
     pub messages: usize,
     /// Payload f32 elements moved across connections.
     pub elems_moved: usize,
-    /// Scheduler sweeps needed to drain the program.
+    /// Scheduler sweeps needed to drain the program (cooperative driver),
+    /// or the busiest worker's sweep count (threaded driver).
     pub rounds: usize,
 }
 
-/// The per-rank memory of the machine.
+/// The whole machine's memory, rank-major: the launch-time container a
+/// [`Session`] splits into per-rank [`RankMemory`]s (and reassembles —
+/// the buffers are moved, not copied).
 pub struct Memory {
     /// `input[rank]`, `output[rank]`, `scratch[rank]`.
     pub input: Vec<Vec<f32>>,
@@ -66,46 +82,6 @@ impl Memory {
             .map(|g| vec![0.0; g.scratch_chunks * elems_per_chunk])
             .collect();
         Memory { input, output, scratch, elems_per_chunk }
-    }
-
-    fn buf(&mut self, rank: Rank, b: BufferId) -> &mut Vec<f32> {
-        match b {
-            BufferId::Input => &mut self.input[rank],
-            BufferId::Output => &mut self.output[rank],
-            BufferId::Scratch => &mut self.scratch[rank],
-        }
-    }
-
-    /// Copy `count` chunks out of `(rank, buffer, index)`.
-    fn read(&mut self, rank: Rank, b: BufferId, index: usize, count: usize) -> Result<Vec<f32>> {
-        let e = self.elems_per_chunk;
-        let buf = self.buf(rank, b);
-        let (lo, hi) = (index * e, (index + count) * e);
-        if hi > buf.len() {
-            return Err(Gc3Error::Exec(format!(
-                "read past end of r{rank}:{b} ({} elems, wanted {}..{})",
-                buf.len(),
-                lo,
-                hi
-            )));
-        }
-        Ok(buf[lo..hi].to_vec())
-    }
-
-    fn write(&mut self, rank: Rank, b: BufferId, index: usize, data: &[f32]) -> Result<()> {
-        let e = self.elems_per_chunk;
-        let buf = self.buf(rank, b);
-        let lo = index * e;
-        if lo + data.len() > buf.len() {
-            return Err(Gc3Error::Exec(format!(
-                "write past end of r{rank}:{b} ({} elems, wanted {}..{})",
-                buf.len(),
-                lo,
-                lo + data.len()
-            )));
-        }
-        buf[lo..lo + data.len()].copy_from_slice(data);
-        Ok(())
     }
 
     /// Fill inputs with the canonical test pattern: element `e` of input
@@ -129,148 +105,20 @@ pub fn test_pattern(rank: Rank, idx: usize, elem: usize) -> f32 {
     (rank * 131 + idx * 17) as f32 + (elem % 7) as f32 * 0.125
 }
 
-/// Execute a GC3-EF over `mem`. FIFO connections, cooperative threadblock
-/// scheduling, spin-lock dependences. Deadlocks are detected and reported.
+/// One-shot compatibility wrapper: execute `ef` over `mem` on a throwaway
+/// [`Session`]'s cooperative driver. Long-lived callers should hold a
+/// session instead and launch by name over persistent connections.
 pub fn execute(ef: &EfProgram, mem: &mut Memory, red: &mut dyn Reducer) -> Result<ExecStats> {
-    ef.validate()?;
-    struct TbState {
-        pc: usize,
-    }
-    // Connection FIFOs keyed (src rank, channel, dst rank).
-    let mut conns: HashMap<(Rank, usize, Rank), VecDeque<Vec<f32>>> = HashMap::new();
-    let mut tbs: Vec<Vec<TbState>> =
-        ef.gpus.iter().map(|g| g.tbs.iter().map(|_| TbState { pc: 0 }).collect()).collect();
-    // progress[rank][tb] = completed step count (the spin-lock counter).
-    let mut progress: Vec<Vec<usize>> = ef.gpus.iter().map(|g| vec![0; g.tbs.len()]).collect();
-    let mut stats = ExecStats::default();
-
-    let total: usize = ef.num_insts();
-    let mut done = 0;
-    while done < total {
-        let mut advanced = false;
-        stats.rounds += 1;
-        for gpu in &ef.gpus {
-            let rank = gpu.rank;
-            for (t, tb) in gpu.tbs.iter().enumerate() {
-                // Run as far as possible within this threadblock.
-                loop {
-                    let pc = tbs[rank][t].pc;
-                    if pc >= tb.steps.len() {
-                        break;
-                    }
-                    let inst = &tb.steps[pc];
-                    // Cross-threadblock dependence (spin lock).
-                    if let Some((dep_tb, dep_step)) = inst.depend {
-                        if progress[rank][dep_tb] <= dep_step {
-                            break;
-                        }
-                    }
-                    // Receive-type: data must be waiting in the FIFO.
-                    let mut incoming: Option<Vec<f32>> = None;
-                    if inst.op.recvs() {
-                        let (peer, ch) = tb.recv.expect("validated");
-                        let q = conns.entry((peer, ch, rank)).or_default();
-                        match q.front() {
-                            Some(_) => incoming = q.pop_front(),
-                            None => break, // blocked on data
-                        }
-                    }
-                    // Local operand.
-                    let expected_len = inst.count * mem.elems_per_chunk;
-                    if let Some(data) = &incoming {
-                        if data.len() != expected_len {
-                            return Err(Gc3Error::Exec(format!(
-                                "r{rank}/tb{t}/step{pc}: received {} elems, expected {} — \
-                                 FIFO pairing mismatch",
-                                data.len(),
-                                expected_len
-                            )));
-                        }
-                    }
-                    let result: Option<Vec<f32>> = match inst.op {
-                        OpCode::Nop => None,
-                        OpCode::Send | OpCode::Copy | OpCode::Reduce => {
-                            let (b, i) = inst.src.ok_or_else(|| {
-                                Gc3Error::Exec(format!("r{rank}/tb{t}/step{pc}: missing src"))
-                            })?;
-                            Some(mem.read(rank, b, i, inst.count)?)
-                        }
-                        OpCode::Recv | OpCode::Rcs => incoming.clone(),
-                        OpCode::Rrc | OpCode::Rrcs | OpCode::Rrs => {
-                            let (b, i) = inst.src.ok_or_else(|| {
-                                Gc3Error::Exec(format!("r{rank}/tb{t}/step{pc}: missing src"))
-                            })?;
-                            let mut acc = mem.read(rank, b, i, inst.count)?;
-                            red.reduce(&mut acc, incoming.as_ref().unwrap());
-                            Some(acc)
-                        }
-                    };
-                    // Local write.
-                    if inst.op.writes_dst() {
-                        let (b, i) = inst.dst.ok_or_else(|| {
-                            Gc3Error::Exec(format!("r{rank}/tb{t}/step{pc}: missing dst"))
-                        })?;
-                        match inst.op {
-                            OpCode::Reduce => {
-                                let mut acc = mem.read(rank, b, i, inst.count)?;
-                                red.reduce(&mut acc, result.as_ref().unwrap());
-                                mem.write(rank, b, i, &acc)?;
-                            }
-                            _ => mem.write(rank, b, i, result.as_ref().unwrap())?,
-                        }
-                    }
-                    // Send side.
-                    if inst.op.sends() {
-                        let (peer, ch) = tb.send.expect("validated");
-                        let payload = match inst.op {
-                            // Fused ops forward what they produced.
-                            OpCode::Rcs | OpCode::Rrcs | OpCode::Rrs => result.clone().unwrap(),
-                            OpCode::Send => result.clone().unwrap(),
-                            _ => unreachable!(),
-                        };
-                        stats.messages += 1;
-                        stats.elems_moved += payload.len();
-                        conns.entry((rank, ch, peer)).or_default().push_back(payload);
-                    }
-                    tbs[rank][t].pc += 1;
-                    progress[rank][t] += 1;
-                    done += 1;
-                    advanced = true;
-                }
-            }
-        }
-        if !advanced {
-            let mut stuck: Vec<String> = Vec::new();
-            for g in &ef.gpus {
-                for (t, tb) in g.tbs.iter().enumerate() {
-                    let pc = tbs[g.rank][t].pc;
-                    if pc < tb.steps.len() {
-                        stuck.push(format!("r{}/tb{t}@{pc}:{}", g.rank, tb.steps[pc].op));
-                    }
-                }
-            }
-            return Err(Gc3Error::Deadlock(format!(
-                "no threadblock can make progress; stuck at [{}]",
-                stuck.join(", ")
-            )));
-        }
-    }
-    // All instructions retired; connections must be drained (no spurious
-    // sends without matching receives).
-    for ((src, ch, dst), q) in &conns {
-        if !q.is_empty() {
-            return Err(Gc3Error::Exec(format!(
-                "connection r{src}→r{dst} ch{ch} has {} undelivered messages",
-                q.len()
-            )));
-        }
-    }
-    Ok(stats)
+    let name = ef.name.clone();
+    let mut session = Session::named(&name);
+    session.register(ef.clone())?;
+    session.launch_reduce(&name, mem, red)
 }
 
-/// Execute and check the collective's postcondition numerically: inputs are
-/// filled with [`test_pattern`]; every constrained result slot must equal
-/// the sum of its expected contributions.
+/// One-shot compatibility wrapper over [`Session::verify`]: execute and
+/// check the collective's postcondition numerically — inputs are filled
+/// with [`test_pattern`]; every constrained result slot must equal the
+/// sum of its expected contributions.
 pub fn verify(
     ef: &EfProgram,
     spec: &CollectiveSpec,
@@ -309,24 +157,75 @@ pub fn check_memory(mem: &Memory, spec: &CollectiveSpec) -> Result<()> {
     Ok(())
 }
 
+/// Test fixtures shared by the exec unit-test modules (here and in
+/// [`session`]): a ring AllGather trace and the canonical circular-wait
+/// deadlock EF, defined once so the EF struct and DSL surface have a
+/// single place to update.
 #[cfg(test)]
-mod tests {
+pub(crate) mod fixtures {
     use super::*;
-    use crate::compiler::{compile, CompileOpts};
     use crate::core::BufferId;
-    use crate::dsl::{Program, SchedHint};
+    use crate::dsl::{Program, Trace};
+    use crate::ef::{EfGpu, EfInst, EfTb};
+    use crate::instdag::OpCode;
+    use crate::sim::Protocol;
 
-    fn ring_allgather(ranks: usize) -> crate::dsl::Trace {
+    pub(crate) fn ring_allgather(ranks: usize) -> Trace {
         let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
         for r in 0..ranks {
             let c = p.chunk(BufferId::Input, r, 0, 1).unwrap();
-            let mut cur = p.copy(c, BufferId::Output, r, r, SchedHint::none()).unwrap();
+            let mut cur = p.copy_to(c, BufferId::Output, r, r).unwrap();
             for s in 1..ranks {
-                cur = p.copy(cur, BufferId::Output, (r + s) % ranks, r, SchedHint::none()).unwrap();
+                cur = p.copy_to(cur, BufferId::Output, (r + s) % ranks, r).unwrap();
             }
         }
         p.finish().unwrap()
     }
+
+    /// Two GPUs each recv-before-send on the same connection pair.
+    pub(crate) fn circular_wait_ef() -> EfProgram {
+        let mk_gpu = |rank: usize, peer: usize| EfGpu {
+            rank,
+            scratch_chunks: 1,
+            tbs: vec![EfTb {
+                send: Some((peer, 0)),
+                recv: Some((peer, 0)),
+                steps: vec![
+                    EfInst {
+                        op: OpCode::Recv,
+                        src: None,
+                        dst: Some((BufferId::Scratch, 0)),
+                        count: 1,
+                        depend: None,
+                    },
+                    EfInst {
+                        op: OpCode::Send,
+                        src: Some((BufferId::Input, 0)),
+                        dst: None,
+                        count: 1,
+                        depend: None,
+                    },
+                ],
+            }],
+        };
+        EfProgram {
+            name: "dl".into(),
+            collective: "custom".into(),
+            num_ranks: 2,
+            in_chunks: 1,
+            out_chunks: 1,
+            inplace: false,
+            protocol: Protocol::Simple,
+            gpus: vec![mk_gpu(0, 1), mk_gpu(1, 0)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fixtures::{circular_wait_ef, ring_allgather};
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
 
     #[test]
     fn allgather_verifies() {
@@ -367,46 +266,13 @@ mod tests {
 
     #[test]
     fn deadlock_detected_on_circular_wait() {
-        use crate::ef::{EfGpu, EfInst, EfProgram, EfTb};
-        use crate::instdag::OpCode;
-        use crate::sim::Protocol;
-        // Two GPUs each recv-before-send on the same connection pair.
-        let mk_gpu = |rank: usize, peer: usize| EfGpu {
-            rank,
-            scratch_chunks: 1,
-            tbs: vec![EfTb {
-                send: Some((peer, 0)),
-                recv: Some((peer, 0)),
-                steps: vec![
-                    EfInst {
-                        op: OpCode::Recv,
-                        src: None,
-                        dst: Some((BufferId::Scratch, 0)),
-                        count: 1,
-                        depend: None,
-                    },
-                    EfInst {
-                        op: OpCode::Send,
-                        src: Some((BufferId::Input, 0)),
-                        dst: None,
-                        count: 1,
-                        depend: None,
-                    },
-                ],
-            }],
-        };
-        let ef = EfProgram {
-            name: "dl".into(),
-            collective: "custom".into(),
-            num_ranks: 2,
-            in_chunks: 1,
-            out_chunks: 1,
-            inplace: false,
-            protocol: Protocol::Simple,
-            gpus: vec![mk_gpu(0, 1), mk_gpu(1, 0)],
-        };
+        let ef = circular_wait_ef();
         let mut mem = Memory::for_ef(&ef, 2);
         let err = execute(&ef, &mut mem, &mut NativeReducer).unwrap_err();
+        assert!(matches!(err, Gc3Error::Deadlock(_)), "{err}");
+        // The preserved pre-session interpreter agrees.
+        let mut mem = Memory::for_ef(&ef, 2);
+        let err = execute_reference(&ef, &mut mem, &mut NativeReducer).unwrap_err();
         assert!(matches!(err, Gc3Error::Deadlock(_)), "{err}");
     }
 
@@ -415,18 +281,25 @@ mod tests {
         assert_ne!(test_pattern(0, 1, 0), test_pattern(1, 0, 0));
         assert_ne!(test_pattern(2, 3, 0), test_pattern(3, 2, 0));
     }
-}
 
-// Helper used by tests: spec scaled to the EF's replication factor.
-impl crate::ef::EfProgram {
-    /// The collective spec matching this EF's chunk counts, derived from
-    /// the original (pre-replication) spec.
-    pub fn ef_spec(&self, original: &crate::dsl::Trace) -> CollectiveSpec {
-        let factor = self.in_chunks / original.spec.in_chunks.max(1);
-        if factor > 1 {
-            original.spec.scaled(factor)
-        } else {
-            original.spec.clone()
+    /// The wrappers and the preserved reference interpreter agree byte
+    /// for byte — the compatibility surface cannot drift from the oracle.
+    #[test]
+    fn wrapper_matches_reference_interpreter() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        let mut m1 = Memory::for_ef(&c.ef, 4);
+        m1.fill_pattern(test_pattern);
+        let s1 = execute(&c.ef, &mut m1, &mut NativeReducer).unwrap();
+        let mut m2 = Memory::for_ef(&c.ef, 4);
+        m2.fill_pattern(test_pattern);
+        let s2 = execute_reference(&c.ef, &mut m2, &mut NativeReducer).unwrap();
+        assert_eq!(s1.messages, s2.messages);
+        assert_eq!(s1.elems_moved, s2.elems_moved);
+        for r in 0..4 {
+            let a: Vec<u32> = m1.output[r].iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = m2.output[r].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "rank {r} output bytes");
         }
     }
 }

@@ -1,0 +1,208 @@
+//! The pre-session one-shot interpreter, preserved as an oracle.
+//!
+//! This is the monolithic executor the session-based runtime
+//! ([`crate::exec::Session`]) replaced: a single-threaded free function
+//! sweeping the whole multi-rank [`Memory`], with connection FIFOs in a
+//! shared `HashMap` and a fresh `Vec<f32>` clone per chunk operand. It is
+//! kept verbatim for two jobs (the same pattern as `sim/reference.rs`):
+//!
+//! * **parity oracle** — `rust/tests/exec_session.rs` pins the session
+//!   drivers to byte-identical memory against this engine;
+//! * **bench baseline** — `bench::perf::exec_suite` reports its elems/s
+//!   next to the session drivers' so the allocation-churn fix and the
+//!   threaded speedup are both recorded per run
+//!   (`BENCH_compiler_perf.json` `exec[]`, EXPERIMENTS.md §EXEC).
+//!
+//! Do not optimize this module.
+
+use crate::core::{BufferId, Gc3Error, Rank, Result};
+use crate::ef::EfProgram;
+use crate::exec::{ExecStats, Memory, Reducer};
+use crate::instdag::OpCode;
+use std::collections::{HashMap, VecDeque};
+
+fn buf(mem: &mut Memory, rank: Rank, b: BufferId) -> &mut Vec<f32> {
+    match b {
+        BufferId::Input => &mut mem.input[rank],
+        BufferId::Output => &mut mem.output[rank],
+        BufferId::Scratch => &mut mem.scratch[rank],
+    }
+}
+
+/// Copy `count` chunks out of `(rank, buffer, index)` — the per-op clone
+/// the session executor exists to avoid.
+fn read(mem: &mut Memory, rank: Rank, b: BufferId, index: usize, count: usize) -> Result<Vec<f32>> {
+    let e = mem.elems_per_chunk;
+    let buf = buf(mem, rank, b);
+    let (lo, hi) = (index * e, (index + count) * e);
+    if hi > buf.len() {
+        return Err(Gc3Error::Exec(format!(
+            "read past end of r{rank}:{b} ({} elems, wanted {}..{})",
+            buf.len(),
+            lo,
+            hi
+        )));
+    }
+    Ok(buf[lo..hi].to_vec())
+}
+
+fn write(mem: &mut Memory, rank: Rank, b: BufferId, index: usize, data: &[f32]) -> Result<()> {
+    let e = mem.elems_per_chunk;
+    let buf = buf(mem, rank, b);
+    let lo = index * e;
+    if lo + data.len() > buf.len() {
+        return Err(Gc3Error::Exec(format!(
+            "write past end of r{rank}:{b} ({} elems, wanted {}..{})",
+            buf.len(),
+            lo,
+            lo + data.len()
+        )));
+    }
+    buf[lo..lo + data.len()].copy_from_slice(data);
+    Ok(())
+}
+
+/// Execute a GC3-EF over `mem` with the pre-session interpreter: shared
+/// FIFO `HashMap`, cooperative threadblock scheduling, spin-lock
+/// dependences, per-chunk-op allocations. Deadlocks are detected and
+/// reported.
+pub fn execute_reference(
+    ef: &EfProgram,
+    mem: &mut Memory,
+    red: &mut dyn Reducer,
+) -> Result<ExecStats> {
+    ef.validate()?;
+    struct TbState {
+        pc: usize,
+    }
+    // Connection FIFOs keyed (src rank, channel, dst rank).
+    let mut conns: HashMap<(Rank, usize, Rank), VecDeque<Vec<f32>>> = HashMap::new();
+    let mut tbs: Vec<Vec<TbState>> =
+        ef.gpus.iter().map(|g| g.tbs.iter().map(|_| TbState { pc: 0 }).collect()).collect();
+    // progress[rank][tb] = completed step count (the spin-lock counter).
+    let mut progress: Vec<Vec<usize>> = ef.gpus.iter().map(|g| vec![0; g.tbs.len()]).collect();
+    let mut stats = ExecStats::default();
+
+    let total: usize = ef.num_insts();
+    let mut done = 0;
+    while done < total {
+        let mut advanced = false;
+        stats.rounds += 1;
+        for gpu in &ef.gpus {
+            let rank = gpu.rank;
+            for (t, tb) in gpu.tbs.iter().enumerate() {
+                // Run as far as possible within this threadblock.
+                loop {
+                    let pc = tbs[rank][t].pc;
+                    if pc >= tb.steps.len() {
+                        break;
+                    }
+                    let inst = &tb.steps[pc];
+                    // Cross-threadblock dependence (spin lock).
+                    if let Some((dep_tb, dep_step)) = inst.depend {
+                        if progress[rank][dep_tb] <= dep_step {
+                            break;
+                        }
+                    }
+                    // Receive-type: data must be waiting in the FIFO.
+                    let mut incoming: Option<Vec<f32>> = None;
+                    if inst.op.recvs() {
+                        let (peer, ch) = tb.recv.expect("validated");
+                        let q = conns.entry((peer, ch, rank)).or_default();
+                        match q.front() {
+                            Some(_) => incoming = q.pop_front(),
+                            None => break, // blocked on data
+                        }
+                    }
+                    // Local operand.
+                    let expected_len = inst.count * mem.elems_per_chunk;
+                    if let Some(data) = &incoming {
+                        if data.len() != expected_len {
+                            return Err(Gc3Error::Exec(format!(
+                                "r{rank}/tb{t}/step{pc}: received {} elems, expected {} — \
+                                 FIFO pairing mismatch",
+                                data.len(),
+                                expected_len
+                            )));
+                        }
+                    }
+                    let result: Option<Vec<f32>> = match inst.op {
+                        OpCode::Nop => None,
+                        OpCode::Send | OpCode::Copy | OpCode::Reduce => {
+                            let (b, i) = inst.src.ok_or_else(|| {
+                                Gc3Error::Exec(format!("r{rank}/tb{t}/step{pc}: missing src"))
+                            })?;
+                            Some(read(mem, rank, b, i, inst.count)?)
+                        }
+                        OpCode::Recv | OpCode::Rcs => incoming.clone(),
+                        OpCode::Rrc | OpCode::Rrcs | OpCode::Rrs => {
+                            let (b, i) = inst.src.ok_or_else(|| {
+                                Gc3Error::Exec(format!("r{rank}/tb{t}/step{pc}: missing src"))
+                            })?;
+                            let mut acc = read(mem, rank, b, i, inst.count)?;
+                            red.reduce(&mut acc, incoming.as_ref().unwrap());
+                            Some(acc)
+                        }
+                    };
+                    // Local write.
+                    if inst.op.writes_dst() {
+                        let (b, i) = inst.dst.ok_or_else(|| {
+                            Gc3Error::Exec(format!("r{rank}/tb{t}/step{pc}: missing dst"))
+                        })?;
+                        match inst.op {
+                            OpCode::Reduce => {
+                                let mut acc = read(mem, rank, b, i, inst.count)?;
+                                red.reduce(&mut acc, result.as_ref().unwrap());
+                                write(mem, rank, b, i, &acc)?;
+                            }
+                            _ => write(mem, rank, b, i, result.as_ref().unwrap())?,
+                        }
+                    }
+                    // Send side.
+                    if inst.op.sends() {
+                        let (peer, ch) = tb.send.expect("validated");
+                        let payload = match inst.op {
+                            // Fused ops forward what they produced.
+                            OpCode::Rcs | OpCode::Rrcs | OpCode::Rrs => result.clone().unwrap(),
+                            OpCode::Send => result.clone().unwrap(),
+                            _ => unreachable!(),
+                        };
+                        stats.messages += 1;
+                        stats.elems_moved += payload.len();
+                        conns.entry((rank, ch, peer)).or_default().push_back(payload);
+                    }
+                    tbs[rank][t].pc += 1;
+                    progress[rank][t] += 1;
+                    done += 1;
+                    advanced = true;
+                }
+            }
+        }
+        if !advanced {
+            let mut stuck: Vec<String> = Vec::new();
+            for g in &ef.gpus {
+                for (t, tb) in g.tbs.iter().enumerate() {
+                    let pc = tbs[g.rank][t].pc;
+                    if pc < tb.steps.len() {
+                        stuck.push(format!("r{}/tb{t}@{pc}:{}", g.rank, tb.steps[pc].op));
+                    }
+                }
+            }
+            return Err(Gc3Error::Deadlock(format!(
+                "no threadblock can make progress; stuck at [{}]",
+                stuck.join(", ")
+            )));
+        }
+    }
+    // All instructions retired; connections must be drained (no spurious
+    // sends without matching receives).
+    for ((src, ch, dst), q) in &conns {
+        if !q.is_empty() {
+            return Err(Gc3Error::Exec(format!(
+                "connection r{src}→r{dst} ch{ch} has {} undelivered messages",
+                q.len()
+            )));
+        }
+    }
+    Ok(stats)
+}

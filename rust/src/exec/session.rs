@@ -1,0 +1,1105 @@
+//! The session-based runtime executor: per-rank VMs over explicit channels.
+//!
+//! The paper's runtime is an *interpreter machine* (§4.4, §5): every GPU
+//! runs a persistent interpreter kernel over long-lived connections, and
+//! MSCCL-style dynamic algorithm loading lets one running machine serve
+//! many collectives without relaunching. [`Session`] is that machine in
+//! host form:
+//!
+//! * each rank is a [`RankVm`] owning only its own [`RankMemory`]
+//!   (input/output/scratch) and per-threadblock instruction cursors —
+//!   there is no shared god-object swept by a free function;
+//! * ranks communicate exclusively through typed [`Channel`] endpoints
+//!   ([`SendPort`]/[`RecvPort`]), one FIFO per connection
+//!   `(src rank, channel, dst rank)`, resolved once at launch instead of
+//!   hashed per instruction;
+//! * connections are *persistent*: the channel map lives in the session,
+//!   so back-to-back launches (and different registered EFs) reuse the
+//!   same FIFOs, like the runtime's long-lived IB/NVLink connections;
+//! * EFs are registered dynamically ([`Session::register`]) and launched
+//!   by name ([`Session::launch`]) — one session, many collectives;
+//! * two drivers share the VM step semantics: the deterministic
+//!   *cooperative* driver (single thread, fixed rank/tb sweep order — the
+//!   reproducible reference) and the *threaded* driver
+//!   ([`Session::run_threaded`] / [`Session::launch_threaded`]:
+//!   `std::thread` + channels, rank VMs spread round-robin over N
+//!   workers). The two must produce byte-identical memory — the EF's
+//!   cross-threadblock `depend` edges and single-owner FIFO connections
+//!   (§4.1, enforced by [`crate::sched`] at compile time and by
+//!   `EfProgram::validate` for EFs registered from anywhere else) make
+//!   the final state schedule-independent, and
+//!   `rust/tests/exec_session.rs` pins it across the program library
+//!   and topology presets.
+//!
+//! The hot loop is allocation-free after warmup: local operands stage
+//! through one reusable scratch buffer per VM ([`crate::exec::Reducer`]
+//! reduces into slices of it), message payload buffers recirculate
+//! through a small per-VM free pool fed by received messages, and both
+//! are parked in the session between launches so repeat launches (the
+//! train loop's per-step AllReduce) start warm — the per-chunk `Vec`
+//! clone of the pre-session interpreter (preserved in
+//! [`crate::exec::execute_reference`]) is gone.
+
+use crate::core::{ChanId, Gc3Error, Rank, Result};
+use crate::dsl::collective::CollectiveSpec;
+use crate::ef::EfProgram;
+use crate::exec::{check_memory, test_pattern, ExecStats, Memory, NativeReducer, Reducer};
+use crate::instdag::OpCode;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Payload buffers kept in a VM's free pool; beyond this they are dropped.
+const POOL_CAP: usize = 16;
+
+/// Connection identity: `(src rank, channel, dst rank)`.
+pub type ConnKey = (Rank, ChanId, Rank);
+
+/// One FIFO connection between a unique sender threadblock and its unique
+/// receiver threadblock (§4.3: the k-th send pairs with the k-th receive).
+/// Shared by both drivers; the mutex is uncontended under the cooperative
+/// driver and per-connection (not global) under the threaded one.
+pub struct Channel {
+    key: ConnKey,
+    q: Mutex<VecDeque<Vec<f32>>>,
+}
+
+impl Channel {
+    fn new(key: ConnKey) -> Channel {
+        Channel { key, q: Mutex::new(VecDeque::new()) }
+    }
+
+    /// `(src, ch, dst)` of this connection.
+    pub fn key(&self) -> ConnKey {
+        self.key
+    }
+
+    /// Queued (sent, not yet received) messages.
+    pub fn pending(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    fn push(&self, payload: Vec<f32>) {
+        self.q.lock().unwrap().push_back(payload);
+    }
+
+    fn try_pop(&self) -> Option<Vec<f32>> {
+        self.q.lock().unwrap().pop_front()
+    }
+}
+
+/// The sending end of a [`Channel`], held by the one threadblock that owns
+/// the connection's send side.
+pub struct SendPort {
+    ch: Arc<Channel>,
+}
+
+impl SendPort {
+    fn push(&self, payload: Vec<f32>) {
+        self.ch.push(payload);
+    }
+}
+
+/// The receiving end of a [`Channel`], held by the one threadblock that
+/// owns the connection's receive side.
+pub struct RecvPort {
+    ch: Arc<Channel>,
+}
+
+impl RecvPort {
+    fn try_pop(&self) -> Option<Vec<f32>> {
+        self.ch.try_pop()
+    }
+}
+
+/// One rank's private memory: its own input/output/scratch buffers only.
+/// Bounds errors carry the rank so the VM never needs global context.
+pub struct RankMemory {
+    pub rank: Rank,
+    pub input: Vec<f32>,
+    pub output: Vec<f32>,
+    pub scratch: Vec<f32>,
+    pub elems_per_chunk: usize,
+}
+
+impl RankMemory {
+    fn buf(&self, b: crate::core::BufferId) -> &Vec<f32> {
+        match b {
+            crate::core::BufferId::Input => &self.input,
+            crate::core::BufferId::Output => &self.output,
+            crate::core::BufferId::Scratch => &self.scratch,
+        }
+    }
+
+    fn buf_mut(&mut self, b: crate::core::BufferId) -> &mut Vec<f32> {
+        match b {
+            crate::core::BufferId::Input => &mut self.input,
+            crate::core::BufferId::Output => &mut self.output,
+            crate::core::BufferId::Scratch => &mut self.scratch,
+        }
+    }
+
+    /// `count` consecutive chunks starting at chunk `index`, as one slice.
+    pub fn chunks(&self, b: crate::core::BufferId, index: usize, count: usize) -> Result<&[f32]> {
+        let e = self.elems_per_chunk;
+        let (lo, hi) = (index * e, (index + count) * e);
+        let rank = self.rank;
+        let buf = self.buf(b);
+        if hi > buf.len() {
+            return Err(Gc3Error::Exec(format!(
+                "read past end of r{rank}:{b} ({} elems, wanted {lo}..{hi})",
+                buf.len()
+            )));
+        }
+        Ok(&buf[lo..hi])
+    }
+
+    /// A writable window of `len` *elements* starting at chunk `index`.
+    pub fn chunks_mut(
+        &mut self,
+        b: crate::core::BufferId,
+        index: usize,
+        len: usize,
+    ) -> Result<&mut [f32]> {
+        let e = self.elems_per_chunk;
+        let lo = index * e;
+        let rank = self.rank;
+        let buf = self.buf_mut(b);
+        if lo + len > buf.len() {
+            return Err(Gc3Error::Exec(format!(
+                "write past end of r{rank}:{b} ({} elems, wanted {lo}..{})",
+                buf.len(),
+                lo + len
+            )));
+        }
+        Ok(&mut buf[lo..lo + len])
+    }
+}
+
+/// Per-threadblock execution state inside a VM: the program counter plus
+/// the connection endpoints resolved once at launch.
+struct TbRun {
+    pc: usize,
+    send: Option<SendPort>,
+    recv: Option<RecvPort>,
+}
+
+/// What one [`RankVm::step`] did.
+enum Step {
+    /// Retired one instruction; `sent` = it pushed a message.
+    Advanced { sent: bool },
+    /// Cannot advance: end of stream, unmet `depend`, or empty FIFO.
+    Blocked,
+}
+
+/// What one [`RankVm::sweep`] did.
+#[derive(Default, Clone, Copy)]
+struct SweepOut {
+    retired: usize,
+    sent: usize,
+}
+
+/// One rank of the machine: its memory, threadblock cursors, spin-lock
+/// progress counters, channel endpoints, and reusable buffers.
+pub struct RankVm {
+    rank: Rank,
+    ef: Arc<EfProgram>,
+    tbs: Vec<TbRun>,
+    /// `progress[tb]` = completed step count (the §4.4 spin-lock counter).
+    progress: Vec<usize>,
+    mem: RankMemory,
+    /// Reusable staging buffer for local operands (no per-op allocation).
+    stage: Vec<f32>,
+    /// Free payload buffers, recirculated from received messages.
+    pool: Vec<Vec<f32>>,
+    stats: ExecStats,
+    retired: usize,
+    total: usize,
+}
+
+impl RankVm {
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    fn done(&self) -> bool {
+        self.retired == self.total
+    }
+
+    /// `r{rank}/tb{t}@{pc}:{op}` for every unfinished threadblock.
+    fn stuck(&self, out: &mut Vec<String>) {
+        let gpu = &self.ef.gpus[self.rank];
+        for (t, run) in self.tbs.iter().enumerate() {
+            if run.pc < gpu.tbs[t].steps.len() {
+                out.push(format!(
+                    "r{}/tb{t}@{}:{}",
+                    self.rank,
+                    run.pc,
+                    gpu.tbs[t].steps[run.pc].op
+                ));
+            }
+        }
+    }
+
+    /// Run every threadblock as far as it can go, in tb order — the same
+    /// inner loop both drivers share.
+    fn sweep(&mut self, red: &mut dyn Reducer) -> Result<SweepOut> {
+        let mut out = SweepOut::default();
+        for t in 0..self.tbs.len() {
+            loop {
+                match self.step(t, red)? {
+                    Step::Advanced { sent } => {
+                        out.retired += 1;
+                        if sent {
+                            out.sent += 1;
+                        }
+                    }
+                    Step::Blocked => break,
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute at most one instruction of threadblock `t`.
+    fn step(&mut self, t: usize, red: &mut dyn Reducer) -> Result<Step> {
+        let pc = self.tbs[t].pc;
+        let steps = &self.ef.gpus[self.rank].tbs[t].steps;
+        if pc >= steps.len() {
+            return Ok(Step::Blocked);
+        }
+        let inst = steps[pc];
+        // Cross-threadblock dependence (spin lock).
+        if let Some((dep_tb, dep_step)) = inst.depend {
+            if self.progress[dep_tb] <= dep_step {
+                return Ok(Step::Blocked);
+            }
+        }
+        let rank = self.rank;
+        let e = self.mem.elems_per_chunk;
+        let expected = inst.count * e;
+        // Receive-type: data must be waiting in the FIFO.
+        let mut incoming: Option<Vec<f32>> = None;
+        if inst.op.recvs() {
+            let port = self.tbs[t].recv.as_ref().expect("validated: recv connection");
+            let data = match port.try_pop() {
+                Some(d) => d,
+                None => return Ok(Step::Blocked),
+            };
+            if data.len() != expected {
+                return Err(Gc3Error::Exec(format!(
+                    "r{rank}/tb{t}/step{pc}: received {} elems, expected {expected} — \
+                     FIFO pairing mismatch",
+                    data.len()
+                )));
+            }
+            incoming = Some(data);
+        }
+        let src = |s: Option<(crate::core::BufferId, usize)>| {
+            s.ok_or_else(|| Gc3Error::Exec(format!("r{rank}/tb{t}/step{pc}: missing src")))
+        };
+        let dst = |d: Option<(crate::core::BufferId, usize)>| {
+            d.ok_or_else(|| Gc3Error::Exec(format!("r{rank}/tb{t}/step{pc}: missing dst")))
+        };
+        let mut sent = false;
+        match inst.op {
+            OpCode::Nop => {}
+            OpCode::Send => {
+                let (sb, si) = src(inst.src)?;
+                let mut buf = self.pool.pop().unwrap_or_default();
+                buf.clear();
+                buf.extend_from_slice(self.mem.chunks(sb, si, inst.count)?);
+                self.stats.messages += 1;
+                self.stats.elems_moved += buf.len();
+                self.tbs[t].send.as_ref().expect("validated: send connection").push(buf);
+                sent = true;
+            }
+            OpCode::Copy => {
+                let (sb, si) = src(inst.src)?;
+                let (db, di) = dst(inst.dst)?;
+                self.stage.clear();
+                self.stage.extend_from_slice(self.mem.chunks(sb, si, inst.count)?);
+                self.mem.chunks_mut(db, di, expected)?.copy_from_slice(&self.stage);
+            }
+            OpCode::Reduce => {
+                // dst += src, reduced directly into the destination slice.
+                let (sb, si) = src(inst.src)?;
+                let (db, di) = dst(inst.dst)?;
+                self.stage.clear();
+                self.stage.extend_from_slice(self.mem.chunks(sb, si, inst.count)?);
+                red.reduce(self.mem.chunks_mut(db, di, expected)?, &self.stage);
+            }
+            OpCode::Recv => {
+                let (db, di) = dst(inst.dst)?;
+                let data = incoming.take().unwrap();
+                self.mem.chunks_mut(db, di, expected)?.copy_from_slice(&data);
+                self.recycle(data);
+            }
+            OpCode::Rcs => {
+                // recvCopySend: the incoming buffer is written locally and
+                // forwarded as-is — zero copies beyond the local write.
+                let (db, di) = dst(inst.dst)?;
+                let data = incoming.take().unwrap();
+                self.mem.chunks_mut(db, di, expected)?.copy_from_slice(&data);
+                self.stats.messages += 1;
+                self.stats.elems_moved += data.len();
+                self.tbs[t].send.as_ref().expect("validated: send connection").push(data);
+                sent = true;
+            }
+            OpCode::Rrc | OpCode::Rrcs | OpCode::Rrs => {
+                // acc = local src; acc += incoming; then copy and/or send.
+                let (sb, si) = src(inst.src)?;
+                self.stage.clear();
+                self.stage.extend_from_slice(self.mem.chunks(sb, si, inst.count)?);
+                let mut data = incoming.take().unwrap();
+                red.reduce(&mut self.stage, &data);
+                if inst.op.writes_dst() {
+                    let (db, di) = dst(inst.dst)?;
+                    self.mem.chunks_mut(db, di, expected)?.copy_from_slice(&self.stage);
+                }
+                if inst.op.sends() {
+                    // Reuse the incoming buffer as the outgoing payload.
+                    data.copy_from_slice(&self.stage);
+                    self.stats.messages += 1;
+                    self.stats.elems_moved += data.len();
+                    self.tbs[t].send.as_ref().expect("validated: send connection").push(data);
+                    sent = true;
+                } else {
+                    self.recycle(data);
+                }
+            }
+        }
+        self.tbs[t].pc += 1;
+        self.progress[t] += 1;
+        self.retired += 1;
+        Ok(Step::Advanced { sent })
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        if self.pool.len() < POOL_CAP {
+            self.pool.push(buf);
+        }
+    }
+}
+
+/// Which driver [`Session::launch`] uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Driver {
+    /// Single-threaded, fixed rank/tb sweep order — the deterministic
+    /// reference driver (and the only one that supports a caller-supplied
+    /// [`Reducer`], via [`Session::launch_reduce`]).
+    Cooperative,
+    /// `n` worker threads, rank VMs distributed round-robin.
+    Threaded(usize),
+}
+
+/// The session-based executor: a persistent multi-rank machine that
+/// registers GC3-EFs dynamically and launches them by name over
+/// long-lived connections. See the module docs for the full design.
+///
+/// ```no_run
+/// use gc3::exec::{Memory, Session};
+/// # fn get_efs() -> (gc3::ef::EfProgram, gc3::ef::EfProgram) { unimplemented!() }
+/// let (allreduce, allgather) = get_efs();
+/// let mut session = Session::named("serving");
+/// session.register(allreduce)?;
+/// session.register(allgather)?;
+/// session.run_threaded(4);
+/// for name in ["gc3_allreduce", "gc3_allgather"] {
+///     let ef = session.program(name).unwrap();
+///     let mut mem = Memory::for_ef(ef, 1024);
+///     session.launch(name, &mut mem)?;
+/// }
+/// # Ok::<(), gc3::core::Gc3Error>(())
+/// ```
+pub struct Session {
+    label: String,
+    /// Registered EFs by name — the MSCCL-style dynamic algorithm store.
+    programs: BTreeMap<String, Arc<EfProgram>>,
+    /// Persistent connections, created on first use and reused across
+    /// launches and across registered EFs.
+    channels: BTreeMap<ConnKey, Arc<Channel>>,
+    /// The machine's rank count, fixed by the first registered EF.
+    num_ranks: Option<usize>,
+    /// Per-rank reusable VM buffers (staging + payload pool), kept across
+    /// launches so a long-lived session's hot loop stays allocation-free
+    /// from the second launch on (e.g. the train loop's per-step
+    /// AllReduce).
+    vm_scratch: Vec<(Vec<f32>, Vec<Vec<f32>>)>,
+    driver: Driver,
+}
+
+impl Default for Session {
+    fn default() -> Session {
+        Session::named("session")
+    }
+}
+
+impl Session {
+    pub fn new() -> Session {
+        Session::default()
+    }
+
+    /// A session with a label; deadlock and launch errors name it.
+    pub fn named(label: &str) -> Session {
+        Session {
+            label: label.to_string(),
+            programs: BTreeMap::new(),
+            channels: BTreeMap::new(),
+            num_ranks: None,
+            vm_scratch: Vec::new(),
+            driver: Driver::Cooperative,
+        }
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The machine's rank count (set by the first registered EF).
+    pub fn num_ranks(&self) -> Option<usize> {
+        self.num_ranks
+    }
+
+    /// Registered program names, sorted.
+    pub fn programs(&self) -> Vec<&str> {
+        self.programs.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// A registered program by name.
+    pub fn program(&self, name: &str) -> Option<&EfProgram> {
+        self.programs.get(name).map(|a| a.as_ref())
+    }
+
+    /// Number of distinct persistent connections opened so far.
+    pub fn connections(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Use the threaded driver with `threads` workers for subsequent
+    /// [`Session::launch`] calls (clamped to `[1, num_ranks]` at launch).
+    pub fn run_threaded(&mut self, threads: usize) -> &mut Session {
+        self.driver = Driver::Threaded(threads);
+        self
+    }
+
+    /// Use the deterministic cooperative driver (the default).
+    pub fn run_cooperative(&mut self) -> &mut Session {
+        self.driver = Driver::Cooperative;
+        self
+    }
+
+    /// Register an EF under its own name. The EF is validated and must
+    /// agree with the session's rank count; re-registering a name
+    /// replaces the program (latest wins, like the runtime reloading an
+    /// algorithm).
+    pub fn register(&mut self, ef: EfProgram) -> Result<()> {
+        ef.validate()?;
+        match self.num_ranks {
+            Some(n) if n != ef.num_ranks => {
+                return Err(Gc3Error::Exec(format!(
+                    "session '{}' is a {n}-rank machine; cannot register '{}' for {} ranks",
+                    self.label, ef.name, ef.num_ranks
+                )));
+            }
+            _ => self.num_ranks = Some(ef.num_ranks),
+        }
+        self.programs.insert(ef.name.clone(), Arc::new(ef));
+        Ok(())
+    }
+
+    /// Launch a registered program over `mem` with the configured driver.
+    pub fn launch(&mut self, name: &str, mem: &mut Memory) -> Result<ExecStats> {
+        match self.driver {
+            Driver::Cooperative => self.launch_reduce(name, mem, &mut NativeReducer),
+            Driver::Threaded(n) => self.launch_threaded(name, mem, n),
+        }
+    }
+
+    /// Launch on the cooperative driver with a caller-supplied reducer
+    /// (e.g. [`crate::runtime::PjrtReducer`]); the reducer is shared by
+    /// every rank VM, swept in deterministic order.
+    pub fn launch_reduce(
+        &mut self,
+        name: &str,
+        mem: &mut Memory,
+        red: &mut dyn Reducer,
+    ) -> Result<ExecStats> {
+        let ef = self.lookup(name)?;
+        let mut vms = self.make_vms(&ef, mem)?;
+        let result = Self::drive_cooperative(&self.label, &ef, &mut vms, red);
+        let mut stats = self.reassemble(mem, vms);
+        match result {
+            Ok(rounds) => stats.rounds = rounds,
+            Err(e) => {
+                // A failed launch may leave messages in flight; flush them
+                // so the session's persistent connections stay usable.
+                self.flush_channels();
+                return Err(e);
+            }
+        }
+        self.drain_check()?;
+        Ok(stats)
+    }
+
+    /// Launch on the threaded driver: rank VMs are distributed round-robin
+    /// over `threads` workers (clamped to `[1, num_ranks]`), each worker
+    /// reducing with its own [`NativeReducer`]. Memory is byte-identical
+    /// to a cooperative launch; `ExecStats::rounds` reports the busiest
+    /// worker's sweep count. Workers are scoped threads spawned per
+    /// launch — a persistent parked pool (amortizing spawn cost for
+    /// sub-millisecond launches) is the known follow-up.
+    pub fn launch_threaded(
+        &mut self,
+        name: &str,
+        mem: &mut Memory,
+        threads: usize,
+    ) -> Result<ExecStats> {
+        let ef = self.lookup(name)?;
+        let vms = self.make_vms(&ef, mem)?;
+        let nthreads = threads.clamp(1, vms.len().max(1));
+        // Round-robin by rank: thread i drives ranks i, i+T, i+2T, ...
+        let mut shards: Vec<Vec<RankVm>> = (0..nthreads).map(|_| Vec::new()).collect();
+        for (i, vm) in vms.into_iter().enumerate() {
+            shards[i % nthreads].push(vm);
+        }
+        let context = format!("session '{}' program '{}'", self.label, ef.name);
+        let coord = Coordinator::new(nthreads, context);
+        let coord_ref = &coord;
+        let joined: Vec<(Vec<RankVm>, usize)> = std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .enumerate()
+                .map(|(tid, mut shard)| {
+                    s.spawn(move || {
+                        let sweeps = worker(tid, &mut shard, coord_ref);
+                        (shard, sweeps)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("exec worker threads do not panic"))
+                .collect()
+        });
+        let mut all_vms = Vec::with_capacity(self.num_ranks.unwrap_or(0));
+        let mut rounds = 0;
+        for (shard, sweeps) in joined {
+            rounds = rounds.max(sweeps);
+            all_vms.extend(shard);
+        }
+        all_vms.sort_by_key(|vm| vm.rank);
+        let mut stats = self.reassemble(mem, all_vms);
+        stats.rounds = rounds;
+        if let Some(err) = coord.take_failure() {
+            // A failed launch may leave messages in flight; flush them so
+            // the session's persistent connections stay usable.
+            self.flush_channels();
+            return Err(err);
+        }
+        self.drain_check()?;
+        Ok(stats)
+    }
+
+    /// Launch the named program over pattern-filled memory and check
+    /// `spec`'s postcondition numerically — the session-side equivalent of
+    /// the legacy `exec::verify` free function.
+    pub fn verify(
+        &mut self,
+        name: &str,
+        spec: &CollectiveSpec,
+        elems_per_chunk: usize,
+    ) -> Result<ExecStats> {
+        let ef = self.lookup(name)?;
+        let mut mem = Memory::for_ef(&ef, elems_per_chunk);
+        mem.fill_pattern(test_pattern);
+        let stats = self.launch(name, &mut mem)?;
+        check_memory(&mem, spec)?;
+        Ok(stats)
+    }
+
+    // ---------------- internals ----------------
+
+    fn lookup(&self, name: &str) -> Result<Arc<EfProgram>> {
+        self.programs.get(name).cloned().ok_or_else(|| {
+            Gc3Error::Exec(format!(
+                "no program '{name}' registered in session '{}'; registered: {}",
+                self.label,
+                if self.programs.is_empty() {
+                    "(none)".to_string()
+                } else {
+                    self.programs.keys().cloned().collect::<Vec<_>>().join(", ")
+                }
+            ))
+        })
+    }
+
+    /// Split the launch memory into per-rank [`RankMemory`]s and build one
+    /// VM per rank with its channel endpoints resolved.
+    fn make_vms(&mut self, ef: &Arc<EfProgram>, mem: &mut Memory) -> Result<Vec<RankVm>> {
+        let n = ef.num_ranks;
+        if mem.input.len() != n || mem.output.len() != n || mem.scratch.len() != n {
+            return Err(Gc3Error::Exec(format!(
+                "memory has {}/{}/{} rank buffers (input/output/scratch) but '{}' runs \
+                 {n} ranks",
+                mem.input.len(),
+                mem.output.len(),
+                mem.scratch.len(),
+                ef.name
+            )));
+        }
+        if self.vm_scratch.len() < n {
+            self.vm_scratch.resize_with(n, Default::default);
+        }
+        let mut vms = Vec::with_capacity(n);
+        for gpu in &ef.gpus {
+            let rank = gpu.rank;
+            let (stage, pool) = std::mem::take(&mut self.vm_scratch[rank]);
+            let tbs = gpu
+                .tbs
+                .iter()
+                .map(|tb| TbRun {
+                    pc: 0,
+                    send: tb
+                        .send
+                        .map(|(peer, ch)| SendPort { ch: self.channel((rank, ch, peer)) }),
+                    recv: tb
+                        .recv
+                        .map(|(peer, ch)| RecvPort { ch: self.channel((peer, ch, rank)) }),
+                })
+                .collect();
+            let total = gpu.tbs.iter().map(|t| t.steps.len()).sum();
+            vms.push(RankVm {
+                rank,
+                ef: ef.clone(),
+                tbs,
+                progress: vec![0; gpu.tbs.len()],
+                mem: RankMemory {
+                    rank,
+                    input: std::mem::take(&mut mem.input[rank]),
+                    output: std::mem::take(&mut mem.output[rank]),
+                    scratch: std::mem::take(&mut mem.scratch[rank]),
+                    elems_per_chunk: mem.elems_per_chunk,
+                },
+                stage,
+                pool,
+                stats: ExecStats::default(),
+                retired: 0,
+                total,
+            });
+        }
+        Ok(vms)
+    }
+
+    /// The persistent connection for `key`, opened on first use.
+    fn channel(&mut self, key: ConnKey) -> Arc<Channel> {
+        self.channels.entry(key).or_insert_with(|| Arc::new(Channel::new(key))).clone()
+    }
+
+    /// Give every rank's buffers back to the launch memory, park the VM's
+    /// reusable stage/pool buffers for the next launch, and sum the
+    /// per-VM stats (rounds is driver-specific; the caller sets it).
+    fn reassemble(&mut self, mem: &mut Memory, vms: Vec<RankVm>) -> ExecStats {
+        let mut stats = ExecStats::default();
+        for mut vm in vms {
+            stats.messages += vm.stats.messages;
+            stats.elems_moved += vm.stats.elems_moved;
+            mem.input[vm.rank] = std::mem::take(&mut vm.mem.input);
+            mem.output[vm.rank] = std::mem::take(&mut vm.mem.output);
+            mem.scratch[vm.rank] = std::mem::take(&mut vm.mem.scratch);
+            if vm.rank < self.vm_scratch.len() {
+                self.vm_scratch[vm.rank] =
+                    (std::mem::take(&mut vm.stage), std::mem::take(&mut vm.pool));
+            }
+        }
+        stats
+    }
+
+    /// The deterministic driver: sweep every VM in rank order until the
+    /// program drains; a full sweep with no progress is a deadlock.
+    fn drive_cooperative(
+        label: &str,
+        ef: &EfProgram,
+        vms: &mut [RankVm],
+        red: &mut dyn Reducer,
+    ) -> Result<usize> {
+        let total: usize = vms.iter().map(|vm| vm.total).sum();
+        let mut done = 0;
+        let mut rounds = 0;
+        while done < total {
+            rounds += 1;
+            let mut advanced = false;
+            for vm in vms.iter_mut() {
+                let out = vm.sweep(red)?;
+                done += out.retired;
+                advanced |= out.retired > 0;
+            }
+            if !advanced {
+                let mut stuck = Vec::new();
+                for vm in vms.iter() {
+                    vm.stuck(&mut stuck);
+                }
+                return Err(Gc3Error::Deadlock(format!(
+                    "session '{label}' program '{}': no threadblock can make progress; \
+                     stuck at [{}]",
+                    ef.name,
+                    stuck.join(", ")
+                )));
+            }
+        }
+        Ok(rounds)
+    }
+
+    /// All instructions retired ⇒ every connection must be drained (no
+    /// spurious sends without matching receives) — checked across the
+    /// session's whole persistent connection map, so a launch can also
+    /// never leak messages into the next one.
+    fn drain_check(&self) -> Result<()> {
+        for ch in self.channels.values() {
+            let n = ch.pending();
+            if n > 0 {
+                let (src, c, dst) = ch.key();
+                self.flush_channels();
+                return Err(Gc3Error::Exec(format!(
+                    "connection r{src}→r{dst} ch{c} has {n} undelivered messages"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop any in-flight messages (after a failed launch) so the session
+    /// stays usable.
+    fn flush_channels(&self) {
+        for ch in self.channels.values() {
+            while ch.try_pop().is_some() {}
+        }
+    }
+}
+
+// ---------------- threaded driver internals ----------------
+
+enum ErrKind {
+    Deadlock,
+    Exec,
+}
+
+/// Shared driver state for the threaded launch: a send counter (so a
+/// blocked worker knows whether anything changed since its last sweep), a
+/// blocked-worker census for distributed deadlock detection, and the
+/// first failure.
+struct CoordState {
+    /// Total messages pushed; bumped (batched per sweep) after the pushes
+    /// are visible, so "counter unchanged" ⇒ "no new messages".
+    sends: u64,
+    blocked: usize,
+    /// Workers still running (not finished, not failed).
+    running: usize,
+    failed: Option<(ErrKind, String)>,
+    /// Per-worker stuck description, present while that worker is blocked.
+    stuck: Vec<Option<String>>,
+}
+
+struct Coordinator {
+    m: Mutex<CoordState>,
+    cv: Condvar,
+    /// `session '<label>' program '<name>'` — prefix for failure reports.
+    context: String,
+}
+
+enum Block {
+    /// New sends arrived (or a spurious wake with progress): sweep again.
+    Retry,
+    /// The launch failed (here or elsewhere): stop.
+    Fail,
+}
+
+impl Coordinator {
+    fn new(workers: usize, context: String) -> Coordinator {
+        Coordinator {
+            m: Mutex::new(CoordState {
+                sends: 0,
+                blocked: 0,
+                running: workers,
+                failed: None,
+                stuck: (0..workers).map(|_| None).collect(),
+            }),
+            cv: Condvar::new(),
+            context,
+        }
+    }
+
+    fn sends_snapshot(&self) -> u64 {
+        self.m.lock().unwrap().sends
+    }
+
+    fn note_sends(&self, n: usize) {
+        let mut st = self.m.lock().unwrap();
+        st.sends += n as u64;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// This worker is done (all its VMs drained): leave the census.
+    fn finish(&self) {
+        let mut st = self.m.lock().unwrap();
+        st.running -= 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Record a failure observed by a worker (first one wins).
+    fn fail(&self, err: &Gc3Error) {
+        let mut st = self.m.lock().unwrap();
+        if st.failed.is_none() {
+            let (kind, msg) = match err {
+                Gc3Error::Deadlock(m) => (ErrKind::Deadlock, m.clone()),
+                Gc3Error::Exec(m) => (ErrKind::Exec, m.clone()),
+                other => (ErrKind::Exec, other.to_string()),
+            };
+            st.failed = Some((kind, msg));
+        }
+        st.running -= 1;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Block until new sends arrive or the launch fails. If every running
+    /// worker is blocked with the send counter stable, nothing can ever
+    /// arrive — declare deadlock, naming every blocked rank/tb. The stuck
+    /// description is built lazily: the fast path (new sends already
+    /// arrived since the sweep began) never formats it.
+    fn block(&self, tid: usize, seen_sends: u64, stuck: impl FnOnce() -> String) -> Block {
+        let mut st = self.m.lock().unwrap();
+        if st.failed.is_some() {
+            st.running -= 1;
+            drop(st);
+            self.cv.notify_all();
+            return Block::Fail;
+        }
+        if st.sends != seen_sends {
+            return Block::Retry;
+        }
+        st.stuck[tid] = Some(stuck());
+        st.blocked += 1;
+        loop {
+            if st.blocked == st.running {
+                // Every live worker is parked and all completed sends are
+                // accounted for: a true deadlock.
+                let msg = {
+                    let list: Vec<&str> =
+                        st.stuck.iter().flatten().map(|s| s.as_str()).collect();
+                    format!(
+                        "{}: no threadblock can make progress; stuck at [{}]",
+                        self.context,
+                        list.join(", ")
+                    )
+                };
+                st.failed = Some((ErrKind::Deadlock, msg));
+                st.blocked -= 1;
+                st.stuck[tid] = None;
+                st.running -= 1;
+                drop(st);
+                self.cv.notify_all();
+                return Block::Fail;
+            }
+            st = self.cv.wait(st).unwrap();
+            if st.failed.is_some() {
+                st.blocked -= 1;
+                st.stuck[tid] = None;
+                st.running -= 1;
+                drop(st);
+                self.cv.notify_all();
+                return Block::Fail;
+            }
+            if st.sends != seen_sends {
+                st.blocked -= 1;
+                st.stuck[tid] = None;
+                return Block::Retry;
+            }
+        }
+    }
+
+    /// The recorded failure, as a typed error.
+    fn take_failure(&self) -> Option<Gc3Error> {
+        let st = self.m.lock().unwrap();
+        st.failed.as_ref().map(|(kind, msg)| match kind {
+            ErrKind::Deadlock => Gc3Error::Deadlock(msg.clone()),
+            ErrKind::Exec => Gc3Error::Exec(msg.clone()),
+        })
+    }
+}
+
+/// One threaded-driver worker: sweep this shard's VMs until they drain,
+/// parking on the coordinator when nothing can advance. Returns the sweep
+/// count (the threaded analogue of `ExecStats::rounds`).
+fn worker(tid: usize, vms: &mut [RankVm], coord: &Coordinator) -> usize {
+    let mut red = NativeReducer;
+    let mut sweeps = 0;
+    loop {
+        let seen = coord.sends_snapshot();
+        sweeps += 1;
+        let mut advanced = false;
+        let mut sent = 0;
+        for vm in vms.iter_mut() {
+            if vm.done() {
+                continue;
+            }
+            match vm.sweep(&mut red) {
+                Ok(out) => {
+                    advanced |= out.retired > 0;
+                    sent += out.sent;
+                }
+                Err(e) => {
+                    coord.fail(&e);
+                    return sweeps;
+                }
+            }
+        }
+        if sent > 0 {
+            coord.note_sends(sent);
+        }
+        if vms.iter().all(|vm| vm.done()) {
+            coord.finish();
+            return sweeps;
+        }
+        if advanced {
+            continue;
+        }
+        let describe_stuck = || {
+            let mut stuck = Vec::new();
+            for vm in vms.iter() {
+                vm.stuck(&mut stuck);
+            }
+            stuck.join(", ")
+        };
+        match coord.block(tid, seen, describe_stuck) {
+            Block::Retry => continue,
+            Block::Fail => return sweeps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::exec::fixtures::{circular_wait_ef, ring_allgather};
+
+    #[test]
+    fn session_launches_registered_program() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        let mut s = Session::named("t");
+        s.register(c.ef.clone()).unwrap();
+        assert_eq!(s.num_ranks(), Some(4));
+        assert_eq!(s.programs(), vec!["ag4"]);
+        let stats = s.verify("ag4", &t.spec, 8).unwrap();
+        assert!(stats.messages > 0);
+        assert!(stats.rounds > 0);
+    }
+
+    #[test]
+    fn unknown_program_error_lists_registered() {
+        let t = ring_allgather(2);
+        let c = compile(&t, "ag2", &CompileOpts::default()).unwrap();
+        let mut s = Session::named("srv");
+        s.register(c.ef.clone()).unwrap();
+        let mut mem = Memory::for_ef(&c.ef, 2);
+        let err = s.launch("nope", &mut mem).unwrap_err().to_string();
+        assert!(err.contains("'nope'"), "{err}");
+        assert!(err.contains("srv"), "{err}");
+        assert!(err.contains("ag2"), "{err}");
+    }
+
+    #[test]
+    fn rank_count_mismatch_rejected() {
+        let c2 = compile(&ring_allgather(2), "ag2", &CompileOpts::default()).unwrap();
+        let c4 = compile(&ring_allgather(4), "ag4", &CompileOpts::default()).unwrap();
+        let mut s = Session::new();
+        s.register(c2.ef).unwrap();
+        let err = s.register(c4.ef).unwrap_err().to_string();
+        assert!(err.contains("2-rank machine"), "{err}");
+    }
+
+    #[test]
+    fn persistent_connections_reused_across_launches() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        let mut s = Session::new();
+        s.register(c.ef).unwrap();
+        s.verify("ag4", &t.spec, 4).unwrap();
+        let opened = s.connections();
+        assert!(opened > 0);
+        s.verify("ag4", &t.spec, 4).unwrap();
+        assert_eq!(s.connections(), opened, "relaunch must reuse connections");
+    }
+
+    #[test]
+    fn threaded_matches_cooperative_bytes() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        let mut coop = Session::new();
+        coop.register(c.ef.clone()).unwrap();
+        let mut m1 = Memory::for_ef(&c.ef, 4);
+        m1.fill_pattern(test_pattern);
+        let s1 = coop.launch("ag4", &mut m1).unwrap();
+        let mut thr = Session::new();
+        thr.register(c.ef.clone()).unwrap();
+        thr.run_threaded(3);
+        let mut m2 = Memory::for_ef(&c.ef, 4);
+        m2.fill_pattern(test_pattern);
+        let s2 = thr.launch("ag4", &mut m2).unwrap();
+        assert_eq!(s1.messages, s2.messages);
+        assert_eq!(s1.elems_moved, s2.elems_moved);
+        for r in 0..4 {
+            let a: Vec<u32> = m1.output[r].iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = m2.output[r].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "rank {r} output bytes");
+        }
+    }
+
+    #[test]
+    fn cooperative_deadlock_names_session_rank_tb() {
+        let ef = circular_wait_ef();
+        let mut s = Session::named("dl-session");
+        s.register(ef.clone()).unwrap();
+        let mut mem = Memory::for_ef(&ef, 2);
+        let err = s.launch("dl", &mut mem).unwrap_err();
+        assert!(matches!(err, Gc3Error::Deadlock(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("dl-session"), "{msg}");
+        assert!(msg.contains("r0/tb0"), "{msg}");
+        assert!(msg.contains("r1/tb0"), "{msg}");
+    }
+
+    #[test]
+    fn threaded_deadlock_detected_and_named() {
+        let ef = circular_wait_ef();
+        let mut s = Session::named("dl-threaded");
+        s.register(ef.clone()).unwrap();
+        s.run_threaded(2);
+        let mut mem = Memory::for_ef(&ef, 2);
+        let err = s.launch("dl", &mut mem).unwrap_err();
+        assert!(matches!(err, Gc3Error::Deadlock(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("dl-threaded"), "{msg}");
+        assert!(msg.contains("r0/tb0") && msg.contains("r1/tb0"), "{msg}");
+        // The session survives the failure: memory is restored and a
+        // fresh launch still reports the same deadlock (no leaked state).
+        assert_eq!(mem.input[0].len(), 2);
+        let err2 = s.launch("dl", &mut mem).unwrap_err();
+        assert!(matches!(err2, Gc3Error::Deadlock(_)), "{err2}");
+    }
+
+    #[test]
+    fn memory_shape_mismatch_is_a_hard_error() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        let c2 = compile(&ring_allgather(2), "ag2", &CompileOpts::default()).unwrap();
+        let mut s = Session::new();
+        s.register(c.ef).unwrap();
+        let mut mem = Memory::for_ef(&c2.ef, 4); // 2-rank memory, 4-rank EF
+        let err = s.launch("ag4", &mut mem).unwrap_err().to_string();
+        assert!(err.contains("rank buffers"), "{err}");
+    }
+}

@@ -3,22 +3,30 @@
 //! Reproduction of "GC3: An Optimizing Compiler for GPU Collective
 //! Communication" (CS.DC 2022) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! ## The two entrypoints
+//! ## The two facades
 //!
-//! Everything in the crate is reached through two typed facades:
+//! The crate splits along the paper's compile/execute seam, one typed
+//! facade per side:
 //!
-//! * [`compiler::Pipeline`] — the staged compiler (Fig. 3). One program in,
-//!   one GC3-EF out, with typed intermediate artifacts
+//! * **Compile side — [`planner::Planner`]** (over [`compiler::Pipeline`]):
+//!   one call from `(collective, topology, size)` to an executable
+//!   [`planner::Plan`] (EF + backend + provenance + stats, with
+//!   `.simulate()` / `.verify()` conveniences), dispatching tuned table →
+//!   GC3 heuristics → NCCL fallback. The [`compiler::Pipeline`] underneath
+//!   is the staged compiler (Fig. 3): typed intermediate artifacts
 //!   (`Traced → ChunkDagStage → InstDagStage → ScheduledStage → Compiled`),
-//!   optional passes (fusion §5.3.1, instance replication §5.3.2), per-stage
-//!   wall-clock in [`compiler::CompileStats`], and `--dump-ir` renderings of
-//!   every IR. `compiler::compile` is a thin convenience wrapper.
-//! * [`planner::Planner`] — the planning facade. One call from
-//!   `(collective, topology, size)` to an executable [`planner::Plan`]
-//!   (EF + backend + provenance + stats, with `.simulate()` / `.verify()`
-//!   conveniences), dispatching tuned table → GC3 heuristics → NCCL
-//!   fallback. The coordinator's NCCL-compatible [`coordinator::Registry`]
-//!   is a thin shim over it.
+//!   optional passes (fusion §5.3.1, instance replication §5.3.2),
+//!   per-stage wall-clock in [`compiler::CompileStats`], `--dump-ir`
+//!   renderings of every IR; `compiler::compile` is a thin wrapper. The
+//!   coordinator's NCCL-compatible [`coordinator::Registry`] is a thin
+//!   shim over the planner.
+//! * **Execute side — [`exec::Session`]**: the paper's interpreter machine
+//!   (§4.4, §5) in host form. Per-rank `RankVm`s over explicit typed
+//!   channel endpoints, persistent connections, dynamic EF registration
+//!   (`register` / `launch` by name — one running machine serves many
+//!   collectives), and two drivers: the deterministic cooperative sweep
+//!   and a threaded driver (`run_threaded(n)`) pinned to byte-identical
+//!   memory. `exec::execute` / `exec::verify` are thin one-shot wrappers.
 //!
 //! ```text
 //!   dsl ──trace──▶ chunkdag ──lower──▶ instdag ──fuse/instances──▶
@@ -26,6 +34,8 @@
 //!            └────────────── compiler::Pipeline ──────────────┘
 //!   (collective, size) ─▶ planner::Planner ─▶ Plan { ef, backend, why }
 //!                          ▲ tuned tables (tune)   ▲ NCCL fallback (nccl)
+//!   Plan.ef ─▶ exec::Session { register · launch · run_threaded }
+//!              └─ RankVm ⇄ Channel ⇄ RankVm …  (persistent connections)
 //! ```
 //!
 //! ## Layer map
@@ -52,9 +62,10 @@
 //!   flow simulator of the GC3 runtime (§4.2–4.4): connections, channels,
 //!   4 MB staging tiles, slice pipelining, protocols (Simple/LL/LL128) and
 //!   per-threadblock bandwidth limits.
-//! * [`exec`] — the functional substrate: a byte-accurate interpreter of
-//!   GC3-EF over host buffers used to verify collective semantics; chunk
-//!   reduction can be routed through the AOT Pallas kernel via PJRT.
+//! * [`exec`] — the functional substrate: the session-based byte-accurate
+//!   interpreter of GC3-EF ([`exec::Session`]: per-rank VMs, typed channel
+//!   endpoints, cooperative + threaded drivers, dynamic EF registration);
+//!   chunk reduction can be routed through the AOT Pallas kernel via PJRT.
 //! * [`nccl`] — the baseline: NCCL-style ring/tree AllReduce schedules, the
 //!   size-based (algorithm, protocol, nchannels) tuner, p2p AllToAll and
 //!   p2p send, all emitted as GC3-EF and run on the same substrates.
@@ -102,5 +113,6 @@ pub use crate::compiler::Pipeline;
 pub use crate::core::{BufferId, ChanId, Rank, Slot, SlotRange};
 pub use crate::dsl::{Program, SchedHint};
 pub use crate::ef::EfProgram;
+pub use crate::exec::Session;
 pub use crate::planner::{Plan, Planner};
 pub use crate::sim::Protocol;

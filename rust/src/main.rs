@@ -6,6 +6,7 @@
 //!               [--out EF.json] [-v]
 //! gc3 inspect   <EF.json>                       print a Fig.-4-style listing
 //! gc3 verify    <program> [--instances R]       byte-accurate correctness
+//! gc3 exec      --program P --ranks N --threads T [--elems-per-chunk E]
 //! gc3 simulate  <program> --size S [--nodes N]  price a schedule
 //! gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]
 //! gc3 figures   [--fig 7|8|9|11|loc|abl]        regenerate §6 figures
@@ -17,7 +18,7 @@ use gc3::collectives::{self, Library};
 use gc3::compiler::{CompileOpts, IrStage, Pipeline};
 use gc3::core::{Gc3Error, Result};
 use gc3::ef::EfProgram;
-use gc3::exec::{verify, NativeReducer};
+use gc3::exec::{self, verify, Memory, NativeReducer, Session};
 use gc3::planner::Planner;
 use gc3::sim::{simulate, Protocol};
 use gc3::topology::Topology;
@@ -158,6 +159,53 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             Ok(())
         }
+        "exec" => {
+            // The session-based runtime executor: compile a library
+            // program, register it into a Session, and drive it over host
+            // buffers with the cooperative (--threads 1) or threaded
+            // (--threads N) driver, checking the postcondition.
+            let mut topo = Topology::a100_single();
+            topo.gpus_per_node = args.usize("ranks", 8);
+            let name = match args.opt("program") {
+                Some(p) => p.to_string(),
+                None => args
+                    .positional
+                    .get(1)
+                    .cloned()
+                    .unwrap_or_else(|| "allreduce_ring".to_string()),
+            };
+            let threads = args.usize("threads", 1).max(1);
+            let elems = args.usize("elems-per-chunk", 4096);
+            let trace = find_program(&topo, &name)?;
+            let c = Pipeline::new(&opts_from(args, &topo)?).run(&trace, &name)?;
+            let spec = c.ef.ef_spec(&trace);
+            let mut session = Session::named(&format!("gc3-exec:{name}"));
+            session.register(c.ef.clone())?;
+            if threads > 1 {
+                session.run_threaded(threads);
+            }
+            let mut mem = Memory::for_ef(&c.ef, elems);
+            mem.fill_pattern(exec::test_pattern);
+            let t0 = std::time::Instant::now();
+            let stats = session.launch(&name, &mut mem)?;
+            let dt = t0.elapsed().as_secs_f64();
+            exec::check_memory(&mem, &spec)?;
+            let driver = if threads > 1 {
+                format!("threaded x{threads}")
+            } else {
+                "cooperative".to_string()
+            };
+            println!(
+                "{name} on {} ranks ({driver}): OK — {} messages, {} elems moved in \
+                 {:.2} ms ({:.1} M elems/s), postcondition verified",
+                topo.num_ranks(),
+                stats.messages,
+                stats.elems_moved,
+                dt * 1e3,
+                stats.elems_moved as f64 / dt.max(1e-12) / 1e6
+            );
+            Ok(())
+        }
         "simulate" => {
             let topo = topo_from(args);
             let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("allreduce_ring");
@@ -267,12 +315,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             print!("{}", out.table.render());
             println!(
                 "searched {} candidates ({} feasible, {} skipped, {} memo hits), \
-                 {} simulations in {:.1}s",
+                 {} simulations, {} winning plans functionally verified in {:.1}s",
                 out.candidates,
                 out.feasible,
                 out.skipped.len(),
                 out.cache_hits,
                 out.simulations,
+                out.verified_winners,
                 t0.elapsed().as_secs_f64()
             );
             if args.flag("v") {
@@ -339,6 +388,10 @@ usage:
                 [--out EF.json] [--v]
   gc3 inspect   <EF.json>
   gc3 verify    <program> [--instances R] [--elems E]
+  gc3 exec      [--program P] [--ranks N] [--threads T] [--elems-per-chunk E]
+                run P on the session executor over N single-node ranks:
+                --threads 1 = deterministic cooperative driver, --threads N
+                = threaded driver (byte-identical memory, N workers)
   gc3 simulate  <program> --size 2MB [--nodes N] [--gpus G] [--topo a100|ndv2]
   gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]   (needs `make artifacts`)
   gc3 figures   [--fig 7|8|9|11|abl|loc]
@@ -402,6 +455,42 @@ mod tests {
         assert!(err.contains("unknown program 'nope'"), "{err}");
         assert!(err.contains("allreduce_ring"), "{err}");
         assert!(err.contains("allgather_ring"), "{err}");
+    }
+
+    /// `gc3 exec` with an unknown program is a hard error listing the
+    /// whole library (the name-keyed index from the planner redesign).
+    #[test]
+    fn exec_unknown_program_lists_library() {
+        let args = args_of(&["exec", "--program", "nope", "--ranks", "2"]);
+        let err = run("exec", &args).unwrap_err().to_string();
+        assert!(err.contains("unknown program 'nope'"), "{err}");
+        assert!(err.contains("allreduce_ring"), "{err}");
+        assert!(err.contains("allgather_ring"), "{err}");
+    }
+
+    /// The exec verb drives both drivers end-to-end on a tiny scenario.
+    #[test]
+    fn exec_runs_cooperative_and_threaded() {
+        for threads in ["1", "2"] {
+            let args = args_of(&[
+                "exec",
+                "--program",
+                "allgather_ring",
+                "--ranks",
+                "2",
+                "--threads",
+                threads,
+                "--elems-per-chunk",
+                "4",
+            ]);
+            run("exec", &args).unwrap_or_else(|e| panic!("--threads {threads}: {e}"));
+        }
+    }
+
+    #[test]
+    fn help_mentions_exec_verb() {
+        assert!(HELP.contains("gc3 exec"), "{HELP}");
+        assert!(HELP.contains("--threads"), "{HELP}");
     }
 
     #[test]

@@ -45,7 +45,7 @@ use crate::core::{Gc3Error, Result};
 use crate::dsl::collective::CollectiveSpec;
 use crate::dsl::Trace;
 use crate::ef::EfProgram;
-use crate::exec::{verify, ExecStats, NativeReducer};
+use crate::exec::{ExecStats, Session};
 use crate::nccl;
 use crate::sim::{simulate, Protocol, SimReport};
 use crate::topology::Topology;
@@ -112,7 +112,9 @@ impl Plan {
         simulate(&self.ef, &self.topo, size)
     }
 
-    /// Byte-accurate functional verification on the host executor.
+    /// Byte-accurate functional verification on the session executor: the
+    /// plan's EF is registered into a throwaway [`Session`] and launched
+    /// over pattern-filled memory against the collective's postcondition.
     pub fn verify(&self, elems_per_chunk: usize) -> Result<ExecStats> {
         let spec = self.spec.as_deref().ok_or_else(|| {
             Gc3Error::Invalid(format!(
@@ -120,7 +122,15 @@ impl Plan {
                 self.ef.name
             ))
         })?;
-        verify(&self.ef, spec, elems_per_chunk, &mut NativeReducer)
+        let mut session = Session::named(&format!("plan:{}", self.ef.name));
+        session.register(self.ef.clone())?;
+        session.verify(&self.ef.name, spec, elems_per_chunk)
+    }
+
+    /// The collective spec this plan is checked against, when the dispatch
+    /// built one (plans registered from raw EFs have none).
+    pub fn spec(&self) -> Option<&CollectiveSpec> {
+        self.spec.as_deref()
     }
 
     /// The request size the plan was made for, if the dispatch had one.

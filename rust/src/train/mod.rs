@@ -12,7 +12,7 @@ pub mod data;
 
 use crate::coordinator::Metrics;
 use crate::core::{Gc3Error, Result};
-use crate::exec::{self, Memory, NativeReducer, Reducer};
+use crate::exec::{Memory, NativeReducer, Reducer, Session};
 use crate::planner::{Backend, Planner};
 use crate::runtime::{Artifacts, Engine, PjrtReducer};
 use crate::topology::Topology;
@@ -92,6 +92,14 @@ pub fn train(opts: &TrainOpts, log: impl Fn(&str)) -> Result<TrainReport> {
     let elems_per_chunk = meta.num_params.div_ceil(ef.in_chunks);
     let mut mem = Memory::for_ef(&ef, elems_per_chunk);
 
+    // One persistent executor session for the whole run: the AllReduce is
+    // registered once and launched every step over the same long-lived
+    // connections — the paper's interpreter machine, not a per-step
+    // throwaway (§4.4).
+    let allreduce_name = ef.name.clone();
+    let mut session = Session::named("train");
+    session.register(ef.clone())?;
+
     // Per-rank state.
     let init = artifacts.init_params()?;
     let mut params: Vec<Vec<f32>> = vec![init; opts.ranks];
@@ -124,7 +132,7 @@ pub fn train(opts: &TrainOpts, log: impl Fn(&str)) -> Result<TrainReport> {
                 mem.input[r][..g.len()].copy_from_slice(g);
                 mem.input[r][g.len()..].fill(0.0);
             }
-            exec::execute(&ef, &mut mem, reducer.as_mut())?;
+            session.launch_reduce(&allreduce_name, &mut mem, reducer.as_mut())?;
             Ok::<_, Gc3Error>(())
         })?;
         metrics.collective_calls += 1;

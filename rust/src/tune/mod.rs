@@ -28,9 +28,10 @@ pub use table::{TunedChoice, TunedEntry, TunedTable};
 
 use crate::compiler::{compile, Compiled};
 use crate::core::{Gc3Error, Result};
+use crate::exec::Session;
 use crate::sim::{simulate, Protocol};
 use crate::topology::Topology;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 /// Compiled-candidate memo keyed by the topology fingerprint plus the
@@ -101,6 +102,10 @@ pub struct TuneOutcome {
     pub cache_hits: usize,
     /// Simulator calls made (`feasible × sizes`).
     pub simulations: usize,
+    /// Distinct winning plans that passed byte-accurate functional
+    /// verification on the session executor (0 when
+    /// `TuneOpts::verify_winners` is off).
+    pub verified_winners: usize,
 }
 
 /// Run `f(0..n)` on a scoped worker pool and collect the results in order.
@@ -239,6 +244,37 @@ pub fn tune_with_cache(
         entries.push(TunedEntry { size, choice: feasible[ci].0.choice(), time, algbw });
     }
 
+    // ---- Verify phase: a tuned table is a promise the runtime will
+    // execute these plans, so every distinct winner must pass byte-accurate
+    // functional verification before the table is published — all of them
+    // registered into one persistent executor session, the same machine
+    // shape that will serve them.
+    let mut verified_winners = 0usize;
+    if opts.verify_winners {
+        let mut session =
+            Session::named(&format!("tune:{}:{}", collective.name(), topo.name));
+        let mut seen: HashSet<String> = HashSet::new();
+        for entry in &entries {
+            let key = entry.choice.key();
+            if !seen.insert(key.clone()) {
+                continue;
+            }
+            let (cand, compiled) = feasible
+                .iter()
+                .find(|(c, _)| c.choice() == entry.choice)
+                .expect("winner came from the feasible set");
+            let trace = variant_trace(topo, collective, cand.variant)?;
+            let spec = compiled.ef.ef_spec(&trace);
+            session.register(compiled.ef.clone())?;
+            session.verify(&compiled.ef.name, &spec, 2).map_err(|e| {
+                Gc3Error::Invalid(format!(
+                    "tune: winning plan {key} failed functional verification: {e}"
+                ))
+            })?;
+            verified_winners += 1;
+        }
+    }
+
     Ok(TuneOutcome {
         table: TunedTable {
             collective: collective.name().to_string(),
@@ -251,6 +287,7 @@ pub fn tune_with_cache(
         skipped,
         cache_hits,
         simulations: cells,
+        verified_winners,
     })
 }
 
@@ -394,5 +431,23 @@ mod tests {
     fn empty_grid_is_an_error() {
         let topo = Topology::a100_single();
         assert!(tune(&topo, Collective::AllReduce, &[], &TuneOpts::default()).is_err());
+    }
+
+    /// Satellite: the tuner's verify path — every distinct winning plan is
+    /// functionally executed (session executor, postcondition checked)
+    /// before the table is published; opting out skips the phase.
+    #[test]
+    fn winning_plans_are_functionally_verified() {
+        let mut topo = Topology::a100_single();
+        topo.gpus_per_node = 2;
+        let sizes = [64 * 1024u64, 64 << 20];
+        let out = tune(&topo, Collective::AllGather, &sizes, &TuneOpts::default()).unwrap();
+        assert!(out.verified_winners > 0, "verify phase must run by default");
+        let distinct: std::collections::HashSet<String> =
+            out.table.entries.iter().map(|e| e.choice.key()).collect();
+        assert_eq!(out.verified_winners, distinct.len(), "one verification per distinct winner");
+        let off = TuneOpts { verify_winners: false, ..TuneOpts::default() };
+        let out = tune(&topo, Collective::AllGather, &sizes, &off).unwrap();
+        assert_eq!(out.verified_winners, 0);
     }
 }

@@ -145,6 +145,11 @@ pub struct TuneOpts {
     /// Worker threads for the scoped pool; 0 = one per available core
     /// (capped at 8).
     pub workers: usize,
+    /// Functionally verify every distinct winning plan on the session
+    /// executor before publishing the table (byte-accurate postcondition
+    /// check, cost independent of the tuned sizes). On by default: a
+    /// tuned table is a promise the runtime will execute these plans.
+    pub verify_winners: bool,
 }
 
 impl Default for TuneOpts {
@@ -153,6 +158,7 @@ impl Default for TuneOpts {
             instances: vec![1, 2, 4, 8],
             protocols: vec![Protocol::LL, Protocol::LL128, Protocol::Simple],
             workers: 0,
+            verify_winners: true,
         }
     }
 }

@@ -1,0 +1,253 @@
+//! Session-executor integration suite: the execution-side twin of the
+//! golden compiler-API tests.
+//!
+//! 1. **Driver determinism** — the threaded driver must produce memory
+//!    byte-identical to the deterministic cooperative driver (and to the
+//!    preserved pre-session interpreter) for every program in the
+//!    collectives library on every topology family (a100 / ndv2 / ndv4 /
+//!    asym). The EF's cross-threadblock `depend` edges and single-owner
+//!    FIFO connections make the final state schedule-independent; this
+//!    suite is what catches any future scheduling change that breaks that
+//!    argument.
+//! 2. **Persistent machine** — one `Session` executes several registered
+//!    EFs back-to-back over persistent connections with postconditions
+//!    verified, the paper's interpreter-machine deployment shape.
+//! 3. **Error paths through the new API** — FIFO length mismatch and the
+//!    undelivered-message drain check, reported identically by both
+//!    drivers (deadlock reporting is covered by `exec::session` unit
+//!    tests).
+
+use gc3::collectives::{library, Library};
+use gc3::compiler::{compile, CompileOpts};
+use gc3::core::{BufferId, Gc3Error};
+use gc3::ef::{EfGpu, EfInst, EfProgram, EfTb};
+use gc3::exec::{execute_reference, test_pattern, Memory, NativeReducer, Session};
+use gc3::instdag::OpCode;
+use gc3::sim::Protocol;
+use gc3::topology::Topology;
+
+/// All memory (input + output + scratch, every rank) as exact bit patterns.
+fn memory_bits(mem: &Memory) -> Vec<Vec<u32>> {
+    let mut out = Vec::new();
+    for bufs in [&mem.input, &mem.output, &mem.scratch] {
+        for buf in bufs {
+            out.push(buf.iter().map(|x| x.to_bits()).collect());
+        }
+    }
+    out
+}
+
+fn run_cooperative(ef: &EfProgram, elems: usize) -> (Vec<Vec<u32>>, usize) {
+    let mut s = Session::named("coop");
+    s.register(ef.clone()).unwrap();
+    let mut mem = Memory::for_ef(ef, elems);
+    mem.fill_pattern(test_pattern);
+    let stats = s.launch(&ef.name, &mut mem).unwrap();
+    (memory_bits(&mem), stats.elems_moved)
+}
+
+fn run_threaded(ef: &EfProgram, elems: usize, threads: usize) -> (Vec<Vec<u32>>, usize) {
+    let mut s = Session::named("thr");
+    s.register(ef.clone()).unwrap();
+    s.run_threaded(threads);
+    let mut mem = Memory::for_ef(ef, elems);
+    mem.fill_pattern(test_pattern);
+    let stats = s.launch(&ef.name, &mut mem).unwrap();
+    (memory_bits(&mem), stats.elems_moved)
+}
+
+fn run_reference(ef: &EfProgram, elems: usize) -> (Vec<Vec<u32>>, usize) {
+    let mut mem = Memory::for_ef(ef, elems);
+    mem.fill_pattern(test_pattern);
+    let stats = execute_reference(ef, &mut mem, &mut NativeReducer).unwrap();
+    (memory_bits(&mem), stats.elems_moved)
+}
+
+/// Acceptance sweep: threaded and cooperative drivers produce
+/// byte-identical memory on every library program across the four
+/// topology families — and both agree with the pre-session interpreter,
+/// the preserved oracle.
+#[test]
+fn threaded_matches_cooperative_across_library_and_topologies() {
+    let mut topos = vec![
+        Topology::a100(2),
+        Topology::ndv2(2),
+        Topology::ndv4(2),
+        Topology::asym(2),
+    ];
+    for t in &mut topos {
+        t.gpus_per_node = 2; // keep the sweep fast; 4 ranks per topology
+    }
+    for topo in topos {
+        for prog in library(&topo).unwrap() {
+            let c = compile(&prog.trace, prog.name, &CompileOpts::default())
+                .unwrap_or_else(|e| panic!("{}@{}: {e}", prog.name, topo.name));
+            let label = format!("{}@{}", prog.name, topo.name);
+            let (coop, coop_elems) = run_cooperative(&c.ef, 4);
+            let (thr, thr_elems) = run_threaded(&c.ef, 4, 3);
+            assert_eq!(coop, thr, "{label}: threaded driver diverged from cooperative");
+            assert_eq!(coop_elems, thr_elems, "{label}: element counts diverged");
+            let (oracle, oracle_elems) = run_reference(&c.ef, 4);
+            assert_eq!(coop, oracle, "{label}: session diverged from the reference oracle");
+            assert_eq!(coop_elems, oracle_elems, "{label}");
+        }
+    }
+}
+
+/// One session, many collectives: register several library EFs into a
+/// single machine and execute them back-to-back over persistent
+/// connections, verifying each postcondition — on both drivers.
+#[test]
+fn one_session_serves_multiple_collectives_back_to_back() {
+    let mut topo = Topology::a100_single();
+    topo.gpus_per_node = 4;
+    let lib = Library::build(&topo).unwrap();
+    let programs = ["allreduce_ring", "allgather_ring", "reduce_scatter_ring"];
+    for threaded in [false, true] {
+        let mut session = Session::named("serving");
+        for name in programs {
+            let trace = &lib.get(name).unwrap().trace;
+            let c = compile(trace, name, &CompileOpts::default()).unwrap();
+            session.register(c.ef).unwrap();
+        }
+        if threaded {
+            session.run_threaded(4);
+        }
+        assert_eq!(session.programs().len(), programs.len());
+        assert_eq!(session.num_ranks(), Some(4));
+        let mut opened = 0;
+        for (i, name) in programs.iter().enumerate() {
+            let spec = &lib.get(name).unwrap().trace.spec;
+            let stats = session.verify(name, spec, 4).unwrap_or_else(|e| {
+                panic!("{name} (threaded={threaded}): {e}")
+            });
+            assert!(stats.messages > 0, "{name}");
+            if i == 0 {
+                opened = session.connections();
+                assert!(opened > 0);
+                // Relaunching the same program opens nothing new: the
+                // connections are persistent, as in the paper's runtime.
+                session.verify(name, spec, 4).unwrap();
+                assert_eq!(session.connections(), opened, "relaunch reused connections");
+            }
+        }
+        // The ring programs share the ring connection structure, so the
+        // later launches mostly reused the first program's channels too.
+        assert!(session.connections() >= opened);
+    }
+}
+
+/// A sender emitting 2 chunks paired with a receiver expecting 1: the
+/// FIFO pairing mismatch must be a hard error naming the receiving
+/// rank/tb, through both drivers.
+fn mismatched_counts_ef() -> EfProgram {
+    EfProgram {
+        name: "mismatch".into(),
+        collective: "custom".into(),
+        num_ranks: 2,
+        in_chunks: 2,
+        out_chunks: 2,
+        inplace: false,
+        protocol: Protocol::Simple,
+        gpus: vec![
+            EfGpu {
+                rank: 0,
+                scratch_chunks: 0,
+                tbs: vec![EfTb {
+                    send: Some((1, 0)),
+                    recv: None,
+                    steps: vec![EfInst {
+                        op: OpCode::Send,
+                        src: Some((BufferId::Input, 0)),
+                        dst: None,
+                        count: 2,
+                        depend: None,
+                    }],
+                }],
+            },
+            EfGpu {
+                rank: 1,
+                scratch_chunks: 0,
+                tbs: vec![EfTb {
+                    send: None,
+                    recv: Some((0, 0)),
+                    steps: vec![EfInst {
+                        op: OpCode::Recv,
+                        src: None,
+                        dst: Some((BufferId::Output, 0)),
+                        count: 1,
+                        depend: None,
+                    }],
+                }],
+            },
+        ],
+    }
+}
+
+#[test]
+fn fifo_length_mismatch_is_reported_by_both_drivers() {
+    let ef = mismatched_counts_ef();
+    for threads in [1usize, 2] {
+        let mut s = Session::named("mm");
+        s.register(ef.clone()).unwrap();
+        if threads > 1 {
+            s.run_threaded(threads);
+        }
+        let mut mem = Memory::for_ef(&ef, 2);
+        let err = s.launch("mismatch", &mut mem).unwrap_err();
+        assert!(matches!(err, Gc3Error::Exec(_)), "threads={threads}: {err}");
+        let msg = err.to_string();
+        assert!(msg.contains("FIFO pairing mismatch"), "threads={threads}: {msg}");
+        assert!(msg.contains("r1/tb0"), "threads={threads}: {msg}");
+    }
+}
+
+/// A send with no matching receive retires every instruction but leaves a
+/// message in flight: the post-launch drain check must fail, on both
+/// drivers, naming the connection.
+#[test]
+fn undelivered_messages_fail_the_drain_check() {
+    let ef = EfProgram {
+        name: "undelivered".into(),
+        collective: "custom".into(),
+        num_ranks: 2,
+        in_chunks: 1,
+        out_chunks: 1,
+        inplace: false,
+        protocol: Protocol::Simple,
+        gpus: vec![
+            EfGpu {
+                rank: 0,
+                scratch_chunks: 0,
+                tbs: vec![EfTb {
+                    send: Some((1, 0)),
+                    recv: None,
+                    steps: vec![EfInst {
+                        op: OpCode::Send,
+                        src: Some((BufferId::Input, 0)),
+                        dst: None,
+                        count: 1,
+                        depend: None,
+                    }],
+                }],
+            },
+            EfGpu { rank: 1, scratch_chunks: 0, tbs: vec![] },
+        ],
+    };
+    for threads in [1usize, 2] {
+        let mut s = Session::named("ud");
+        s.register(ef.clone()).unwrap();
+        if threads > 1 {
+            s.run_threaded(threads);
+        }
+        let mut mem = Memory::for_ef(&ef, 2);
+        let err = s.launch("undelivered", &mut mem).unwrap_err().to_string();
+        assert!(err.contains("undelivered"), "threads={threads}: {err}");
+        assert!(err.contains("r0→r1"), "threads={threads}: {err}");
+        // The failed launch flushed the connection: the session stays
+        // usable and the next launch reports the same error (not 2
+        // stacked messages).
+        let err2 = s.launch("undelivered", &mut mem).unwrap_err().to_string();
+        assert!(err2.contains("has 1 undelivered"), "threads={threads}: {err2}");
+    }
+}

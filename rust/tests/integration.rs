@@ -9,10 +9,19 @@ use gc3::core::BufferId;
 use gc3::dsl::collective::CollectiveSpec;
 use gc3::dsl::{Program, SchedHint};
 use gc3::ef::EfProgram;
-use gc3::exec::{verify, NativeReducer};
+use gc3::exec::{ExecStats, Session};
 use gc3::sim::{simulate, simulate_reference, Protocol};
 use gc3::topology::Topology;
 use gc3::util::rng::Rng;
+
+/// Verify an EF against `spec` through the public session API: register
+/// into a fresh [`Session`], launch over pattern-filled memory, check the
+/// postcondition.
+fn session_verify(ef: &EfProgram, spec: &CollectiveSpec) -> gc3::core::Result<ExecStats> {
+    let mut session = Session::new();
+    session.register(ef.clone())?;
+    session.verify(&ef.name, spec, 4)
+}
 
 /// Pin the optimized engine against the preserved pre-optimization engine:
 /// completion time and algbw to ≤ 1e-9 relative error, event and flow
@@ -113,8 +122,8 @@ fn library_roundtrip_verify_simulate() {
         let json = c.ef.to_json_string();
         let back = EfProgram::from_json_str(&json).unwrap();
         assert_eq!(c.ef, back, "{} EF round-trip", prog.name);
-        // The round-tripped EF still executes correctly...
-        verify(&back, &prog.trace.spec, 4, &mut NativeReducer)
+        // The round-tripped EF still executes correctly (session API)...
+        session_verify(&back, &prog.trace.spec)
             .unwrap_or_else(|e| panic!("{}: {e}", prog.name));
         // ...and prices to a sane time at two sizes.
         for size in [64 * 1024u64, 16 * 1024 * 1024] {
@@ -177,7 +186,7 @@ fn random_programs_compile_and_verify() {
         let c = compile(&trace, "rand", &opts).unwrap_or_else(|e| panic!("case {case}: {e}"));
         let spec =
             if instances > 1 { trace.spec.scaled(instances) } else { trace.spec.clone() };
-        verify(&c.ef, &spec, 4, &mut NativeReducer)
+        session_verify(&c.ef, &spec)
             .unwrap_or_else(|e| panic!("case {case} (r={ranks} acc={acc_rank}): {e}"));
     }
 }
@@ -189,14 +198,14 @@ fn random_programs_compile_and_verify() {
 fn corrupted_efs_are_detected() {
     let trace = gc3::collectives::allreduce::ring(4, false).unwrap();
     let good = compile(&trace, "ar", &CompileOpts::default()).unwrap().ef;
-    verify(&good, &trace.spec, 4, &mut NativeReducer).unwrap();
+    session_verify(&good, &trace.spec).unwrap();
 
     // 1. Drop one GPU's final instruction.
     let mut ef = good.clone();
     let tb = &mut ef.gpus[2].tbs[0];
     tb.steps.pop();
     assert!(
-        ef.validate().is_err() || verify(&ef, &trace.spec, 4, &mut NativeReducer).is_err(),
+        ef.validate().is_err() || session_verify(&ef, &trace.spec).is_err(),
         "dropped instruction must be detected"
     );
 
@@ -215,7 +224,7 @@ fn corrupted_efs_are_detected() {
         }
     }
     assert!(
-        verify(&ef, &trace.spec, 4, &mut NativeReducer).is_err(),
+        session_verify(&ef, &trace.spec).is_err(),
         "mis-addressed receive must fail the postcondition"
     );
 

@@ -7,13 +7,17 @@
 //! program is valid by construction and every pipeline stage must agree:
 //!
 //! 1. `chunkdag::validate` passes (symbolic postcondition check);
-//! 2. `exec::verify` passes with `NativeReducer` (numeric postcondition);
+//! 2. `Session::verify` passes on the session executor (numeric
+//!    postcondition);
 //! 3. the compiled EF JSON round-trips to an identical `EfProgram`;
 //! 4. fused and unfused compiles (`CompileOpts.fuse` on/off) produce
 //!    byte-identical output buffers. (Output buffers specifically: the
 //!    `rrs` pass is *allowed* to elide dead intermediate writes outside
 //!    the postcondition, and the generator constrains every written
 //!    output slot, so fusion may never change an output byte.)
+//! 5. the threaded session driver produces the same output bytes as the
+//!    deterministic cooperative driver — 220 random dependence shapes
+//!    fuzzing the schedule-independence argument.
 //!
 //! ≥ 200 generated cases, deterministic under a fixed seed.
 
@@ -23,7 +27,7 @@ use gc3::core::{BufferId, Slot};
 use gc3::dsl::collective::{reduce_vals, val, ChunkValue, CollectiveSpec};
 use gc3::dsl::{Program, SchedHint, Trace};
 use gc3::ef::EfProgram;
-use gc3::exec::{execute, test_pattern, verify, Memory, NativeReducer};
+use gc3::exec::{test_pattern, Memory, Session};
 use gc3::sim::Protocol;
 use gc3::util::rng::Rng;
 use std::collections::{BTreeMap, BTreeSet};
@@ -171,16 +175,29 @@ fn generate(rng: &mut Rng, case: usize) -> GeneratedCase {
     GeneratedCase { trace: p.finish().unwrap(), spec, reduces }
 }
 
-/// Execute an EF over pattern-filled memory and return the output buffers
-/// as exact bit patterns.
-fn output_bits(ef: &EfProgram) -> Vec<Vec<u32>> {
+/// Execute an EF on a fresh [`Session`] over pattern-filled memory and
+/// return the output buffers as exact bit patterns — cooperative driver
+/// at `threads <= 1`, threaded driver otherwise.
+fn output_bits(ef: &EfProgram, threads: usize) -> Vec<Vec<u32>> {
+    let mut session = Session::named("prop");
+    session.register(ef.clone()).unwrap();
+    if threads > 1 {
+        session.run_threaded(threads);
+    }
     let mut mem = Memory::for_ef(ef, 4);
     mem.fill_pattern(test_pattern);
-    execute(ef, &mut mem, &mut NativeReducer).unwrap();
+    session.launch(&ef.name, &mut mem).unwrap();
     mem.output.iter().map(|buf| buf.iter().map(|x| x.to_bits()).collect()).collect()
 }
 
-/// The ≥ 200-case sweep: every generated program passes all four
+/// Register the EF into a fresh session and verify `spec`'s postcondition.
+fn session_verify(ef: &EfProgram, spec: &CollectiveSpec) -> gc3::core::Result<()> {
+    let mut session = Session::named(&spec.name);
+    session.register(ef.clone())?;
+    session.verify(&ef.name, spec, 4).map(|_| ())
+}
+
+/// The ≥ 200-case sweep: every generated program passes all five
 /// cross-checks.
 #[test]
 fn random_programs_pass_all_cross_checks() {
@@ -198,12 +215,13 @@ fn random_programs_pass_all_cross_checks() {
         let dag = ChunkDag::build(&g.trace).unwrap_or_else(|e| panic!("case {case}: {e}"));
         validate(&dag).unwrap_or_else(|e| panic!("case {case}: validate: {e}"));
 
-        // (2) Compile + numeric verification, random protocol.
+        // (2) Compile + numeric verification on the session executor,
+        // random protocol.
         let protocol = *rng.choose(&[Protocol::Simple, Protocol::LL, Protocol::LL128]);
         let opts = CompileOpts { protocol, ..Default::default() };
         let fused = compile(&g.trace, &g.spec.name, &opts)
             .unwrap_or_else(|e| panic!("case {case}: compile: {e}"));
-        verify(&fused.ef, &g.spec, 4, &mut NativeReducer)
+        session_verify(&fused.ef, &g.spec)
             .unwrap_or_else(|e| panic!("case {case}: verify: {e}\n{}", fused.ef.listing()));
 
         // (3) EF JSON round-trip is lossless.
@@ -214,12 +232,21 @@ fn random_programs_pass_all_cross_checks() {
         // (4) Fusion differential: byte-identical output buffers.
         let unfused = compile(&g.trace, &g.spec.name, &opts.clone().without_fusion())
             .unwrap_or_else(|e| panic!("case {case}: unfused compile: {e}"));
-        verify(&unfused.ef, &g.spec, 4, &mut NativeReducer)
+        session_verify(&unfused.ef, &g.spec)
             .unwrap_or_else(|e| panic!("case {case}: unfused verify: {e}"));
+        let fused_bits = output_bits(&fused.ef, 1);
         assert_eq!(
-            output_bits(&fused.ef),
-            output_bits(&unfused.ef),
+            fused_bits,
+            output_bits(&unfused.ef, 1),
             "case {case}: fused vs unfused output buffers differ"
+        );
+
+        // (5) Driver differential: the threaded driver's output bytes
+        // equal the cooperative driver's on every generated program.
+        assert_eq!(
+            fused_bits,
+            output_bits(&fused.ef, 2),
+            "case {case}: threaded driver diverged from cooperative"
         );
         total_fused_away +=
             fused.stats.insts_before_fusion - fused.stats.insts_after_fusion;
