@@ -3,10 +3,12 @@
 //! fast the discrete-event engine retires simulation events — the §Perf
 //! numbers tracked in EXPERIMENTS.md.
 //!
-//! Emits `BENCH_compiler_perf.json` (per-scenario compile ms, simulate ms,
-//! events/s, the optimized-vs-reference head-to-head, and the autotuner's
-//! tuned-vs-default rows — EXPERIMENTS.md §TUNE) plus the tuned table
-//! itself as `TUNED_bench_allreduce.json`; CI archives both as artifacts.
+//! Emits `BENCH_compiler_perf.json` (schema v5: per-scenario compile ms,
+//! simulate ms, events/s, the optimized-vs-reference head-to-head, the
+//! autotuner's tuned-vs-default rows — EXPERIMENTS.md §TUNE, the `exec[]`
+//! executor-throughput rows — §EXEC, and the `serve[]` serving-layer rows
+//! — §SERVE) plus the tuned table itself as `TUNED_bench_allreduce.json`;
+//! CI archives both as artifacts.
 //!
 //! Run: `cargo bench --bench compiler_perf`
 //! Skip the slow reference-engine head-to-head: set `GC3_BENCH_FAST=1`
@@ -42,7 +44,14 @@ fn main() {
             r.scenario, r.threaded_speedup
         );
     }
-    let json = perf::to_json(&cases, h2h.as_ref(), &tuned_rows, &exec_rows);
+    println!("== Serving layer (plan cache + session pool + request coalescing)");
+    let serve_rows = perf::serve_suite(4).expect("serve suite");
+    print!("{}", perf::render_serve(&serve_rows));
+    // Like the threaded ratio above, the batched-vs-unbatched ratio is
+    // runner-dependent (coalescing amortizes per-launch overhead, which
+    // shrinks on fast machines), so it is recorded per run in the JSON
+    // (EXPERIMENTS.md §SERVE) rather than hard-gated.
+    let json = perf::to_json(&cases, h2h.as_ref(), &tuned_rows, &exec_rows, &serve_rows);
     let path = "BENCH_compiler_perf.json";
     std::fs::write(path, json.to_string()).expect("write BENCH_compiler_perf.json");
     println!("wrote {path}");

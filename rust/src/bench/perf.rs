@@ -15,6 +15,7 @@ use crate::compiler::{compile, CompileOpts, Compiled, StageTiming};
 use crate::core::{Gc3Error, Result};
 use crate::dsl::Trace;
 use crate::exec::{execute_reference, test_pattern, Memory, NativeReducer, Session};
+use crate::serve::{loadgen, Service, ServiceConfig, TraceSpec};
 use crate::sim::{simulate, simulate_reference, Protocol};
 use crate::topology::Topology;
 use crate::tune::{tune, Collective, TuneOpts, TunedTable};
@@ -204,6 +205,122 @@ pub fn exec_suite(threads: usize) -> Result<Vec<ExecRow>> {
     Ok(rows)
 }
 
+/// One serving-layer measurement row (EXPERIMENTS.md §SERVE; the `serve[]`
+/// array of `BENCH_compiler_perf.json`, schema v5): throughput and
+/// nearest-rank latency percentiles for one trace mix through [`Service`],
+/// plus the coalescing win against the same trace served one launch per
+/// request.
+#[derive(Clone, Debug)]
+pub struct ServeRow {
+    /// The trace spec served (`mix:requests:seed`).
+    pub trace: String,
+    pub requests: usize,
+    /// Worker threads per pooled session.
+    pub threads: usize,
+    /// Requests served per wall-clock second (coalescing on).
+    pub req_per_sec: f64,
+    /// Nearest-rank p50 of submit-to-completion latency, seconds.
+    pub p50_s: f64,
+    /// Nearest-rank p99 of submit-to-completion latency, seconds.
+    pub p99_s: f64,
+    /// Plan-cache hit rate over the whole run (warmup + timed).
+    pub cache_hit_rate: f64,
+    /// Requests that shared a coalesced launch (timed run).
+    pub coalesced: u64,
+    /// Launches dispatched (timed run).
+    pub batches: u64,
+    /// Wall clock of the unbatched (max_batch = 1) run / the coalesced
+    /// run — the batching win on identical traffic.
+    pub batched_speedup: f64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample: the smallest
+/// value with at least a fraction `q` of the mass at or below it — the
+/// `ceil(q·n)`-th order statistic, so `percentile(v, 0.99)` of 48 samples
+/// is the maximum, not the second-largest. 0.0 for an empty sample. Used
+/// by both the `serve[]` bench rows and the `gc3 serve` verb, so the two
+/// shipped surfaces can never disagree.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Run the serving-layer scenarios: each trace mix is served twice by a
+/// coalescing service (one warmup pass so plan compilation doesn't
+/// pollute the timed pass, then the measured pass) and once more by an
+/// identically configured service with coalescing off, for the
+/// batched-vs-unbatched ratio. Small element caps keep the suite CI-fast;
+/// the byte-identity of the coalesced path is pinned separately by
+/// `rust/tests/serve_service.rs`.
+pub fn serve_suite(threads: usize) -> Result<Vec<ServeRow>> {
+    let topo = Topology::a100_single();
+    let mut rows = Vec::new();
+    for spec_s in ["mixed:48:1", "small:48:2"] {
+        let spec = TraceSpec::parse(spec_s)?;
+        let reqs = loadgen::generate(&topo, &spec);
+        let cfg = ServiceConfig {
+            threads,
+            max_batch: 8,
+            max_elems: 512,
+            ..ServiceConfig::default()
+        };
+        let mut svc = Service::new(topo.clone(), cfg.clone());
+        svc.serve(reqs.clone())?; // warmup: compile every plan once
+        let batches_before = svc.metrics().serve.batches;
+        let coalesced_before = svc.metrics().serve.coalesced;
+        let t0 = Instant::now();
+        let (responses, _) = svc.serve(reqs.clone())?;
+        let wall = t0.elapsed().as_secs_f64();
+        let mut lat: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
+        lat.sort_by(|a, b| a.total_cmp(b));
+        let p50 = percentile(&lat, 0.50);
+        let p99 = percentile(&lat, 0.99);
+        let mut solo = Service::new(topo.clone(), ServiceConfig { max_batch: 1, ..cfg });
+        solo.serve(reqs.clone())?; // warmup
+        let t1 = Instant::now();
+        solo.serve(reqs.clone())?;
+        let wall_solo = t1.elapsed().as_secs_f64();
+        rows.push(ServeRow {
+            trace: spec_s.to_string(),
+            requests: responses.len(),
+            threads,
+            req_per_sec: responses.len() as f64 / wall.max(1e-12),
+            p50_s: p50,
+            p99_s: p99,
+            cache_hit_rate: svc.cache_stats().hit_rate(),
+            coalesced: svc.metrics().serve.coalesced - coalesced_before,
+            batches: svc.metrics().serve.batches - batches_before,
+            batched_speedup: wall_solo / wall.max(1e-12),
+        });
+    }
+    Ok(rows)
+}
+
+/// Human-readable rendering of the serving rows.
+pub fn render_serve(rows: &[ServeRow]) -> String {
+    let mut out = format!(
+        "{:<14} {:>8} {:>10} {:>10} {:>10} {:>9} {:>10} {:>9}\n",
+        "trace", "requests", "req/s", "p50 us", "p99 us", "hit rate", "coalesced", "batch x"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<14} {:>8} {:>10.0} {:>10.1} {:>10.1} {:>8.0}% {:>10} {:>8.2}x\n",
+            r.trace,
+            r.requests,
+            r.req_per_sec,
+            r.p50_s * 1e6,
+            r.p99_s * 1e6,
+            r.cache_hit_rate * 100.0,
+            r.coalesced,
+            r.batched_speedup
+        ));
+    }
+    out
+}
+
 /// Best-of-`n` wall-clock seconds (one warmup call first).
 pub fn best_of<T>(n: usize, mut f: impl FnMut() -> T) -> f64 {
     f();
@@ -330,10 +447,11 @@ pub fn to_json(
     h2h: Option<&HeadToHead>,
     tuned: &[TunedRow],
     exec: &[ExecRow],
+    serve: &[ServeRow],
 ) -> Json {
     let mut root = Json::obj();
     root.set("bench", Json::Str("compiler_perf".into()));
-    root.set("schema_version", Json::Num(4.0));
+    root.set("schema_version", Json::Num(5.0));
     let rows: Vec<Json> = cases
         .iter()
         .map(|c| {
@@ -411,6 +529,26 @@ pub fn to_json(
             })
             .collect();
         root.set("exec", Json::Arr(rows));
+    }
+    if !serve.is_empty() {
+        let rows: Vec<Json> = serve
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("trace", Json::Str(r.trace.clone()));
+                o.set("requests", Json::Num(r.requests as f64));
+                o.set("threads", Json::Num(r.threads as f64));
+                o.set("req_per_sec", Json::Num(r.req_per_sec));
+                o.set("p50_s", Json::Num(r.p50_s));
+                o.set("p99_s", Json::Num(r.p99_s));
+                o.set("cache_hit_rate", Json::Num(r.cache_hit_rate));
+                o.set("coalesced", Json::Num(r.coalesced as f64));
+                o.set("batches", Json::Num(r.batches as f64));
+                o.set("batched_speedup", Json::Num(r.batched_speedup));
+                o
+            })
+            .collect();
+        root.set("serve", Json::Arr(rows));
     }
     root
 }
@@ -523,7 +661,19 @@ mod tests {
             threaded_speedup: 2.0,
             alloc_speedup: 2.0,
         }];
-        let j = to_json(&cases, Some(&h), &tuned, &exec);
+        let serve = vec![ServeRow {
+            trace: "mixed:48:1".into(),
+            requests: 48,
+            threads: 4,
+            req_per_sec: 1200.0,
+            p50_s: 0.5e-3,
+            p99_s: 2.0e-3,
+            cache_hit_rate: 0.9,
+            coalesced: 30,
+            batches: 12,
+            batched_speedup: 1.8,
+        }];
+        let j = to_json(&cases, Some(&h), &tuned, &exec, &serve);
         let s = j.to_string();
         for field in [
             "compile_ms",
@@ -540,9 +690,16 @@ mod tests {
             "threaded_elems_per_sec",
             "threaded_speedup",
             "alloc_speedup",
+            "serve",
+            "req_per_sec",
+            "p50_s",
+            "p99_s",
+            "cache_hit_rate",
+            "batched_speedup",
         ] {
             assert!(s.contains(field), "missing {field} in {s}");
         }
+        assert_eq!(j.get("schema_version").and_then(|v| v.as_usize()), Some(5));
         let arr = j.get("cases").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("events").and_then(|e| e.as_usize()), Some(42));
@@ -554,10 +711,16 @@ mod tests {
         let ex = j.get("exec").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(ex[0].get("threads").and_then(|e| e.as_usize()), Some(4));
         assert_eq!(ex[0].get("elems_moved").and_then(|e| e.as_usize()), Some(1_835_008));
-        // No tuned/exec rows → no sections (old consumers keep working).
-        let bare = to_json(&cases, None, &[], &[]);
+        let sv = j.get("serve").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(sv[0].get("trace").and_then(|e| e.as_str()), Some("mixed:48:1"));
+        assert_eq!(sv[0].get("requests").and_then(|e| e.as_usize()), Some(48));
+        assert_eq!(sv[0].get("coalesced").and_then(|e| e.as_usize()), Some(30));
+        // No tuned/exec/serve rows → no sections (old consumers keep
+        // working).
+        let bare = to_json(&cases, None, &[], &[], &[]);
         assert!(bare.get("tuned_vs_default").is_none());
         assert!(bare.get("exec").is_none());
+        assert!(bare.get("serve").is_none());
     }
 
     /// The exec suite's scenarios are small enough to run here in full:
@@ -574,5 +737,40 @@ mod tests {
             assert!(r.cooperative_s > 0.0 && r.threaded_s > 0.0 && r.reference_s > 0.0);
             assert!(r.threaded_speedup > 0.0 && r.alloc_speedup > 0.0);
         }
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<f64> = (1..=48).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.99), 48.0, "p99 of 48 samples is the max");
+        assert_eq!(percentile(&v, 0.50), 24.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 48.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    /// The serve suite end-to-end on its real (CI-sized) scenarios: every
+    /// trace mix must report throughput, ordered percentiles, a warm
+    /// cache, and actual coalescing.
+    #[test]
+    fn serve_suite_measures_both_mixes() {
+        let rows = serve_suite(2).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.requests, 48, "{}", r.trace);
+            assert!(r.req_per_sec > 0.0, "{}", r.trace);
+            assert!(r.p50_s > 0.0 && r.p99_s >= r.p50_s, "{}", r.trace);
+            assert!(
+                r.cache_hit_rate > 0.5,
+                "{}: timed pass runs entirely on a warm cache ({})",
+                r.trace,
+                r.cache_hit_rate
+            );
+            assert!(r.batches > 0, "{}", r.trace);
+            assert!(r.coalesced > 0, "{}: 48 requests over few buckets must coalesce", r.trace);
+            assert!(r.batched_speedup > 0.0, "{}", r.trace);
+        }
+        print!("{}", render_serve(&rows));
     }
 }

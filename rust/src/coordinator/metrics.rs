@@ -1,7 +1,124 @@
-//! Lightweight run-time metrics for the coordinator and trainer.
+//! Lightweight run-time metrics for the coordinator, trainer and the
+//! serving layer ([`crate::serve`]).
 
 use std::fmt;
 use std::time::{Duration, Instant};
+
+/// Upper bounds (microseconds) of the fixed latency buckets; one overflow
+/// bucket follows the last bound. Fixed boundaries keep histograms from
+/// different runs (and different tenants) directly comparable.
+pub const LAT_BOUNDS_US: [f64; 9] =
+    [50.0, 100.0, 250.0, 500.0, 1_000.0, 2_500.0, 5_000.0, 10_000.0, 25_000.0];
+
+const LAT_BUCKETS: usize = LAT_BOUNDS_US.len() + 1;
+
+/// Fixed-bucket latency histogram: counts per bucket of [`LAT_BOUNDS_US`]
+/// plus an overflow bucket. Quantiles answer with the upper bound of the
+/// bucket holding the requested rank — a bounded estimate, not an exact
+/// order statistic (the bench computes exact p50/p99 from raw samples;
+/// this histogram is the always-on, O(1)-memory serving counter).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyHistogram {
+    counts: [u64; LAT_BUCKETS],
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample.
+    pub fn record(&mut self, seconds: f64) {
+        let us = seconds * 1e6;
+        let idx = LAT_BOUNDS_US
+            .iter()
+            .position(|&bound| us <= bound)
+            .unwrap_or(LAT_BOUNDS_US.len());
+        self.counts[idx] += 1;
+    }
+
+    /// Samples recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Per-bucket counts ([`LAT_BOUNDS_US`] order, overflow last).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Upper bound (µs) of the bucket holding quantile `q` (in `[0, 1]`);
+    /// `f64::INFINITY` when it lands in the overflow bucket, `None` when
+    /// no samples were recorded.
+    pub fn quantile_us(&self, q: f64) -> Option<f64> {
+        let total = self.total();
+        if total == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil()).max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Some(if i < LAT_BOUNDS_US.len() {
+                    LAT_BOUNDS_US[i]
+                } else {
+                    f64::INFINITY
+                });
+            }
+        }
+        Some(f64::INFINITY)
+    }
+}
+
+fn quantile_label(q: Option<f64>) -> String {
+    match q {
+        None => "-".to_string(),
+        Some(v) if v.is_infinite() => format!(">{:.0}us", LAT_BOUNDS_US[LAT_BOUNDS_US.len() - 1]),
+        Some(v) => format!("<={v:.0}us"),
+    }
+}
+
+/// Serving-layer counters: admission-queue depth, request accounting and
+/// the fixed-bucket latency histogram. Lives inside [`Metrics`] so one
+/// metrics object carries the whole coordinator story; the `gc3 serve`
+/// verb prints it on shutdown.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Current admission-queue depth (gauge; the service updates it on
+    /// every submit/drain).
+    pub queue_depth: usize,
+    /// Deepest the admission queue ever got.
+    pub peak_queue_depth: usize,
+    /// Requests admitted past backpressure.
+    pub admitted: u64,
+    /// Submissions bounced off the full admission queue.
+    pub rejected: u64,
+    /// Admitted requests that failed (plan resolution or launch error) —
+    /// answered with an error response, never dropped silently.
+    pub failed: u64,
+    /// Requests that shared a coalesced launch with at least one other.
+    pub coalesced: u64,
+    /// Launches dispatched (batched or solo).
+    pub batches: u64,
+    /// Submit-to-completion latency of every served request.
+    pub latency: LatencyHistogram,
+}
+
+impl fmt::Display for ServeMetrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "serve: admitted={} rejected={} failed={} coalesced={} launches={} queue={}/{} \
+             p50{} p99{}",
+            self.admitted,
+            self.rejected,
+            self.failed,
+            self.coalesced,
+            self.batches,
+            self.queue_depth,
+            self.peak_queue_depth,
+            quantile_label(self.latency.quantile_us(0.50)),
+            quantile_label(self.latency.quantile_us(0.99)),
+        )
+    }
+}
 
 /// Accumulating counters with section timers.
 #[derive(Default)]
@@ -12,6 +129,8 @@ pub struct Metrics {
     pub compute_time: Duration,
     pub comm_time: Duration,
     pub update_time: Duration,
+    /// Serving-layer counters ([`crate::serve::Service`]).
+    pub serve: ServeMetrics,
 }
 
 impl Metrics {
@@ -51,7 +170,11 @@ impl fmt::Display for Metrics {
             self.comm_time.as_secs_f64(),
             self.comm_fraction() * 100.0,
             self.update_time.as_secs_f64(),
-        )
+        )?;
+        if self.serve.admitted + self.serve.rejected > 0 {
+            write!(f, "\n{}", self.serve)?;
+        }
+        Ok(())
     }
 }
 
@@ -78,5 +201,48 @@ mod tests {
         let m = Metrics::new();
         let s = format!("{m}");
         assert!(s.contains("steps=0"));
+        // No serving traffic: no serve row.
+        assert!(!s.contains("serve:"), "{s}");
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.5), None, "empty histogram has no quantiles");
+        // 40us x 98 samples, 2ms x 1, 1s (overflow) x 1.
+        for _ in 0..98 {
+            h.record(40e-6);
+        }
+        h.record(2e-3);
+        h.record(1.0);
+        assert_eq!(h.total(), 100);
+        assert_eq!(h.counts()[0], 98, "{:?}", h.counts());
+        assert_eq!(h.quantile_us(0.50), Some(50.0));
+        assert_eq!(h.quantile_us(0.98), Some(50.0));
+        assert_eq!(h.quantile_us(0.99), Some(2_500.0));
+        assert_eq!(h.quantile_us(1.0), Some(f64::INFINITY));
+        // Bucket boundaries are inclusive on the upper edge.
+        let mut edge = LatencyHistogram::default();
+        edge.record(50e-6);
+        assert_eq!(edge.counts()[0], 1);
+    }
+
+    #[test]
+    fn serve_row_appears_with_traffic() {
+        let mut m = Metrics::new();
+        m.serve.admitted = 7;
+        m.serve.rejected = 1;
+        m.serve.coalesced = 4;
+        m.serve.batches = 3;
+        m.serve.queue_depth = 0;
+        m.serve.peak_queue_depth = 5;
+        m.serve.latency.record(100e-6);
+        let s = format!("{m}");
+        assert!(
+            s.contains("serve: admitted=7 rejected=1 failed=0 coalesced=4 launches=3"),
+            "{s}"
+        );
+        assert!(s.contains("queue=0/5"), "{s}");
+        assert!(s.contains("p50<=100us"), "{s}");
     }
 }

@@ -21,21 +21,26 @@ pub use crate::planner::Backend;
 use crate::core::{Gc3Error, Result};
 use crate::ef::EfProgram;
 use crate::exec::Session;
-use crate::planner::Planner;
+use crate::planner::{Planner, DEFAULT_PLAN_SIZE};
+use crate::serve::{PoolConfig, SessionPool};
 use crate::topology::Topology;
 use crate::tune::{Collective, TunedTable};
 
 /// NCCL-compatible keyed dispatch: each method answers with the EF to run
 /// and which backend served it. All logic lives in [`Planner`]; this type
 /// only adapts the return shape to the NCCL-style `(ef, backend)` pairs
-/// the rank drivers consume.
+/// the rank drivers consume. Long-lived executor sessions come from a
+/// [`SessionPool`] ([`Registry::open_session`] /
+/// [`Registry::park_session`]), the same pool type the serving layer
+/// ([`crate::serve::Service`]) runs on.
 pub struct Registry {
     planner: Planner,
+    pool: SessionPool,
 }
 
 impl Registry {
     pub fn new(topo: Topology) -> Registry {
-        Registry { planner: Planner::new(topo) }
+        Registry { planner: Planner::new(topo), pool: SessionPool::new(PoolConfig::default()) }
     }
 
     /// The planning engine behind this registry.
@@ -82,10 +87,12 @@ impl Registry {
         self.planner.plan_tuned(collective, size).map(|r| r.map(|p| (p.ef, p.backend)))
     }
 
-    /// AllToAll dispatch by topology rule alone (no size, no table): the
-    /// two-step program across nodes, NCCL fallback on a single node.
+    /// AllToAll dispatch without an explicit size: the same sized rule as
+    /// [`Registry::alltoall_sized`], evaluated at
+    /// [`DEFAULT_PLAN_SIZE`] — one dispatch path, so a loaded tuned table
+    /// covering the default size serves this shim too.
     pub fn alltoall(&mut self) -> Result<(EfProgram, Backend)> {
-        self.planner.plan_alltoall().map(|p| (p.ef, p.backend))
+        self.alltoall_sized(DEFAULT_PLAN_SIZE)
     }
 
     /// Application-specific collectives by name — the §6.4 AllToNext plus
@@ -104,14 +111,17 @@ impl Registry {
     /// dispatch and its EF registered into one session over persistent
     /// connections — the paper's deployment shape, where one running
     /// interpreter machine answers every collective call (§4.4, §5).
-    /// Returns the session plus the registered program name per
-    /// collective, in request order.
+    /// The session comes from the registry's [`SessionPool`]: a machine
+    /// previously returned via [`Registry::park_session`] with the same
+    /// program set is reused (connections and warm buffers intact)
+    /// instead of spawning cold. Returns the session plus the registered
+    /// program name per collective, in request order.
     pub fn open_session(
         &mut self,
         collectives: &[Collective],
         size: u64,
     ) -> Result<(Session, Vec<String>)> {
-        let mut session = Session::named(&format!("registry:{}", self.topo().name));
+        let mut efs: Vec<EfProgram> = Vec::with_capacity(collectives.len());
         let mut names: Vec<String> = Vec::with_capacity(collectives.len());
         for &coll in collectives {
             let plan = self.planner.plan(coll, size)?;
@@ -126,9 +136,24 @@ impl Registry {
                 )));
             }
             names.push(name);
-            session.register(plan.ef)?;
+            efs.push(plan.ef);
         }
+        let label = format!("registry:{}", self.planner.topo().name);
+        let session = self.pool.checkout_or_spawn(&label, &efs)?;
         Ok((session, names))
+    }
+
+    /// Return a session obtained from [`Registry::open_session`] to the
+    /// registry's pool: the next `open_session` for the same program set
+    /// (in any order) reuses it — persistent connections, warm VM
+    /// buffers — instead of spawning a cold machine.
+    pub fn park_session(&mut self, session: Session) {
+        self.pool.checkin(session);
+    }
+
+    /// The session pool behind [`Registry::open_session`].
+    pub fn session_pool(&self) -> &SessionPool {
+        &self.pool
     }
 
     pub fn cached(&self) -> usize {
@@ -315,6 +340,34 @@ mod tests {
             }
         }
         assert!(session.connections() >= opened_after_first);
+    }
+
+    /// Satellite of the serving layer: `open_session` draws from the
+    /// registry's session pool, so park → reopen (same program set, any
+    /// order) hands back the SAME warm machine — persistent connections
+    /// intact — instead of a cold spawn.
+    #[test]
+    fn open_session_reuses_parked_sessions() {
+        let mut reg = Registry::new(topo());
+        let size = 2 * 1024 * 1024u64;
+        let colls = [Collective::AllReduce, Collective::AllGather];
+        let (mut session, names) = reg.open_session(&colls, size).unwrap();
+        assert_eq!(reg.session_pool().stats().spawned, 1);
+        let plan = reg.planner().plan(colls[0], size).unwrap();
+        let spec = plan.spec().expect("planned collectives carry a spec");
+        session.verify(&names[0], spec, 4).unwrap();
+        let opened = session.connections();
+        assert!(opened > 0);
+        reg.park_session(session);
+        assert_eq!(reg.session_pool().parked(), 1);
+        assert_eq!(reg.session_pool().depth(), 0, "parked machine is drained");
+        // Same program set, different request order: reuse, not respawn.
+        let (session2, _) = reg.open_session(&[Collective::AllGather, Collective::AllReduce], size)
+            .unwrap();
+        assert_eq!(session2.connections(), opened, "warm connections carried over");
+        let stats = reg.session_pool().stats();
+        assert_eq!((stats.spawned, stats.reused), (1, 1));
+        assert_eq!(reg.session_pool().parked(), 0);
     }
 
     #[test]

@@ -396,18 +396,25 @@ pub enum Driver {
 /// registers GC3-EFs dynamically and launches them by name over
 /// long-lived connections. See the module docs for the full design.
 ///
-/// ```no_run
+/// ```
 /// use gc3::exec::{Memory, Session};
-/// # fn get_efs() -> (gc3::ef::EfProgram, gc3::ef::EfProgram) { unimplemented!() }
-/// let (allreduce, allgather) = get_efs();
+/// use gc3::planner::Planner;
+/// use gc3::topology::Topology;
+/// use gc3::tune::Collective;
+///
+/// // Plan two collectives through the compile-side facade and serve both
+/// // from one persistent machine — the two-facade flow.
+/// let mut topo = Topology::a100_single();
+/// topo.gpus_per_node = 4;
+/// let mut planner = Planner::new(topo);
 /// let mut session = Session::named("serving");
-/// session.register(allreduce)?;
-/// session.register(allgather)?;
-/// session.run_threaded(4);
-/// for name in ["gc3_allreduce", "gc3_allgather"] {
-///     let ef = session.program(name).unwrap();
-///     let mut mem = Memory::for_ef(ef, 1024);
-///     session.launch(name, &mut mem)?;
+/// session.register(planner.plan(Collective::AllReduce, 2 << 20)?.ef)?;
+/// session.register(planner.plan(Collective::AllGather, 2 << 20)?.ef)?;
+/// session.run_threaded(2);
+/// let names: Vec<String> = session.programs().iter().map(|s| s.to_string()).collect();
+/// for name in names {
+///     let mut mem = Memory::for_ef(session.program(&name).unwrap(), 8);
+///     session.launch(&name, &mut mem)?;
 /// }
 /// # Ok::<(), gc3::core::Gc3Error>(())
 /// ```
@@ -473,6 +480,20 @@ impl Session {
     /// Number of distinct persistent connections opened so far.
     pub fn connections(&self) -> usize {
         self.channels.len()
+    }
+
+    /// Undelivered messages across every persistent connection — the
+    /// session's queue depth. 0 between healthy launches (the drain check
+    /// enforces it); > 0 marks a machine wedged by a failed launch, which
+    /// serving pools ([`crate::serve::SessionPool`]) drop instead of
+    /// reusing.
+    pub fn pending_messages(&self) -> usize {
+        self.channels.values().map(|ch| ch.pending()).sum()
+    }
+
+    /// The driver subsequent [`Session::launch`] calls will use.
+    pub fn driver(&self) -> Driver {
+        self.driver
     }
 
     /// Use the threaded driver with `threads` workers for subsequent

@@ -3,10 +3,10 @@
 //! Reproduction of "GC3: An Optimizing Compiler for GPU Collective
 //! Communication" (CS.DC 2022) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! ## The two facades
+//! ## The three facades
 //!
 //! The crate splits along the paper's compile/execute seam, one typed
-//! facade per side:
+//! facade per side, plus a serving facade that composes both under load:
 //!
 //! * **Compile side — [`planner::Planner`]** (over [`compiler::Pipeline`]):
 //!   one call from `(collective, topology, size)` to an executable
@@ -27,6 +27,16 @@
 //!   collectives), and two drivers: the deterministic cooperative sweep
 //!   and a threaded driver (`run_threaded(n)`) pinned to byte-identical
 //!   memory. `exec::execute` / `exec::verify` are thin one-shot wrappers.
+//! * **Serving side — [`serve::Service`]**: the two facades composed
+//!   under multi-tenant load. Requests
+//!   (`{collective, size, payload, tenant}`) pass a backpressure-bounded
+//!   admission queue, resolve through a size-bucketed LRU **plan cache**
+//!   over the planner (tuned-table-aware bucket boundaries), run on a
+//!   **session pool** of persistent machines keyed by program set, and
+//!   compatible small requests **coalesce** into one launch with
+//!   per-request result scatter pinned byte-identical to solo execution.
+//!   `gc3 serve --trace <spec>` drives it with the deterministic
+//!   [`serve::loadgen`] traffic generator.
 //!
 //! ```text
 //!   dsl ──trace──▶ chunkdag ──lower──▶ instdag ──fuse/instances──▶
@@ -36,6 +46,8 @@
 //!                          ▲ tuned tables (tune)   ▲ NCCL fallback (nccl)
 //!   Plan.ef ─▶ exec::Session { register · launch · run_threaded }
 //!              └─ RankVm ⇄ Channel ⇄ RankVm …  (persistent connections)
+//!   Request{coll,size,tenant} ─▶ serve::Service
+//!     └─ admission queue ─▶ plan cache ─▶ coalesce ─▶ session pool
 //! ```
 //!
 //! ## Layer map
@@ -80,8 +92,12 @@
 //!   [`collectives::Library`].
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt`
 //!   (AOT-lowered JAX/Pallas) and executes them from Rust.
+//! * [`serve`] — the serving layer: multi-tenant [`serve::Service`] with
+//!   plan cache, session pool, request coalescing, and the deterministic
+//!   trace-driven load generator behind `gc3 serve`.
 //! * [`coordinator`] — multi-rank launcher, the NCCL-compatible registry
-//!   shim over [`planner`], and metrics.
+//!   shim over [`planner`] (sessions pooled via [`serve`]), and metrics
+//!   (including the serving counters and latency histogram).
 //! * [`train`] — the end-to-end driver: data-parallel transformer training
 //!   where gradients move byte-accurately through a planner-served GC3
 //!   AllReduce.
@@ -104,6 +120,7 @@ pub mod nccl;
 pub mod tune;
 pub mod planner;
 pub mod collectives;
+pub mod serve;
 pub mod runtime;
 pub mod coordinator;
 pub mod train;
@@ -115,4 +132,5 @@ pub use crate::dsl::{Program, SchedHint};
 pub use crate::ef::EfProgram;
 pub use crate::exec::Session;
 pub use crate::planner::{Plan, Planner};
+pub use crate::serve::Service;
 pub use crate::sim::Protocol;

@@ -12,6 +12,7 @@
 //! gc3 figures   [--fig 7|8|9|11|loc|abl]        regenerate §6 figures
 //! gc3 tune      --collective C [--sizes ...]    autotune + emit a TunedTable
 //! gc3 plan      [--collective C] [--size S] [--tuned TABLE.json]
+//! gc3 serve     --trace MIX[:N[:SEED]] [--sessions S] [--threads T]
 //! ```
 
 use gc3::collectives::{self, Library};
@@ -20,6 +21,7 @@ use gc3::core::{Gc3Error, Result};
 use gc3::ef::EfProgram;
 use gc3::exec::{self, verify, Memory, NativeReducer, Session};
 use gc3::planner::Planner;
+use gc3::serve::{loadgen, Service, ServiceConfig, TraceSpec};
 use gc3::sim::{simulate, Protocol};
 use gc3::topology::Topology;
 use gc3::train::{train, TrainOpts};
@@ -336,6 +338,74 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             println!("wrote {path}");
             Ok(())
         }
+        "serve" => {
+            // The serving layer: drive a deterministic request trace
+            // through serve::Service — plan cache, session pool, request
+            // coalescing — and report throughput, latency percentiles,
+            // hit rates and the coordinator metrics on shutdown.
+            let topo = topo_from(args);
+            let spec = TraceSpec::parse(args.str_or("trace", "mixed:64"))?;
+            let cfg = ServiceConfig {
+                max_sessions: args.usize("sessions", 4),
+                threads: args.usize("threads", 1).max(1),
+                max_queue: args.usize("queue", 256),
+                max_batch: args.usize("batch", 8),
+                plan_cache: args.usize("plan-cache", 32),
+                max_elems: args.usize("elems-per-chunk", 1024),
+            };
+            let threads = cfg.threads;
+            let mut svc = Service::new(topo, cfg);
+            if let Some(path) = args.opt("tuned") {
+                let text =
+                    std::fs::read_to_string(path).map_err(|e| Gc3Error::Ef(e.to_string()))?;
+                svc.load_tuned(TunedTable::from_json_str(&text)?)?;
+                println!("loaded tuned table {path}");
+            }
+            let reqs = loadgen::generate(svc.topo(), &spec);
+            println!(
+                "serving trace '{}' ({} requests) on {} ({} ranks), {} worker thread(s)",
+                spec.mix,
+                reqs.len(),
+                svc.topo().name,
+                svc.topo().num_ranks(),
+                threads
+            );
+            let t0 = std::time::Instant::now();
+            let (responses, bounced) = svc.serve(reqs)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let mut lat: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
+            lat.sort_by(|a, b| a.total_cmp(b));
+            let p50 = bench::perf::percentile(&lat, 0.50);
+            let p99 = bench::perf::percentile(&lat, 0.99);
+            println!(
+                "served {} requests in {:.2} ms: {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms, \
+                 {bounced} backpressure bounce(s)",
+                responses.len(),
+                wall * 1e3,
+                responses.len() as f64 / wall.max(1e-12),
+                p50 * 1e3,
+                p99 * 1e3
+            );
+            let cs = svc.cache_stats();
+            println!(
+                "plan cache: {} hits / {} misses ({:.0}% hit rate), {} evictions",
+                cs.hits,
+                cs.misses,
+                cs.hit_rate() * 100.0,
+                cs.evictions
+            );
+            let ps = svc.pool_stats();
+            println!(
+                "session pool: {} spawned, {} reused, {} evicted, {} parked, queue depth {}",
+                ps.spawned,
+                ps.reused,
+                ps.evicted,
+                svc.pool().parked(),
+                svc.pool().depth()
+            );
+            println!("{}", svc.metrics());
+            Ok(())
+        }
         "plan" | "registry" => {
             // The unified dispatch facade: tuned table -> GC3 -> NCCL.
             let mut planner = Planner::new(topo_from(args));
@@ -402,7 +472,13 @@ usage:
                 writes the best-plan-per-size TunedTable as JSON
   gc3 plan      [--collective C] [--size 4MB] [--tuned TABLE.json] [--nodes N]
                 dispatch through the Planner facade and explain the choice
-                (alias: gc3 registry)";
+                (alias: gc3 registry)
+  gc3 serve     [--trace mixed|small|allreduce[:N[:SEED]]] [--sessions S]
+                [--threads T] [--queue Q] [--batch B] [--tuned TABLE.json]
+                [--nodes N] [--gpus G] [--topo a100|ndv2|ndv4|asym]
+                drive a deterministic multi-tenant request trace through the
+                serving layer (plan cache + session pool + coalescing) and
+                report req/s, p50/p99 latency, hit rates and serve metrics";
 
 #[cfg(test)]
 mod tests {
@@ -491,6 +567,38 @@ mod tests {
     fn help_mentions_exec_verb() {
         assert!(HELP.contains("gc3 exec"), "{HELP}");
         assert!(HELP.contains("--threads"), "{HELP}");
+    }
+
+    #[test]
+    fn help_mentions_serve_verb() {
+        assert!(HELP.contains("gc3 serve"), "{HELP}");
+        assert!(HELP.contains("--trace"), "{HELP}");
+    }
+
+    /// The serve verb end-to-end on a tiny trace, on both drivers; an
+    /// unknown mix is a hard error listing the accepted ones.
+    #[test]
+    fn serve_runs_and_rejects_unknown_mix() {
+        for threads in ["1", "2"] {
+            let args = args_of(&[
+                "serve",
+                "--trace",
+                "small:6:3",
+                "--gpus",
+                "4",
+                "--sessions",
+                "2",
+                "--threads",
+                threads,
+                "--elems-per-chunk",
+                "8",
+            ]);
+            run("serve", &args).unwrap_or_else(|e| panic!("--threads {threads}: {e}"));
+        }
+        let args = args_of(&["serve", "--trace", "bogus:6", "--gpus", "4"]);
+        let err = run("serve", &args).unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        assert!(err.contains("mixed"), "error lists accepted mixes: {err}");
     }
 
     #[test]

@@ -54,6 +54,14 @@ use crate::util::human_bytes;
 use std::collections::HashMap;
 use std::sync::Arc;
 
+/// The size a size-less entry point plans at: 4 MB, the middle of every
+/// collective's working range (inside the §6.2 AllReduce window, inside
+/// every default tuner grid). [`Registry`](crate::coordinator::Registry)'s
+/// NCCL-shim `alltoall()` routes through the sized dispatch at this size,
+/// so there is exactly ONE dispatch rule per collective — a loaded tuned
+/// table that covers 4 MB serves the shim too.
+pub const DEFAULT_PLAN_SIZE: u64 = 4 << 20;
+
 /// Which implementation served a request.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Backend {
@@ -87,19 +95,19 @@ pub struct Plan {
     pub stats: CompileStats,
     topo: Topology,
     spec: Option<Arc<CollectiveSpec>>,
-    /// The request size, when the dispatch had one (custom collectives
-    /// and the size-less registry AllToAll rule do not).
+    /// The request size, when the dispatch had one (plans from the
+    /// size-less [`Planner::plan_custom`] do not).
     size: Option<u64>,
 }
 
 impl Plan {
     /// Price this plan on the discrete-event simulator at the request
-    /// size. Plans made without one (custom collectives, the size-less
-    /// registry AllToAll rule) must use [`Plan::simulate_at`].
+    /// size. Plans made without one (the size-less
+    /// [`Planner::plan_custom`]) must use [`Plan::simulate_at`].
     pub fn simulate(&self) -> Result<SimReport> {
         let size = self.size.ok_or_else(|| {
             Gc3Error::Invalid(format!(
-                "plan '{}' has no request size (custom/size-less dispatch) — \
+                "plan '{}' has no request size (size-less custom dispatch) — \
                  use simulate_at(size)",
                 self.ef.name
             ))
@@ -306,23 +314,37 @@ impl Planner {
     pub fn plan_static(&mut self, collective: Collective, size: u64) -> Result<Plan> {
         match collective {
             Collective::AllReduce => self.allreduce_static(size),
-            Collective::AllToAll => self.alltoall_static(Some(size)),
+            Collective::AllToAll => self.alltoall_static(size),
             Collective::AllGather | Collective::ReduceScatter => {
-                self.library_ring_static(collective, Some(size))
+                self.library_ring_static(collective, size)
             }
         }
     }
 
-    /// AllToAll by topology rule alone, with no request size — the
-    /// NCCL-shim [`crate::coordinator::Registry::alltoall`] path. The
-    /// returned plan is size-less: price it with [`Plan::simulate_at`].
+    /// AllToAll without an explicit request size — the NCCL-shim
+    /// [`crate::coordinator::Registry::alltoall`] path, unified onto the
+    /// sized dispatch at [`DEFAULT_PLAN_SIZE`] (tuned tables covering that
+    /// size win, exactly as for [`Planner::plan`]).
     pub fn plan_alltoall(&mut self) -> Result<Plan> {
-        self.alltoall_static(None)
+        self.plan(Collective::AllToAll, DEFAULT_PLAN_SIZE)
     }
 
     /// Application-specific collectives by name — the §6.4 AllToNext plus
-    /// anything [`Planner::register`]ed.
+    /// anything [`Planner::register`]ed. The returned plan is size-less
+    /// (price it with [`Plan::simulate_at`]); serving layers use
+    /// [`Planner::plan_custom_sized`] instead.
     pub fn plan_custom(&mut self, name: &str) -> Result<Plan> {
+        self.custom_plan(name, None)
+    }
+
+    /// [`Planner::plan_custom`] with the request size stamped onto the
+    /// plan, so custom collectives price ([`Plan::simulate`]) and bucket
+    /// (the [`crate::serve`] plan cache) like any other collective.
+    pub fn plan_custom_sized(&mut self, name: &str, size: u64) -> Result<Plan> {
+        self.custom_plan(name, Some(size))
+    }
+
+    fn custom_plan(&mut self, name: &str, size: Option<u64>) -> Result<Plan> {
         if name == "alltonext" && !self.cache.contains_key("gc3_a2n") {
             let t = alltonext::alltonext(self.topo.nodes, self.topo.gpus_per_node)?;
             let opts = CompileOpts::for_topo(&self.topo);
@@ -338,7 +360,7 @@ impl Planner {
             )));
         }
         let reason = format!("custom collective '{name}' served from the plan cache");
-        Ok(self.finish(&key, Backend::Gc3, None, None, reason))
+        Ok(self.finish(&key, Backend::Gc3, None, size, reason))
     }
 
     // ---------------- static dispatch rules ----------------
@@ -406,7 +428,7 @@ impl Planner {
     /// AllToAll: the §2 two-step program across nodes; single-node
     /// AllToAll is pure NVSwitch traffic where NCCL's direct pattern is
     /// already optimal, so it falls back.
-    fn alltoall_static(&mut self, size: Option<u64>) -> Result<Plan> {
+    fn alltoall_static(&mut self, size: u64) -> Result<Plan> {
         if self.topo.nodes == 1 {
             let key = "nccl_a2a";
             if !self.cache.contains_key(key) {
@@ -417,7 +439,7 @@ impl Planner {
             let reason = "single node: AllToAll is pure NVSwitch traffic, NCCL's direct \
                           pattern is already optimal"
                 .to_string();
-            return Ok(self.finish(key, Backend::NcclFallback, None, size, reason));
+            return Ok(self.finish(key, Backend::NcclFallback, None, Some(size), reason));
         }
         let key = "gc3_a2a";
         if !self.cache.contains_key(key) {
@@ -429,16 +451,12 @@ impl Planner {
             "{} nodes: the §2 two-step program aggregates IB transfers — GC3 custom kernel",
             self.topo.nodes
         );
-        Ok(self.finish(key, Backend::Gc3, None, size, reason))
+        Ok(self.finish(key, Backend::Gc3, None, Some(size), reason))
     }
 
     /// AllGather / ReduceScatter without a tuned table: the library ring
     /// under default options.
-    fn library_ring_static(
-        &mut self,
-        collective: Collective,
-        size: Option<u64>,
-    ) -> Result<Plan> {
+    fn library_ring_static(&mut self, collective: Collective, size: u64) -> Result<Plan> {
         let key = format!("gc3_{}", collective.name());
         if !self.cache.contains_key(&key) {
             let r = self.topo.num_ranks();
@@ -453,7 +471,7 @@ impl Planner {
             self.build(&key, &trace, name, &opts, "ring x1 simple")?;
         }
         let reason = "library ring under default options".to_string();
-        Ok(self.finish(&key, Backend::Gc3, None, size, reason))
+        Ok(self.finish(&key, Backend::Gc3, None, Some(size), reason))
     }
 
     // ---------------- internals ----------------
@@ -566,6 +584,33 @@ mod tests {
         p.register("frobnicate", ef);
         let reg = p.plan_custom("frobnicate").unwrap();
         assert!(reg.verify(4).is_err(), "registered raw EFs have no spec");
+    }
+
+    /// Satellite: custom collectives price and bucket like any other once
+    /// a size is attached, and the size-less AllToAll shim routes through
+    /// the one sized dispatch rule.
+    #[test]
+    fn sized_custom_plans_and_unified_alltoall_shim() {
+        let mut t = Topology::a100(2);
+        t.gpus_per_node = 2;
+        let mut p = Planner::new(t);
+        // Size-less custom: no request size, simulate() refuses.
+        let unsized_plan = p.plan_custom("alltonext").unwrap();
+        assert_eq!(unsized_plan.size(), None);
+        assert!(unsized_plan.simulate().is_err());
+        // Sized custom: same cached EF, size stamped, simulate() prices.
+        let sized = p.plan_custom_sized("alltonext", 2 << 20).unwrap();
+        assert_eq!(sized.size(), Some(2 << 20));
+        assert_eq!(sized.ef.name, unsized_plan.ef.name);
+        assert!(sized.simulate().unwrap().time > 0.0);
+        // The AllToAll shim is the sized dispatch at DEFAULT_PLAN_SIZE:
+        // same backend, same EF, and the plan now carries a size.
+        let shim = p.plan_alltoall().unwrap();
+        assert_eq!(shim.size(), Some(DEFAULT_PLAN_SIZE));
+        let explicit = p.plan(Collective::AllToAll, DEFAULT_PLAN_SIZE).unwrap();
+        assert_eq!(shim.backend, explicit.backend);
+        assert_eq!(shim.ef.name, explicit.ef.name);
+        assert!(shim.simulate().unwrap().time > 0.0);
     }
 
     #[test]

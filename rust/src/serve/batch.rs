@@ -1,0 +1,186 @@
+//! Request coalescing: many small requests, one launch.
+//!
+//! A GC3-EF moves *chunks*; how many f32 elements a chunk carries is a
+//! launch-time parameter ([`Memory::for_ef`]'s `elems_per_chunk`), and
+//! every interpreter operation — copy, reduce, send, receive — acts
+//! element-wise across a chunk. That makes coalescing exact: pack K
+//! requests side by side along the *element axis* of every chunk
+//! (`elems_per_chunk = Σ elemsᵢ`, request *i* owning element window
+//! `[offᵢ, offᵢ + elemsᵢ)` of each chunk) and one launch performs, per
+//! element, precisely the operation sequence a solo launch would — so the
+//! scattered per-request results are **byte-identical** to per-request
+//! execution, not approximately equal. `rust/tests/serve_service.rs` pins
+//! that across the collectives library on every topology family and over
+//! 220 seeded random programs.
+
+use crate::core::{Gc3Error, Result};
+use crate::ef::EfProgram;
+use crate::exec::{ExecStats, Memory, Session};
+
+/// One request's slice of a coalesced launch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchItem {
+    /// Deterministic input seed (the request payload); expanded by
+    /// [`req_pattern`] into the request's input elements.
+    pub payload: u64,
+    /// f32 elements per chunk this request occupies in the launch.
+    pub elems: usize,
+}
+
+/// What one coalesced launch produced.
+pub struct BatchResult {
+    /// Per item, rank-major result buffers (`outputs[item][rank]`):
+    /// the item's element windows of every result chunk, concatenated in
+    /// chunk order. Read from the EF's result buffer (input for in-place
+    /// collectives, output otherwise).
+    pub outputs: Vec<Vec<Vec<f32>>>,
+    /// Execution statistics of the single combined launch.
+    pub stats: ExecStats,
+    /// Combined `elems_per_chunk` of the launch (Σ item elems).
+    pub elems_per_chunk: usize,
+}
+
+/// Deterministic per-request input pattern: element `k` of input chunk
+/// `(rank, chunk)` for payload seed `payload`. Values are small multiples
+/// of 1/8 so reductions over a handful of ranks stay exact in f32 — the
+/// same trick as [`crate::exec::test_pattern`], but keyed by the request
+/// payload so distinct requests are distinguishable inside one batch.
+pub fn req_pattern(payload: u64, rank: usize, chunk: usize, elem: usize) -> f32 {
+    let h = payload
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add((rank as u64).wrapping_mul(0x85eb_ca6b))
+        .wrapping_add((chunk as u64).wrapping_mul(0xc2b2_ae35))
+        .wrapping_add(elem as u64);
+    ((h % 1024) as f32) * 0.125 - 64.0
+}
+
+/// Execute `items` as ONE coalesced launch of `ef` (already registered in
+/// `session` under its own name) and scatter each item's element windows
+/// back out. See the module docs for why the scattered results are
+/// byte-identical to per-request execution.
+pub fn run_batched(
+    session: &mut Session,
+    ef: &EfProgram,
+    items: &[BatchItem],
+) -> Result<BatchResult> {
+    if items.is_empty() {
+        return Err(Gc3Error::Invalid("batch: empty item list".to_string()));
+    }
+    if let Some(bad) = items.iter().find(|i| i.elems == 0) {
+        return Err(Gc3Error::Invalid(format!(
+            "batch: item with payload {} requests 0 elements per chunk",
+            bad.payload
+        )));
+    }
+    let e_total: usize = items.iter().map(|i| i.elems).sum();
+    let mut mem = Memory::for_ef(ef, e_total);
+    // Gather: each item's pattern into its element window of every chunk.
+    let mut off = 0usize;
+    for item in items {
+        for (rank, buf) in mem.input.iter_mut().enumerate() {
+            for chunk in 0..buf.len() / e_total {
+                let base = chunk * e_total + off;
+                for k in 0..item.elems {
+                    buf[base + k] = req_pattern(item.payload, rank, chunk, k);
+                }
+            }
+        }
+        off += item.elems;
+    }
+    let stats = session.launch(&ef.name, &mut mem)?;
+    // Scatter: each item's element windows of the result buffer.
+    let result_bufs = if ef.inplace { &mem.input } else { &mem.output };
+    let mut outputs = Vec::with_capacity(items.len());
+    let mut off = 0usize;
+    for item in items {
+        let mut per_rank = Vec::with_capacity(result_bufs.len());
+        for buf in result_bufs {
+            let chunks = buf.len() / e_total;
+            let mut out = Vec::with_capacity(chunks * item.elems);
+            for chunk in 0..chunks {
+                let base = chunk * e_total + off;
+                out.extend_from_slice(&buf[base..base + item.elems]);
+            }
+            per_rank.push(out);
+        }
+        outputs.push(per_rank);
+        off += item.elems;
+    }
+    Ok(BatchResult { outputs, stats, elems_per_chunk: e_total })
+}
+
+/// Execute one item alone — the per-request baseline the coalesced path is
+/// pinned against. Deliberately implemented as a 1-item [`run_batched`]
+/// so the gather/scatter logic cannot drift between the two paths; the
+/// memory layouts still differ (solo `elems_per_chunk` vs the combined
+/// one), which is exactly the equivalence under test.
+pub fn run_single(
+    session: &mut Session,
+    ef: &EfProgram,
+    item: &BatchItem,
+) -> Result<Vec<Vec<f32>>> {
+    let mut result = run_batched(session, ef, std::slice::from_ref(item))?;
+    Ok(result.outputs.pop().expect("one item in, one output out"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::dsl::collective::CollectiveSpec;
+    use crate::dsl::Program;
+
+    fn allgather_ef(ranks: usize) -> EfProgram {
+        let mut p = Program::new(CollectiveSpec::allgather(ranks, 1));
+        for r in 0..ranks {
+            let c = p.chunk(crate::core::BufferId::Input, r, 0, 1).unwrap();
+            let mut cur = p.copy_to(c, crate::core::BufferId::Output, r, r).unwrap();
+            for s in 1..ranks {
+                cur = p.copy_to(cur, crate::core::BufferId::Output, (r + s) % ranks, r).unwrap();
+            }
+        }
+        compile(&p.finish().unwrap(), "ag_batch", &CompileOpts::default()).unwrap().ef
+    }
+
+    #[test]
+    fn pattern_distinguishes_payloads_and_slots() {
+        assert_ne!(req_pattern(1, 0, 0, 0), req_pattern(2, 0, 0, 0));
+        assert_ne!(req_pattern(1, 0, 0, 0), req_pattern(1, 1, 0, 0));
+        // Exactly representable: multiples of 1/8 in [-64, 64).
+        let v = req_pattern(7, 3, 1, 2);
+        assert_eq!(v, (v * 8.0).round() / 8.0);
+        assert!((-64.0..64.0).contains(&v));
+    }
+
+    #[test]
+    fn batched_equals_single_on_allgather() {
+        let ef = allgather_ef(4);
+        let items =
+            [BatchItem { payload: 11, elems: 2 }, BatchItem { payload: 42, elems: 3 }];
+        let mut s = Session::named("batch");
+        s.register(ef.clone()).unwrap();
+        let batched = run_batched(&mut s, &ef, &items).unwrap();
+        assert_eq!(batched.elems_per_chunk, 5);
+        assert!(batched.stats.messages > 0);
+        for (j, item) in items.iter().enumerate() {
+            let mut solo = Session::named("solo");
+            solo.register(ef.clone()).unwrap();
+            let single = run_single(&mut solo, &ef, item).unwrap();
+            for r in 0..4 {
+                let a: Vec<u32> = batched.outputs[j][r].iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = single[r].iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "item {j} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_batches_are_errors() {
+        let ef = allgather_ef(2);
+        let mut s = Session::named("bad");
+        s.register(ef.clone()).unwrap();
+        assert!(run_batched(&mut s, &ef, &[]).is_err());
+        let zero = [BatchItem { payload: 1, elems: 0 }];
+        assert!(run_batched(&mut s, &ef, &zero).is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Deterministic trace-driven load generation.
+//!
+//! Serving layers are judged under *mixes* — TACCL and PCCL both stress
+//! that real workloads interleave collectives, sizes and process groups —
+//! so the generator produces seeded request streams from named mix tables
+//! rather than single-collective loops. The same `(mix, requests, seed)`
+//! spec always yields the same stream ([`crate::util::rng`]), making
+//! `gc3 serve --trace …` runs and the `serve[]` bench rows reproducible.
+
+use crate::core::{Gc3Error, Result};
+use crate::serve::service::{CollectiveKind, Request};
+use crate::topology::Topology;
+use crate::tune::Collective;
+use crate::util::rng::Rng;
+
+/// A parsed trace specification: `mix[:requests[:seed]]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceSpec {
+    /// One of [`TraceSpec::MIXES`].
+    pub mix: String,
+    pub requests: usize,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// The named mixes [`generate`] knows:
+    /// `mixed` — every collective kind across 64 KB–16 MB, 3 tenants
+    /// (plus the custom AllToNext on multi-node topologies);
+    /// `small` — latency-bound AllReduce/AllGather at 4–64 KB, 2 tenants
+    /// (the coalescing-heavy regime);
+    /// `allreduce` — a single-collective size sweep, 1 tenant.
+    pub const MIXES: [&'static str; 3] = ["mixed", "small", "allreduce"];
+
+    /// Parse `mix[:requests[:seed]]`, e.g. `mixed:128:7`. Defaults:
+    /// 64 requests, seed 0.
+    pub fn parse(s: &str) -> Result<TraceSpec> {
+        let mut parts = s.split(':');
+        let mix = parts.next().unwrap_or("").to_string();
+        if !Self::MIXES.contains(&mix.as_str()) {
+            return Err(Gc3Error::Invalid(format!(
+                "unknown trace mix '{mix}' in '{s}' (accepted: {})",
+                Self::MIXES.join(", ")
+            )));
+        }
+        let requests = match parts.next() {
+            Some(n) => n.parse().map_err(|_| {
+                Gc3Error::Invalid(format!("bad request count '{n}' in trace spec '{s}'"))
+            })?,
+            None => 64,
+        };
+        let seed = match parts.next() {
+            Some(n) => n.parse().map_err(|_| {
+                Gc3Error::Invalid(format!("bad seed '{n}' in trace spec '{s}'"))
+            })?,
+            None => 0,
+        };
+        if let Some(extra) = parts.next() {
+            return Err(Gc3Error::Invalid(format!(
+                "trailing '{extra}' in trace spec '{s}' (format: mix[:requests[:seed]])"
+            )));
+        }
+        if requests == 0 {
+            return Err(Gc3Error::Invalid(format!("trace spec '{s}' asks for 0 requests")));
+        }
+        Ok(TraceSpec { mix, requests, seed })
+    }
+}
+
+/// The seeded request stream for `spec` on `topo`. Collectives, sizes,
+/// payload seeds and tenants are drawn deterministically from the mix
+/// tables; the custom §6.4 AllToNext joins the `mixed` stream only on
+/// multi-node topologies, where its program exists.
+pub fn generate(topo: &Topology, spec: &TraceSpec) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed);
+    let (kinds, sizes, tenants): (Vec<CollectiveKind>, Vec<u64>, usize) = match spec.mix.as_str()
+    {
+        "small" => (
+            vec![
+                CollectiveKind::Std(Collective::AllReduce),
+                CollectiveKind::Std(Collective::AllGather),
+            ],
+            vec![4 << 10, 16 << 10, 64 << 10],
+            2,
+        ),
+        "allreduce" => (
+            vec![CollectiveKind::Std(Collective::AllReduce)],
+            vec![64 << 10, 512 << 10, 4 << 20, 32 << 20, 256 << 20],
+            1,
+        ),
+        // "mixed" (parse() admits nothing else)
+        _ => {
+            let mut kinds = vec![
+                CollectiveKind::Std(Collective::AllReduce),
+                CollectiveKind::Std(Collective::AllToAll),
+                CollectiveKind::Std(Collective::AllGather),
+                CollectiveKind::Std(Collective::ReduceScatter),
+            ];
+            if topo.nodes > 1 {
+                kinds.push(CollectiveKind::Custom("alltonext".to_string()));
+            }
+            (kinds, vec![64 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20], 3)
+        }
+    };
+    (0..spec.requests)
+        .map(|_| Request {
+            collective: rng.choose(&kinds).clone(),
+            size: *rng.choose(&sizes),
+            payload: rng.next_u64(),
+            tenant: format!("tenant{}", rng.below(tenants)),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_and_defaults() {
+        let s = TraceSpec::parse("mixed").unwrap();
+        assert_eq!(s, TraceSpec { mix: "mixed".into(), requests: 64, seed: 0 });
+        let s = TraceSpec::parse("small:128:7").unwrap();
+        assert_eq!(s, TraceSpec { mix: "small".into(), requests: 128, seed: 7 });
+        for bad in ["bogus", "mixed:x", "mixed:8:y", "mixed:8:1:z", "small:0"] {
+            let err = TraceSpec::parse(bad).unwrap_err().to_string();
+            assert!(!err.is_empty(), "{bad}");
+        }
+        let err = TraceSpec::parse("bogus:4").unwrap_err().to_string();
+        assert!(err.contains("mixed"), "error lists accepted mixes: {err}");
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_respects_topology() {
+        let single = Topology::a100_single();
+        let spec = TraceSpec::parse("mixed:200:42").unwrap();
+        let a = generate(&single, &spec);
+        let b = generate(&single, &spec);
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.collective, y.collective);
+            assert_eq!((x.size, x.payload), (y.size, y.payload));
+            assert_eq!(x.tenant, y.tenant);
+        }
+        // Single node: no custom alltonext in the stream.
+        assert!(a.iter().all(|r| r.collective.name() != "alltonext"));
+        // Multi node: alltonext appears in a 200-request mixed stream.
+        let multi = Topology::a100(2);
+        let c = generate(&multi, &spec);
+        assert!(c.iter().any(|r| r.collective.name() == "alltonext"));
+        // Tenants and sizes are actually mixed.
+        let tenants: std::collections::BTreeSet<&str> =
+            a.iter().map(|r| r.tenant.as_str()).collect();
+        assert_eq!(tenants.len(), 3, "{tenants:?}");
+        let sizes: std::collections::BTreeSet<u64> = a.iter().map(|r| r.size).collect();
+        assert!(sizes.len() >= 4, "{sizes:?}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let topo = Topology::a100_single();
+        let a = generate(&topo, &TraceSpec::parse("small:50:1").unwrap());
+        let b = generate(&topo, &TraceSpec::parse("small:50:2").unwrap());
+        assert!(a.iter().zip(&b).any(|(x, y)| x.payload != y.payload));
+    }
+}

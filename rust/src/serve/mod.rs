@@ -1,0 +1,45 @@
+//! The serving layer: multi-tenant collective serving over the planner
+//! and session facades.
+//!
+//! The paper deploys GC3 as one long-running interpreter machine
+//! answering every collective call (§4.4, §5); the ROADMAP's north star
+//! is that machine at production scale — many tenants, mixed collectives,
+//! mixed sizes, heavy traffic. [`Planner`](crate::planner::Planner) and
+//! [`Session`](crate::exec::Session) are the two halves of that story;
+//! this module is the third facade that composes them **under load**:
+//!
+//! * **[`Service`]** — callers submit [`Request`]s
+//!   (`{collective, size, payload, tenant}`) through a
+//!   backpressure-bounded admission queue and get [`Response`]s back, in
+//!   submission order;
+//! * **[`PlanCache`]** — a size-bucketed LRU over the planner with
+//!   hit/miss/eviction counters. Bucket boundaries are tuned-table-aware:
+//!   loading a [`TunedTable`](crate::tune::TunedTable) re-draws a
+//!   collective's cache geometry to the table's measured grid;
+//! * **[`SessionPool`]** — persistent interpreter machines keyed by
+//!   program set: lazy spawn up to a cap, LRU + idle eviction, health
+//!   checks via [`Session::pending_messages`](crate::exec::Session), and a
+//!   cooperative or threaded driver per pool config. The NCCL-shim
+//!   [`Registry::open_session`](crate::coordinator::Registry::open_session)
+//!   delegates to the same pool type;
+//! * **[`batch`]** — compatible small requests (same program, same
+//!   bucket) coalesce into ONE launch along the element axis, with
+//!   per-request result scatter pinned **byte-identical** to per-request
+//!   execution (`rust/tests/serve_service.rs`);
+//! * **[`loadgen`]** — deterministic trace generation (seeded mixes of
+//!   allreduce / alltoall / allgather / reduce_scatter / alltonext across
+//!   sizes and tenants) behind `gc3 serve --trace <spec>`, measured by the
+//!   `serve[]` rows of `BENCH_compiler_perf.json` (schema v5): req/s,
+//!   p50/p99 latency, cache hit-rate, batched-vs-unbatched speedup.
+
+pub mod batch;
+pub mod loadgen;
+pub mod pool;
+pub mod service;
+
+pub use batch::{req_pattern, run_batched, run_single, BatchItem, BatchResult};
+pub use loadgen::TraceSpec;
+pub use pool::{PoolConfig, PoolStats, SessionPool};
+pub use service::{
+    CacheStats, CollectiveKind, PlanCache, Request, Response, Service, ServiceConfig,
+};

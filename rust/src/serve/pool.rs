@@ -1,0 +1,209 @@
+//! The session pool: persistent interpreter machines, reused by program
+//! set.
+//!
+//! The paper's deployment shape is a long-running interpreter machine per
+//! job (§4.4); a multi-tenant service runs *many* of them. The pool parks
+//! idle [`Session`]s keyed by their registered program set so the next
+//! request for the same programs reuses the machine — persistent
+//! connections, warm per-VM staging buffers, no re-registration — instead
+//! of spinning up a cold one. Spawning is lazy, the parked population is
+//! capped (least-recently-used machines evicted first), idle machines can
+//! be swept out, and a machine that a failed launch left with undelivered
+//! messages ([`Session::pending_messages`] > 0) is dropped at checkout
+//! rather than handed to the next tenant.
+
+use crate::core::Result;
+use crate::ef::EfProgram;
+use crate::exec::Session;
+
+/// Pool knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Max parked sessions; [`SessionPool::checkin`] beyond it evicts the
+    /// least-recently-used parked session first.
+    pub max_sessions: usize,
+    /// > 1: spawned sessions use the threaded driver with this many
+    /// workers; otherwise the deterministic cooperative driver.
+    pub threads: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig { max_sessions: 4, threads: 1 }
+    }
+}
+
+/// What the pool has done so far.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Fresh sessions spawned (pool misses).
+    pub spawned: usize,
+    /// Checkouts served by a parked session (pool hits).
+    pub reused: usize,
+    /// Parked sessions evicted by the cap or [`SessionPool::evict_idle`].
+    pub evicted: usize,
+    /// Parked sessions dropped at checkout because a failed launch left
+    /// messages in flight.
+    pub dropped_unhealthy: usize,
+}
+
+struct Parked {
+    key: String,
+    session: Session,
+    /// Logical check-in time (the pool's clock; no wall time involved, so
+    /// eviction is deterministic and testable).
+    last_used: u64,
+}
+
+/// A capped pool of parked [`Session`]s keyed by program set. See the
+/// module docs for the policy.
+pub struct SessionPool {
+    cfg: PoolConfig,
+    parked: Vec<Parked>,
+    clock: u64,
+    stats: PoolStats,
+}
+
+impl SessionPool {
+    pub fn new(cfg: PoolConfig) -> SessionPool {
+        SessionPool { cfg, parked: Vec::new(), clock: 0, stats: PoolStats::default() }
+    }
+
+    /// Canonical pool key for a program set: sorted names, `+`-joined —
+    /// order-independent, so `[allreduce, allgather]` and
+    /// `[allgather, allreduce]` share a machine.
+    pub fn key_of<S: AsRef<str>>(programs: &[S]) -> String {
+        let mut names: Vec<&str> = programs.iter().map(|s| s.as_ref()).collect();
+        names.sort_unstable();
+        names.join("+")
+    }
+
+    /// Take a healthy parked session for `key`, if one exists. Wedged
+    /// sessions (undelivered messages from a failed launch) are dropped,
+    /// never reused.
+    pub fn checkout(&mut self, key: &str) -> Option<Session> {
+        while let Some(pos) = self.parked.iter().position(|p| p.key == key) {
+            let p = self.parked.swap_remove(pos);
+            if p.session.pending_messages() > 0 {
+                self.stats.dropped_unhealthy += 1;
+                continue;
+            }
+            self.stats.reused += 1;
+            return Some(p.session);
+        }
+        None
+    }
+
+    /// A session serving exactly `efs`' program set: a parked one when
+    /// available (persistent connections and warm VM buffers carry over),
+    /// else a fresh spawn with every EF registered and the pool's driver
+    /// configured. The program-name set is the reuse contract: same names
+    /// ⇒ same programs (plans are immutable per name in the planner's
+    /// cache), so reuse skips re-registration.
+    pub fn checkout_or_spawn(&mut self, label: &str, efs: &[EfProgram]) -> Result<Session> {
+        let names: Vec<&str> = efs.iter().map(|e| e.name.as_str()).collect();
+        let key = Self::key_of(&names);
+        if let Some(session) = self.checkout(&key) {
+            return Ok(session);
+        }
+        let mut session = Session::named(label);
+        for ef in efs {
+            session.register(ef.clone())?;
+        }
+        if self.cfg.threads > 1 {
+            session.run_threaded(self.cfg.threads);
+        }
+        self.stats.spawned += 1;
+        Ok(session)
+    }
+
+    /// Park a session for reuse, keyed by its registered program set. A
+    /// parked session with the same key is replaced (latest machine wins);
+    /// past the cap the least-recently-used parked session is evicted.
+    pub fn checkin(&mut self, session: Session) {
+        let key = Self::key_of(&session.programs());
+        self.clock += 1;
+        let now = self.clock;
+        if let Some(pos) = self.parked.iter().position(|p| p.key == key) {
+            let slot = &mut self.parked[pos];
+            slot.session = session;
+            slot.last_used = now;
+            return;
+        }
+        while self.parked.len() >= self.cfg.max_sessions.max(1) {
+            let lru = self
+                .parked
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, p)| p.last_used)
+                .map(|(i, _)| i)
+                .expect("non-empty parked list");
+            self.parked.swap_remove(lru);
+            self.stats.evicted += 1;
+        }
+        self.parked.push(Parked { key, session, last_used: now });
+    }
+
+    /// Evict parked sessions whose last use is `max_idle` or more
+    /// check-ins (logical clock ticks) ago; `0` sweeps everything.
+    /// Returns the evicted count.
+    pub fn evict_idle(&mut self, max_idle: u64) -> usize {
+        let cutoff = self.clock.saturating_sub(max_idle);
+        let before = self.parked.len();
+        self.parked.retain(|p| p.last_used > cutoff);
+        let evicted = before - self.parked.len();
+        self.stats.evicted += evicted;
+        evicted
+    }
+
+    /// Parked (idle) sessions.
+    pub fn parked(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Keys of the parked sessions (unordered).
+    pub fn keys(&self) -> Vec<&str> {
+        self.parked.iter().map(|p| p.key.as_str()).collect()
+    }
+
+    /// Total undelivered messages across parked sessions — the pool's
+    /// queue-depth introspection. 0 for a healthy pool.
+    pub fn depth(&self) -> usize {
+        self.parked.iter().map(|p| p.session.pending_messages()).sum()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_is_order_independent() {
+        assert_eq!(SessionPool::key_of(&["b", "a"]), "a+b");
+        assert_eq!(SessionPool::key_of(&["a", "b"]), SessionPool::key_of(&["b", "a"]));
+        assert_ne!(SessionPool::key_of(&["a"]), SessionPool::key_of(&["a", "b"]));
+    }
+
+    #[test]
+    fn checkout_of_unknown_key_is_none() {
+        let mut pool = SessionPool::new(PoolConfig::default());
+        assert!(pool.checkout("nope").is_none());
+        assert_eq!(pool.parked(), 0);
+        assert_eq!(pool.depth(), 0);
+    }
+
+    #[test]
+    fn checkin_replaces_same_key() {
+        let mut pool = SessionPool::new(PoolConfig { max_sessions: 2, threads: 1 });
+        pool.checkin(Session::named("a"));
+        pool.checkin(Session::named("b"));
+        // Both sessions have no programs → identical (empty) key: the
+        // second check-in replaced the first instead of growing the pool.
+        assert_eq!(pool.parked(), 1);
+        assert_eq!(pool.stats().evicted, 0);
+    }
+}

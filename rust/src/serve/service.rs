@@ -1,0 +1,747 @@
+//! The serving facade: requests in, batched launches out.
+//!
+//! [`Service`] composes the crate's other two facades under load: every
+//! [`Request`] resolves through a size-bucketed **plan cache** over
+//! [`Planner`] (LRU, hit/miss counters, tuned-table-aware buckets),
+//! executes on a **session pool** of persistent machines
+//! ([`crate::serve::SessionPool`]), and compatible small requests — same
+//! program, same bucket — **coalesce** into one launch with per-request
+//! result scatter ([`crate::serve::batch`]). A bounded admission queue in
+//! front applies backpressure; all counters land in
+//! [`crate::coordinator::Metrics`].
+//!
+//! The service is pump-style and fully deterministic given a request
+//! stream: [`Service::submit`] enqueues (or rejects), [`Service::process`]
+//! drains the queue in one wave of coalesced launches, and
+//! [`Service::serve`] strings the two together for whole traces.
+
+use crate::coordinator::Metrics;
+use crate::core::{Gc3Error, Result};
+use crate::planner::{Backend, Plan, Planner};
+use crate::serve::batch::{self, BatchItem};
+use crate::serve::pool::{PoolConfig, PoolStats, SessionPool};
+use crate::topology::Topology;
+use crate::tune::{Collective, TunedTable};
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What a request asks for: one of the standard collective kinds, or a
+/// custom collective by name (the §6.4 AllToNext, anything
+/// [`Planner::register`]ed).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    Std(Collective),
+    Custom(String),
+}
+
+impl CollectiveKind {
+    pub fn name(&self) -> &str {
+        match self {
+            CollectiveKind::Std(c) => c.name(),
+            CollectiveKind::Custom(n) => n.as_str(),
+        }
+    }
+
+    /// Standard kinds by their canonical names; anything else is custom.
+    pub fn parse(s: &str) -> CollectiveKind {
+        match Collective::parse(s) {
+            Some(c) => CollectiveKind::Std(c),
+            None => CollectiveKind::Custom(s.to_string()),
+        }
+    }
+}
+
+/// One collective call from one tenant.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub collective: CollectiveKind,
+    /// Requested buffer size in bytes — drives plan choice and cache
+    /// bucketing.
+    pub size: u64,
+    /// Deterministic input seed; [`batch::req_pattern`] expands it into
+    /// the request's input elements.
+    pub payload: u64,
+    /// Tenant label; requests from different tenants coalesce freely (the
+    /// batch layout keeps their data in disjoint element windows).
+    pub tenant: String,
+}
+
+/// One served (or failed) request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Admission id, monotone in submission order.
+    pub id: u64,
+    pub tenant: String,
+    pub collective: String,
+    /// The registered program that served the request (empty when the
+    /// request failed before a plan resolved).
+    pub program: String,
+    /// Who served it; `None` when the request failed.
+    pub backend: Option<Backend>,
+    /// Requests sharing this response's launch (1 = ran alone, 0 =
+    /// failed before launching).
+    pub batch_size: usize,
+    /// Whether the plan came out of the cache.
+    pub cache_hit: bool,
+    /// Submit-to-completion wall clock, seconds (includes queue wait).
+    pub latency_s: f64,
+    /// Rank-major result buffers for this request's element windows;
+    /// empty when the request failed.
+    pub output: Vec<Vec<f32>>,
+    /// Why the request failed, when it did. One tenant's bad request
+    /// never poisons the rest of its wave: failures come back as
+    /// responses, not as a `process()` error.
+    pub error: Option<String>,
+}
+
+/// Service knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Parked-session cap of the pool.
+    pub max_sessions: usize,
+    /// Worker threads per session (> 1 = threaded driver).
+    pub threads: usize,
+    /// Admission-queue bound; submissions beyond it are rejected
+    /// (backpressure).
+    pub max_queue: usize,
+    /// Max requests coalesced into one launch.
+    pub max_batch: usize,
+    /// Plan-cache capacity: distinct (collective, bucket) entries.
+    pub plan_cache: usize,
+    /// Per-request elems-per-chunk cap — bounds host memory per launch
+    /// (requests larger than `cap × in_chunks × 4` bytes execute at the
+    /// cap; plan choice still uses the true size).
+    pub max_elems: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            max_sessions: 4,
+            threads: 1,
+            max_queue: 256,
+            max_batch: 8,
+            plan_cache: 32,
+            max_elems: 4096,
+        }
+    }
+}
+
+/// Plan-cache counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct CacheSlot {
+    plan: Arc<Plan>,
+    last_used: u64,
+}
+
+/// Size-bucketed LRU plan cache over [`Planner`]. Two requests in the
+/// same bucket share one plan (the planner is consulted once, at the
+/// first-seen size of the bucket); bucket boundaries follow any loaded
+/// tuned table, so tuning a collective re-draws its cache geometry.
+pub struct PlanCache {
+    capacity: usize,
+    slots: HashMap<(String, String), CacheSlot>,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache { capacity, slots: HashMap::new(), clock: 0, stats: CacheStats::default() }
+    }
+
+    /// The cache bucket for `collective` at `size`. A loaded tuned table
+    /// that covers the size defines the bucket
+    /// ([`TunedTable::bucket_of`]: its log-nearest measured grid point,
+    /// i.e. exactly the granularity at which the table can answer with
+    /// *different* plans) — so loading a table changes bucket boundaries.
+    /// Without one, sizes bucket by power of two.
+    pub fn bucket(planner: &Planner, collective: &str, size: u64) -> String {
+        if let Some(b) = planner.tuned_table(collective).and_then(|t| t.bucket_of(size)) {
+            return format!("tuned:{b}");
+        }
+        format!("pow2:{}", size.max(1).next_power_of_two())
+    }
+
+    /// The plan for `(kind, size)`: cached when the bucket was seen
+    /// before, otherwise planned through `planner` and inserted (evicting
+    /// the LRU entry past capacity). Returns `(plan, bucket, hit)`.
+    pub fn resolve(
+        &mut self,
+        planner: &mut Planner,
+        kind: &CollectiveKind,
+        size: u64,
+    ) -> Result<(Arc<Plan>, String, bool)> {
+        let bucket = Self::bucket(planner, kind.name(), size);
+        let key = (kind.name().to_string(), bucket.clone());
+        self.clock += 1;
+        if let Some(slot) = self.slots.get_mut(&key) {
+            slot.last_used = self.clock;
+            self.stats.hits += 1;
+            return Ok((slot.plan.clone(), bucket, true));
+        }
+        let plan = match kind {
+            CollectiveKind::Std(c) => planner.plan(*c, size)?,
+            CollectiveKind::Custom(name) => planner.plan_custom_sized(name, size)?,
+        };
+        self.stats.misses += 1;
+        let plan = Arc::new(plan);
+        while self.slots.len() >= self.capacity.max(1) {
+            let lru = self
+                .slots
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty cache");
+            self.slots.remove(&lru);
+            self.stats.evictions += 1;
+        }
+        self.slots.insert(key, CacheSlot { plan: plan.clone(), last_used: self.clock });
+        Ok((plan, bucket, false))
+    }
+
+    /// Drop every entry for `collective`. Called when a tuned table is
+    /// loaded: the new bucket geometry strands the old entries —
+    /// unreachable keys that would only squat LRU capacity. Returns the
+    /// dropped count.
+    pub fn invalidate(&mut self, collective: &str) -> usize {
+        let before = self.slots.len();
+        self.slots.retain(|(name, _), _| name.as_str() != collective);
+        before - self.slots.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+/// Elements per chunk a request of `size` bytes executes at: the f32
+/// element count split across the EF's input chunks, clamped to
+/// `[1, cap]`.
+fn elems_for(size: u64, in_chunks: usize, cap: usize) -> usize {
+    let per_chunk = (size as usize / 4) / in_chunks.max(1);
+    per_chunk.clamp(1, cap.max(1))
+}
+
+struct Pending {
+    id: u64,
+    req: Request,
+    submitted: Instant,
+}
+
+/// The response a failed request gets: its error, no output, no backend.
+fn error_response(p: Pending, program: &str, cache_hit: bool, msg: &str) -> Response {
+    let collective = p.req.collective.name().to_string();
+    Response {
+        id: p.id,
+        tenant: p.req.tenant,
+        collective,
+        program: program.to_string(),
+        backend: None,
+        batch_size: 0,
+        cache_hit,
+        latency_s: p.submitted.elapsed().as_secs_f64(),
+        output: Vec::new(),
+        error: Some(msg.to_string()),
+    }
+}
+
+/// The serving layer's facade. See the module docs.
+pub struct Service {
+    cfg: ServiceConfig,
+    planner: Planner,
+    cache: PlanCache,
+    pool: SessionPool,
+    queue: VecDeque<Pending>,
+    metrics: Metrics,
+    next_id: u64,
+}
+
+impl Service {
+    pub fn new(topo: Topology, cfg: ServiceConfig) -> Service {
+        Service {
+            planner: Planner::new(topo),
+            cache: PlanCache::new(cfg.plan_cache),
+            pool: SessionPool::new(PoolConfig {
+                max_sessions: cfg.max_sessions,
+                threads: cfg.threads,
+            }),
+            queue: VecDeque::new(),
+            metrics: Metrics::new(),
+            next_id: 0,
+            cfg,
+        }
+    }
+
+    pub fn topo(&self) -> &Topology {
+        self.planner.topo()
+    }
+
+    /// The planning engine behind the cache (e.g. to
+    /// [`Planner::register`] custom EFs before serving them).
+    pub fn planner(&mut self) -> &mut Planner {
+        &mut self.planner
+    }
+
+    /// Load an autotuner table; besides changing dispatch, it re-draws the
+    /// plan cache's bucket boundaries for its collective (see
+    /// [`PlanCache::bucket`]) — so the collective's existing cache
+    /// entries, keyed by the old geometry and unreachable under the new
+    /// one, are dropped.
+    pub fn load_tuned(&mut self, table: TunedTable) -> Result<()> {
+        let collective = table.collective.clone();
+        self.planner.load_tuned(table)?;
+        self.cache.invalidate(&collective);
+        Ok(())
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    /// The session pool behind the service (introspection: parked count,
+    /// queue depth).
+    pub fn pool(&self) -> &SessionPool {
+        &self.pool
+    }
+
+    /// The plan cache behind the service (introspection: entry count,
+    /// counters).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit a request, or reject it when the admission queue is full —
+    /// the service's backpressure signal. Returns the admission id.
+    pub fn submit(&mut self, req: Request) -> Result<u64> {
+        if self.queue.len() >= self.cfg.max_queue.max(1) {
+            self.metrics.serve.rejected += 1;
+            return Err(Gc3Error::Exec(format!(
+                "service backpressure: admission queue full ({} pending) — process() the \
+                 queue or raise max_queue",
+                self.queue.len()
+            )));
+        }
+        self.next_id += 1;
+        let id = self.next_id;
+        self.queue.push_back(Pending { id, req, submitted: Instant::now() });
+        self.metrics.serve.admitted += 1;
+        self.metrics.serve.queue_depth = self.queue.len();
+        self.metrics.serve.peak_queue_depth =
+            self.metrics.serve.peak_queue_depth.max(self.queue.len());
+        Ok(id)
+    }
+
+    /// Drain the admission queue in one wave: resolve every pending
+    /// request through the plan cache, coalesce compatible requests (same
+    /// program, same bucket) up to `max_batch`, dispatch each batch onto a
+    /// pooled session, and scatter per-request results. Responses are
+    /// returned in submission order, one per admitted request. Failures
+    /// are isolated to the requests they touch: a request whose plan
+    /// doesn't resolve, and every member of a batch whose launch fails,
+    /// come back as [`Response`]s with `error` set (the failing session is
+    /// dropped, not parked) — one tenant's bad request never discards
+    /// another tenant's work.
+    pub fn process(&mut self) -> Result<Vec<Response>> {
+        let pending: Vec<Pending> = self.queue.drain(..).collect();
+        self.metrics.serve.queue_depth = 0;
+        if pending.is_empty() {
+            return Ok(Vec::new());
+        }
+        struct Resolved {
+            p: Pending,
+            plan: Arc<Plan>,
+            hit: bool,
+            elems: usize,
+        }
+        let mut responses: Vec<Response> = Vec::new();
+        // Resolve phase: every request through the plan cache; failures
+        // become error responses immediately.
+        let mut order: Vec<(String, String)> = Vec::new();
+        let mut groups: HashMap<(String, String), Vec<Resolved>> = HashMap::new();
+        for p in pending {
+            let (plan, bucket, hit) =
+                match self.cache.resolve(&mut self.planner, &p.req.collective, p.req.size) {
+                    Ok(resolved) => resolved,
+                    Err(e) => {
+                        self.metrics.serve.failed += 1;
+                        responses.push(error_response(p, "", false, &e.to_string()));
+                        continue;
+                    }
+                };
+            let elems = elems_for(p.req.size, plan.ef.in_chunks, self.cfg.max_elems);
+            let key = (plan.ef.name.clone(), bucket);
+            if !groups.contains_key(&key) {
+                order.push(key.clone());
+            }
+            groups.entry(key).or_default().push(Resolved { p, plan, hit, elems });
+        }
+        // Dispatch phase: one coalesced launch per (program, bucket)
+        // group, split at max_batch, on a pooled session.
+        let max_batch = self.cfg.max_batch.max(1);
+        for key in order {
+            let members = groups.remove(&key).expect("group recorded in order");
+            let mut it = members.into_iter();
+            loop {
+                let group: Vec<Resolved> = it.by_ref().take(max_batch).collect();
+                if group.is_empty() {
+                    break;
+                }
+                let plan = group[0].plan.clone();
+                let ef = &plan.ef;
+                let items: Vec<BatchItem> = group
+                    .iter()
+                    .map(|r| BatchItem { payload: r.p.req.payload, elems: r.elems })
+                    .collect();
+                let label = format!("serve:{}", ef.name);
+                let launched = match self.pool.checkout_or_spawn(&label, std::slice::from_ref(ef))
+                {
+                    Ok(mut session) => {
+                        let result = Metrics::timed(&mut self.metrics.comm_time, || {
+                            batch::run_batched(&mut session, ef, &items)
+                        });
+                        // Only a healthy machine goes back to the pool; a
+                        // failed launch may have wedged it, so the error
+                        // arm below lets the session drop instead.
+                        if result.is_ok() {
+                            self.pool.checkin(session);
+                        }
+                        result
+                    }
+                    Err(e) => Err(e),
+                };
+                let result = match launched {
+                    Ok(result) => result,
+                    Err(e) => {
+                        let msg = e.to_string();
+                        self.metrics.serve.failed += group.len() as u64;
+                        for r in group {
+                            responses.push(error_response(r.p, &ef.name, r.hit, &msg));
+                        }
+                        continue;
+                    }
+                };
+                self.metrics.serve.batches += 1;
+                self.metrics.collective_calls += 1;
+                if group.len() > 1 {
+                    self.metrics.serve.coalesced += group.len() as u64;
+                }
+                let batch_size = group.len();
+                for (r, output) in group.into_iter().zip(result.outputs) {
+                    let latency = r.p.submitted.elapsed().as_secs_f64();
+                    self.metrics.serve.latency.record(latency);
+                    responses.push(Response {
+                        id: r.p.id,
+                        tenant: r.p.req.tenant,
+                        collective: r.p.req.collective.name().to_string(),
+                        program: ef.name.clone(),
+                        backend: Some(r.plan.backend),
+                        batch_size,
+                        cache_hit: r.hit,
+                        latency_s: latency,
+                        output,
+                        error: None,
+                    });
+                }
+            }
+        }
+        responses.sort_by_key(|r| r.id);
+        Ok(responses)
+    }
+
+    /// Submit-and-process convenience for whole traces: requests are
+    /// pushed through the admission queue in backpressure-sized waves (a
+    /// full queue is drained before the next submission). Returns the
+    /// responses in submission order — `process()` orders each wave by
+    /// admission id and ids grow across waves, so the concatenation is
+    /// already sorted — plus how many times the trace hit the queue bound.
+    pub fn serve(&mut self, reqs: Vec<Request>) -> Result<(Vec<Response>, usize)> {
+        let mut responses = Vec::with_capacity(reqs.len());
+        let mut bounced = 0usize;
+        for req in reqs {
+            if self.queue.len() >= self.cfg.max_queue.max(1) {
+                bounced += 1;
+                responses.extend(self.process()?);
+            }
+            self.submit(req)?;
+        }
+        responses.extend(self.process()?);
+        Ok((responses, bounced))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Protocol;
+    use crate::tune::{TunedChoice, TunedEntry};
+
+    fn topo4() -> Topology {
+        let mut t = Topology::a100_single();
+        t.gpus_per_node = 4;
+        t
+    }
+
+    fn req(kind: Collective, size: u64, payload: u64, tenant: &str) -> Request {
+        Request {
+            collective: CollectiveKind::Std(kind),
+            size,
+            payload,
+            tenant: tenant.to_string(),
+        }
+    }
+
+    /// A hand-built allreduce table for the 4-rank `topo4()` with entries
+    /// at 64 KB and 16 MB (ring x2 LL at both).
+    fn ar_table() -> TunedTable {
+        TunedTable {
+            collective: "allreduce".into(),
+            topology: "a100x1".into(),
+            num_ranks: 4,
+            entries: [64 * 1024u64, 16 << 20]
+                .iter()
+                .map(|&size| TunedEntry {
+                    size,
+                    choice: TunedChoice {
+                        variant: "ring".into(),
+                        instances: 2,
+                        protocol: Protocol::LL,
+                    },
+                    time: 1.0e-5,
+                    algbw: size as f64 / 1.0e-5,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn kind_parse_and_names() {
+        assert_eq!(CollectiveKind::parse("allreduce"), CollectiveKind::Std(Collective::AllReduce));
+        assert_eq!(
+            CollectiveKind::parse("alltonext"),
+            CollectiveKind::Custom("alltonext".to_string())
+        );
+        assert_eq!(CollectiveKind::parse("allgather").name(), "allgather");
+        assert_eq!(CollectiveKind::parse("frobnicate").name(), "frobnicate");
+    }
+
+    #[test]
+    fn elems_scale_with_size_and_clamp() {
+        assert_eq!(elems_for(4096, 8, 4096), 128);
+        assert_eq!(elems_for(1, 8, 4096), 1, "tiny requests still execute");
+        assert_eq!(elems_for(1 << 30, 8, 512), 512, "capped");
+    }
+
+    #[test]
+    fn plan_cache_lru_evicts_and_counts() {
+        let mut planner = Planner::new(topo4());
+        let mut cache = PlanCache::new(1);
+        let ar = CollectiveKind::Std(Collective::AllReduce);
+        let ag = CollectiveKind::Std(Collective::AllGather);
+        let (_, _, hit) = cache.resolve(&mut planner, &ar, (2 << 20) + 4096).unwrap();
+        assert!(!hit);
+        let (_, _, hit) = cache.resolve(&mut planner, &ar, 3 << 20).unwrap();
+        assert!(hit, "same pow2 bucket (4 MB)");
+        let (_, _, hit) = cache.resolve(&mut planner, &ag, 2 << 20).unwrap();
+        assert!(!hit);
+        assert_eq!(cache.len(), 1, "capacity 1: allreduce entry evicted");
+        let (_, _, hit) = cache.resolve(&mut planner, &ar, 3 << 20).unwrap();
+        assert!(!hit, "evicted entry re-misses");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 3, 2));
+        assert!(s.hit_rate() > 0.24 && s.hit_rate() < 0.26, "{}", s.hit_rate());
+    }
+
+    /// A loaded tuned table re-draws bucket boundaries: sizes that land in
+    /// different power-of-two buckets share a tuned bucket (and one cached
+    /// plan) once the table covers them.
+    #[test]
+    fn tuned_table_changes_bucket_boundaries() {
+        let mut planner = Planner::new(topo4());
+        let a = 48 * 1024u64;
+        let b = 80 * 1024u64;
+        assert_ne!(
+            PlanCache::bucket(&planner, "allreduce", a),
+            PlanCache::bucket(&planner, "allreduce", b),
+            "without a table the sizes bucket by power of two"
+        );
+        planner.load_tuned(ar_table()).unwrap();
+        let ba = PlanCache::bucket(&planner, "allreduce", a);
+        assert_eq!(ba, PlanCache::bucket(&planner, "allreduce", b));
+        assert_eq!(ba, "tuned:65536");
+        // Uncovered sizes keep the default geometry.
+        assert!(PlanCache::bucket(&planner, "allreduce", 8 << 30).starts_with("pow2:"));
+        // And through the cache: one miss, one hit, a Tuned plan.
+        let mut cache = PlanCache::new(8);
+        let ar = CollectiveKind::Std(Collective::AllReduce);
+        let (plan, _, hit) = cache.resolve(&mut planner, &ar, a).unwrap();
+        assert!(!hit);
+        assert_eq!(plan.backend, Backend::Tuned);
+        let (_, _, hit) = cache.resolve(&mut planner, &ar, b).unwrap();
+        assert!(hit);
+    }
+
+    /// Loading a table drops the collective's now-unreachable cache
+    /// entries (old bucket geometry) and leaves other collectives alone.
+    #[test]
+    fn load_tuned_invalidates_stale_buckets() {
+        let mut svc = Service::new(topo4(), ServiceConfig::default());
+        svc.serve(vec![
+            req(Collective::AllReduce, 48 * 1024, 1, "t"),
+            req(Collective::AllGather, 64 << 10, 2, "t"),
+        ])
+        .unwrap();
+        assert_eq!(svc.plan_cache().len(), 2);
+        svc.load_tuned(ar_table()).unwrap();
+        assert_eq!(
+            svc.plan_cache().len(),
+            1,
+            "allreduce pow2 entries dropped, allgather entry kept"
+        );
+        // The next allreduce request misses into the new tuned geometry.
+        let (responses, _) =
+            svc.serve(vec![req(Collective::AllReduce, 48 * 1024, 3, "t")]).unwrap();
+        assert_eq!(responses[0].backend, Some(Backend::Tuned));
+        assert!(!responses[0].cache_hit);
+    }
+
+    /// One tenant's bad request is answered with an error response and
+    /// never poisons the rest of its wave.
+    #[test]
+    fn failed_requests_do_not_poison_the_wave() {
+        let mut svc = Service::new(topo4(), ServiceConfig::default());
+        svc.submit(req(Collective::AllGather, 64 << 10, 1, "a")).unwrap();
+        svc.submit(Request {
+            collective: CollectiveKind::Custom("frobnicate".to_string()),
+            size: 1024,
+            payload: 2,
+            tenant: "b".to_string(),
+        })
+        .unwrap();
+        svc.submit(req(Collective::AllGather, 64 << 10, 3, "a")).unwrap();
+        let responses = svc.process().unwrap();
+        assert_eq!(responses.len(), 3, "every admitted request gets a response");
+        let bad = &responses[1];
+        assert_eq!(bad.tenant, "b");
+        assert!(bad.error.as_deref().unwrap_or("").contains("frobnicate"), "{:?}", bad.error);
+        assert_eq!(bad.backend, None);
+        assert_eq!(bad.batch_size, 0);
+        assert!(bad.output.is_empty());
+        // The healthy requests still coalesced and produced output.
+        for good in [&responses[0], &responses[2]] {
+            assert!(good.error.is_none());
+            assert_eq!(good.batch_size, 2);
+            assert!(!good.output.is_empty());
+        }
+        let m = &svc.metrics().serve;
+        assert_eq!((m.admitted, m.failed), (3, 1));
+        assert_eq!(m.latency.total(), 2, "only served requests enter the histogram");
+    }
+
+    #[test]
+    fn backpressure_rejects_then_recovers() {
+        let cfg = ServiceConfig { max_queue: 2, ..ServiceConfig::default() };
+        let mut svc = Service::new(topo4(), cfg);
+        svc.submit(req(Collective::AllGather, 64 << 10, 1, "a")).unwrap();
+        svc.submit(req(Collective::AllGather, 64 << 10, 2, "a")).unwrap();
+        let err = svc.submit(req(Collective::AllGather, 64 << 10, 3, "a")).unwrap_err();
+        assert!(err.to_string().contains("backpressure"), "{err}");
+        assert_eq!(svc.metrics().serve.rejected, 1);
+        assert_eq!(svc.metrics().serve.peak_queue_depth, 2);
+        let responses = svc.process().unwrap();
+        assert_eq!(responses.len(), 2);
+        assert_eq!(svc.queue_depth(), 0);
+        svc.submit(req(Collective::AllGather, 64 << 10, 3, "a")).unwrap();
+        assert_eq!(svc.process().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn coalescing_batches_and_scatters_per_tenant() {
+        let cfg = ServiceConfig { max_batch: 2, ..ServiceConfig::default() };
+        let mut svc = Service::new(topo4(), cfg);
+        // 5 same-bucket requests from 3 tenants → batches of 2, 2, 1.
+        let reqs: Vec<Request> = (0..5)
+            .map(|i| req(Collective::AllGather, 64 << 10, 100 + i, ["a", "b", "c"][i as usize % 3]))
+            .collect();
+        let (responses, bounced) = svc.serve(reqs).unwrap();
+        assert_eq!(bounced, 0);
+        assert_eq!(responses.len(), 5);
+        let sizes: Vec<usize> = responses.iter().map(|r| r.batch_size).collect();
+        assert_eq!(sizes, vec![2, 2, 2, 2, 1], "submission-ordered batch sizes");
+        assert_eq!(svc.metrics().serve.batches, 3);
+        assert_eq!(svc.metrics().serve.coalesced, 4);
+        assert_eq!(svc.metrics().serve.latency.total(), 5);
+        assert_eq!(responses[0].tenant, "a");
+        assert_eq!(responses[1].tenant, "b");
+        // Ids are monotone in submission order.
+        assert!(responses.windows(2).all(|w| w[0].id < w[1].id));
+        // First wave: one compile miss, then cache hits.
+        let cs = svc.cache_stats();
+        assert_eq!((cs.hits, cs.misses), (4, 1));
+    }
+
+    /// The same request stream produces bit-identical outputs whether it
+    /// is coalesced or served one launch per request — the service-level
+    /// version of the batch-equivalence property.
+    #[test]
+    fn service_batched_outputs_match_unbatched() {
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| req(Collective::AllGather, 64 << 10, 7 * (i + 1), "t"))
+            .collect();
+        let batched_cfg = ServiceConfig { max_batch: 4, ..ServiceConfig::default() };
+        let solo_cfg = ServiceConfig { max_batch: 1, ..ServiceConfig::default() };
+        let mut batched = Service::new(topo4(), batched_cfg);
+        let mut solo = Service::new(topo4(), solo_cfg);
+        let (rb, _) = batched.serve(reqs.clone()).unwrap();
+        let (rs, _) = solo.serve(reqs).unwrap();
+        assert_eq!(rb.len(), rs.len());
+        assert!(rb.iter().all(|r| r.batch_size == 4));
+        assert!(rs.iter().all(|r| r.batch_size == 1));
+        for (a, b) in rb.iter().zip(&rs) {
+            assert_eq!(a.program, b.program);
+            for (ra, rbuf) in a.output.iter().zip(&b.output) {
+                let bits_a: Vec<u32> = ra.iter().map(|x| x.to_bits()).collect();
+                let bits_b: Vec<u32> = rbuf.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(bits_a, bits_b, "request {}", a.id);
+            }
+        }
+    }
+}

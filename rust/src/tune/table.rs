@@ -83,6 +83,21 @@ impl TunedTable {
         }
     }
 
+    /// The serving-layer bucket for `size`: the measured grid point the
+    /// lookup resolves to, when the grid [`TunedTable::covers`] the size —
+    /// exactly the granularity at which this table can answer with
+    /// *different* plans, so plan caches ([`crate::serve::PlanCache`])
+    /// use it as their bucket boundary. `None` outside the covered span
+    /// (extrapolation territory — callers fall back to their own
+    /// geometry).
+    pub fn bucket_of(&self, size: u64) -> Option<u64> {
+        if self.covers(size) {
+            self.lookup(size).map(|e| e.size)
+        } else {
+            None
+        }
+    }
+
     /// Crossover points: `(size, previous choice, new choice)` for every
     /// grid point where the winning configuration changes — the boundaries
     /// the paper's §6 sweeps locate by hand.
@@ -266,6 +281,16 @@ mod tests {
         assert!(t.covers(1 << 30), "one x4 step above the grid");
         assert!(!t.covers(4 * 1024), "two steps below: extrapolation");
         assert!(!t.covers(8u64 << 30), "two steps above: extrapolation");
+    }
+
+    #[test]
+    fn bucket_of_is_the_covered_grid_point() {
+        let t = sample(); // 64 KB .. 256 MB
+        assert_eq!(t.bucket_of(64 * 1024), Some(64 * 1024), "grid point maps to itself");
+        assert_eq!(t.bucket_of(100 * 1024), Some(64 * 1024), "log-nearest bucket");
+        assert_eq!(t.bucket_of(2 * 1024 * 1024), Some(4 * 1024 * 1024));
+        assert_eq!(t.bucket_of(8u64 << 30), None, "outside the span: no bucket");
+        assert_eq!(t.bucket_of(4 * 1024), None);
     }
 
     #[test]

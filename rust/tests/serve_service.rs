@@ -1,0 +1,416 @@
+//! Serving-layer integration suite: concurrency, caching, pooling, and
+//! above all the coalescing equivalence.
+//!
+//! 1. **Batch-equivalence property sweep** — 220 seeded random DSL
+//!    programs (same correct-by-construction generator shape as
+//!    `rust/tests/property.rs`): executing K requests as ONE coalesced
+//!    launch must produce results **byte-identical** to executing each
+//!    request alone, on the cooperative driver for every case and on the
+//!    threaded driver for a strided subset.
+//! 2. **Library × topology pinning** — the same equivalence across every
+//!    collectives-library program on a100 / ndv2 / ndv4 / asym (the
+//!    acceptance matrix).
+//! 3. **Session pool** — cap enforcement with LRU eviction, idle
+//!    eviction, and threaded-driver reuse across launches (persistent
+//!    connections carried over).
+//! 4. **Service** — plan-cache counters with a tuned table re-drawing
+//!    bucket boundaries, and multi-tenant coalescing through the full
+//!    submit/process path (unit-level backpressure and LRU tests live in
+//!    `rust/src/serve/service.rs`).
+
+use gc3::collectives::library;
+use gc3::compiler::{compile, CompileOpts};
+use gc3::core::{BufferId, Slot};
+use gc3::dsl::collective::{reduce_vals, val, ChunkValue, CollectiveSpec};
+use gc3::dsl::{Program, SchedHint, Trace};
+use gc3::ef::EfProgram;
+use gc3::exec::{Driver, Session};
+use gc3::serve::{
+    run_batched, run_single, BatchItem, CollectiveKind, PoolConfig, Request, Service,
+    ServiceConfig, SessionPool,
+};
+use gc3::sim::Protocol;
+use gc3::topology::Topology;
+use gc3::tune::{Collective, TunedChoice, TunedEntry, TunedTable};
+use gc3::util::rng::Rng;
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------- helpers
+
+fn bits(bufs: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    bufs.iter().map(|b| b.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// Fresh session with `ef` registered; threaded driver when `threads > 1`.
+fn session_for(ef: &EfProgram, threads: usize) -> Session {
+    let mut s = Session::named("serve-test");
+    s.register(ef.clone()).unwrap();
+    if threads > 1 {
+        s.run_threaded(threads);
+    }
+    s
+}
+
+/// The coalescing equivalence on one EF: batched results must be
+/// byte-identical to per-request results, for a 3-request batch of
+/// distinct payloads and element widths.
+fn assert_batched_matches_single(ef: &EfProgram, threads: usize, label: &str) {
+    let items = [
+        BatchItem { payload: 0xA11CE, elems: 2 },
+        BatchItem { payload: 0xB0B, elems: 3 },
+        BatchItem { payload: 0xA11CE, elems: 2 }, // duplicate payload: still its own window
+    ];
+    let mut batch_session = session_for(ef, threads);
+    let batched = run_batched(&mut batch_session, ef, &items)
+        .unwrap_or_else(|e| panic!("{label}: batched launch: {e}"));
+    assert_eq!(batched.elems_per_chunk, 7, "{label}");
+    for (j, item) in items.iter().enumerate() {
+        let mut solo_session = session_for(ef, threads);
+        let single = run_single(&mut solo_session, ef, item)
+            .unwrap_or_else(|e| panic!("{label}: solo launch {j}: {e}"));
+        assert_eq!(
+            bits(&batched.outputs[j]),
+            bits(&single),
+            "{label}: request {j} scattered from the batch differs from solo execution"
+        );
+    }
+    // Identical payloads in one batch produce identical results.
+    assert_eq!(bits(&batched.outputs[0]), bits(&batched.outputs[2]), "{label}");
+}
+
+// ------------------------------------------------- random-program generator
+// The same correct-by-construction shape as rust/tests/property.rs: random
+// copy/reduce routings with symbolically tracked slot contents, so the
+// derived postcondition always validates and the program always compiles.
+
+#[derive(Clone, Copy)]
+enum PlanOp {
+    Copy { src: Slot, dst: Slot },
+    Reduce { dst: Slot, src: Slot },
+}
+
+fn disjoint(a: &ChunkValue, b: &ChunkValue) -> bool {
+    a.iter().all(|x| !b.contains(x))
+}
+
+fn generate(rng: &mut Rng, case: usize) -> Trace {
+    let ranks = rng.range(2, 8);
+    let in_chunks = rng.range(1, 2);
+    let out_chunks = rng.range(1, 2);
+
+    let mut state: BTreeMap<Slot, ChunkValue> = BTreeMap::new();
+    for r in 0..ranks {
+        for i in 0..in_chunks {
+            state.insert(Slot { rank: r, buffer: BufferId::Input, index: i }, val(r, i));
+        }
+    }
+    let mut scratch_next = vec![0usize; ranks];
+    let mut out_free: Vec<Slot> = (0..ranks)
+        .flat_map(|r| {
+            (0..out_chunks).map(move |i| Slot { rank: r, buffer: BufferId::Output, index: i })
+        })
+        .collect();
+    rng.shuffle(&mut out_free);
+
+    let mut plan: Vec<PlanOp> = Vec::new();
+    // Seeding: every rank relays its first input chunk to its neighbor.
+    for r in 0..ranks {
+        let src = Slot { rank: r, buffer: BufferId::Input, index: 0 };
+        let nbr = (r + 1) % ranks;
+        let dst = Slot { rank: nbr, buffer: BufferId::Scratch, index: scratch_next[nbr] };
+        scratch_next[nbr] += 1;
+        let v = state[&src].clone();
+        state.insert(dst, v);
+        plan.push(PlanOp::Copy { src, dst });
+    }
+    let n_ops = rng.range(ranks + 2, 3 * ranks + 8);
+    for _ in 0..n_ops {
+        let slots: Vec<Slot> = state.keys().copied().collect();
+        if slots.len() >= 2 && rng.below(3) == 0 {
+            let mut found = None;
+            for _ in 0..8 {
+                let i = rng.below(slots.len());
+                let j = rng.below(slots.len());
+                if i == j {
+                    continue;
+                }
+                if disjoint(&state[&slots[i]], &state[&slots[j]]) {
+                    found = Some((slots[i], slots[j]));
+                    break;
+                }
+            }
+            if let Some((dst, src)) = found {
+                let merged = reduce_vals(&state[&dst], &state[&src]);
+                state.insert(dst, merged);
+                plan.push(PlanOp::Reduce { dst, src });
+                continue;
+            }
+        }
+        let src = slots[rng.below(slots.len())];
+        let dst = if !out_free.is_empty() && rng.bool() {
+            out_free.pop().unwrap()
+        } else {
+            let r = rng.below(ranks);
+            let idx = scratch_next[r];
+            scratch_next[r] += 1;
+            Slot { rank: r, buffer: BufferId::Scratch, index: idx }
+        };
+        let v = state[&src].clone();
+        state.insert(dst, v);
+        plan.push(PlanOp::Copy { src, dst });
+    }
+    if state.keys().all(|s| s.buffer != BufferId::Output) {
+        let slots: Vec<Slot> = state.keys().copied().collect();
+        let src = slots[rng.below(slots.len())];
+        let dst = Slot { rank: rng.below(ranks), buffer: BufferId::Output, index: 0 };
+        let v = state[&src].clone();
+        state.insert(dst, v);
+        plan.push(PlanOp::Copy { src, dst });
+    }
+
+    let post: BTreeMap<Slot, ChunkValue> = state
+        .iter()
+        .filter(|(s, _)| s.buffer == BufferId::Output)
+        .map(|(s, v)| (*s, v.clone()))
+        .collect();
+    let spec = CollectiveSpec::custom(
+        &format!("serve_prop_{case}"),
+        ranks,
+        in_chunks,
+        out_chunks,
+        false,
+        None,
+        post,
+    );
+
+    let mut p = Program::new(spec);
+    for op in &plan {
+        match *op {
+            PlanOp::Copy { src, dst } => {
+                let c = p.chunk(src.buffer, src.rank, src.index, 1).unwrap();
+                p.copy(c, dst.buffer, dst.rank, dst.index, SchedHint::none()).unwrap();
+            }
+            PlanOp::Reduce { dst, src } => {
+                let acc = p.chunk(dst.buffer, dst.rank, dst.index, 1).unwrap();
+                let other = p.chunk(src.buffer, src.rank, src.index, 1).unwrap();
+                p.reduce(acc, other, SchedHint::none()).unwrap();
+            }
+        }
+    }
+    p.finish().unwrap()
+}
+
+// ------------------------------------------------------------------- tests
+
+/// (1) The 220-case property sweep: coalesced execution is byte-identical
+/// to per-request execution on every seeded random program; every 10th
+/// case additionally runs the batch on the threaded driver.
+#[test]
+fn batched_matches_per_request_on_220_seeded_programs() {
+    const CASES: usize = 220;
+    let mut rng = Rng::new(0x5E21_E_BA7C4);
+    for case in 0..CASES {
+        let trace = generate(&mut rng, case);
+        let name = trace.spec.name.clone();
+        let c = compile(&trace, &name, &CompileOpts::default())
+            .unwrap_or_else(|e| panic!("case {case}: compile: {e}"));
+        assert_batched_matches_single(&c.ef, 1, &format!("case {case}"));
+        if case % 10 == 0 {
+            assert_batched_matches_single(&c.ef, 2, &format!("case {case} (threaded)"));
+        }
+    }
+}
+
+/// (2) Acceptance matrix: the coalesced-batch path is byte-identical to
+/// per-request execution across the whole collectives library on every
+/// topology family, on both drivers.
+#[test]
+fn batched_matches_per_request_across_library_and_topologies() {
+    let mut topos =
+        vec![Topology::a100(2), Topology::ndv2(2), Topology::ndv4(2), Topology::asym(2)];
+    for t in &mut topos {
+        t.gpus_per_node = 2; // keep the sweep fast; 4 ranks per topology
+    }
+    for topo in topos {
+        for prog in library(&topo).unwrap() {
+            let c = compile(&prog.trace, prog.name, &CompileOpts::default())
+                .unwrap_or_else(|e| panic!("{}@{}: {e}", prog.name, topo.name));
+            let label = format!("{}@{}", prog.name, topo.name);
+            assert_batched_matches_single(&c.ef, 1, &label);
+            assert_batched_matches_single(&c.ef, 3, &(label + " (threaded)"));
+        }
+    }
+}
+
+fn compiled_library_ef(name: &str, ranks: usize) -> EfProgram {
+    let mut topo = Topology::a100_single();
+    topo.gpus_per_node = ranks;
+    let prog_trace = library(&topo)
+        .unwrap()
+        .into_iter()
+        .find(|p| p.name == name)
+        .unwrap_or_else(|| panic!("no library program '{name}'"))
+        .trace;
+    compile(&prog_trace, name, &CompileOpts::default()).unwrap().ef
+}
+
+/// (3a) Pool cap enforcement: parking beyond `max_sessions` evicts the
+/// least-recently-used machine.
+#[test]
+fn pool_cap_evicts_lru() {
+    let mut pool = SessionPool::new(PoolConfig { max_sessions: 2, threads: 1 });
+    let efs = [
+        compiled_library_ef("allgather_ring", 2),
+        compiled_library_ef("reduce_scatter_ring", 2),
+        compiled_library_ef("broadcast_ring", 2),
+    ];
+    for ef in &efs {
+        let s = pool.checkout_or_spawn("pooled", std::slice::from_ref(ef)).unwrap();
+        pool.checkin(s);
+    }
+    assert_eq!(pool.parked(), 2, "cap enforced");
+    assert_eq!(pool.stats().evicted, 1);
+    let keys = pool.keys();
+    assert!(
+        !keys.contains(&"allgather_ring"),
+        "oldest (LRU) machine evicted first: {keys:?}"
+    );
+    assert!(keys.contains(&"reduce_scatter_ring") && keys.contains(&"broadcast_ring"));
+    // The evicted key respawns; the kept ones reuse.
+    pool.checkout_or_spawn("pooled", std::slice::from_ref(&efs[0])).unwrap();
+    assert_eq!(pool.stats().spawned, 4);
+    pool.checkout("broadcast_ring").expect("kept machine reusable");
+}
+
+/// (3b) Idle eviction by the pool's logical clock.
+#[test]
+fn pool_evicts_idle_sessions() {
+    let mut pool = SessionPool::new(PoolConfig { max_sessions: 8, threads: 1 });
+    let a = compiled_library_ef("allgather_ring", 2);
+    let b = compiled_library_ef("reduce_scatter_ring", 2);
+    let s = pool.checkout_or_spawn("idle", std::slice::from_ref(&a)).unwrap();
+    pool.checkin(s); // checked in at tick 1
+    let s = pool.checkout_or_spawn("idle", std::slice::from_ref(&b)).unwrap();
+    pool.checkin(s); // checked in at tick 2
+    assert_eq!(pool.parked(), 2);
+    assert_eq!(pool.evict_idle(1), 1, "only the tick-1 machine is stale");
+    assert_eq!(pool.keys(), vec!["reduce_scatter_ring"]);
+    assert_eq!(pool.evict_idle(0), 1, "0 sweeps everything");
+    assert_eq!(pool.parked(), 0);
+    assert_eq!(pool.stats().evicted, 2);
+}
+
+/// (3c) Threaded-driver reuse across launches: a pooled threaded machine
+/// keeps its driver config and its persistent connections across
+/// checkout → launch → checkin → checkout.
+#[test]
+fn pool_reuses_threaded_sessions_across_launches() {
+    let ef = compiled_library_ef("allgather_ring", 4);
+    let mut pool = SessionPool::new(PoolConfig { max_sessions: 2, threads: 2 });
+    let mut s = pool.checkout_or_spawn("thr", std::slice::from_ref(&ef)).unwrap();
+    assert_eq!(s.driver(), Driver::Threaded(2), "pool config sets the driver");
+    let item = BatchItem { payload: 9, elems: 2 };
+    let first = run_single(&mut s, &ef, &item).unwrap();
+    let opened = s.connections();
+    assert!(opened > 0);
+    assert_eq!(s.pending_messages(), 0, "healthy after launch");
+    pool.checkin(s);
+    let mut s = pool.checkout_or_spawn("thr", std::slice::from_ref(&ef)).unwrap();
+    assert_eq!(pool.stats().reused, 1, "second checkout reuses, not respawns");
+    assert_eq!(s.driver(), Driver::Threaded(2), "driver survives pooling");
+    assert_eq!(s.connections(), opened, "persistent connections survive pooling");
+    let again = run_single(&mut s, &ef, &item).unwrap();
+    assert_eq!(bits(&first), bits(&again), "same request, same bytes, warm machine");
+    assert_eq!(s.connections(), opened, "relaunch opened nothing new");
+}
+
+/// (4a) Service + tuned table: loading a table merges what were separate
+/// power-of-two buckets into one tuned bucket — fewer compiles, more
+/// cache hits — and requests are served by the Tuned backend.
+#[test]
+fn service_cache_follows_tuned_buckets() {
+    let mut topo = Topology::a100_single();
+    topo.gpus_per_node = 4;
+    let table = TunedTable {
+        collective: "allreduce".into(),
+        topology: "a100x1".into(),
+        num_ranks: 4,
+        entries: [64 * 1024u64, 16 << 20]
+            .iter()
+            .map(|&size| TunedEntry {
+                size,
+                choice: TunedChoice {
+                    variant: "ring".into(),
+                    instances: 2,
+                    protocol: Protocol::LL,
+                },
+                time: 1.0e-5,
+                algbw: size as f64 / 1.0e-5,
+            })
+            .collect(),
+    };
+    let reqs: Vec<Request> = [48 * 1024u64, 80 * 1024]
+        .iter()
+        .map(|&size| Request {
+            collective: CollectiveKind::Std(Collective::AllReduce),
+            size,
+            payload: size,
+            tenant: "t".to_string(),
+        })
+        .collect();
+    // Without the table: 48 KB and 80 KB land in different pow2 buckets.
+    let mut plain = Service::new(topo.clone(), ServiceConfig::default());
+    plain.serve(reqs.clone()).unwrap();
+    let cs = plain.cache_stats();
+    assert_eq!((cs.hits, cs.misses), (0, 2), "two pow2 buckets, two plans");
+    // With the table: one tuned bucket, one plan, one hit — and both
+    // requests coalesce into a single launch.
+    let mut tuned = Service::new(topo, ServiceConfig::default());
+    tuned.load_tuned(table).unwrap();
+    let (responses, _) = tuned.serve(reqs).unwrap();
+    let cs = tuned.cache_stats();
+    assert_eq!((cs.hits, cs.misses), (1, 1), "tuned table merged the buckets");
+    assert!(responses.iter().all(|r| r.batch_size == 2), "same bucket → one launch");
+    assert!(responses.iter().any(|r| r.cache_hit));
+    assert_eq!(responses[0].program, responses[1].program);
+}
+
+/// (4b) Multi-tenant coalescing through the full service: a mixed-tenant
+/// same-bucket wave shares launches, responses keep tenant attribution,
+/// and the serving metrics add up.
+#[test]
+fn service_coalesces_across_tenants_with_metrics() {
+    let mut topo = Topology::a100_single();
+    topo.gpus_per_node = 4;
+    let cfg = ServiceConfig { max_batch: 4, max_elems: 64, ..ServiceConfig::default() };
+    let mut svc = Service::new(topo, cfg);
+    let tenants = ["alpha", "beta", "gamma"];
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            collective: CollectiveKind::Std(Collective::ReduceScatter),
+            size: 64 << 10,
+            payload: 1000 + i,
+            tenant: tenants[i as usize % 3].to_string(),
+        })
+        .collect();
+    let (responses, bounced) = svc.serve(reqs).unwrap();
+    assert_eq!(bounced, 0);
+    assert_eq!(responses.len(), 6);
+    for (i, r) in responses.iter().enumerate() {
+        assert_eq!(r.tenant, tenants[i % 3], "tenant attribution survives coalescing");
+        assert_eq!(r.collective, "reduce_scatter");
+        assert!(r.batch_size >= 2, "same bucket from 3 tenants must coalesce");
+        assert!(r.latency_s > 0.0);
+    }
+    let m = &svc.metrics().serve;
+    assert_eq!(m.admitted, 6);
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.batches, 2, "6 requests / max_batch 4 → launches of 4 + 2");
+    assert_eq!(m.coalesced, 6);
+    assert_eq!(m.latency.total(), 6);
+    assert!(m.latency.quantile_us(0.5).is_some());
+    // The pool served both launches from one parked machine.
+    assert_eq!(svc.pool_stats().spawned, 1);
+    assert_eq!(svc.pool_stats().reused, 1);
+    assert_eq!(svc.pool().depth(), 0);
+}
