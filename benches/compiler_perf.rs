@@ -3,12 +3,13 @@
 //! fast the discrete-event engine retires simulation events — the §Perf
 //! numbers tracked in EXPERIMENTS.md.
 //!
-//! Emits `BENCH_compiler_perf.json` (schema v5: per-scenario compile ms,
+//! Emits `BENCH_compiler_perf.json` (schema v6: per-scenario compile ms,
 //! simulate ms, events/s, the optimized-vs-reference head-to-head, the
 //! autotuner's tuned-vs-default rows — EXPERIMENTS.md §TUNE, the `exec[]`
-//! executor-throughput rows — §EXEC, and the `serve[]` serving-layer rows
-//! — §SERVE) plus the tuned table itself as `TUNED_bench_allreduce.json`;
-//! CI archives both as artifacts.
+//! executor-throughput rows — §EXEC, the `serve[]` serving-layer rows
+//! — §SERVE, and the `faults[]` degradation-sweep rows — §FAULTS,
+//! reported, not gated) plus the tuned table itself as
+//! `TUNED_bench_allreduce.json`; CI archives both as artifacts.
 //!
 //! Run: `cargo bench --bench compiler_perf`
 //! Skip the slow reference-engine head-to-head: set `GC3_BENCH_FAST=1`
@@ -51,7 +52,14 @@ fn main() {
     // runner-dependent (coalescing amortizes per-launch overhead, which
     // shrinks on fast machines), so it is recorded per run in the JSON
     // (EXPERIMENTS.md §SERVE) rather than hard-gated.
-    let json = perf::to_json(&cases, h2h.as_ref(), &tuned_rows, &exec_rows, &serve_rows);
+    println!("== Fault injection (single-link degradation, naive vs replanned)");
+    let fault_rows = perf::faults_suite().expect("faults suite");
+    print!("{}", perf::render_faults(&fault_rows));
+    // Reported, not gated: `recovered` ≥ 1.0 is already guaranteed by the
+    // replanner's argmin (it keeps the naive plan unless beaten); the
+    // interesting per-run number is how often and by how much it wins.
+    let json =
+        perf::to_json(&cases, h2h.as_ref(), &tuned_rows, &exec_rows, &serve_rows, &fault_rows);
     let path = "BENCH_compiler_perf.json";
     std::fs::write(path, json.to_string()).expect("write BENCH_compiler_perf.json");
     println!("wrote {path}");

@@ -15,8 +15,9 @@ use crate::compiler::{compile, CompileOpts, Compiled, StageTiming};
 use crate::core::{Gc3Error, Result};
 use crate::dsl::Trace;
 use crate::exec::{execute_reference, test_pattern, Memory, NativeReducer, Session};
+use crate::planner::Planner;
 use crate::serve::{loadgen, Service, ServiceConfig, TraceSpec};
-use crate::sim::{simulate, simulate_reference, Protocol};
+use crate::sim::{simulate, simulate_reference, FaultModel, Protocol};
 use crate::topology::Topology;
 use crate::tune::{tune, Collective, TuneOpts, TunedTable};
 use crate::util::json::Json;
@@ -206,7 +207,7 @@ pub fn exec_suite(threads: usize) -> Result<Vec<ExecRow>> {
 }
 
 /// One serving-layer measurement row (EXPERIMENTS.md §SERVE; the `serve[]`
-/// array of `BENCH_compiler_perf.json`, schema v5): throughput and
+/// array of `BENCH_compiler_perf.json`, schema v6): throughput and
 /// nearest-rank latency percentiles for one trace mix through [`Service`],
 /// plus the coalescing win against the same trace served one launch per
 /// request.
@@ -297,6 +298,87 @@ pub fn serve_suite(threads: usize) -> Result<Vec<ServeRow>> {
         });
     }
     Ok(rows)
+}
+
+/// One fault-injection measurement row (EXPERIMENTS.md §FAULTS; the
+/// `faults[]` array of `BENCH_compiler_perf.json`, schema v6 — reported,
+/// not gated): a single-link degradation priced three ways — the healthy
+/// plan on the healthy fabric, the same (naive) plan on the degraded
+/// fabric, and [`Planner::replan_degraded`]'s choice on the degraded
+/// fabric.
+#[derive(Clone, Debug)]
+pub struct FaultRow {
+    pub topo: String,
+    /// Degraded link class (`nvlink` / `shm` / `ib` / `pcie`).
+    pub link: String,
+    pub factor: f64,
+    /// Simulated time of the healthy plan on the healthy fabric, seconds.
+    pub healthy_s: f64,
+    /// Simulated time of the naive (healthy) plan on the degraded fabric.
+    pub naive_s: f64,
+    /// Simulated time of the replanned choice on the degraded fabric.
+    pub replanned_s: f64,
+    /// `naive_s / replanned_s` — ≥ 1.0 by construction (the replanner
+    /// keeps the naive plan unless something beats it).
+    pub recovered: f64,
+    /// Whether replanning picked a different plan than the healthy
+    /// dispatch would have.
+    pub replanned_won: bool,
+}
+
+/// Run the degradation-sweep scenarios: AllReduce at 4 MB under
+/// single-link degradations, replanned via [`Planner::replan_degraded`].
+pub fn faults_suite() -> Result<Vec<FaultRow>> {
+    let size: u64 = 4 << 20;
+    let scenarios: Vec<(Topology, &str, f64)> = vec![
+        (Topology::a100_single(), "nvlink", 0.5),
+        (Topology::a100_single(), "nvlink", 0.25),
+        (Topology::a100(2), "ib", 0.25),
+    ];
+    let mut rows = Vec::with_capacity(scenarios.len());
+    for (topo, link, factor) in scenarios {
+        let topo_name = topo.name.clone();
+        let mut planner = Planner::new(topo);
+        let healthy_s = planner.plan(Collective::AllReduce, size)?.simulate()?.time;
+        let model = FaultModel {
+            degraded_links: vec![(link.to_string(), factor)],
+            ..FaultModel::default()
+        };
+        let r = planner.replan_degraded(&model, Collective::AllReduce, size)?;
+        rows.push(FaultRow {
+            topo: topo_name,
+            link: link.to_string(),
+            factor,
+            healthy_s,
+            naive_s: r.naive_time,
+            replanned_s: r.time,
+            recovered: r.naive_time / r.time.max(1e-300),
+            replanned_won: r.replanned_won,
+        });
+    }
+    Ok(rows)
+}
+
+/// Human-readable rendering of the fault-injection rows.
+pub fn render_faults(rows: &[FaultRow]) -> String {
+    let mut out = format!(
+        "{:<10} {:>8} {:>8} {:>12} {:>12} {:>12} {:>10} {:>6}\n",
+        "topo", "link", "factor", "healthy us", "naive us", "replan us", "recovered", "won"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10} {:>8} {:>8.2} {:>12.1} {:>12.1} {:>12.1} {:>9.2}x {:>6}\n",
+            r.topo,
+            r.link,
+            r.factor,
+            r.healthy_s * 1e6,
+            r.naive_s * 1e6,
+            r.replanned_s * 1e6,
+            r.recovered,
+            if r.replanned_won { "yes" } else { "no" }
+        ));
+    }
+    out
 }
 
 /// Human-readable rendering of the serving rows.
@@ -448,10 +530,11 @@ pub fn to_json(
     tuned: &[TunedRow],
     exec: &[ExecRow],
     serve: &[ServeRow],
+    faults: &[FaultRow],
 ) -> Json {
     let mut root = Json::obj();
     root.set("bench", Json::Str("compiler_perf".into()));
-    root.set("schema_version", Json::Num(5.0));
+    root.set("schema_version", Json::Num(6.0));
     let rows: Vec<Json> = cases
         .iter()
         .map(|c| {
@@ -549,6 +632,24 @@ pub fn to_json(
             })
             .collect();
         root.set("serve", Json::Arr(rows));
+    }
+    if !faults.is_empty() {
+        let rows: Vec<Json> = faults
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("topo", Json::Str(r.topo.clone()));
+                o.set("link", Json::Str(r.link.clone()));
+                o.set("factor", Json::Num(r.factor));
+                o.set("healthy_s", Json::Num(r.healthy_s));
+                o.set("naive_degraded_s", Json::Num(r.naive_s));
+                o.set("replanned_s", Json::Num(r.replanned_s));
+                o.set("recovered", Json::Num(r.recovered));
+                o.set("replanned_won", Json::Bool(r.replanned_won));
+                o
+            })
+            .collect();
+        root.set("faults", Json::Arr(rows));
     }
     root
 }
@@ -673,7 +774,17 @@ mod tests {
             batches: 12,
             batched_speedup: 1.8,
         }];
-        let j = to_json(&cases, Some(&h), &tuned, &exec, &serve);
+        let faults = vec![FaultRow {
+            topo: "a100x1".into(),
+            link: "nvlink".into(),
+            factor: 0.25,
+            healthy_s: 1.0e-4,
+            naive_s: 4.0e-4,
+            replanned_s: 3.0e-4,
+            recovered: 4.0 / 3.0,
+            replanned_won: true,
+        }];
+        let j = to_json(&cases, Some(&h), &tuned, &exec, &serve, &faults);
         let s = j.to_string();
         for field in [
             "compile_ms",
@@ -696,10 +807,15 @@ mod tests {
             "p99_s",
             "cache_hit_rate",
             "batched_speedup",
+            "faults",
+            "naive_degraded_s",
+            "replanned_s",
+            "recovered",
+            "replanned_won",
         ] {
             assert!(s.contains(field), "missing {field} in {s}");
         }
-        assert_eq!(j.get("schema_version").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(j.get("schema_version").and_then(|v| v.as_usize()), Some(6));
         let arr = j.get("cases").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("events").and_then(|e| e.as_usize()), Some(42));
@@ -715,12 +831,16 @@ mod tests {
         assert_eq!(sv[0].get("trace").and_then(|e| e.as_str()), Some("mixed:48:1"));
         assert_eq!(sv[0].get("requests").and_then(|e| e.as_usize()), Some(48));
         assert_eq!(sv[0].get("coalesced").and_then(|e| e.as_usize()), Some(30));
-        // No tuned/exec/serve rows → no sections (old consumers keep
-        // working).
-        let bare = to_json(&cases, None, &[], &[], &[]);
+        let fl = j.get("faults").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(fl[0].get("link").and_then(|e| e.as_str()), Some("nvlink"));
+        assert_eq!(fl[0].get("replanned_won"), Some(&Json::Bool(true)));
+        // No tuned/exec/serve/faults rows → no sections (old consumers
+        // keep working).
+        let bare = to_json(&cases, None, &[], &[], &[], &[]);
         assert!(bare.get("tuned_vs_default").is_none());
         assert!(bare.get("exec").is_none());
         assert!(bare.get("serve").is_none());
+        assert!(bare.get("faults").is_none());
     }
 
     /// The exec suite's scenarios are small enough to run here in full:

@@ -97,6 +97,15 @@ pub struct ServeMetrics {
     pub coalesced: u64,
     /// Launches dispatched (batched or solo).
     pub batches: u64,
+    /// Solo retry attempts after a failed wave (each un-coalesced relaunch
+    /// counts once, successful or not).
+    pub retries: u64,
+    /// Wedged sessions retired after a failed launch (the machine held
+    /// undelivered messages and was dropped instead of pooled).
+    pub wedged: u64,
+    /// Times the service replanned onto a degraded topology (fault
+    /// installation via `Service::install_faults`).
+    pub replans: u64,
     /// Submit-to-completion latency of every served request.
     pub latency: LatencyHistogram,
 }
@@ -106,7 +115,7 @@ impl fmt::Display for ServeMetrics {
         write!(
             f,
             "serve: admitted={} rejected={} failed={} coalesced={} launches={} queue={}/{} \
-             p50{} p99{}",
+             p50{} p99{} retries={} wedged={} replans={}",
             self.admitted,
             self.rejected,
             self.failed,
@@ -116,6 +125,9 @@ impl fmt::Display for ServeMetrics {
             self.peak_queue_depth,
             quantile_label(self.latency.quantile_us(0.50)),
             quantile_label(self.latency.quantile_us(0.99)),
+            self.retries,
+            self.wedged,
+            self.replans,
         )
     }
 }
@@ -237,6 +249,8 @@ mod tests {
         m.serve.queue_depth = 0;
         m.serve.peak_queue_depth = 5;
         m.serve.latency.record(100e-6);
+        m.serve.retries = 2;
+        m.serve.wedged = 1;
         let s = format!("{m}");
         assert!(
             s.contains("serve: admitted=7 rejected=1 failed=0 coalesced=4 launches=3"),
@@ -244,5 +258,7 @@ mod tests {
         );
         assert!(s.contains("queue=0/5"), "{s}");
         assert!(s.contains("p50<=100us"), "{s}");
+        // The resilience counters ride the same row.
+        assert!(s.contains("retries=2 wedged=1 replans=0"), "{s}");
     }
 }

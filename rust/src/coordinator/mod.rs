@@ -14,7 +14,7 @@
 
 pub mod metrics;
 
-pub use metrics::Metrics;
+pub use metrics::{Metrics, ServeMetrics};
 
 pub use crate::planner::Backend;
 

@@ -23,7 +23,9 @@ pub mod session;
 mod reference;
 
 pub use reference::execute_reference;
-pub use session::{Channel, ConnKey, Driver, RankMemory, RankVm, RecvPort, SendPort, Session};
+pub use session::{
+    Channel, ConnKey, Driver, RankMemory, RankVm, RecvPort, SendPort, Session, SessionFault,
+};
 
 use crate::core::{BufferId, Gc3Error, Rank, Result, Slot};
 use crate::dsl::collective::CollectiveSpec;

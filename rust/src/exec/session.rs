@@ -51,6 +51,67 @@ use std::sync::{Arc, Condvar, Mutex};
 /// Payload buffers kept in a VM's free pool; beyond this they are dropped.
 const POOL_CAP: usize = 16;
 
+/// The accepted [`SessionFault::parse`] grammar, quoted verbatim in every
+/// parse error (the hard-error CLI convention).
+pub const SESSION_FAULT_GRAMMAR: &str = "wedge:r<rank>, drop:r<src>-r<dst>, timeout:<sweeps>";
+
+/// An injectable runtime fault, applied to every launch until cleared via
+/// [`Session::inject_fault`]. Each failure mode surfaces through the
+/// session's *existing* error machinery — the deadlock census names the
+/// culprit, on both drivers:
+///
+/// * [`SessionFault::WedgeRank`] — the rank's VM stops retiring
+///   instructions mid-launch (a hung GPU). Its unfinished threadblocks
+///   appear in the deadlock census at their stuck `pc`, and — unlike an
+///   organic failure — the launch deliberately does **not** flush the
+///   in-flight messages its neighbors sent it, so the session shows
+///   `pending_messages() > 0` afterward: the wedged-machine signature
+///   [`crate::serve::SessionPool`] retires on.
+/// * [`SessionFault::DropConn`] — every message the src rank sends the dst
+///   rank vanishes in flight (a dropped FIFO): the send succeeds into a
+///   black-hole channel outside the session's connection map, the receiver
+///   starves, and the deadlock census names the receiving rank/tb.
+/// * [`SessionFault::LaunchTimeout`] — a sweep budget: a launch still
+///   running after that many driver sweeps fails with an `Exec` error
+///   naming the still-running threadblocks (the culprit list), even though
+///   it would eventually finish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionFault {
+    /// Wedge this rank's VM: it stops executing mid-launch.
+    WedgeRank(Rank),
+    /// Drop every message on the `src → dst` FIFOs.
+    DropConn(Rank, Rank),
+    /// Fail any launch still running after this many driver sweeps.
+    LaunchTimeout(usize),
+}
+
+impl SessionFault {
+    /// Parse `wedge:r<rank>`, `drop:r<src>-r<dst>`, or `timeout:<sweeps>`;
+    /// anything else is a hard error quoting [`SESSION_FAULT_GRAMMAR`].
+    pub fn parse(s: &str) -> Result<SessionFault> {
+        let bad = || {
+            Gc3Error::Invalid(format!(
+                "unknown session fault '{s}' (accepted: {SESSION_FAULT_GRAMMAR})"
+            ))
+        };
+        let (key, val) = s.trim().split_once(':').ok_or_else(bad)?;
+        match key {
+            "wedge" => {
+                let r = val.strip_prefix('r').and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+                Ok(SessionFault::WedgeRank(r))
+            }
+            "drop" => {
+                let (src, dst) = val.split_once('-').ok_or_else(bad)?;
+                let s = src.strip_prefix('r').and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+                let d = dst.strip_prefix('r').and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+                Ok(SessionFault::DropConn(s, d))
+            }
+            "timeout" => Ok(SessionFault::LaunchTimeout(val.parse().map_err(|_| bad())?)),
+            _ => Err(bad()),
+        }
+    }
+}
+
 /// Connection identity: `(src rank, channel, dst rank)`.
 pub type ConnKey = (Rank, ChanId, Rank);
 
@@ -214,6 +275,9 @@ pub struct RankVm {
     stats: ExecStats,
     retired: usize,
     total: usize,
+    /// Injected fault: a wedged VM stops retiring instructions, so its
+    /// unfinished threadblocks surface in the deadlock census.
+    wedged: bool,
 }
 
 impl RankVm {
@@ -243,6 +307,9 @@ impl RankVm {
     /// Run every threadblock as far as it can go, in tb order — the same
     /// inner loop both drivers share.
     fn sweep(&mut self, red: &mut dyn Reducer) -> Result<SweepOut> {
+        if self.wedged {
+            return Ok(SweepOut::default());
+        }
         let mut out = SweepOut::default();
         for t in 0..self.tbs.len() {
             loop {
@@ -433,6 +500,10 @@ pub struct Session {
     /// AllReduce).
     vm_scratch: Vec<(Vec<f32>, Vec<Vec<f32>>)>,
     driver: Driver,
+    /// Injected fault applied to every launch until cleared; `None` (the
+    /// default) leaves every launch path bit-identical to a fault-free
+    /// session.
+    fault: Option<SessionFault>,
 }
 
 impl Default for Session {
@@ -455,7 +526,20 @@ impl Session {
             num_ranks: None,
             vm_scratch: Vec::new(),
             driver: Driver::Cooperative,
+            fault: None,
         }
+    }
+
+    /// Inject (or with `None` clear) a runtime fault applied to every
+    /// subsequent launch — see [`SessionFault`] for the failure modes.
+    pub fn inject_fault(&mut self, fault: Option<SessionFault>) -> &mut Session {
+        self.fault = fault;
+        self
+    }
+
+    /// The currently injected fault, if any.
+    pub fn fault(&self) -> Option<SessionFault> {
+        self.fault
     }
 
     pub fn label(&self) -> &str {
@@ -547,14 +631,20 @@ impl Session {
     ) -> Result<ExecStats> {
         let ef = self.lookup(name)?;
         let mut vms = self.make_vms(&ef, mem)?;
-        let result = Self::drive_cooperative(&self.label, &ef, &mut vms, red);
+        let result = Self::drive_cooperative(&self.label, &ef, &mut vms, red, self.sweep_budget());
         let mut stats = self.reassemble(mem, vms);
         match result {
             Ok(rounds) => stats.rounds = rounds,
             Err(e) => {
                 // A failed launch may leave messages in flight; flush them
-                // so the session's persistent connections stay usable.
-                self.flush_channels();
+                // so the session's persistent connections stay usable. A
+                // wedged rank deliberately skips the flush: the in-flight
+                // messages its neighbors sent it ARE the wedged-machine
+                // signature (`pending_messages() > 0`) serving pools
+                // retire on.
+                if !matches!(self.fault, Some(SessionFault::WedgeRank(_))) {
+                    self.flush_channels();
+                }
                 return Err(e);
             }
         }
@@ -586,13 +676,14 @@ impl Session {
         let context = format!("session '{}' program '{}'", self.label, ef.name);
         let coord = Coordinator::new(nthreads, context);
         let coord_ref = &coord;
+        let budget = self.sweep_budget();
         let joined: Vec<(Vec<RankVm>, usize)> = std::thread::scope(|s| {
             let handles: Vec<_> = shards
                 .into_iter()
                 .enumerate()
                 .map(|(tid, mut shard)| {
                     s.spawn(move || {
-                        let sweeps = worker(tid, &mut shard, coord_ref);
+                        let sweeps = worker(tid, &mut shard, coord_ref, budget);
                         (shard, sweeps)
                     })
                 })
@@ -613,8 +704,12 @@ impl Session {
         stats.rounds = rounds;
         if let Some(err) = coord.take_failure() {
             // A failed launch may leave messages in flight; flush them so
-            // the session's persistent connections stay usable.
-            self.flush_channels();
+            // the session's persistent connections stay usable — except
+            // under an injected wedge, whose in-flight messages are the
+            // `pending_messages() > 0` signature serving pools retire on.
+            if !matches!(self.fault, Some(SessionFault::WedgeRank(_))) {
+                self.flush_channels();
+            }
             return Err(err);
         }
         self.drain_check()?;
@@ -654,8 +749,19 @@ impl Session {
         })
     }
 
+    /// The sweep budget an injected [`SessionFault::LaunchTimeout`]
+    /// imposes on the drivers; `None` (no fault) means unbounded.
+    fn sweep_budget(&self) -> Option<usize> {
+        match self.fault {
+            Some(SessionFault::LaunchTimeout(n)) => Some(n),
+            _ => None,
+        }
+    }
+
     /// Split the launch memory into per-rank [`RankMemory`]s and build one
-    /// VM per rank with its channel endpoints resolved.
+    /// VM per rank with its channel endpoints resolved (and any injected
+    /// fault applied: wedge flags set, dropped FIFOs rerouted into
+    /// black-hole channels outside the persistent connection map).
     fn make_vms(&mut self, ef: &Arc<EfProgram>, mem: &mut Memory) -> Result<Vec<RankVm>> {
         let n = ef.num_ranks;
         if mem.input.len() != n || mem.output.len() != n || mem.scratch.len() != n {
@@ -668,6 +774,21 @@ impl Session {
                 ef.name
             )));
         }
+        match self.fault {
+            Some(SessionFault::WedgeRank(r)) if r >= n => {
+                return Err(Gc3Error::Exec(format!(
+                    "injected fault wedge:r{r} names a rank beyond '{}' ({n} ranks)",
+                    ef.name
+                )));
+            }
+            Some(SessionFault::DropConn(s, d)) if s >= n || d >= n => {
+                return Err(Gc3Error::Exec(format!(
+                    "injected fault drop:r{s}-r{d} names a rank beyond '{}' ({n} ranks)",
+                    ef.name
+                )));
+            }
+            _ => {}
+        }
         if self.vm_scratch.len() < n {
             self.vm_scratch.resize_with(n, Default::default);
         }
@@ -675,14 +796,26 @@ impl Session {
         for gpu in &ef.gpus {
             let rank = gpu.rank;
             let (stage, pool) = std::mem::take(&mut self.vm_scratch[rank]);
+            let fault = self.fault;
             let tbs = gpu
                 .tbs
                 .iter()
                 .map(|tb| TbRun {
                     pc: 0,
-                    send: tb
-                        .send
-                        .map(|(peer, ch)| SendPort { ch: self.channel((rank, ch, peer)) }),
+                    send: tb.send.map(|(peer, ch)| {
+                        let key = (rank, ch, peer);
+                        // A dropped FIFO: the sender pushes into a fresh
+                        // channel that is NOT in `self.channels` — messages
+                        // vanish (they never count as pending) and the
+                        // receiver starves.
+                        if matches!(fault, Some(SessionFault::DropConn(s, d))
+                            if s == rank && d == peer)
+                        {
+                            SendPort { ch: Arc::new(Channel::new(key)) }
+                        } else {
+                            SendPort { ch: self.channel(key) }
+                        }
+                    }),
                     recv: tb
                         .recv
                         .map(|(peer, ch)| RecvPort { ch: self.channel((peer, ch, rank)) }),
@@ -706,6 +839,7 @@ impl Session {
                 stats: ExecStats::default(),
                 retired: 0,
                 total,
+                wedged: matches!(self.fault, Some(SessionFault::WedgeRank(w)) if w == rank),
             });
         }
         Ok(vms)
@@ -736,18 +870,35 @@ impl Session {
     }
 
     /// The deterministic driver: sweep every VM in rank order until the
-    /// program drains; a full sweep with no progress is a deadlock.
+    /// program drains; a full sweep with no progress is a deadlock, and a
+    /// launch still running past an injected `budget` of sweeps times out
+    /// naming the still-running threadblocks.
     fn drive_cooperative(
         label: &str,
         ef: &EfProgram,
         vms: &mut [RankVm],
         red: &mut dyn Reducer,
+        budget: Option<usize>,
     ) -> Result<usize> {
         let total: usize = vms.iter().map(|vm| vm.total).sum();
         let mut done = 0;
         let mut rounds = 0;
         while done < total {
             rounds += 1;
+            if let Some(b) = budget {
+                if rounds > b {
+                    let mut stuck = Vec::new();
+                    for vm in vms.iter() {
+                        vm.stuck(&mut stuck);
+                    }
+                    return Err(Gc3Error::Exec(format!(
+                        "session '{label}' program '{}': launch exceeded {b}-sweep budget; \
+                         still running [{}]",
+                        ef.name,
+                        stuck.join(", ")
+                    )));
+                }
+            }
             let mut advanced = false;
             for vm in vms.iter_mut() {
                 let out = vm.sweep(red)?;
@@ -952,13 +1103,29 @@ impl Coordinator {
 
 /// One threaded-driver worker: sweep this shard's VMs until they drain,
 /// parking on the coordinator when nothing can advance. Returns the sweep
-/// count (the threaded analogue of `ExecStats::rounds`).
-fn worker(tid: usize, vms: &mut [RankVm], coord: &Coordinator) -> usize {
+/// count (the threaded analogue of `ExecStats::rounds`). An injected
+/// `budget` of sweeps fails a launch still running past it, naming this
+/// shard's still-running threadblocks.
+fn worker(tid: usize, vms: &mut [RankVm], coord: &Coordinator, budget: Option<usize>) -> usize {
     let mut red = NativeReducer;
     let mut sweeps = 0;
     loop {
         let seen = coord.sends_snapshot();
         sweeps += 1;
+        if let Some(b) = budget {
+            if sweeps > b {
+                let mut stuck = Vec::new();
+                for vm in vms.iter() {
+                    vm.stuck(&mut stuck);
+                }
+                coord.fail(&Gc3Error::Exec(format!(
+                    "{}: launch exceeded {b}-sweep budget; still running [{}]",
+                    coord.context,
+                    stuck.join(", ")
+                )));
+                return sweeps;
+            }
+        }
         let mut advanced = false;
         let mut sent = 0;
         for vm in vms.iter_mut() {
@@ -1110,6 +1277,119 @@ mod tests {
         assert_eq!(mem.input[0].len(), 2);
         let err2 = s.launch("dl", &mut mem).unwrap_err();
         assert!(matches!(err2, Gc3Error::Deadlock(_)), "{err2}");
+    }
+
+    /// An injected wedge surfaces through the existing deadlock census on
+    /// BOTH drivers, naming the wedged rank — and deliberately leaves its
+    /// neighbors' in-flight messages queued, so `pending_messages() > 0`
+    /// marks the machine as wedged (the signature serving pools retire on).
+    #[test]
+    fn wedged_rank_deadlocks_and_leaves_pending_messages() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        for threads in [1usize, 2] {
+            let mut s = Session::named("wedge");
+            s.register(c.ef.clone()).unwrap();
+            if threads > 1 {
+                s.run_threaded(threads);
+            }
+            s.inject_fault(Some(SessionFault::parse("wedge:r1").unwrap()));
+            assert_eq!(s.fault(), Some(SessionFault::WedgeRank(1)));
+            let mut mem = Memory::for_ef(&c.ef, 2);
+            mem.fill_pattern(test_pattern);
+            let err = s.launch("ag4", &mut mem).unwrap_err();
+            assert!(matches!(err, Gc3Error::Deadlock(_)), "threads={threads}: {err}");
+            let msg = err.to_string();
+            assert!(msg.contains("r1/tb"), "threads={threads}: census misses the culprit: {msg}");
+            assert!(
+                s.pending_messages() > 0,
+                "threads={threads}: a wedge must leave the wedged-machine signature"
+            );
+        }
+    }
+
+    /// A dropped FIFO starves the receiver: deadlock naming the receiving
+    /// rank, on both drivers. The dropped messages truly vanish (the
+    /// black-hole channel is outside the session's connection map), so
+    /// after the flushed failure the machine is healthy again and a
+    /// fault-free relaunch succeeds.
+    #[test]
+    fn dropped_fifo_starves_receiver_then_session_recovers() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        for threads in [1usize, 2] {
+            let mut s = Session::named("drop");
+            s.register(c.ef.clone()).unwrap();
+            if threads > 1 {
+                s.run_threaded(threads);
+            }
+            s.inject_fault(Some(SessionFault::parse("drop:r0-r1").unwrap()));
+            let mut mem = Memory::for_ef(&c.ef, 2);
+            mem.fill_pattern(test_pattern);
+            let err = s.launch("ag4", &mut mem).unwrap_err();
+            assert!(matches!(err, Gc3Error::Deadlock(_)), "threads={threads}: {err}");
+            assert!(err.to_string().contains("r1/tb"), "threads={threads}: {err}");
+            assert_eq!(s.pending_messages(), 0, "threads={threads}: dropped ≠ pending");
+            // Clear the fault: the same session serves the collective.
+            s.inject_fault(None);
+            s.verify("ag4", &t.spec, 2)
+                .unwrap_or_else(|e| panic!("threads={threads}: recovery: {e}"));
+        }
+    }
+
+    /// A launch still running past an injected sweep budget fails with an
+    /// Exec error naming the still-running threadblocks, on both drivers.
+    #[test]
+    fn launch_timeout_names_still_running_culprits() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        for threads in [1usize, 2] {
+            let mut s = Session::named("slow");
+            s.register(c.ef.clone()).unwrap();
+            if threads > 1 {
+                s.run_threaded(threads);
+            }
+            s.inject_fault(Some(SessionFault::LaunchTimeout(0)));
+            let mut mem = Memory::for_ef(&c.ef, 2);
+            mem.fill_pattern(test_pattern);
+            let err = s.launch("ag4", &mut mem).unwrap_err();
+            assert!(matches!(err, Gc3Error::Exec(_)), "threads={threads}: {err}");
+            let msg = err.to_string();
+            assert!(msg.contains("sweep budget"), "threads={threads}: {msg}");
+            assert!(msg.contains("still running [r"), "threads={threads}: {msg}");
+            // A generous budget is not hit: clearing nothing else, the
+            // same session completes within it.
+            s.inject_fault(Some(SessionFault::LaunchTimeout(10_000)));
+            s.verify("ag4", &t.spec, 2)
+                .unwrap_or_else(|e| panic!("threads={threads}: generous budget: {e}"));
+        }
+    }
+
+    #[test]
+    fn fault_parse_hard_errors_list_grammar() {
+        assert_eq!(SessionFault::parse("wedge:r3").unwrap(), SessionFault::WedgeRank(3));
+        assert_eq!(SessionFault::parse("drop:r0-r2").unwrap(), SessionFault::DropConn(0, 2));
+        assert_eq!(SessionFault::parse("timeout:64").unwrap(), SessionFault::LaunchTimeout(64));
+        for bad in ["wedge", "wedge:3", "drop:r0", "drop:0-1", "timeout:soon", "fizzle:r1"] {
+            let e = SessionFault::parse(bad).unwrap_err().to_string();
+            assert!(e.contains(SESSION_FAULT_GRAMMAR), "{bad}: {e}");
+        }
+    }
+
+    /// Fault ranks are validated against the launched EF, not trusted.
+    #[test]
+    fn fault_rank_out_of_range_is_a_hard_error() {
+        let t = ring_allgather(2);
+        let c = compile(&t, "ag2", &CompileOpts::default()).unwrap();
+        let mut s = Session::new();
+        s.register(c.ef.clone()).unwrap();
+        s.inject_fault(Some(SessionFault::WedgeRank(9)));
+        let mut mem = Memory::for_ef(&c.ef, 2);
+        let err = s.launch("ag2", &mut mem).unwrap_err().to_string();
+        assert!(err.contains("wedge:r9") && err.contains("beyond"), "{err}");
+        s.inject_fault(Some(SessionFault::DropConn(0, 5)));
+        let err = s.launch("ag2", &mut mem).unwrap_err().to_string();
+        assert!(err.contains("drop:r0-r5") && err.contains("beyond"), "{err}");
     }
 
     #[test]

@@ -38,6 +38,30 @@
 //!   `gc3 serve --trace <spec>` drives it with the deterministic
 //!   [`serve::loadgen`] traffic generator.
 //!
+//! ## Fault injection & degradation-aware resilience
+//!
+//! The `fault` subsystem threads through all three facades via one model,
+//! [`sim::FaultModel`] (`{link_eff, jitter, degraded_links, dead_ranks,
+//! seed}`), deterministic under [`util::rng`] seeding and bit-transparent
+//! when healthy:
+//!
+//! * **Simulator** — [`sim::simulate_faulty`] prices an EF on the
+//!   degraded fabric ([`topology::Topology::degrade`] scales one link
+//!   class; the model folds `eff`/links/jitter together) and errors on
+//!   dead ranks.
+//! * **Planner** — [`planner::Planner::replan_degraded`] re-runs dispatch
+//!   on the degraded topology and guarantees the replanned choice
+//!   simulates no slower than the naive (healthy) plan on the degraded
+//!   network.
+//! * **Runtime & service** — [`exec::SessionFault`] injects a wedged
+//!   rank, a dropped FIFO, or a launch-sweep budget into a live
+//!   [`exec::Session`] (both drivers name the culprits);
+//!   [`serve::Service::install_faults`] takes the combined
+//!   [`serve::FaultSpec`], replans the service onto the degraded fabric,
+//!   retires wedged machines, retries failed waves solo with bounded
+//!   backoff, and counts it all in
+//!   [`coordinator::ServeMetrics`] (`retries`/`wedged`/`replans`).
+//!
 //! ```text
 //!   dsl ──trace──▶ chunkdag ──lower──▶ instdag ──fuse/instances──▶
 //!       ──schedule (sched)──▶ ef (GC3-EF) ──▶ { sim, exec }

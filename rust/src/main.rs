@@ -21,8 +21,8 @@ use gc3::core::{Gc3Error, Result};
 use gc3::ef::EfProgram;
 use gc3::exec::{self, verify, Memory, NativeReducer, Session};
 use gc3::planner::Planner;
-use gc3::serve::{loadgen, Service, ServiceConfig, TraceSpec};
-use gc3::sim::{simulate, Protocol};
+use gc3::serve::{loadgen, FaultSpec, Service, ServiceConfig, TraceSpec};
+use gc3::sim::{simulate, FaultModel, Protocol};
 use gc3::topology::Topology;
 use gc3::train::{train, TrainOpts};
 use gc3::tune::{self, Collective, TunedTable};
@@ -361,6 +361,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 svc.load_tuned(TunedTable::from_json_str(&text)?)?;
                 println!("loaded tuned table {path}");
             }
+            if let Some(faults) = args.opt("faults") {
+                svc.install_faults(&FaultSpec::parse(faults)?)?;
+                println!("installed faults '{faults}' (serving on {})", svc.topo().name);
+            }
             let reqs = loadgen::generate(svc.topo(), &spec);
             println!(
                 "serving trace '{}' ({} requests) on {} ({} ranks), {} worker thread(s)",
@@ -396,10 +400,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             let ps = svc.pool_stats();
             println!(
-                "session pool: {} spawned, {} reused, {} evicted, {} parked, queue depth {}",
+                "session pool: {} spawned, {} reused, {} evicted, {} wedged-dropped, \
+                 {} parked, queue depth {}",
                 ps.spawned,
                 ps.reused,
                 ps.evicted,
+                ps.dropped_unhealthy,
                 svc.pool().parked(),
                 svc.pool().depth()
             );
@@ -421,6 +427,39 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     .ok_or_else(|| Gc3Error::Invalid(format!("bad --size '{s}'")))?],
                 None => vec![32 * 1024, 2 << 20, 256 << 20],
             };
+            if let Some(spec) = args.opt("degrade") {
+                // Degradation-aware replanning: re-run dispatch on the
+                // degraded fabric and price it against the healthy plan.
+                let (link, factor) = spec.split_once(':').ok_or_else(|| {
+                    Gc3Error::Invalid(format!(
+                        "bad --degrade '{spec}' (accepted: <link>:<factor>, link one of {})",
+                        Topology::LINK_CLASSES.join("|")
+                    ))
+                })?;
+                let factor: f64 = factor.parse().map_err(|_| {
+                    Gc3Error::Invalid(format!(
+                        "bad --degrade factor in '{spec}' (accepted: 0 < factor <= 1)"
+                    ))
+                })?;
+                let model = FaultModel {
+                    degraded_links: vec![(link.to_string(), factor)],
+                    ..FaultModel::default()
+                };
+                for size in sizes {
+                    let r = planner.replan_degraded(&model, coll, size)?;
+                    println!(
+                        "{} {:>8} on {}: {} — {:.1} us (naive healthy plan: {:.1} us)",
+                        coll.name(),
+                        util::human_bytes(size),
+                        r.degraded_topo,
+                        if r.replanned_won { "replanned" } else { "kept dispatch" },
+                        r.time * 1e6,
+                        r.naive_time * 1e6
+                    );
+                    println!("  why: {}", r.plan.choice.reason);
+                }
+                return Ok(());
+            }
             for size in sizes {
                 let plan = planner.plan(coll, size)?;
                 let rep = plan.simulate()?;
@@ -471,14 +510,22 @@ usage:
                 searches variant x instances x protocol on the simulator and
                 writes the best-plan-per-size TunedTable as JSON
   gc3 plan      [--collective C] [--size 4MB] [--tuned TABLE.json] [--nodes N]
-                dispatch through the Planner facade and explain the choice
+                [--degrade nvlink|shm|ib|pcie:FACTOR]
+                dispatch through the Planner facade and explain the choice;
+                --degrade replans on the degraded fabric and prices the new
+                plan against the naive (healthy) dispatch
                 (alias: gc3 registry)
   gc3 serve     [--trace mixed|small|allreduce[:N[:SEED]]] [--sessions S]
                 [--threads T] [--queue Q] [--batch B] [--tuned TABLE.json]
                 [--nodes N] [--gpus G] [--topo a100|ndv2|ndv4|asym]
+                [--faults SPEC]  where SPEC mixes network faults
+                (nvlink|shm|ib|pcie:<factor>, eff:<f>, jitter:<f>, dead:rN,
+                seed:<n>) with one session fault (wedge:r<rank>,
+                drop:r<src>-r<dst>, timeout:<sweeps>)
                 drive a deterministic multi-tenant request trace through the
                 serving layer (plan cache + session pool + coalescing) and
-                report req/s, p50/p99 latency, hit rates and serve metrics";
+                report req/s, p50/p99 latency, hit rates and serve metrics —
+                under --faults the service replans/retries and counts it";
 
 #[cfg(test)]
 mod tests {
@@ -599,6 +646,77 @@ mod tests {
         let err = run("serve", &args).unwrap_err().to_string();
         assert!(err.contains("bogus"), "{err}");
         assert!(err.contains("mixed"), "error lists accepted mixes: {err}");
+    }
+
+    #[test]
+    fn help_mentions_fault_flags() {
+        assert!(HELP.contains("--faults"), "{HELP}");
+        assert!(HELP.contains("--degrade"), "{HELP}");
+        assert!(HELP.contains("wedge:r<rank>"), "{HELP}");
+    }
+
+    /// `gc3 serve --faults` end-to-end on both drivers: the injected
+    /// wedge fails the first wave, the service retries solo and the run
+    /// still exits cleanly. Unknown fault entries are hard errors
+    /// listing both grammars (the loadgen hard-error convention).
+    #[test]
+    fn serve_with_faults_completes_and_rejects_bad_specs() {
+        for threads in ["1", "2"] {
+            let args = args_of(&[
+                "serve",
+                "--trace",
+                "small:4:1",
+                "--gpus",
+                "4",
+                "--threads",
+                threads,
+                "--elems-per-chunk",
+                "8",
+                "--faults",
+                "wedge:r1",
+            ]);
+            run("serve", &args).unwrap_or_else(|e| panic!("--threads {threads}: {e}"));
+        }
+        let args = args_of(&["serve", "--trace", "small:4:1", "--gpus", "4", "--faults", "bogus:1"]);
+        let err = run("serve", &args).unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        assert!(err.contains("wedge:r<rank>"), "error lists the session grammar: {err}");
+        assert!(err.contains("nvlink|shm|ib|pcie"), "error lists the network grammar: {err}");
+        // Dead ranks cannot be served around — refused at installation.
+        let args = args_of(&["serve", "--trace", "small:4:1", "--gpus", "4", "--faults", "dead:r0"]);
+        let err = run("serve", &args).unwrap_err().to_string();
+        assert!(err.contains("dead rank r0"), "{err}");
+    }
+
+    /// `gc3 plan --degrade` replans on the degraded fabric; malformed
+    /// specs and unknown link classes are hard errors listing the
+    /// accepted forms.
+    #[test]
+    fn plan_degrade_runs_and_rejects_bad_specs() {
+        let args = args_of(&[
+            "plan",
+            "--collective",
+            "allgather",
+            "--size",
+            "64KB",
+            "--gpus",
+            "4",
+            "--degrade",
+            "ib:0.25",
+        ]);
+        run("plan", &args).unwrap();
+        let err = run("plan", &args_of(&["plan", "--degrade", "ib", "--gpus", "4"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("<link>:<factor>"), "{err}");
+        let err = run(
+            "plan",
+            &args_of(&["plan", "--degrade", "warp:0.5", "--size", "64KB", "--gpus", "4"]),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("warp"), "{err}");
+        assert!(err.contains("nvlink, shm, ib, pcie"), "error lists link classes: {err}");
     }
 
     #[test]

@@ -47,9 +47,10 @@ use crate::dsl::Trace;
 use crate::ef::EfProgram;
 use crate::exec::{ExecStats, Session};
 use crate::nccl;
+use crate::sim::fault::FaultModel;
 use crate::sim::{simulate, Protocol, SimReport};
 use crate::topology::Topology;
-use crate::tune::{variant_trace, Collective, TunedChoice, TunedTable};
+use crate::tune::{enumerate, variant_trace, Collective, TuneOpts, TunedChoice, TunedTable};
 use crate::util::human_bytes;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -161,6 +162,25 @@ impl Plan {
             self.choice.reason
         )
     }
+}
+
+/// The outcome of [`Planner::replan_degraded`]: the winning plan on the
+/// degraded fabric plus the head-to-head against the naive
+/// (healthy-dispatch) plan priced on the same degraded network.
+#[derive(Clone, Debug)]
+pub struct Replanned {
+    /// The winning plan, restamped onto the degraded topology (so
+    /// [`Plan::simulate`] prices the unhealthy network).
+    pub plan: Plan,
+    /// The healthy-dispatch plan's simulated time on the degraded fabric.
+    pub naive_time: f64,
+    /// The winner's simulated time on the degraded fabric. Guaranteed
+    /// `<= naive_time`: the naive plan itself is in the running.
+    pub time: f64,
+    /// Whether re-dispatch found a strictly faster plan than the naive one.
+    pub replanned_won: bool,
+    /// Name of the derived degraded topology the head-to-head ran on.
+    pub degraded_topo: String,
 }
 
 /// One compiled-and-cached plan body (everything size-independent). The
@@ -308,6 +328,107 @@ impl Planner {
             time * 1e6
         );
         Some(Ok(self.finish(&key, Backend::Tuned, Some(choice), Some(size), reason)))
+    }
+
+    /// React to an unhealthy cluster: re-run dispatch on the degraded
+    /// topology a [`FaultModel`] implies and return the fastest plan for
+    /// `collective` at `size` *on that degraded network*, head-to-head
+    /// against the naive plan (what healthy dispatch would have served).
+    ///
+    /// Tuned tables deliberately don't transfer to a degraded fabric (the
+    /// derived topology is renamed, and [`Planner::load_tuned`] rejects the
+    /// mismatch), so re-dispatch sweeps the tuner's candidate grid priced
+    /// on the degraded network — the tuner's argmin, computed fresh.
+    /// Candidates that fail to compile are skipped, exactly as in the
+    /// tuner's search driver. Because the naive plan itself competes, the
+    /// winner's time is `<= naive_time` by construction.
+    ///
+    /// Dead ranks are a planning infeasibility, not a degradation: a
+    /// collective spans every rank of this planner's topology, so any
+    /// dead rank is a hard error here (the serving layer refuses them the
+    /// same way).
+    pub fn replan_degraded(
+        &mut self,
+        model: &FaultModel,
+        collective: Collective,
+        size: u64,
+    ) -> Result<Replanned> {
+        let degraded = model.degraded_topology(&self.topo)?;
+        if let Some(&r) = model.dead_ranks.first() {
+            return Err(Gc3Error::Invalid(format!(
+                "rank r{r} is dead: {} spans all {} ranks of {} and cannot be replanned \
+                 around a dead member",
+                collective.name(),
+                self.topo.num_ranks(),
+                self.topo.name
+            )));
+        }
+        let naive = self.plan(collective, size)?;
+        let naive_time = simulate(&naive.ef, &degraded, size)?.time;
+
+        // The tuner's argmin on the degraded fabric. A trimmed instance
+        // grid keeps replanning interactive — this runs in the serving
+        // path's reaction loop, not an offline tuning job.
+        let grid = TuneOpts { instances: vec![1, 2, 4], verify_winners: false, ..TuneOpts::default() };
+        let mut best: Option<(f64, String, crate::compiler::Compiled, Trace, usize)> = None;
+        for cand in enumerate(&degraded, collective, &grid) {
+            let Ok(trace) = variant_trace(&degraded, collective, cand.variant) else { continue };
+            let name = format!("gc3_replan_{}", cand.key().replace(' ', "_"));
+            let Ok(compiled) = Pipeline::new(&cand.opts(&degraded)).run(&trace, &name) else {
+                continue;
+            };
+            let Ok(report) = simulate(&compiled.ef, &degraded, size) else { continue };
+            if best.as_ref().map_or(true, |(t, ..)| report.time < *t) {
+                best = Some((report.time, cand.key(), compiled, trace, cand.instances));
+            }
+        }
+
+        match best {
+            Some((time, key, compiled, trace, instances)) if time < naive_time => {
+                let reason = format!(
+                    "replanned on degraded fabric '{}': {} beats the healthy dispatch \
+                     ({:.1} us vs {:.1} us simulated)",
+                    degraded.name,
+                    key,
+                    time * 1e6,
+                    naive_time * 1e6
+                );
+                let plan = Plan {
+                    ef: compiled.ef,
+                    backend: Backend::Gc3,
+                    choice: PlanChoice { variant: key, tuned: None, reason },
+                    stats: compiled.stats,
+                    topo: degraded.clone(),
+                    spec: Some(Arc::new(trace.spec.scaled(instances))),
+                    size: Some(size),
+                };
+                Ok(Replanned {
+                    plan,
+                    naive_time,
+                    time,
+                    replanned_won: true,
+                    degraded_topo: degraded.name,
+                })
+            }
+            _ => {
+                let mut plan = naive;
+                plan.topo = degraded.clone();
+                plan.size = Some(size);
+                plan.choice.reason = format!(
+                    "{} — still the argmin on degraded fabric '{}' ({:.1} us simulated)",
+                    plan.choice.reason,
+                    degraded.name,
+                    naive_time * 1e6
+                );
+                Ok(Replanned {
+                    plan,
+                    naive_time,
+                    time: naive_time,
+                    replanned_won: false,
+                    degraded_topo: degraded.name,
+                })
+            }
+        }
     }
 
     /// The static dispatch rules, skipping any loaded tuned table.
@@ -611,6 +732,43 @@ mod tests {
         assert_eq!(shim.backend, explicit.backend);
         assert_eq!(shim.ef.name, explicit.ef.name);
         assert!(shim.simulate().unwrap().time > 0.0);
+    }
+
+    /// The resilience contract: on a degraded fabric the replanned plan's
+    /// simulated time never exceeds the naive (healthy-dispatch) plan's,
+    /// the winner prices on the degraded topology, and a healthy model is
+    /// a pure re-dispatch (same fabric, naive wins by definition).
+    #[test]
+    fn replan_degraded_beats_or_matches_naive() {
+        let mut p = Planner::new(topo4());
+        let model = FaultModel {
+            degraded_links: vec![("nvlink".into(), 0.25)],
+            ..FaultModel::default()
+        };
+        let r = p.replan_degraded(&model, Collective::AllReduce, 2 << 20).unwrap();
+        assert!(r.time <= r.naive_time, "{} > {}", r.time, r.naive_time);
+        assert!(r.degraded_topo.contains("nvlinkx0.25"), "{}", r.degraded_topo);
+        assert_eq!(r.plan.topo().name, r.degraded_topo, "winner prices the degraded fabric");
+        let priced = r.plan.simulate().unwrap();
+        assert!((priced.time - r.time).abs() <= r.time * 1e-9, "simulate() uses degraded topo");
+        assert!(r.plan.choice.reason.contains(&r.degraded_topo), "{}", r.plan.choice.reason);
+        // Replanned winners still verify functionally.
+        r.plan.verify(4).unwrap();
+
+        // Healthy model: same fabric, naive dispatch is the argmin's
+        // baseline and the head-to-head degenerates gracefully.
+        let h = p.replan_degraded(&FaultModel::default(), Collective::AllReduce, 2 << 20).unwrap();
+        assert_eq!(h.degraded_topo, "a100x1");
+        assert!(h.time <= h.naive_time);
+    }
+
+    #[test]
+    fn replan_refuses_dead_ranks() {
+        let mut p = Planner::new(topo4());
+        let model = FaultModel { dead_ranks: vec![1], ..FaultModel::default() };
+        let e = p.replan_degraded(&model, Collective::AllReduce, 2 << 20).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("r1 is dead"), "{msg}");
     }
 
     #[test]

@@ -29,8 +29,21 @@
 //! * **[`loadgen`]** — deterministic trace generation (seeded mixes of
 //!   allreduce / alltoall / allgather / reduce_scatter / alltonext across
 //!   sizes and tenants) behind `gc3 serve --trace <spec>`, measured by the
-//!   `serve[]` rows of `BENCH_compiler_perf.json` (schema v5): req/s,
+//!   `serve[]` rows of `BENCH_compiler_perf.json` (schema v6): req/s,
 //!   p50/p99 latency, cache hit-rate, batched-vs-unbatched speedup.
+//!
+//! **Fault reaction.** The serving layer is where the `fault` subsystem
+//! becomes visible under load: [`Service::install_faults`] takes a
+//! [`FaultSpec`] (`gc3 serve --faults <spec>`) combining a network-level
+//! [`FaultModel`](crate::sim::FaultModel) — which replans the service
+//! onto the degraded topology — with an optional one-shot session fault
+//! ([`SessionFault`](crate::exec::SessionFault): wedged rank, dropped
+//! FIFO, launch timeout). The stack reacts instead of hanging: wedged
+//! machines are retired and counted (never silently dropped — see
+//! [`PoolStats::dropped_unhealthy`]), failed waves are un-coalesced and
+//! retried solo with bounded exponential backoff, and the
+//! `retries`/`wedged`/`replans` counters ride the shutdown metrics row
+//! ([`crate::coordinator::ServeMetrics`]).
 
 pub mod batch;
 pub mod loadgen;
@@ -41,5 +54,5 @@ pub use batch::{req_pattern, run_batched, run_single, BatchItem, BatchResult};
 pub use loadgen::TraceSpec;
 pub use pool::{PoolConfig, PoolStats, SessionPool};
 pub use service::{
-    CacheStats, CollectiveKind, PlanCache, Request, Response, Service, ServiceConfig,
+    CacheStats, CollectiveKind, FaultSpec, PlanCache, Request, Response, Service, ServiceConfig,
 };

@@ -84,8 +84,16 @@ impl SessionPool {
     pub fn checkout(&mut self, key: &str) -> Option<Session> {
         while let Some(pos) = self.parked.iter().position(|p| p.key == key) {
             let p = self.parked.swap_remove(pos);
-            if p.session.pending_messages() > 0 {
+            let pending = p.session.pending_messages();
+            if pending > 0 {
+                // A counted, logged event — never a silent drop: a wedged
+                // machine disappearing without trace hides real faults.
                 self.stats.dropped_unhealthy += 1;
+                eprintln!(
+                    "pool: dropped wedged session '{}' ({key}) at checkout: \
+                     {pending} undelivered messages",
+                    p.session.label()
+                );
                 continue;
             }
             self.stats.reused += 1;
@@ -205,5 +213,35 @@ mod tests {
         // second check-in replaced the first instead of growing the pool.
         assert_eq!(pool.parked(), 1);
         assert_eq!(pool.stats().evicted, 0);
+    }
+
+    /// Satellite pin: a wedged machine dropped at checkout counts under
+    /// `dropped_unhealthy`, NOT under the cap/idle `evicted` counter —
+    /// the two retirement reasons stay separately observable.
+    #[test]
+    fn wedged_drop_is_counted_separately_from_evicted() {
+        use crate::compiler::{compile, CompileOpts};
+        use crate::exec::{fixtures::ring_allgather, Memory, SessionFault};
+
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        let mut session = Session::named("victim");
+        session.register(c.ef.clone()).unwrap();
+        session.inject_fault(Some(SessionFault::WedgeRank(1)));
+        let mut mem = Memory::for_ef(&c.ef, 2);
+        session.launch("ag4", &mut mem).unwrap_err();
+        assert!(session.pending_messages() > 0, "wedge must leave the signature");
+
+        let mut pool = SessionPool::new(PoolConfig::default());
+        let key = SessionPool::key_of(&session.programs());
+        pool.checkin(session);
+        assert_eq!(pool.parked(), 1);
+        assert!(pool.depth() > 0, "pool sees the wedged machine's queue depth");
+        assert!(pool.checkout(&key).is_none(), "a wedged machine is never handed out");
+        let stats = pool.stats();
+        assert_eq!(stats.dropped_unhealthy, 1, "wedged drop counted");
+        assert_eq!(stats.evicted, 0, "…and NOT conflated with eviction");
+        assert_eq!(stats.reused, 0);
+        assert_eq!(pool.parked(), 0);
     }
 }

@@ -14,17 +14,78 @@
 //! stream: [`Service::submit`] enqueues (or rejects), [`Service::process`]
 //! drains the queue in one wave of coalesced launches, and
 //! [`Service::serve`] strings the two together for whole traces.
+//!
+//! **Resilience.** [`Service::install_faults`] accepts a [`FaultSpec`] —
+//! a degraded network model plus an optional session-level fault. A
+//! non-trivial network model replans the service onto the degraded
+//! topology (fresh [`Planner`], plan cache cleared, `replans` counted);
+//! a session fault is armed one-shot into the next launch. The service
+//! *reacts* rather than hangs: a wedged machine is retired (never pooled,
+//! `wedged` counted), and every member of a failed wave retries solo —
+//! un-coalesced, bounded exponential backoff, `retries` counted — so an
+//! injected wedge costs latency, not answers.
 
 use crate::coordinator::Metrics;
 use crate::core::{Gc3Error, Result};
+use crate::exec::session::SESSION_FAULT_GRAMMAR;
+use crate::exec::SessionFault;
 use crate::planner::{Backend, Plan, Planner};
 use crate::serve::batch::{self, BatchItem};
 use crate::serve::pool::{PoolConfig, PoolStats, SessionPool};
+use crate::sim::fault::{FaultModel, FAULT_GRAMMAR};
 use crate::topology::Topology;
 use crate::tune::{Collective, TunedTable};
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Solo-retry policy after a failed wave: up to this many un-coalesced
+/// relaunches per member…
+const RETRY_ATTEMPTS: u32 = 3;
+/// …with exponential backoff starting here (µs): 50, 100, 200.
+const RETRY_BASE_US: u64 = 50;
+
+/// A combined fault specification for `gc3 serve --faults`: network-level
+/// entries in the [`FaultModel`] grammar and at most one session-level
+/// fault in the [`SessionFault`] grammar, comma-separated and freely
+/// mixed — e.g. `"ib:0.5, jitter:0.1, wedge:r1"`. Unknown entries are
+/// hard errors listing both grammars.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Network-level degradation ([`Service::install_faults`] replans
+    /// onto it when non-trivial).
+    pub model: FaultModel,
+    /// Session-level fault, armed one-shot into the next launch.
+    pub session: Option<SessionFault>,
+}
+
+impl FaultSpec {
+    pub fn parse(spec: &str) -> Result<FaultSpec> {
+        let mut session = None;
+        let mut model_entries: Vec<&str> = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let key = entry.split(':').next().unwrap_or("").trim();
+            if matches!(key, "wedge" | "drop" | "timeout") {
+                session = Some(SessionFault::parse(entry)?);
+            } else if matches!(key, "eff" | "jitter" | "dead" | "seed")
+                || Topology::LINK_CLASSES.contains(&key)
+            {
+                model_entries.push(entry);
+            } else {
+                return Err(Gc3Error::Invalid(format!(
+                    "unknown fault entry '{entry}' in '{spec}' \
+                     (accepted: {FAULT_GRAMMAR}, {SESSION_FAULT_GRAMMAR})"
+                )));
+            }
+        }
+        let model = if model_entries.is_empty() {
+            FaultModel::default()
+        } else {
+            FaultModel::parse(&model_entries.join(","))?
+        };
+        Ok(FaultSpec { model, session })
+    }
+}
 
 /// What a request asks for: one of the standard collective kinds, or a
 /// custom collective by name (the §6.4 AllToNext, anything
@@ -228,6 +289,16 @@ impl PlanCache {
         before - self.slots.len()
     }
 
+    /// Drop every entry, keeping the counters. Used when the service
+    /// replans onto a degraded fabric: every cached plan priced the
+    /// healthy network and none can be trusted. Returns the dropped
+    /// count.
+    pub fn clear(&mut self) -> usize {
+        let n = self.slots.len();
+        self.slots.clear();
+        n
+    }
+
     pub fn len(&self) -> usize {
         self.slots.len()
     }
@@ -253,6 +324,15 @@ struct Pending {
     id: u64,
     req: Request,
     submitted: Instant,
+}
+
+/// A pending request with its resolved plan — the unit the dispatch and
+/// retry phases work in.
+struct Resolved {
+    p: Pending,
+    plan: Arc<Plan>,
+    hit: bool,
+    elems: usize,
 }
 
 /// The response a failed request gets: its error, no output, no backend.
@@ -281,6 +361,9 @@ pub struct Service {
     queue: VecDeque<Pending>,
     metrics: Metrics,
     next_id: u64,
+    /// One-shot injected session fault: armed by [`Service::install_faults`],
+    /// consumed by the next launch's session.
+    fault: Option<SessionFault>,
 }
 
 impl Service {
@@ -296,7 +379,38 @@ impl Service {
             metrics: Metrics::new(),
             next_id: 0,
             cfg,
+            fault: None,
         }
+    }
+
+    /// Install a [`FaultSpec`] into the running service.
+    ///
+    /// A non-trivial network model **replans** the service: the planner is
+    /// rebuilt over [`FaultModel::degraded_topology`] (tuned tables and
+    /// custom registrations, all priced on the healthy fabric, are
+    /// dropped with it), the plan cache is cleared, and
+    /// `metrics.serve.replans` counts the event. Dead ranks are refused —
+    /// every registered collective spans all ranks, so there is nothing
+    /// to serve around. The spec's session fault, if any, is armed
+    /// one-shot: the next launch runs it, the wave fails, and the
+    /// retry/wedge machinery in [`Service::process`] reacts.
+    pub fn install_faults(&mut self, spec: &FaultSpec) -> Result<()> {
+        if !spec.model.is_healthy() {
+            if let Some(&r) = spec.model.dead_ranks.first() {
+                return Err(Gc3Error::Invalid(format!(
+                    "cannot serve around dead rank r{r}: every registered collective \
+                     spans all {} ranks of {}",
+                    self.planner.topo().num_ranks(),
+                    self.planner.topo().name
+                )));
+            }
+            let degraded = spec.model.degraded_topology(self.planner.topo())?;
+            self.planner = Planner::new(degraded);
+            self.cache.clear();
+            self.metrics.serve.replans += 1;
+        }
+        self.fault = spec.session;
+        Ok(())
     }
 
     pub fn topo(&self) -> &Topology {
@@ -386,12 +500,6 @@ impl Service {
         if pending.is_empty() {
             return Ok(Vec::new());
         }
-        struct Resolved {
-            p: Pending,
-            plan: Arc<Plan>,
-            hit: bool,
-            elems: usize,
-        }
         let mut responses: Vec<Response> = Vec::new();
         // Resolve phase: every request through the plan cache; failures
         // become error responses immediately.
@@ -435,6 +543,10 @@ impl Service {
                 let launched = match self.pool.checkout_or_spawn(&label, std::slice::from_ref(ef))
                 {
                     Ok(mut session) => {
+                        // An armed one-shot fault rides the next launch.
+                        if let Some(f) = self.fault.take() {
+                            session.inject_fault(Some(f));
+                        }
                         let result = Metrics::timed(&mut self.metrics.comm_time, || {
                             batch::run_batched(&mut session, ef, &items)
                         });
@@ -442,7 +554,13 @@ impl Service {
                         // failed launch may have wedged it, so the error
                         // arm below lets the session drop instead.
                         if result.is_ok() {
+                            session.inject_fault(None);
                             self.pool.checkin(session);
+                        } else if session.pending_messages() > 0 {
+                            // The wedged-machine signature: undelivered
+                            // messages after a failed launch. Retired
+                            // here (dropped, never pooled) and counted.
+                            self.metrics.serve.wedged += 1;
                         }
                         result
                     }
@@ -451,10 +569,13 @@ impl Service {
                 let result = match launched {
                     Ok(result) => result,
                     Err(e) => {
+                        // The wave failed: un-coalesce it and retry each
+                        // member solo on a fresh machine, with bounded
+                        // exponential backoff. Answers survive faults;
+                        // only latency pays.
                         let msg = e.to_string();
-                        self.metrics.serve.failed += group.len() as u64;
                         for r in group {
-                            responses.push(error_response(r.p, &ef.name, r.hit, &msg));
+                            self.retry_solo(r, &label, ef, &msg, &mut responses);
                         }
                         continue;
                     }
@@ -485,6 +606,66 @@ impl Service {
         }
         responses.sort_by_key(|r| r.id);
         Ok(responses)
+    }
+
+    /// Retry one member of a failed wave alone: up to [`RETRY_ATTEMPTS`]
+    /// solo launches on fresh checkouts, backing off exponentially from
+    /// [`RETRY_BASE_US`] µs. Success produces a normal (`batch_size` 1)
+    /// response — the request was served, just un-coalesced and late;
+    /// exhaustion produces an error response carrying the last failure.
+    fn retry_solo(
+        &mut self,
+        r: Resolved,
+        label: &str,
+        ef: &crate::ef::EfProgram,
+        first_err: &str,
+        responses: &mut Vec<Response>,
+    ) {
+        let item = BatchItem { payload: r.p.req.payload, elems: r.elems };
+        let mut last_err = first_err.to_string();
+        for attempt in 0..RETRY_ATTEMPTS {
+            std::thread::sleep(Duration::from_micros(RETRY_BASE_US << attempt));
+            self.metrics.serve.retries += 1;
+            let retried = match self.pool.checkout_or_spawn(label, std::slice::from_ref(ef)) {
+                Ok(mut session) => {
+                    let out = Metrics::timed(&mut self.metrics.comm_time, || {
+                        batch::run_batched(&mut session, ef, std::slice::from_ref(&item))
+                    });
+                    if out.is_ok() {
+                        self.pool.checkin(session);
+                    } else if session.pending_messages() > 0 {
+                        self.metrics.serve.wedged += 1;
+                    }
+                    out
+                }
+                Err(e) => Err(e),
+            };
+            match retried {
+                Ok(mut result) => {
+                    self.metrics.serve.batches += 1;
+                    self.metrics.collective_calls += 1;
+                    let latency = r.p.submitted.elapsed().as_secs_f64();
+                    self.metrics.serve.latency.record(latency);
+                    let collective = r.p.req.collective.name().to_string();
+                    responses.push(Response {
+                        id: r.p.id,
+                        tenant: r.p.req.tenant,
+                        collective,
+                        program: ef.name.clone(),
+                        backend: Some(r.plan.backend),
+                        batch_size: 1,
+                        cache_hit: r.hit,
+                        latency_s: latency,
+                        output: result.outputs.pop().unwrap_or_default(),
+                        error: None,
+                    });
+                    return;
+                }
+                Err(e) => last_err = e.to_string(),
+            }
+        }
+        self.metrics.serve.failed += 1;
+        responses.push(error_response(r.p, &ef.name, r.hit, &last_err));
     }
 
     /// Submit-and-process convenience for whole traces: requests are
@@ -743,5 +924,110 @@ mod tests {
                 assert_eq!(bits_a, bits_b, "request {}", a.id);
             }
         }
+    }
+
+    #[test]
+    fn fault_spec_parse_routes_and_hard_errors() {
+        let spec = FaultSpec::parse("ib:0.5, wedge:r1, jitter:0.1").unwrap();
+        assert_eq!(spec.model.degraded_links, vec![("ib".to_string(), 0.5)]);
+        assert_eq!(spec.model.jitter, 0.1);
+        assert_eq!(spec.session, Some(SessionFault::WedgeRank(1)));
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+        assert!(FaultSpec::parse("timeout:40").unwrap().session
+            == Some(SessionFault::LaunchTimeout(40)));
+        // Unknown entries are hard errors listing BOTH grammars.
+        let err = FaultSpec::parse("bogus:1").unwrap_err().to_string();
+        assert!(err.contains("wedge:r<rank>"), "{err}");
+        assert!(err.contains("nvlink|shm|ib|pcie"), "{err}");
+        // Bad values inside a recognized entry surface their own grammar.
+        assert!(FaultSpec::parse("wedge:zebra").is_err());
+        assert!(FaultSpec::parse("jitter:2.0").is_err());
+    }
+
+    /// The acceptance scenario: a wedged RankVm under load. The wave
+    /// fails, the wedged machine is retired (counted, not pooled), every
+    /// member retries solo and completes — no hang, no lost answers, and
+    /// the retried outputs are byte-identical to a healthy service's.
+    #[test]
+    fn wedged_wave_retries_solo_and_completes() {
+        let reqs: Vec<Request> =
+            (0..3).map(|i| req(Collective::AllGather, 64 << 10, 40 + i, "t")).collect();
+        let mut healthy = Service::new(topo4(), ServiceConfig::default());
+        let (want, _) = healthy.serve(reqs.clone()).unwrap();
+
+        let mut svc = Service::new(topo4(), ServiceConfig::default());
+        svc.install_faults(&FaultSpec::parse("wedge:r1").unwrap()).unwrap();
+        let (responses, _) = svc.serve(reqs).unwrap();
+        assert_eq!(responses.len(), 3, "every admitted request gets a response");
+        for (got, want) in responses.iter().zip(&want) {
+            assert!(got.error.is_none(), "{:?}", got.error);
+            assert_eq!(got.batch_size, 1, "retries are un-coalesced");
+            for (a, b) in got.output.iter().zip(&want.output) {
+                let bits_a: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                let bits_b: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(bits_a, bits_b, "request {} differs from healthy run", got.id);
+            }
+        }
+        let m = &svc.metrics().serve;
+        assert_eq!(m.failed, 0, "faults cost latency, never answers");
+        assert_eq!(m.wedged, 1, "the wedged machine was retired once");
+        assert_eq!(m.retries, 3, "each member of the failed wave retried once");
+        assert_eq!(m.latency.total(), 3);
+        assert_eq!(svc.pool_stats().dropped_unhealthy, 0, "retired at launch, not checkout");
+        assert_eq!(svc.pool().depth(), 0, "no wedged machine reached the pool");
+        // The counters ride the shutdown metrics row.
+        let row = format!("{}", svc.metrics());
+        assert!(row.contains("retries=3 wedged=1"), "{row}");
+    }
+
+    /// A dropped FIFO behaves the same way at the service level: failed
+    /// wave, solo retries, every request served. The machine is not
+    /// wedged (dropped messages vanish, they don't queue), so only the
+    /// retry counter moves.
+    #[test]
+    fn dropped_fifo_wave_retries_and_completes() {
+        use crate::compiler::{compile, CompileOpts};
+        use crate::exec::fixtures::ring_allgather;
+
+        // A registered custom EF whose r0→r1 ring edge is guaranteed, so
+        // the dropped FIFO provably starves the wave.
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        let mut svc = Service::new(topo4(), ServiceConfig::default());
+        svc.planner().register("ag4", c.ef);
+        svc.install_faults(&FaultSpec::parse("drop:r0-r1").unwrap()).unwrap();
+        let reqs: Vec<Request> = (0..2)
+            .map(|i| Request {
+                collective: CollectiveKind::Custom("ag4".to_string()),
+                size: 64 << 10,
+                payload: 70 + i,
+                tenant: "t".to_string(),
+            })
+            .collect();
+        let (responses, _) = svc.serve(reqs).unwrap();
+        assert!(responses.iter().all(|r| r.error.is_none()));
+        let m = &svc.metrics().serve;
+        assert_eq!((m.failed, m.retries, m.wedged), (0, 2, 0));
+    }
+
+    /// Installing a degraded network model replans the service: new
+    /// (degraded) topology behind the planner, plan cache cleared,
+    /// `replans` counted — and requests keep being served. Dead ranks
+    /// are refused outright.
+    #[test]
+    fn install_faults_replans_onto_degraded_fabric() {
+        let mut svc = Service::new(topo4(), ServiceConfig::default());
+        svc.serve(vec![req(Collective::AllGather, 64 << 10, 1, "t")]).unwrap();
+        assert_eq!(svc.plan_cache().len(), 1);
+        svc.install_faults(&FaultSpec::parse("nvlink:0.5").unwrap()).unwrap();
+        assert!(svc.topo().name.contains("nvlinkx0.5"), "{}", svc.topo().name);
+        assert_eq!(svc.plan_cache().len(), 0, "healthy-fabric plans dropped");
+        assert_eq!(svc.metrics().serve.replans, 1);
+        let (responses, _) =
+            svc.serve(vec![req(Collective::AllGather, 64 << 10, 2, "t")]).unwrap();
+        assert!(responses[0].error.is_none());
+        assert!(!responses[0].cache_hit, "re-planned on the degraded fabric");
+        let err = svc.install_faults(&FaultSpec::parse("dead:r0").unwrap()).unwrap_err();
+        assert!(err.to_string().contains("dead rank r0"), "{err}");
     }
 }

@@ -1,0 +1,300 @@
+//! Fault model for the simulator: degraded links, global efficiency loss,
+//! deterministic seeded jitter, and dead ranks.
+//!
+//! A [`FaultModel`] describes an *unhealthy* cluster the rest of the stack
+//! can react to: [`FaultModel::degraded_topology`] derives the priced
+//! topology (via [`Topology::degrade`]) that `Planner::replan_degraded`
+//! re-dispatches on, and [`simulate_faulty`] prices an EF on that fabric
+//! with a jitter multiplier on top. The default model is a **no-op by
+//! construction**: `simulate_faulty` with `FaultModel::default()` delegates
+//! straight to [`simulate`] — no RNG draw, no float multiply — so golden
+//! parity and every pinned sim time are bit-identical to the healthy path.
+//!
+//! Jitter is seeded through [`util::rng`](crate::util::rng), so a faulty
+//! run is exactly reproducible: same model, same report.
+
+use crate::core::{Gc3Error, Rank, Result};
+use crate::ef::EfProgram;
+use crate::sim::engine::{simulate, SimReport};
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+/// The accepted `--faults` / `FaultModel::parse` grammar, quoted verbatim
+/// in every parse error (the PR 3 hard-error convention).
+pub const FAULT_GRAMMAR: &str =
+    "nvlink|shm|ib|pcie:<factor>, eff:<factor>, jitter:<frac>, dead:r<rank>, seed:<n>";
+
+/// A description of an unhealthy cluster: link efficiency, jitter, per-link
+/// degradations, and dead ranks. `Default` is the healthy cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultModel {
+    /// Global link efficiency in `(0, 1]`: every bandwidth in the topology
+    /// is scaled by this (congestion / flapping across the whole fabric).
+    pub link_eff: f64,
+    /// Jitter fraction in `[0, 1)`: simulated times are inflated by a
+    /// deterministic seeded factor in `[1, 1 + jitter)`.
+    pub jitter: f64,
+    /// Per-link-class degradations `(class, factor)`, applied in order via
+    /// [`Topology::degrade`]; classes from [`Topology::LINK_CLASSES`].
+    pub degraded_links: Vec<(String, f64)>,
+    /// Ranks that have fallen off the cluster entirely. A collective that
+    /// includes a dead rank cannot complete; the Planner must plan around
+    /// them (or the caller must error out, as [`simulate_faulty`] does).
+    pub dead_ranks: Vec<Rank>,
+    /// Seed for the jitter draw (reproducibility contract).
+    pub seed: u64,
+}
+
+impl Default for FaultModel {
+    fn default() -> FaultModel {
+        FaultModel {
+            link_eff: 1.0,
+            jitter: 0.0,
+            degraded_links: Vec::new(),
+            dead_ranks: Vec::new(),
+            seed: 0,
+        }
+    }
+}
+
+impl FaultModel {
+    /// Whether this is the healthy (default) model — the bit-transparent
+    /// fast path.
+    pub fn is_healthy(&self) -> bool {
+        self.link_eff == 1.0
+            && self.jitter == 0.0
+            && self.degraded_links.is_empty()
+            && self.dead_ranks.is_empty()
+    }
+
+    /// Parse a comma-separated fault spec, e.g. `ib:0.25,jitter:0.1,seed:7`.
+    ///
+    /// Accepted entries: `<class>:<factor>` with class from
+    /// [`Topology::LINK_CLASSES`], `eff:<factor>`, `jitter:<frac>`,
+    /// `dead:r<rank>`, `seed:<n>`. Anything else is a hard error quoting
+    /// [`FAULT_GRAMMAR`].
+    pub fn parse(spec: &str) -> Result<FaultModel> {
+        let bad = |entry: &str| {
+            Gc3Error::Invalid(format!(
+                "unknown fault entry '{entry}' in '{spec}' (accepted: {FAULT_GRAMMAR})"
+            ))
+        };
+        let mut m = FaultModel::default();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (key, val) = entry.split_once(':').ok_or_else(|| bad(entry))?;
+            match key {
+                "eff" => {
+                    m.link_eff = val.parse::<f64>().map_err(|_| bad(entry))?;
+                }
+                "jitter" => {
+                    m.jitter = val.parse::<f64>().map_err(|_| bad(entry))?;
+                    if !(0.0..1.0).contains(&m.jitter) {
+                        return Err(Gc3Error::Invalid(format!(
+                            "jitter {} out of range in '{spec}' (accepted: 0 <= jitter < 1)",
+                            m.jitter
+                        )));
+                    }
+                }
+                "dead" => {
+                    let r = val
+                        .strip_prefix('r')
+                        .and_then(|v| v.parse::<Rank>().ok())
+                        .ok_or_else(|| bad(entry))?;
+                    m.dead_ranks.push(r);
+                }
+                "seed" => {
+                    m.seed = val.parse::<u64>().map_err(|_| bad(entry))?;
+                }
+                cls if Topology::LINK_CLASSES.contains(&cls) => {
+                    let f = val.parse::<f64>().map_err(|_| bad(entry))?;
+                    m.degraded_links.push((cls.to_string(), f));
+                }
+                _ => return Err(bad(entry)),
+            }
+        }
+        Ok(m)
+    }
+
+    /// Derive the degraded topology this model implies: the global
+    /// `link_eff` scaling followed by every `degraded_links` entry folded
+    /// through [`Topology::degrade`]. Validates `link_eff` and that every
+    /// dead rank exists on the topology. A healthy model returns an
+    /// unmodified clone (same name — tuned tables still load).
+    pub fn degraded_topology(&self, topo: &Topology) -> Result<Topology> {
+        if !(self.link_eff > 0.0 && self.link_eff <= 1.0) {
+            return Err(Gc3Error::Invalid(format!(
+                "link_eff {} out of range (accepted: 0 < eff <= 1)",
+                self.link_eff
+            )));
+        }
+        for &r in &self.dead_ranks {
+            if r >= topo.num_ranks() {
+                return Err(Gc3Error::Invalid(format!(
+                    "dead rank r{r} does not exist on {} ({} ranks)",
+                    topo.name,
+                    topo.num_ranks()
+                )));
+            }
+        }
+        let mut t = topo.clone();
+        if self.link_eff < 1.0 {
+            t.nvlink_gpu_bw *= self.link_eff;
+            t.shm_bw *= self.link_eff;
+            t.ib_nic_bw *= self.link_eff;
+            t.ib_conn_bw *= self.link_eff;
+            t.pcie_switch_bw *= self.link_eff;
+            t.name = format!("{}!effx{}", t.name, self.link_eff);
+        }
+        for (link, factor) in &self.degraded_links {
+            t = t.degrade(link, *factor)?;
+        }
+        Ok(t)
+    }
+
+    /// Deterministic jitter multiplier in `[1, 1 + jitter)`. With
+    /// `jitter == 0` this is exactly `1.0` and **no RNG is constructed** —
+    /// the healthy path stays bit-transparent.
+    pub fn jitter_factor(&self) -> f64 {
+        if self.jitter == 0.0 {
+            return 1.0;
+        }
+        1.0 + self.jitter * Rng::new(self.seed).f64()
+    }
+}
+
+/// Simulate `ef` on `topo` under `model`: healthy models delegate
+/// bit-exactly to [`simulate`]; otherwise the EF is priced on the derived
+/// degraded topology and the seeded jitter factor inflates `time` (and
+/// deflates `algbw`) correspondingly. A dead rank that the EF includes is
+/// an error — the collective cannot complete and must be replanned around.
+pub fn simulate_faulty(
+    ef: &EfProgram,
+    topo: &Topology,
+    size_bytes: u64,
+    model: &FaultModel,
+) -> Result<SimReport> {
+    if model.is_healthy() {
+        return simulate(ef, topo, size_bytes);
+    }
+    for &r in &model.dead_ranks {
+        if r < ef.num_ranks {
+            return Err(Gc3Error::Exec(format!(
+                "rank r{r} is dead: collective '{}' over {} ranks cannot complete; \
+                 replan around it",
+                ef.name, ef.num_ranks
+            )));
+        }
+    }
+    let degraded = model.degraded_topology(topo)?;
+    let mut report = simulate(ef, &degraded, size_bytes)?;
+    let j = model.jitter_factor();
+    report.time *= j;
+    report.algbw /= j;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::library;
+    use crate::compiler::{compile, CompileOpts};
+
+    fn small_ef() -> (EfProgram, Topology) {
+        let mut topo = Topology::a100_single();
+        topo.gpus_per_node = 4;
+        let prog = library(&topo).unwrap().into_iter().find(|p| p.name == "allreduce_ring");
+        let prog = prog.expect("allreduce_ring in library");
+        let c = compile(&prog.trace, prog.name, &CompileOpts::default()).unwrap();
+        (c.ef, topo)
+    }
+
+    /// The transparency pin: a default model produces a report bit-equal
+    /// to the plain simulator — same time, same algbw, same event count.
+    #[test]
+    fn default_model_is_bit_transparent() {
+        let (ef, topo) = small_ef();
+        let base = simulate(&ef, &topo, 1 << 20).unwrap();
+        let faulty = simulate_faulty(&ef, &topo, 1 << 20, &FaultModel::default()).unwrap();
+        assert_eq!(base.time.to_bits(), faulty.time.to_bits());
+        assert_eq!(base.algbw.to_bits(), faulty.algbw.to_bits());
+        assert_eq!(base.events, faulty.events);
+        assert_eq!(base.flows, faulty.flows);
+    }
+
+    /// Degrading the priced fabric slows the simulated collective; jitter
+    /// with the same seed reproduces the exact same report.
+    #[test]
+    fn degradation_slows_and_jitter_is_deterministic() {
+        let (ef, topo) = small_ef();
+        let base = simulate(&ef, &topo, 1 << 20).unwrap();
+        let m = FaultModel {
+            degraded_links: vec![("nvlink".into(), 0.25)],
+            ..FaultModel::default()
+        };
+        let slow = simulate_faulty(&ef, &topo, 1 << 20, &m).unwrap();
+        assert!(slow.time > base.time, "{} !> {}", slow.time, base.time);
+
+        let j = FaultModel { jitter: 0.2, seed: 7, ..FaultModel::default() };
+        let a = simulate_faulty(&ef, &topo, 1 << 20, &j).unwrap();
+        let b = simulate_faulty(&ef, &topo, 1 << 20, &j).unwrap();
+        assert_eq!(a.time.to_bits(), b.time.to_bits(), "seeded jitter must reproduce");
+        assert!(a.time >= base.time && a.time < base.time * 1.2);
+        let j2 = FaultModel { seed: 8, ..j };
+        let c = simulate_faulty(&ef, &topo, 1 << 20, &j2).unwrap();
+        assert_ne!(a.time.to_bits(), c.time.to_bits(), "different seed, different draw");
+    }
+
+    #[test]
+    fn dead_rank_in_collective_is_an_error() {
+        let (ef, topo) = small_ef();
+        let m = FaultModel { dead_ranks: vec![2], ..FaultModel::default() };
+        let e = simulate_faulty(&ef, &topo, 1 << 20, &m).unwrap_err().to_string();
+        assert!(e.contains("r2 is dead"), "{e}");
+        assert!(e.contains("replan around it"), "{e}");
+        // A dead rank beyond the topology is rejected at derivation time.
+        let m = FaultModel { dead_ranks: vec![99], ..FaultModel::default() };
+        let e = m.degraded_topology(&topo).unwrap_err().to_string();
+        assert!(e.contains("r99 does not exist"), "{e}");
+    }
+
+    #[test]
+    fn parse_round_trips_and_hard_errors() {
+        let m = FaultModel::parse("ib:0.25,jitter:0.1,dead:r3,seed:42,eff:0.9").unwrap();
+        assert_eq!(m.degraded_links, vec![("ib".to_string(), 0.25)]);
+        assert_eq!(m.jitter, 0.1);
+        assert_eq!(m.dead_ranks, vec![3]);
+        assert_eq!(m.seed, 42);
+        assert_eq!(m.link_eff, 0.9);
+        assert!(!m.is_healthy());
+        assert!(FaultModel::parse("").unwrap().is_healthy());
+
+        for bad in ["sata:0.5", "ib", "ib:fast", "dead:3", "jitter:2.0"] {
+            let e = FaultModel::parse(bad).unwrap_err().to_string();
+            assert!(
+                e.contains(FAULT_GRAMMAR) || e.contains("out of range"),
+                "{bad}: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn degraded_topology_applies_eff_then_links() {
+        let topo = Topology::a100(2);
+        let m = FaultModel {
+            link_eff: 0.5,
+            degraded_links: vec![("ib".into(), 0.5)],
+            ..FaultModel::default()
+        };
+        let d = m.degraded_topology(&topo).unwrap();
+        assert!((d.nvlink_gpu_bw - topo.nvlink_gpu_bw * 0.5).abs() < 1.0);
+        assert!((d.ib_nic_bw - topo.ib_nic_bw * 0.25).abs() < 1.0, "eff × link stack");
+        assert_ne!(d.name, topo.name, "derived topologies are renamed");
+        // Healthy model → same name, same rates: tuned tables still load.
+        let same = FaultModel::default().degraded_topology(&topo).unwrap();
+        assert_eq!(same.name, topo.name);
+        assert_eq!(same.ib_nic_bw, topo.ib_nic_bw);
+        // Bad eff rejected.
+        let m = FaultModel { link_eff: 0.0, ..FaultModel::default() };
+        assert!(m.degraded_topology(&topo).is_err());
+    }
+}

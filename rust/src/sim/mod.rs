@@ -8,12 +8,17 @@
 //!   indexed + incremental (see the module docs / EXPERIMENTS.md §Perf).
 //! * [`reference`] — the pre-optimization engine, preserved verbatim as
 //!   the golden-parity oracle and the perf baseline.
+//! * [`fault`] — the unhealthy-cluster model: [`FaultModel`] (degraded
+//!   links, efficiency loss, seeded jitter, dead ranks) and
+//!   [`simulate_faulty`]; bit-transparent when the model is default.
 
 pub mod engine;
+pub mod fault;
 pub mod protocol;
 pub mod reference;
 pub mod resources;
 
 pub use engine::{simulate, SimReport, STAGING_BYTES};
+pub use fault::{simulate_faulty, FaultModel};
 pub use protocol::Protocol;
 pub use reference::simulate_reference;

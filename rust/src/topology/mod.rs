@@ -13,7 +13,7 @@
 //! All bandwidths are bytes/second, latencies seconds. The calibration
 //! rationale for each constant is in DESIGN.md §6.
 
-use crate::core::Rank;
+use crate::core::{Gc3Error, Rank, Result};
 
 /// Physical link classes a connection can ride (§4.2).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -220,6 +220,41 @@ impl Topology {
         let r = self.gpus_per_node as f64;
         self.nvlink_gpu_bw * r / (2.0 * (r - 1.0))
     }
+
+    /// Link classes accepted by [`Topology::degrade`].
+    pub const LINK_CLASSES: [&'static str; 4] = ["nvlink", "shm", "ib", "pcie"];
+
+    /// Derived topology with one link class running at `factor` of its
+    /// healthy bandwidth (`0 < factor ≤ 1`) — the fault model the Planner
+    /// prices when a link is flapping or renegotiated down. The derived
+    /// topology is renamed (`{name}!{link}x{factor}`), so tuned tables
+    /// captured on the healthy fabric refuse to load into it: plans tuned
+    /// on one link inventory don't transfer to a degraded one.
+    pub fn degrade(&self, link: &str, factor: f64) -> Result<Topology> {
+        if !(factor > 0.0 && factor <= 1.0) {
+            return Err(Gc3Error::Invalid(format!(
+                "degrade factor {factor} out of range (accepted: 0 < factor <= 1)"
+            )));
+        }
+        let mut t = self.clone();
+        match link {
+            "nvlink" => t.nvlink_gpu_bw *= factor,
+            "shm" => t.shm_bw *= factor,
+            "ib" => {
+                t.ib_nic_bw *= factor;
+                t.ib_conn_bw *= factor;
+            }
+            "pcie" => t.pcie_switch_bw *= factor,
+            _ => {
+                return Err(Gc3Error::Invalid(format!(
+                    "unknown link class '{link}' (accepted: {})",
+                    Self::LINK_CLASSES.join(", ")
+                )))
+            }
+        }
+        t.name = format!("{}!{link}x{factor}", self.name);
+        Ok(t)
+    }
 }
 
 #[cfg(test)]
@@ -289,6 +324,42 @@ mod tests {
         assert_eq!(t.nic_of(7), 1);
         assert_eq!(t.pcie_switch_of(3), 0);
         assert_eq!(t.pcie_switch_of(4), 1);
+    }
+
+    #[test]
+    fn degrade_scales_one_link_class() {
+        let t = Topology::a100(2);
+        let d = t.degrade("ib", 0.25).unwrap();
+        assert_eq!(d.name, "a100x2!ibx0.25");
+        assert!((d.ib_nic_bw - t.ib_nic_bw * 0.25).abs() < 1.0);
+        assert!((d.ib_conn_bw - t.ib_conn_bw * 0.25).abs() < 1.0);
+        // Other classes untouched.
+        assert_eq!(d.nvlink_gpu_bw, t.nvlink_gpu_bw);
+        assert_eq!(d.shm_bw, t.shm_bw);
+        assert_eq!(d.pcie_switch_bw, t.pcie_switch_bw);
+        let n = t.degrade("nvlink", 0.5).unwrap();
+        assert!((n.nvlink_gpu_bw - 150.0e9).abs() < 1.0);
+        assert_eq!(n.ib_nic_bw, t.ib_nic_bw);
+        // Degrading can stack: each derivation renames again.
+        let dd = d.degrade("pcie", 0.5).unwrap();
+        assert_eq!(dd.name, "a100x2!ibx0.25!pciex0.5");
+        assert!((dd.pcie_switch_bw - t.pcie_switch_bw * 0.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn degrade_rejects_bad_inputs() {
+        let t = Topology::a100(1);
+        let e = t.degrade("sata", 0.5).unwrap_err().to_string();
+        assert!(e.contains("unknown link class 'sata'"), "{e}");
+        assert!(e.contains("nvlink, shm, ib, pcie"), "{e}");
+        for bad in [0.0, -0.5, 1.5] {
+            let e = t.degrade("ib", bad).unwrap_err().to_string();
+            assert!(e.contains("out of range"), "{bad}: {e}");
+        }
+        // factor 1.0 is legal (identity bandwidths, derived name).
+        let same = t.degrade("ib", 1.0).unwrap();
+        assert_eq!(same.ib_nic_bw, t.ib_nic_bw);
+        assert_ne!(same.name, t.name);
     }
 
     #[test]

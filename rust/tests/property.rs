@@ -260,6 +260,132 @@ fn random_programs_pass_all_cross_checks() {
     assert!(*rank_counts.iter().max().unwrap() <= 8);
 }
 
+// ---------------------------------------------------------------------------
+// Fault layer: degradation changes *which plan wins*, never *what it
+// computes*, and seeded jitter is reproducible.
+// ---------------------------------------------------------------------------
+
+/// Execute `ef` over a chunk-layout-independent input pattern and return
+/// the output buffers as flat bit vectors.
+///
+/// Two plans for the same collective may chunk the data differently
+/// (instance replication, NCCL channel splits), so [`test_pattern`] — which
+/// keys on the *chunk* index — would hand them different logical inputs.
+/// Here every rank's input is the same flat vector of `total_elems` small
+/// integers regardless of chunking (exact under f32 reduction), so any two
+/// correct AllReduce EFs must produce bit-identical flat outputs.
+fn flat_output_bits(ef: &EfProgram, total_elems: usize) -> Vec<Vec<u32>> {
+    assert_eq!(
+        total_elems % ef.in_chunks,
+        0,
+        "{}: total_elems {total_elems} not divisible by in_chunks {}",
+        ef.name,
+        ef.in_chunks
+    );
+    let elems = total_elems / ef.in_chunks;
+    let mut session = Session::named("fault_prop");
+    session.register(ef.clone()).unwrap();
+    let mut mem = Memory::for_ef(ef, elems);
+    mem.fill_pattern(|rank, idx, k| ((rank * 131 + (idx * elems + k) * 17) % 2048) as f32);
+    session.launch(&ef.name, &mut mem).unwrap();
+    mem.output.iter().map(|buf| buf.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    fn gcd(a: usize, b: usize) -> usize {
+        if b == 0 { a } else { gcd(b, a % b) }
+    }
+    a / gcd(a, b) * b
+}
+
+/// The resilience contract, swept over every evaluation fabric × every
+/// link class: under a single-link degradation, (a) the replanned choice
+/// simulates no slower than the naive (healthy-dispatch) plan on the
+/// degraded network, and (b) the replanned EF's executed output bytes are
+/// identical to the healthy plan's — degradation may move the dispatch,
+/// never the answer.
+#[test]
+fn single_link_degradation_preserves_bytes_and_never_replans_slower() {
+    use gc3::planner::Planner;
+    use gc3::sim::FaultModel;
+    use gc3::topology::Topology;
+    use gc3::tune::Collective;
+
+    const SIZE: u64 = 1024 * 1024; // inside the allreduce dispatch window
+    for topo in [Topology::a100(2), Topology::ndv2(2), Topology::ndv4(2), Topology::asym(2)] {
+        let healthy = Planner::new(topo.clone())
+            .plan(Collective::AllReduce, SIZE)
+            .unwrap_or_else(|e| panic!("{}: healthy plan: {e}", topo.name));
+        for link in Topology::LINK_CLASSES {
+            let model = FaultModel {
+                degraded_links: vec![(link.to_string(), 0.25)],
+                ..FaultModel::default()
+            };
+            let mut planner = Planner::new(topo.clone());
+            let r = planner
+                .replan_degraded(&model, Collective::AllReduce, SIZE)
+                .unwrap_or_else(|e| panic!("{} / {link}: replan: {e}", topo.name));
+
+            // (a) Beats-or-matches, and the winner is priced on the
+            // degraded fabric (not the healthy one).
+            assert!(
+                r.time <= r.naive_time * (1.0 + 1e-9),
+                "{} / {link}: replanned {} s slower than naive {} s",
+                topo.name,
+                r.time,
+                r.naive_time
+            );
+            assert!(
+                r.plan.topo().name.contains(&format!("{link}x0.25")),
+                "{} / {link}: replanned plan priced on '{}', not the degraded fabric",
+                topo.name,
+                r.plan.topo().name
+            );
+
+            // (b) Byte-identity with the healthy execution over the same
+            // flat logical input.
+            let total = lcm(lcm(healthy.ef.in_chunks, r.plan.ef.in_chunks), 4);
+            let h = flat_output_bits(&healthy.ef, total);
+            let d = flat_output_bits(&r.plan.ef, total);
+            assert_eq!(
+                h, d,
+                "{} / {link}: replanned EF '{}' diverged from healthy EF '{}'",
+                topo.name, r.plan.ef.name, healthy.ef.name
+            );
+        }
+    }
+}
+
+/// Seeded jitter is deterministic (same seed → bit-identical simulated
+/// time), seed-sensitive, and the default model is bit-transparent: with
+/// no faults installed, `simulate_faulty` IS `simulate`.
+#[test]
+fn fault_model_jitter_is_seeded_and_default_is_transparent() {
+    use gc3::planner::Planner;
+    use gc3::sim::{simulate, simulate_faulty, FaultModel};
+    use gc3::topology::Topology;
+    use gc3::tune::Collective;
+
+    const SIZE: u64 = 1024 * 1024;
+    let topo = Topology::a100_single();
+    let plan = Planner::new(topo.clone()).plan(Collective::AllReduce, SIZE).unwrap();
+
+    let healthy = simulate(&plan.ef, &topo, SIZE).unwrap();
+    let transparent = simulate_faulty(&plan.ef, &topo, SIZE, &FaultModel::default()).unwrap();
+    assert_eq!(healthy.time.to_bits(), transparent.time.to_bits(), "default model not bit-exact");
+    assert_eq!(healthy.algbw.to_bits(), transparent.algbw.to_bits());
+
+    let jittery = FaultModel { jitter: 0.25, seed: 7, ..FaultModel::default() };
+    let a = simulate_faulty(&plan.ef, &topo, SIZE, &jittery).unwrap();
+    let b = simulate_faulty(&plan.ef, &topo, SIZE, &jittery).unwrap();
+    assert_eq!(a.time.to_bits(), b.time.to_bits(), "same seed must reproduce the same time");
+    assert!(a.time >= healthy.time, "jitter must never speed up the simulated clock");
+
+    let reseeded = FaultModel { seed: 8, ..jittery };
+    let c = simulate_faulty(&plan.ef, &topo, SIZE, &reseeded).unwrap();
+    assert_ne!(a.time.to_bits(), c.time.to_bits(), "seed must steer the jitter draw");
+}
+
 /// The generator's determinism contract: same seed, same programs.
 #[test]
 fn generator_is_deterministic() {
