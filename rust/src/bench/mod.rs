@@ -9,9 +9,12 @@
 //!
 //! [`perf`] is the compiler/simulator throughput harness behind
 //! `cargo bench --bench compiler_perf` and `BENCH_compiler_perf.json`
-//! (EXPERIMENTS.md §Perf).
+//! (EXPERIMENTS.md §Perf). [`regress`] diffs two such artifacts and flags
+//! metric drops beyond a tolerance — the `gc3 benchdiff` verb and the CI
+//! perf gate.
 
 pub mod perf;
+pub mod regress;
 
 use crate::collectives::{allreduce, alltonext, basics};
 use crate::compiler::{compile, CompileOpts};

@@ -1,0 +1,276 @@
+//! Bench-artifact regression gate: diff two `BENCH_compiler_perf.json`
+//! files (EXPERIMENTS.md §Perf) and flag metric drops beyond a tolerance.
+//!
+//! The bench harness *records* the perf trajectory; this module
+//! *enforces* it. [`diff`] walks the named rows shared by an old and a
+//! new artifact — compiler cases (`compile_ms`, `events_per_sec`), exec
+//! scenarios (`cooperative_elems_per_sec`, `threaded_elems_per_sec`) and
+//! serve traces (`req_per_sec`, `p99_s`) — normalizes each comparison so
+//! "worse" is positive regardless of the metric's direction, and marks a
+//! row regressed when it worsened by more than the tolerance. The
+//! `gc3 benchdiff <old.json> <new.json>` verb prints the report and exits
+//! non-zero on any regression; CI runs it against the committed baseline
+//! in `ci/bench_baseline.json`.
+//!
+//! Rows present in the old artifact but absent from the new one are
+//! *warnings*, not failures — a renamed scenario should show up in review,
+//! not break the build silently the other way.
+
+use crate::core::{Gc3Error, Result};
+use crate::util::json::Json;
+
+/// Default regression tolerance: a metric may be up to this fraction
+/// worse than the baseline before it counts as a regression. Wall-clock
+/// benches on shared CI runners are noisy, so the CI gate usually runs
+/// looser (see `.github/workflows/ci.yml`).
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// One metric comparison on a row shared by both artifacts.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    /// `section[row].metric`, e.g. `exec[ring_allreduce_8r].threaded_elems_per_sec`.
+    pub key: String,
+    pub old: f64,
+    pub new: f64,
+    /// Fractional worsening, direction-normalized: positive means worse
+    /// (slower compile, fewer events/s, higher p99), negative means
+    /// better.
+    pub worse: f64,
+    /// `worse > tolerance`.
+    pub regressed: bool,
+}
+
+/// The full comparison of two artifacts.
+#[derive(Clone, Debug)]
+pub struct DiffReport {
+    pub rows: Vec<DiffRow>,
+    /// Metric keys present in the old artifact with no counterpart in the
+    /// new one (warnings, never gated).
+    pub missing: Vec<String>,
+    pub tolerance: f64,
+}
+
+impl DiffReport {
+    /// The rows that worsened beyond the tolerance.
+    pub fn regressions(&self) -> Vec<&DiffRow> {
+        self.rows.iter().filter(|r| r.regressed).collect()
+    }
+
+    /// An aligned, line-per-metric text report.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "benchdiff: {} comparable metrics, tolerance {:.1}%\n",
+            self.rows.len(),
+            self.tolerance * 100.0
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{} {:<56} {:>14.3} -> {:>14.3} ({:+.1}% worse)\n",
+                if r.regressed { "REGRESSED" } else { "       ok" },
+                r.key,
+                r.old,
+                r.new,
+                r.worse * 100.0
+            ));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("  warning {m}: present in old artifact only\n"));
+        }
+        let n = self.regressions().len();
+        if n == 0 {
+            out.push_str("no regressions\n");
+        } else {
+            out.push_str(&format!("{n} regression(s) beyond tolerance\n"));
+        }
+        out
+    }
+}
+
+/// Which metric of which artifact section to compare, and its direction.
+struct MetricSpec {
+    /// Top-level array in the artifact (`cases` / `exec` / `serve`).
+    section: &'static str,
+    /// The row's identity field within the section.
+    key_field: &'static str,
+    metric: &'static str,
+    lower_is_better: bool,
+}
+
+const METRICS: &[MetricSpec] = &[
+    MetricSpec { section: "cases", key_field: "name", metric: "compile_ms", lower_is_better: true },
+    MetricSpec {
+        section: "cases",
+        key_field: "name",
+        metric: "events_per_sec",
+        lower_is_better: false,
+    },
+    MetricSpec {
+        section: "exec",
+        key_field: "scenario",
+        metric: "cooperative_elems_per_sec",
+        lower_is_better: false,
+    },
+    MetricSpec {
+        section: "exec",
+        key_field: "scenario",
+        metric: "threaded_elems_per_sec",
+        lower_is_better: false,
+    },
+    MetricSpec { section: "serve", key_field: "trace", metric: "req_per_sec", lower_is_better: false },
+    MetricSpec { section: "serve", key_field: "trace", metric: "p99_s", lower_is_better: true },
+];
+
+fn section<'a>(doc: &'a Json, name: &str) -> &'a [Json] {
+    doc.get(name).and_then(|j| j.as_arr()).unwrap_or(&[])
+}
+
+/// Compare two parsed bench artifacts. Rows are matched by the section's
+/// identity field; a row's metric is skipped when the old value is
+/// non-positive (nothing to normalize against) or either value is
+/// non-finite.
+pub fn diff(old: &Json, new: &Json, tolerance: f64) -> Result<DiffReport> {
+    if tolerance < 0.0 || !tolerance.is_finite() {
+        return Err(Gc3Error::Invalid(format!(
+            "benchdiff tolerance must be a non-negative fraction, got {tolerance}"
+        )));
+    }
+    let mut rows = Vec::new();
+    let mut missing = Vec::new();
+    for spec in METRICS {
+        let new_rows = section(new, spec.section);
+        for o in section(old, spec.section) {
+            let id = match o.get(spec.key_field).and_then(|j| j.as_str()) {
+                Some(id) => id,
+                None => continue,
+            };
+            let key = format!("{}[{}].{}", spec.section, id, spec.metric);
+            let ov = match o.get(spec.metric).and_then(|j| j.as_f64()) {
+                Some(v) => v,
+                None => continue,
+            };
+            let counterpart = new_rows
+                .iter()
+                .find(|n| n.get(spec.key_field).and_then(|j| j.as_str()) == Some(id));
+            let nv = match counterpart.and_then(|n| n.get(spec.metric)).and_then(|j| j.as_f64())
+            {
+                Some(v) => v,
+                None => {
+                    missing.push(key);
+                    continue;
+                }
+            };
+            if ov <= 0.0 || !ov.is_finite() || !nv.is_finite() {
+                continue;
+            }
+            let worse =
+                if spec.lower_is_better { (nv - ov) / ov } else { (ov - nv) / ov };
+            rows.push(DiffRow { key, old: ov, new: nv, worse, regressed: worse > tolerance });
+        }
+    }
+    Ok(DiffReport { rows, missing, tolerance })
+}
+
+/// [`diff`] over two artifact files on disk.
+pub fn diff_files(old_path: &str, new_path: &str, tolerance: f64) -> Result<DiffReport> {
+    let load = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Gc3Error::Invalid(format!("benchdiff: read {path}: {e}")))?;
+        Json::parse(&text)
+            .map_err(|e| Gc3Error::Invalid(format!("benchdiff: parse {path}: {e}")))
+    };
+    diff(&load(old_path)?, &load(new_path)?, tolerance)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal artifact with one row per section, parameterized on the
+    /// metrics the tests vary.
+    fn artifact(events_per_sec: f64, compile_ms: f64, req_per_sec: f64, p99_s: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"schema_version": 6,
+                 "cases": [{{"name": "ring_allreduce_8r_x4inst",
+                             "compile_ms": {compile_ms},
+                             "events_per_sec": {events_per_sec}}}],
+                 "exec": [{{"scenario": "ring_allreduce_8r",
+                            "cooperative_elems_per_sec": 1000.0,
+                            "threaded_elems_per_sec": 2000.0}}],
+                 "serve": [{{"trace": "mixed:48:1",
+                             "req_per_sec": {req_per_sec},
+                             "p99_s": {p99_s}}}]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn identical_artifacts_have_no_regressions() {
+        let a = artifact(50_000.0, 12.5, 800.0, 0.002);
+        let report = diff(&a, &a, DEFAULT_TOLERANCE).unwrap();
+        assert_eq!(report.rows.len(), 6, "every metric of every row compared");
+        assert!(report.regressions().is_empty());
+        assert!(report.missing.is_empty());
+        assert!(report.render().contains("no regressions"));
+    }
+
+    #[test]
+    fn throughput_drop_beyond_tolerance_is_flagged() {
+        let old = artifact(50_000.0, 12.5, 800.0, 0.002);
+        let new = artifact(37_500.0, 12.5, 800.0, 0.002); // 25% events/s drop
+        let report = diff(&old, &new, 0.10).unwrap();
+        let regs = report.regressions();
+        assert_eq!(regs.len(), 1, "{}", report.render());
+        assert!(regs[0].key.contains("events_per_sec"), "{}", regs[0].key);
+        assert!((regs[0].worse - 0.25).abs() < 1e-9);
+        assert!(report.render().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn drops_within_tolerance_and_improvements_pass() {
+        let old = artifact(50_000.0, 12.5, 800.0, 0.002);
+        // 5% events/s drop, faster compile, better p99: all fine at 10%.
+        let new = artifact(47_500.0, 10.0, 900.0, 0.001);
+        let report = diff(&old, &new, 0.10).unwrap();
+        assert!(report.regressions().is_empty(), "{}", report.render());
+        // Improvements show negative "worse".
+        assert!(report.rows.iter().any(|r| r.worse < 0.0));
+    }
+
+    #[test]
+    fn lower_is_better_metrics_flag_increases() {
+        let old = artifact(50_000.0, 12.5, 800.0, 0.002);
+        let new = artifact(50_000.0, 20.0, 800.0, 0.004); // compile +60%, p99 +100%
+        let report = diff(&old, &new, 0.10).unwrap();
+        let keys: Vec<&str> = report.regressions().iter().map(|r| r.key.as_str()).collect();
+        assert_eq!(keys.len(), 2, "{keys:?}");
+        assert!(keys.iter().any(|k| k.contains("compile_ms")), "{keys:?}");
+        assert!(keys.iter().any(|k| k.contains("p99_s")), "{keys:?}");
+    }
+
+    #[test]
+    fn rows_missing_from_new_artifact_warn_but_never_gate() {
+        let old = artifact(50_000.0, 12.5, 800.0, 0.002);
+        let new = Json::parse(
+            r#"{"cases": [{"name": "ring_allreduce_8r_x4inst",
+                           "compile_ms": 12.5, "events_per_sec": 50000.0}]}"#,
+        )
+        .unwrap();
+        let report = diff(&old, &new, 0.10).unwrap();
+        assert!(report.regressions().is_empty());
+        assert_eq!(report.missing.len(), 4, "{:?}", report.missing);
+        assert!(report.render().contains("warning"));
+    }
+
+    #[test]
+    fn zero_and_invalid_baselines_are_skipped_and_bad_tolerance_rejected() {
+        let old = artifact(0.0, 12.5, 800.0, 0.002);
+        let new = artifact(100.0, 12.5, 800.0, 0.002);
+        let report = diff(&old, &new, 0.10).unwrap();
+        assert!(
+            report.rows.iter().all(|r| !r.key.contains("events_per_sec")),
+            "zero baseline has nothing to normalize against"
+        );
+        assert!(diff(&old, &new, -0.5).is_err());
+        assert!(diff(&old, &new, f64::NAN).is_err());
+    }
+}

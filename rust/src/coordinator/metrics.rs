@@ -20,11 +20,23 @@ const LAT_BUCKETS: usize = LAT_BOUNDS_US.len() + 1;
 #[derive(Clone, Debug, Default)]
 pub struct LatencyHistogram {
     counts: [u64; LAT_BUCKETS],
+    /// Samples rejected by [`LatencyHistogram::record`]: NaN, negative, or
+    /// infinite durations. A NaN used to land in the overflow bucket
+    /// (inflating reported p99) and a negative in the first bucket
+    /// (deflating p50); both now count here instead of poisoning the
+    /// quantiles, and the `gc3 serve` shutdown row surfaces the count.
+    pub invalid_samples: u64,
 }
 
 impl LatencyHistogram {
-    /// Record one latency sample.
+    /// Record one latency sample. Non-finite and negative samples are
+    /// counted in [`LatencyHistogram::invalid_samples`] and excluded from
+    /// the buckets (and therefore from every quantile).
     pub fn record(&mut self, seconds: f64) {
+        if !seconds.is_finite() || seconds < 0.0 {
+            self.invalid_samples += 1;
+            return;
+        }
         let us = seconds * 1e6;
         let idx = LAT_BOUNDS_US
             .iter()
@@ -115,7 +127,7 @@ impl fmt::Display for ServeMetrics {
         write!(
             f,
             "serve: admitted={} rejected={} failed={} coalesced={} launches={} queue={}/{} \
-             p50{} p99{} retries={} wedged={} replans={}",
+             p50{} p99{} retries={} wedged={} replans={} invalid={}",
             self.admitted,
             self.rejected,
             self.failed,
@@ -128,6 +140,7 @@ impl fmt::Display for ServeMetrics {
             self.retries,
             self.wedged,
             self.replans,
+            self.latency.invalid_samples,
         )
     }
 }
@@ -260,5 +273,35 @@ mod tests {
         assert!(s.contains("p50<=100us"), "{s}");
         // The resilience counters ride the same row.
         assert!(s.contains("retries=2 wedged=1 replans=0"), "{s}");
+    }
+
+    /// NaN used to be filed into the overflow bucket (`NaN <= bound` is
+    /// false for every bound) inflating p99, and negatives into the first
+    /// bucket deflating p50. Both are now rejected, counted, and surfaced.
+    #[test]
+    fn invalid_samples_are_guarded_counted_and_surfaced() {
+        let mut h = LatencyHistogram::default();
+        h.record(f64::NAN);
+        h.record(-1e-3);
+        h.record(f64::INFINITY);
+        h.record(f64::NEG_INFINITY);
+        assert_eq!(h.total(), 0, "invalid samples never reach the buckets");
+        assert_eq!(h.invalid_samples, 4);
+        assert_eq!(h.quantile_us(0.99), None, "no valid samples, no quantile");
+        // Valid samples still bucket normally alongside the rejects.
+        h.record(40e-6);
+        assert_eq!(h.total(), 1);
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(h.quantile_us(0.99), Some(50.0), "p99 no longer NaN-inflated");
+        assert_eq!(h.invalid_samples, 4);
+        // Zero is a legal (clock-granularity) sample, not an invalid one.
+        h.record(0.0);
+        assert_eq!(h.counts()[0], 2);
+        // The serve row surfaces the count.
+        let mut m = Metrics::new();
+        m.serve.admitted = 1;
+        m.serve.latency.record(f64::NAN);
+        let s = format!("{m}");
+        assert!(s.contains("invalid=1"), "{s}");
     }
 }

@@ -45,8 +45,10 @@ use crate::dsl::collective::CollectiveSpec;
 use crate::ef::EfProgram;
 use crate::exec::{check_memory, test_pattern, ExecStats, Memory, NativeReducer, Reducer};
 use crate::instdag::OpCode;
+use crate::trace::TraceSink;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// Payload buffers kept in a VM's free pool; beyond this they are dropped.
 const POOL_CAP: usize = 16;
@@ -244,6 +246,18 @@ struct TbRun {
     recv: Option<RecvPort>,
 }
 
+/// Per-VM trace recorder: wall-clock spans of retired instructions,
+/// measured against the session's shared trace epoch so spans from
+/// different launches (and different worker threads) land on one
+/// timeline. Travels inside the VM, so the threaded driver records with
+/// zero cross-thread synchronization; [`Session::reassemble`] drains it.
+struct VmTracer {
+    /// The session-wide epoch ([`Session::trace_enable`] sets it once).
+    base: Instant,
+    /// `(tb, op, start_us, dur_us)` per retired instruction.
+    events: Vec<(usize, OpCode, f64, f64)>,
+}
+
 /// What one [`RankVm::step`] did.
 enum Step {
     /// Retired one instruction; `sent` = it pushed a message.
@@ -278,6 +292,10 @@ pub struct RankVm {
     /// Injected fault: a wedged VM stops retiring instructions, so its
     /// unfinished threadblocks surface in the deadlock census.
     wedged: bool,
+    /// Present only while the session records a timeline
+    /// ([`Session::trace_enable`]); `None` keeps the hot loop's cost at
+    /// one branch per retired instruction.
+    tracer: Option<VmTracer>,
 }
 
 impl RankVm {
@@ -361,6 +379,10 @@ impl RankVm {
             }
             incoming = Some(data);
         }
+        // Past every block check: the instruction WILL retire. Span starts
+        // here so spin/starvation time never pollutes execution spans.
+        let trace_t0 =
+            self.tracer.as_ref().map(|tr| tr.base.elapsed().as_secs_f64() * 1e6);
         let src = |s: Option<(crate::core::BufferId, usize)>| {
             s.ok_or_else(|| Gc3Error::Exec(format!("r{rank}/tb{t}/step{pc}: missing src")))
         };
@@ -438,6 +460,11 @@ impl RankVm {
         self.tbs[t].pc += 1;
         self.progress[t] += 1;
         self.retired += 1;
+        if let Some(t0) = trace_t0 {
+            let tr = self.tracer.as_mut().expect("tracer present when t0 captured");
+            let end = tr.base.elapsed().as_secs_f64() * 1e6;
+            tr.events.push((t, inst.op, t0, (end - t0).max(0.0)));
+        }
         Ok(Step::Advanced { sent })
     }
 
@@ -504,6 +531,14 @@ pub struct Session {
     /// default) leaves every launch path bit-identical to a fault-free
     /// session.
     fault: Option<SessionFault>,
+    /// Shared trace epoch; `Some` once [`Session::trace_enable`] ran, so
+    /// back-to-back launches land on one timeline.
+    trace_base: Option<Instant>,
+    /// Drained instruction spans: `(rank, tb, op, start_us, dur_us)`.
+    trace_spans: Vec<(Rank, usize, OpCode, f64, f64)>,
+    /// Instant markers: `(rank, name, us)`; `None` rank = a launch-level
+    /// marker (deadlock / timeout) on the synthetic session track.
+    trace_marks: Vec<(Option<Rank>, &'static str, f64)>,
 }
 
 impl Default for Session {
@@ -527,6 +562,66 @@ impl Session {
             vm_scratch: Vec::new(),
             driver: Driver::Cooperative,
             fault: None,
+            trace_base: None,
+            trace_spans: Vec::new(),
+            trace_marks: Vec::new(),
+        }
+    }
+
+    /// Record a wall-clock timeline for every subsequent launch: one span
+    /// per retired instruction (per rank, per threadblock, on both
+    /// drivers) plus wedge / deadlock / timeout markers from the fault
+    /// machinery. Drain into a [`TraceSink`] with [`Session::trace_into`].
+    /// The epoch is set once, so repeat launches share one timeline.
+    pub fn trace_enable(&mut self) -> &mut Session {
+        if self.trace_base.is_none() {
+            self.trace_base = Some(Instant::now());
+        }
+        self
+    }
+
+    /// Whether [`Session::trace_enable`] has armed timeline recording.
+    pub fn tracing(&self) -> bool {
+        self.trace_base.is_some()
+    }
+
+    /// Drain every span and marker recorded since the last drain into
+    /// `sink`: one Perfetto process per rank (rows = threadblocks, span
+    /// name = the retired opcode), wedge markers on the wedged rank's
+    /// track, and launch-level deadlock/timeout markers on a synthetic
+    /// session track.
+    pub fn trace_into(&mut self, sink: &mut TraceSink) {
+        for (rank, tb, op, start, dur) in self.trace_spans.drain(..) {
+            sink.name_process(rank as u64, &format!("rank {rank}"));
+            sink.name_thread(rank as u64, tb as u64, &format!("tb{tb}"));
+            sink.complete(rank as u64, tb as u64, &format!("{op}"), start, dur, &[]);
+        }
+        let session_pid = self.num_ranks.unwrap_or(0) as u64;
+        for (rank, name, us) in self.trace_marks.drain(..) {
+            match rank {
+                Some(r) => {
+                    sink.name_process(r as u64, &format!("rank {r}"));
+                    sink.instant(r as u64, 0, name, us, &[]);
+                }
+                None => {
+                    sink.name_process(session_pid, &format!("session '{}'", self.label));
+                    sink.instant(session_pid, 0, name, us, &[]);
+                }
+            }
+        }
+    }
+
+    /// A launch-level failure marker on the session track (no-op unless
+    /// tracing): deadlocks and sweep-budget timeouts get their own names
+    /// so they are searchable in the Perfetto UI.
+    fn trace_mark_failure(&mut self, e: &Gc3Error) {
+        if let Some(base) = self.trace_base {
+            let kind = match e {
+                Gc3Error::Deadlock(_) => "deadlock",
+                Gc3Error::Exec(m) if m.contains("sweep budget") => "timeout",
+                _ => "launch-failed",
+            };
+            self.trace_marks.push((None, kind, base.elapsed().as_secs_f64() * 1e6));
         }
     }
 
@@ -645,6 +740,7 @@ impl Session {
                 if !matches!(self.fault, Some(SessionFault::WedgeRank(_))) {
                     self.flush_channels();
                 }
+                self.trace_mark_failure(&e);
                 return Err(e);
             }
         }
@@ -710,6 +806,7 @@ impl Session {
             if !matches!(self.fault, Some(SessionFault::WedgeRank(_))) {
                 self.flush_channels();
             }
+            self.trace_mark_failure(&err);
             return Err(err);
         }
         self.drain_check()?;
@@ -840,6 +937,9 @@ impl Session {
                 retired: 0,
                 total,
                 wedged: matches!(self.fault, Some(SessionFault::WedgeRank(w)) if w == rank),
+                tracer: self
+                    .trace_base
+                    .map(|base| VmTracer { base, events: Vec::new() }),
             });
         }
         Ok(vms)
@@ -856,6 +956,15 @@ impl Session {
     fn reassemble(&mut self, mem: &mut Memory, vms: Vec<RankVm>) -> ExecStats {
         let mut stats = ExecStats::default();
         for mut vm in vms {
+            if let Some(tr) = vm.tracer.take() {
+                if vm.wedged {
+                    let us = tr.base.elapsed().as_secs_f64() * 1e6;
+                    self.trace_marks.push((Some(vm.rank), "wedged", us));
+                }
+                for (tb, op, start, dur) in tr.events {
+                    self.trace_spans.push((vm.rank, tb, op, start, dur));
+                }
+            }
             stats.messages += vm.stats.messages;
             stats.elems_moved += vm.stats.elems_moved;
             mem.input[vm.rank] = std::mem::take(&mut vm.mem.input);
@@ -1390,6 +1499,73 @@ mod tests {
         s.inject_fault(Some(SessionFault::DropConn(0, 5)));
         let err = s.launch("ag2", &mut mem).unwrap_err().to_string();
         assert!(err.contains("drop:r0-r5") && err.contains("beyond"), "{err}");
+    }
+
+    /// With tracing enabled, every retired instruction produces exactly
+    /// one span, on both drivers — and draining the session empties the
+    /// buffer so repeated drains never duplicate events.
+    #[test]
+    fn tracing_records_one_span_per_retired_instruction() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        let total: usize = c
+            .ef
+            .gpus
+            .iter()
+            .map(|g| g.tbs.iter().map(|tb| tb.steps.len()).sum::<usize>())
+            .sum();
+        for threads in [1usize, 3] {
+            let mut s = Session::named("traced");
+            s.register(c.ef.clone()).unwrap();
+            if threads > 1 {
+                s.run_threaded(threads);
+            }
+            assert!(!s.tracing());
+            s.trace_enable();
+            assert!(s.tracing());
+            let mut mem = Memory::for_ef(&c.ef, 4);
+            mem.fill_pattern(test_pattern);
+            s.launch("ag4", &mut mem).unwrap();
+            let mut sink = crate::trace::TraceSink::new();
+            s.trace_into(&mut sink);
+            assert_eq!(
+                sink.span_count(),
+                total,
+                "threads={threads}: one span per retired instruction"
+            );
+            let drained = sink.len();
+            s.trace_into(&mut sink);
+            assert_eq!(sink.len(), drained, "threads={threads}: drain must empty the buffer");
+        }
+    }
+
+    /// Fault markers ride the trace: a wedged rank gets a `wedged` instant
+    /// on its own track and the failed launch a `deadlock` marker on the
+    /// session track — the timeline answer to "which rank hung".
+    #[test]
+    fn wedge_and_deadlock_markers_land_in_trace() {
+        let t = ring_allgather(4);
+        let c = compile(&t, "ag4", &CompileOpts::default()).unwrap();
+        let mut s = Session::named("wtrace");
+        s.register(c.ef.clone()).unwrap();
+        s.trace_enable();
+        s.inject_fault(Some(SessionFault::WedgeRank(1)));
+        let mut mem = Memory::for_ef(&c.ef, 2);
+        mem.fill_pattern(test_pattern);
+        s.launch("ag4", &mut mem).unwrap_err();
+        let mut sink = crate::trace::TraceSink::new();
+        s.trace_into(&mut sink);
+        let doc = sink.to_json();
+        let evs = doc.req_arr("traceEvents").unwrap();
+        let instant = |name: &str| {
+            evs.iter().any(|e| {
+                e.req_str("ph").unwrap() == "i" && e.req_str("name").unwrap() == name
+            })
+        };
+        assert!(instant("wedged"), "missing wedge marker");
+        assert!(instant("deadlock"), "missing deadlock marker");
+        // Healthy ranks still retired work before starving.
+        assert!(sink.span_count() > 0);
     }
 
     #[test]

@@ -127,7 +127,16 @@
 //!   AllReduce.
 //! * [`bench`] — the evaluation harness regenerating every figure of §6,
 //!   plus the compiler/simulator throughput suite behind
-//!   `BENCH_compiler_perf.json`.
+//!   `BENCH_compiler_perf.json` and the [`bench::regress`] artifact differ
+//!   (`gc3 benchdiff`) that gates perf regressions in CI.
+//! * [`trace`] — timeline observability: the dep-free Chrome/Perfetto
+//!   [`trace::TraceSink`] that all three facades emit into —
+//!   [`sim::simulate_traced`] (per-flow spans in simulated time),
+//!   [`exec::Session::trace_enable`] (per-threadblock instruction spans and
+//!   fault markers on both drivers), and
+//!   [`serve::Service::trace_enable`] (queue-depth counters plus per-tenant
+//!   wave/request/retry spans) — behind `--trace-out <file.json>`, loadable
+//!   in `ui.perfetto.dev`.
 
 pub mod util;
 pub mod core;
@@ -149,6 +158,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod train;
 pub mod bench;
+pub mod trace;
 
 pub use crate::compiler::Pipeline;
 pub use crate::core::{BufferId, ChanId, Rank, Slot, SlotRange};

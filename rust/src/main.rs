@@ -8,6 +8,7 @@
 //! gc3 verify    <program> [--instances R]       byte-accurate correctness
 //! gc3 exec      --program P --ranks N --threads T [--elems-per-chunk E]
 //! gc3 simulate  <program> --size S [--nodes N]  price a schedule
+//! gc3 benchdiff <old.json> <new.json> [--tolerance F]   perf gate
 //! gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]
 //! gc3 figures   [--fig 7|8|9|11|loc|abl]        regenerate §6 figures
 //! gc3 tune      --collective C [--sizes ...]    autotune + emit a TunedTable
@@ -22,8 +23,9 @@ use gc3::ef::EfProgram;
 use gc3::exec::{self, verify, Memory, NativeReducer, Session};
 use gc3::planner::Planner;
 use gc3::serve::{loadgen, FaultSpec, Service, ServiceConfig, TraceSpec};
-use gc3::sim::{simulate, FaultModel, Protocol};
+use gc3::sim::{simulate, simulate_traced, FaultModel, Protocol};
 use gc3::topology::Topology;
+use gc3::trace::TraceSink;
 use gc3::train::{train, TrainOpts};
 use gc3::tune::{self, Collective, TunedTable};
 use gc3::util::cli::Args;
@@ -183,6 +185,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let spec = c.ef.ef_spec(&trace);
             let mut session = Session::named(&format!("gc3-exec:{name}"));
             session.register(c.ef.clone())?;
+            if args.opt("trace-out").is_some() {
+                session.trace_enable();
+            }
             if threads > 1 {
                 session.run_threaded(threads);
             }
@@ -192,6 +197,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let stats = session.launch(&name, &mut mem)?;
             let dt = t0.elapsed().as_secs_f64();
             exec::check_memory(&mem, &spec)?;
+            if let Some(path) = args.opt("trace-out") {
+                let mut sink = TraceSink::new();
+                session.trace_into(&mut sink);
+                sink.write(path)?;
+                println!("wrote trace {path} ({} spans)", sink.span_count());
+            }
             let driver = if threads > 1 {
                 format!("threaded x{threads}")
             } else {
@@ -214,7 +225,16 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let size = args.bytes("size", 4 * 1024 * 1024);
             let trace = find_program(&topo, name)?;
             let c = Pipeline::new(&opts_from(args, &topo)?).run(&trace, name)?;
-            let rep = simulate(&c.ef, &topo, size)?;
+            let rep = match args.opt("trace-out") {
+                Some(path) => {
+                    let mut sink = TraceSink::new();
+                    let rep = simulate_traced(&c.ef, &topo, size, Some(&mut sink))?;
+                    sink.write(path)?;
+                    println!("wrote trace {path} ({} spans)", sink.span_count());
+                    rep
+                }
+                None => simulate(&c.ef, &topo, size)?,
+            };
             println!(
                 "{name} @ {} on {}: {:.1} us, algbw {:.2} GB/s ({} events, {} flows)",
                 util::human_bytes(size),
@@ -355,6 +375,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             };
             let threads = cfg.threads;
             let mut svc = Service::new(topo, cfg);
+            if args.opt("trace-out").is_some() {
+                svc.trace_enable();
+            }
             if let Some(path) = args.opt("tuned") {
                 let text =
                     std::fs::read_to_string(path).map_err(|e| Gc3Error::Ef(e.to_string()))?;
@@ -410,6 +433,37 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 svc.pool().depth()
             );
             println!("{}", svc.metrics());
+            if let Some(path) = args.opt("trace-out") {
+                if let Some(sink) = svc.take_trace() {
+                    sink.write(path)?;
+                    println!("wrote trace {path} ({} spans)", sink.span_count());
+                }
+            }
+            Ok(())
+        }
+        "benchdiff" => {
+            // The perf gate: diff two BENCH_compiler_perf.json artifacts
+            // and exit non-zero when any tracked metric worsened beyond
+            // the tolerance. CI runs this against ci/bench_baseline.json.
+            let (old_path, new_path) = match (args.positional.get(1), args.positional.get(2)) {
+                (Some(o), Some(n)) => (o.as_str(), n.as_str()),
+                _ => {
+                    return Err(Gc3Error::Invalid(
+                        "usage: gc3 benchdiff <old.json> <new.json> [--tolerance F]".to_string(),
+                    ))
+                }
+            };
+            let tolerance = args.f64("tolerance", bench::regress::DEFAULT_TOLERANCE);
+            let report = bench::regress::diff_files(old_path, new_path, tolerance)?;
+            print!("{}", report.render());
+            let n = report.regressions().len();
+            if n > 0 {
+                return Err(Gc3Error::Invalid(format!(
+                    "{n} bench regression(s) beyond the {:.1}% tolerance \
+                     (see the report above)",
+                    tolerance * 100.0
+                )));
+            }
             Ok(())
         }
         "plan" | "registry" => {
@@ -498,10 +552,21 @@ usage:
   gc3 inspect   <EF.json>
   gc3 verify    <program> [--instances R] [--elems E]
   gc3 exec      [--program P] [--ranks N] [--threads T] [--elems-per-chunk E]
+                [--trace-out TRACE.json]
                 run P on the session executor over N single-node ranks:
                 --threads 1 = deterministic cooperative driver, --threads N
-                = threaded driver (byte-identical memory, N workers)
+                = threaded driver (byte-identical memory, N workers);
+                --trace-out dumps per-threadblock instruction spans (plus
+                wedge/deadlock/timeout markers) as Chrome trace-event JSON
+                loadable in ui.perfetto.dev
   gc3 simulate  <program> --size 2MB [--nodes N] [--gpus G] [--topo a100|ndv2]
+                [--trace-out TRACE.json]  dump per-rank flow spans (in
+                simulated microseconds) and a live-flows counter
+  gc3 benchdiff <old.json> <new.json> [--tolerance 0.10]
+                diff two BENCH_compiler_perf.json artifacts (compile ms,
+                events/s, exec elems/s, serve req/s + p99) and exit
+                non-zero when any metric worsened beyond the tolerance —
+                the CI perf gate against ci/bench_baseline.json
   gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]   (needs `make artifacts`)
   gc3 figures   [--fig 7|8|9|11|abl|loc]
   gc3 tune      [--collective allreduce|allgather|reduce_scatter|alltoall]
@@ -522,10 +587,13 @@ usage:
                 (nvlink|shm|ib|pcie:<factor>, eff:<f>, jitter:<f>, dead:rN,
                 seed:<n>) with one session fault (wedge:r<rank>,
                 drop:r<src>-r<dst>, timeout:<sweeps>)
+                [--trace-out TRACE.json]
                 drive a deterministic multi-tenant request trace through the
                 serving layer (plan cache + session pool + coalescing) and
                 report req/s, p50/p99 latency, hit rates and serve metrics —
-                under --faults the service replans/retries and counts it";
+                under --faults the service replans/retries and counts it;
+                --trace-out dumps queue-depth counters plus per-tenant
+                wave/request/retry spans for ui.perfetto.dev";
 
 #[cfg(test)]
 mod tests {
@@ -724,5 +792,109 @@ mod tests {
         let err = collective_from(&args_of(&["plan", "--collective", "gather"])).unwrap_err();
         assert!(err.to_string().contains("gather"), "{err}");
         assert_eq!(collective_from(&args_of(&["plan"])).unwrap(), Collective::AllReduce);
+    }
+
+    #[test]
+    fn help_mentions_trace_out_and_benchdiff() {
+        assert!(HELP.contains("--trace-out"), "{HELP}");
+        assert!(HELP.contains("gc3 benchdiff"), "{HELP}");
+        assert!(HELP.contains("ui.perfetto.dev"), "{HELP}");
+    }
+
+    /// The written trace must be a `{"traceEvents": [...]}` document with
+    /// at least one complete (`ph:"X"`) span — the Perfetto load contract.
+    fn assert_valid_trace(path: &std::path::Path) {
+        let text = std::fs::read_to_string(path).unwrap();
+        let doc = util::json::Json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").and_then(|j| j.as_arr()).unwrap_or(&[]);
+        assert!(!events.is_empty(), "trace {} has no events", path.display());
+        assert!(
+            events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")),
+            "trace {} has no complete spans",
+            path.display()
+        );
+    }
+
+    /// `--trace-out` on the exec verb writes a Perfetto-loadable trace
+    /// with per-threadblock instruction spans.
+    #[test]
+    fn exec_trace_out_writes_spans() {
+        let path =
+            std::env::temp_dir().join(format!("gc3_trace_exec_{}.json", std::process::id()));
+        let p = path.to_str().unwrap().to_string();
+        let args = args_of(&[
+            "exec",
+            "--program",
+            "allgather_ring",
+            "--ranks",
+            "2",
+            "--elems-per-chunk",
+            "4",
+            "--trace-out",
+            &p,
+        ]);
+        run("exec", &args).unwrap();
+        assert_valid_trace(&path);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// `--trace-out` on the simulate and serve verbs: both facades emit
+    /// valid trace documents through the same flag.
+    #[test]
+    fn simulate_and_serve_trace_out_write_valid_traces() {
+        let sim_path =
+            std::env::temp_dir().join(format!("gc3_trace_sim_{}.json", std::process::id()));
+        let p = sim_path.to_str().unwrap().to_string();
+        let args = args_of(&["simulate", "allreduce_ring", "--size", "64KB", "--trace-out", &p]);
+        run("simulate", &args).unwrap();
+        assert_valid_trace(&sim_path);
+        std::fs::remove_file(&sim_path).ok();
+
+        let serve_path =
+            std::env::temp_dir().join(format!("gc3_trace_serve_{}.json", std::process::id()));
+        let p = serve_path.to_str().unwrap().to_string();
+        let args = args_of(&[
+            "serve",
+            "--trace",
+            "small:4:1",
+            "--gpus",
+            "4",
+            "--elems-per-chunk",
+            "8",
+            "--trace-out",
+            &p,
+        ]);
+        run("serve", &args).unwrap();
+        assert_valid_trace(&serve_path);
+        std::fs::remove_file(&serve_path).ok();
+    }
+
+    /// The benchdiff verb: identical artifacts pass, a 30% events/s drop
+    /// exits non-zero, and missing operands are a usage error.
+    #[test]
+    fn benchdiff_gates_on_regression_and_passes_identical() {
+        let dir = std::env::temp_dir();
+        let old_p = dir.join(format!("gc3_bd_old_{}.json", std::process::id()));
+        let new_p = dir.join(format!("gc3_bd_new_{}.json", std::process::id()));
+        std::fs::write(
+            &old_p,
+            r#"{"cases": [{"name": "c", "compile_ms": 10.0, "events_per_sec": 1000.0}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            &new_p,
+            r#"{"cases": [{"name": "c", "compile_ms": 10.0, "events_per_sec": 700.0}]}"#,
+        )
+        .unwrap();
+        let (op, np) = (old_p.to_str().unwrap().to_string(), new_p.to_str().unwrap().to_string());
+        run("benchdiff", &args_of(&["benchdiff", &op, &op])).unwrap();
+        let err = run("benchdiff", &args_of(&["benchdiff", &op, &np])).unwrap_err().to_string();
+        assert!(err.contains("regression"), "{err}");
+        // A loose tolerance lets the same drop through.
+        run("benchdiff", &args_of(&["benchdiff", &op, &np, "--tolerance", "0.5"])).unwrap();
+        let err = run("benchdiff", &args_of(&["benchdiff", &op])).unwrap_err().to_string();
+        assert!(err.contains("usage"), "{err}");
+        std::fs::remove_file(&old_p).ok();
+        std::fs::remove_file(&new_p).ok();
     }
 }

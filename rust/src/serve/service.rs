@@ -23,7 +23,16 @@
 //! *reacts* rather than hangs: a wedged machine is retired (never pooled,
 //! `wedged` counted), and every member of a failed wave retries solo —
 //! un-coalesced, bounded exponential backoff, `retries` counted — so an
-//! injected wedge costs latency, not answers.
+//! injected wedge costs latency, not answers. Retries are **deferred to
+//! the end of the drain pass**: the backoff sleeps between retry rounds,
+//! after every healthy wave has dispatched, so one wedged tenant never
+//! head-of-line-blocks another tenant's wave.
+//!
+//! **Observability.** [`Service::trace_enable`] records a wall-clock
+//! Perfetto timeline into a [`TraceSink`] ([`crate::trace`]):
+//! queue-depth counter samples, wave spans on the service track, and
+//! per-tenant request/retry spans — drained with [`Service::take_trace`],
+//! wired behind `gc3 serve --trace-out`.
 
 use crate::coordinator::Metrics;
 use crate::core::{Gc3Error, Result};
@@ -34,6 +43,7 @@ use crate::serve::batch::{self, BatchItem};
 use crate::serve::pool::{PoolConfig, PoolStats, SessionPool};
 use crate::sim::fault::{FaultModel, FAULT_GRAMMAR};
 use crate::topology::Topology;
+use crate::trace::{Arg, TraceSink};
 use crate::tune::{Collective, TunedTable};
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
@@ -320,6 +330,120 @@ fn elems_for(size: u64, in_chunks: usize, cap: usize) -> usize {
     per_chunk.clamp(1, cap.max(1))
 }
 
+/// Track group ids of the serving timeline: the service's own track
+/// (queue-depth counter + wave spans) and the per-tenant request rows.
+const TRACE_SERVICE_PID: u64 = 0;
+const TRACE_TENANTS_PID: u64 = 1;
+/// Row of [`TRACE_SERVICE_PID`] carrying the wave spans.
+const TRACE_WAVE_TID: u64 = 1;
+
+/// Wall-clock trace recorder behind [`Service::trace_enable`]: queue-depth
+/// counter samples and wave spans on a synthetic "service" track, plus
+/// request/retry spans grouped by tenant under a "tenants" track. All
+/// methods are inherent (never borrowing the whole `Service`), so call
+/// sites hold only `self.tracer` while the rest of the service stays
+/// mutable.
+struct ServiceTracer {
+    /// Trace epoch: timestamps are µs since [`Service::trace_enable`].
+    base: Instant,
+    sink: TraceSink,
+    /// Tenant label → stable row id (first-seen order, starting at 1).
+    tenants: HashMap<String, u64>,
+}
+
+impl ServiceTracer {
+    fn new() -> ServiceTracer {
+        let mut sink = TraceSink::new();
+        sink.name_process(TRACE_SERVICE_PID, "service");
+        sink.name_thread(TRACE_SERVICE_PID, TRACE_WAVE_TID, "waves");
+        sink.name_process(TRACE_TENANTS_PID, "tenants");
+        ServiceTracer { base: Instant::now(), sink, tenants: HashMap::new() }
+    }
+
+    fn now_us(&self) -> f64 {
+        self.base.elapsed().as_secs_f64() * 1e6
+    }
+
+    /// The tenant's row id, naming the row on first sight.
+    fn tenant_tid(&mut self, tenant: &str) -> u64 {
+        if let Some(&tid) = self.tenants.get(tenant) {
+            return tid;
+        }
+        let tid = self.tenants.len() as u64 + 1;
+        self.tenants.insert(tenant.to_string(), tid);
+        self.sink.name_thread(TRACE_TENANTS_PID, tid, tenant);
+        tid
+    }
+
+    /// One admission-queue-depth counter sample at "now".
+    fn queue(&mut self, depth: usize) {
+        let ts = self.now_us();
+        self.sink.counter(TRACE_SERVICE_PID, "queue_depth", ts, depth as f64);
+    }
+
+    /// One coalesced-launch span (start captured by the caller before
+    /// checkout), tagged with program, batch size and the tenants aboard.
+    fn wave(&mut self, program: &str, t0_us: f64, batch: usize, tenants: &[String], ok: bool) {
+        let dur = (self.now_us() - t0_us).max(0.0);
+        self.sink.complete(
+            TRACE_SERVICE_PID,
+            TRACE_WAVE_TID,
+            if ok { "wave" } else { "wave-failed" },
+            t0_us,
+            dur,
+            &[
+                ("program", Arg::Str(program.to_string())),
+                ("batch", Arg::Num(batch as f64)),
+                ("tenants", Arg::Str(tenants.join(","))),
+                ("ok", Arg::Bool(ok)),
+            ],
+        );
+    }
+
+    /// One served request on its tenant's row: the span covers the whole
+    /// submit-to-completion latency (queue wait included).
+    fn request(
+        &mut self,
+        tenant: &str,
+        program: &str,
+        submitted: Instant,
+        latency_s: f64,
+        batch: usize,
+        retried: bool,
+    ) {
+        let tid = self.tenant_tid(tenant);
+        // `submitted` may predate the epoch (tracing enabled mid-stream);
+        // clamp to 0 rather than underflow.
+        let start_us =
+            submitted.checked_duration_since(self.base).unwrap_or_default().as_secs_f64() * 1e6;
+        self.sink.complete(
+            TRACE_TENANTS_PID,
+            tid,
+            if retried { "retry" } else { "request" },
+            start_us,
+            (latency_s * 1e6).max(0.0),
+            &[
+                ("program", Arg::Str(program.to_string())),
+                ("batch", Arg::Num(batch as f64)),
+                ("retried", Arg::Bool(retried)),
+            ],
+        );
+    }
+
+    /// A failed request: an instant marker on the tenant's row.
+    fn request_failed(&mut self, tenant: &str, err: &str) {
+        let tid = self.tenant_tid(tenant);
+        let ts = self.now_us();
+        self.sink.instant(
+            TRACE_TENANTS_PID,
+            tid,
+            "request-failed",
+            ts,
+            &[("error", Arg::Str(err.to_string()))],
+        );
+    }
+}
+
 struct Pending {
     id: u64,
     req: Request,
@@ -364,6 +488,9 @@ pub struct Service {
     /// One-shot injected session fault: armed by [`Service::install_faults`],
     /// consumed by the next launch's session.
     fault: Option<SessionFault>,
+    /// Present only while recording a serving timeline
+    /// ([`Service::trace_enable`]); `None` keeps the pump trace-free.
+    tracer: Option<ServiceTracer>,
 }
 
 impl Service {
@@ -380,7 +507,24 @@ impl Service {
             next_id: 0,
             cfg,
             fault: None,
+            tracer: None,
         }
+    }
+
+    /// Record a wall-clock Perfetto timeline of everything the service
+    /// does from here on: queue-depth counter samples, per-wave spans,
+    /// and per-tenant request/retry spans (see [`crate::trace`]). The
+    /// epoch is set once; repeated calls are no-ops.
+    pub fn trace_enable(&mut self) {
+        if self.tracer.is_none() {
+            self.tracer = Some(ServiceTracer::new());
+        }
+    }
+
+    /// The recorded timeline, ending recording. `None` when
+    /// [`Service::trace_enable`] was never called.
+    pub fn take_trace(&mut self) -> Option<TraceSink> {
+        self.tracer.take().map(|t| t.sink)
     }
 
     /// Install a [`FaultSpec`] into the running service.
@@ -481,6 +625,10 @@ impl Service {
         self.metrics.serve.queue_depth = self.queue.len();
         self.metrics.serve.peak_queue_depth =
             self.metrics.serve.peak_queue_depth.max(self.queue.len());
+        let depth = self.queue.len();
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.queue(depth);
+        }
         Ok(id)
     }
 
@@ -497,6 +645,9 @@ impl Service {
     pub fn process(&mut self) -> Result<Vec<Response>> {
         let pending: Vec<Pending> = self.queue.drain(..).collect();
         self.metrics.serve.queue_depth = 0;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.queue(0);
+        }
         if pending.is_empty() {
             return Ok(Vec::new());
         }
@@ -511,10 +662,37 @@ impl Service {
                     Ok(resolved) => resolved,
                     Err(e) => {
                         self.metrics.serve.failed += 1;
-                        responses.push(error_response(p, "", false, &e.to_string()));
+                        let msg = e.to_string();
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.request_failed(&p.req.tenant, &msg);
+                        }
+                        responses.push(error_response(p, "", false, &msg));
                         continue;
                     }
                 };
+            // Admission-size contract: the batch scatter executes
+            // `(size/4)/in_chunks` elements per chunk with integer
+            // division, so a size that is not a multiple of
+            // `4 × in_chunks` bytes would silently execute fewer bytes
+            // than admitted. Reject it loudly instead.
+            let quantum = 4 * plan.ef.in_chunks.max(1) as u64;
+            if p.req.size % quantum != 0 {
+                self.metrics.serve.failed += 1;
+                let msg = format!(
+                    "request size {} B is not a multiple of {quantum} B \
+                     (4 bytes x {} input chunks of '{}'): a ragged size would \
+                     silently truncate to fewer bytes than admitted — pad the \
+                     request to the next {quantum}-byte multiple",
+                    p.req.size,
+                    plan.ef.in_chunks.max(1),
+                    plan.ef.name
+                );
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.request_failed(&p.req.tenant, &msg);
+                }
+                responses.push(error_response(p, &plan.ef.name, hit, &msg));
+                continue;
+            }
             let elems = elems_for(p.req.size, plan.ef.in_chunks, self.cfg.max_elems);
             let key = (plan.ef.name.clone(), bucket);
             if !groups.contains_key(&key) {
@@ -523,7 +701,11 @@ impl Service {
             groups.entry(key).or_default().push(Resolved { p, plan, hit, elems });
         }
         // Dispatch phase: one coalesced launch per (program, bucket)
-        // group, split at max_batch, on a pooled session.
+        // group, split at max_batch, on a pooled session. Members of a
+        // failed wave are deferred — retried only after every healthy
+        // wave has dispatched, so retry backoff never head-of-line-blocks
+        // another tenant (see `retry_deferred`).
+        let mut deferred: Vec<(Resolved, String)> = Vec::new();
         let max_batch = self.cfg.max_batch.max(1);
         for key in order {
             let members = groups.remove(&key).expect("group recorded in order");
@@ -540,6 +722,7 @@ impl Service {
                     .map(|r| BatchItem { payload: r.p.req.payload, elems: r.elems })
                     .collect();
                 let label = format!("serve:{}", ef.name);
+                let wave_t0 = self.tracer.as_ref().map(|tr| tr.now_us());
                 let launched = match self.pool.checkout_or_spawn(&label, std::slice::from_ref(ef))
                 {
                     Ok(mut session) => {
@@ -566,17 +749,22 @@ impl Service {
                     }
                     Err(e) => Err(e),
                 };
+                if let Some(t0) = wave_t0 {
+                    let tenants: Vec<String> =
+                        group.iter().map(|r| r.p.req.tenant.clone()).collect();
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.wave(&ef.name, t0, group.len(), &tenants, launched.is_ok());
+                    }
+                }
                 let result = match launched {
                     Ok(result) => result,
                     Err(e) => {
-                        // The wave failed: un-coalesce it and retry each
-                        // member solo on a fresh machine, with bounded
-                        // exponential backoff. Answers survive faults;
-                        // only latency pays.
+                        // The wave failed: defer every member for solo
+                        // retry AFTER the drain pass. Answers survive
+                        // faults; only the failed requests pay latency —
+                        // never the other tenants still in the queue.
                         let msg = e.to_string();
-                        for r in group {
-                            self.retry_solo(r, &label, ef, &msg, &mut responses);
-                        }
+                        deferred.extend(group.into_iter().map(|r| (r, msg.clone())));
                         continue;
                     }
                 };
@@ -589,6 +777,16 @@ impl Service {
                 for (r, output) in group.into_iter().zip(result.outputs) {
                     let latency = r.p.submitted.elapsed().as_secs_f64();
                     self.metrics.serve.latency.record(latency);
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.request(
+                            &r.p.req.tenant,
+                            &ef.name,
+                            r.p.submitted,
+                            latency,
+                            batch_size,
+                            false,
+                        );
+                    }
                     responses.push(Response {
                         id: r.p.id,
                         tenant: r.p.req.tenant,
@@ -604,68 +802,100 @@ impl Service {
                 }
             }
         }
+        self.retry_deferred(deferred, &mut responses);
         responses.sort_by_key(|r| r.id);
         Ok(responses)
     }
 
-    /// Retry one member of a failed wave alone: up to [`RETRY_ATTEMPTS`]
-    /// solo launches on fresh checkouts, backing off exponentially from
-    /// [`RETRY_BASE_US`] µs. Success produces a normal (`batch_size` 1)
-    /// response — the request was served, just un-coalesced and late;
-    /// exhaustion produces an error response carrying the last failure.
-    fn retry_solo(
-        &mut self,
-        r: Resolved,
-        label: &str,
-        ef: &crate::ef::EfProgram,
-        first_err: &str,
-        responses: &mut Vec<Response>,
-    ) {
-        let item = BatchItem { payload: r.p.req.payload, elems: r.elems };
-        let mut last_err = first_err.to_string();
+    /// Solo-retry every member of every failed wave, *after* the drain
+    /// pass: retry round `a` relaunches each survivor once (un-coalesced,
+    /// on a fresh checkout), and the exponential backoff
+    /// ([`RETRY_BASE_US`]` << (a-1)` µs) sleeps once per round, *between*
+    /// rounds. The predecessor (`retry_solo`) slept inside the dispatch
+    /// loop — up to 350 µs per failed request, head-of-line-blocking
+    /// every other tenant's wave behind one wedged tenant. Success
+    /// produces a normal `batch_size` 1 response — the request was
+    /// served, just un-coalesced and late; [`RETRY_ATTEMPTS`] exhaustion
+    /// produces an error response carrying the last failure.
+    fn retry_deferred(&mut self, failed: Vec<(Resolved, String)>, responses: &mut Vec<Response>) {
+        let mut live = failed;
         for attempt in 0..RETRY_ATTEMPTS {
-            std::thread::sleep(Duration::from_micros(RETRY_BASE_US << attempt));
-            self.metrics.serve.retries += 1;
-            let retried = match self.pool.checkout_or_spawn(label, std::slice::from_ref(ef)) {
-                Ok(mut session) => {
-                    let out = Metrics::timed(&mut self.metrics.comm_time, || {
-                        batch::run_batched(&mut session, ef, std::slice::from_ref(&item))
-                    });
-                    if out.is_ok() {
-                        self.pool.checkin(session);
-                    } else if session.pending_messages() > 0 {
-                        self.metrics.serve.wedged += 1;
-                    }
-                    out
-                }
-                Err(e) => Err(e),
-            };
-            match retried {
-                Ok(mut result) => {
-                    self.metrics.serve.batches += 1;
-                    self.metrics.collective_calls += 1;
-                    let latency = r.p.submitted.elapsed().as_secs_f64();
-                    self.metrics.serve.latency.record(latency);
-                    let collective = r.p.req.collective.name().to_string();
-                    responses.push(Response {
-                        id: r.p.id,
-                        tenant: r.p.req.tenant,
-                        collective,
-                        program: ef.name.clone(),
-                        backend: Some(r.plan.backend),
-                        batch_size: 1,
-                        cache_hit: r.hit,
-                        latency_s: latency,
-                        output: result.outputs.pop().unwrap_or_default(),
-                        error: None,
-                    });
-                    return;
-                }
-                Err(e) => last_err = e.to_string(),
+            if live.is_empty() {
+                break;
             }
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_micros(RETRY_BASE_US << (attempt - 1)));
+            }
+            let mut still = Vec::new();
+            for (r, _) in live {
+                self.metrics.serve.retries += 1;
+                match self.relaunch_solo(&r) {
+                    Ok(mut result) => {
+                        self.metrics.serve.batches += 1;
+                        self.metrics.collective_calls += 1;
+                        let latency = r.p.submitted.elapsed().as_secs_f64();
+                        self.metrics.serve.latency.record(latency);
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.request(
+                                &r.p.req.tenant,
+                                &r.plan.ef.name,
+                                r.p.submitted,
+                                latency,
+                                1,
+                                true,
+                            );
+                        }
+                        let collective = r.p.req.collective.name().to_string();
+                        let program = r.plan.ef.name.clone();
+                        responses.push(Response {
+                            id: r.p.id,
+                            tenant: r.p.req.tenant,
+                            collective,
+                            program,
+                            backend: Some(r.plan.backend),
+                            batch_size: 1,
+                            cache_hit: r.hit,
+                            latency_s: latency,
+                            output: result.outputs.pop().unwrap_or_default(),
+                            error: None,
+                        });
+                    }
+                    Err(e) => still.push((r, e.to_string())),
+                }
+            }
+            live = still;
         }
-        self.metrics.serve.failed += 1;
-        responses.push(error_response(r.p, &ef.name, r.hit, &last_err));
+        for (r, last_err) in live {
+            self.metrics.serve.failed += 1;
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.request_failed(&r.p.req.tenant, &last_err);
+            }
+            let program = r.plan.ef.name.clone();
+            responses.push(error_response(r.p, &program, r.hit, &last_err));
+        }
+    }
+
+    /// One un-coalesced relaunch of a deferred request on a fresh
+    /// checkout. A healthy machine goes back to the pool; a failed one
+    /// holding undelivered messages is retired as wedged.
+    fn relaunch_solo(&mut self, r: &Resolved) -> Result<batch::BatchResult> {
+        let ef = &r.plan.ef;
+        let label = format!("serve:{}", ef.name);
+        let item = BatchItem { payload: r.p.req.payload, elems: r.elems };
+        match self.pool.checkout_or_spawn(&label, std::slice::from_ref(ef)) {
+            Ok(mut session) => {
+                let out = Metrics::timed(&mut self.metrics.comm_time, || {
+                    batch::run_batched(&mut session, ef, std::slice::from_ref(&item))
+                });
+                if out.is_ok() {
+                    self.pool.checkin(session);
+                } else if session.pending_messages() > 0 {
+                    self.metrics.serve.wedged += 1;
+                }
+                out
+            }
+            Err(e) => Err(e),
+        }
     }
 
     /// Submit-and-process convenience for whole traces: requests are
@@ -1008,6 +1238,100 @@ mod tests {
         assert!(responses.iter().all(|r| r.error.is_none()));
         let m = &svc.metrics().serve;
         assert_eq!((m.failed, m.retries, m.wedged), (0, 2, 0));
+    }
+
+    /// Ragged request sizes — not a multiple of 4 bytes × the EF's input
+    /// chunks — are rejected at admission with a hard error naming the
+    /// constraint. The batch scatter's integer division would otherwise
+    /// silently execute fewer bytes than admitted.
+    #[test]
+    fn ragged_sizes_rejected_with_named_constraint() {
+        let mut svc = Service::new(topo4(), ServiceConfig::default());
+        svc.submit(req(Collective::AllGather, (64 << 10) + 2, 1, "raggedy")).unwrap();
+        svc.submit(req(Collective::AllGather, 64 << 10, 2, "healthy")).unwrap();
+        let responses = svc.process().unwrap();
+        assert_eq!(responses.len(), 2, "every admitted request gets a response");
+        let bad = &responses[0];
+        let err = bad.error.as_deref().unwrap_or("");
+        assert!(err.contains("not a multiple"), "{err}");
+        assert!(err.contains("4 bytes"), "{err}");
+        assert!(err.contains("truncate"), "{err}");
+        assert!(bad.output.is_empty());
+        let good = &responses[1];
+        assert!(good.error.is_none(), "healthy request in the same wave still served");
+        assert!(!good.output.is_empty());
+        assert_eq!(svc.metrics().serve.failed, 1);
+    }
+
+    /// The head-of-line fix: a wedged tenant's retry backoff runs AFTER
+    /// the drain pass, so a healthy tenant's wave dispatches first and
+    /// its latency never absorbs the backoff. Pinned structurally — b is
+    /// submitted first and completes last (its retry is deferred), so
+    /// b's latency strictly exceeds a's; the old in-pump sleep inverted
+    /// that by serving b's retry before a's wave ever launched.
+    #[test]
+    fn wedged_tenant_backoff_does_not_inflate_healthy_latency() {
+        let mut svc = Service::new(topo4(), ServiceConfig::default());
+        svc.install_faults(&FaultSpec::parse("wedge:r1").unwrap()).unwrap();
+        // b's group dispatches first (first-seen order) and absorbs the
+        // one-shot wedge; a's wave is healthy.
+        svc.submit(req(Collective::AllGather, 64 << 10, 1, "b")).unwrap();
+        svc.submit(req(Collective::AllReduce, 64 << 10, 2, "a")).unwrap();
+        let responses = svc.process().unwrap();
+        assert_eq!(responses.len(), 2);
+        let (resp_b, resp_a) = (&responses[0], &responses[1]);
+        assert_eq!((resp_b.tenant.as_str(), resp_a.tenant.as_str()), ("b", "a"));
+        assert!(resp_b.error.is_none(), "{:?}", resp_b.error);
+        assert!(resp_a.error.is_none(), "{:?}", resp_a.error);
+        assert_eq!(resp_b.batch_size, 1, "b was retried un-coalesced");
+        assert_eq!(svc.metrics().serve.retries, 1);
+        assert_eq!(svc.metrics().serve.failed, 0);
+        assert!(
+            resp_a.latency_s < resp_b.latency_s,
+            "healthy tenant a ({}s) must not absorb wedged tenant b's retry latency ({}s)",
+            resp_a.latency_s,
+            resp_b.latency_s
+        );
+    }
+
+    /// The serving timeline behind `gc3 serve --trace-out`: queue-depth
+    /// counter samples plus wave spans and per-tenant request spans.
+    #[test]
+    fn serve_trace_has_tenant_spans_and_queue_counter() {
+        let mut svc = Service::new(topo4(), ServiceConfig::default());
+        svc.trace_enable();
+        svc.trace_enable(); // idempotent
+        svc.submit(req(Collective::AllGather, 64 << 10, 1, "alpha")).unwrap();
+        svc.submit(req(Collective::AllGather, 64 << 10, 2, "beta")).unwrap();
+        svc.process().unwrap();
+        let sink = svc.take_trace().expect("tracing was enabled");
+        assert!(svc.take_trace().is_none(), "take_trace ends recording");
+        assert!(sink.span_count() > 0);
+        let doc = crate::util::json::Json::parse(&sink.to_json().to_string()).unwrap();
+        let evs = doc.req_arr("traceEvents").unwrap();
+        let span_names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.req_str("ph").unwrap() == "X")
+            .map(|e| e.req_str("name").unwrap())
+            .collect();
+        assert!(span_names.contains(&"wave"), "{span_names:?}");
+        assert!(span_names.contains(&"request"), "{span_names:?}");
+        let counter_samples = evs
+            .iter()
+            .filter(|e| {
+                e.req_str("ph").unwrap() == "C" && e.req_str("name").unwrap() == "queue_depth"
+            })
+            .count();
+        assert!(counter_samples >= 3, "one per submit plus the drain: {counter_samples}");
+        // Tenant rows are named after the tenants.
+        let rows: Vec<&str> = evs
+            .iter()
+            .filter(|e| {
+                e.req_str("ph").unwrap() == "M" && e.req_str("name").unwrap() == "thread_name"
+            })
+            .filter_map(|e| e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()))
+            .collect();
+        assert!(rows.contains(&"alpha") && rows.contains(&"beta"), "{rows:?}");
     }
 
     /// Installing a degraded network model replans the service: new

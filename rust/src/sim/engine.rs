@@ -52,6 +52,7 @@ use crate::core::{Gc3Error, Rank, Result};
 use crate::ef::EfProgram;
 use crate::instdag::OpCode;
 use crate::topology::Topology;
+use crate::trace::{Arg, TraceSink};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
@@ -299,6 +300,24 @@ impl RateState {
 
 /// Simulate `ef` moving `size_bytes` per input buffer on `topo`.
 pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimReport> {
+    simulate_traced(ef, topo, size_bytes, None)
+}
+
+/// [`simulate`] with an optional timeline recorder: when `trace` is given,
+/// every flow becomes a `ph:"X"` span on its sender's rank track (one
+/// `tid` row per threadblock; name `send r{src}->r{dst} ch{c}`, args
+/// carrying `src`/`dst`/`channel`/`bytes` and the achieved `rate_gbps`),
+/// and a `live_flows` counter track samples the in-flight flow count at
+/// every start/finish. Timestamps are *simulated* microseconds. With
+/// `trace == None` this is exactly [`simulate`] — the tracing branches are
+/// `is_some()` checks off the hot path, and the golden-parity suite pins
+/// the untraced behavior against the reference engine.
+pub fn simulate_traced(
+    ef: &EfProgram,
+    topo: &Topology,
+    size_bytes: u64,
+    mut trace: Option<&mut TraceSink>,
+) -> Result<SimReport> {
     ef.validate()?;
     if ef.num_ranks != topo.num_ranks() {
         return Err(Gc3Error::Exec(format!(
@@ -338,15 +357,19 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
     let mut conns: Vec<Conn> = Vec::new();
     let mut conn_ids: HashMap<(Rank, usize, Rank), usize> = HashMap::new();
     let mut tb_key: Vec<Vec<usize>> = Vec::new(); // [rank][tb] -> flat id
+    let mut tb_local: Vec<usize> = Vec::new(); // flat id -> tb index on its rank
     let mut flat = 0usize;
     for gpu in &ef.gpus {
         let mut row = Vec::new();
-        for _ in &gpu.tbs {
+        for (i, _) in gpu.tbs.iter().enumerate() {
             row.push(flat);
+            tb_local.push(i);
             flat += 1;
         }
         tb_key.push(row);
     }
+    // (src, channel, dst) per conn id — only read by the trace emitter.
+    let mut conn_meta: Vec<(Rank, usize, Rank)> = Vec::new();
     let mut get_conn = |src: Rank, ch: usize, dst: Rank,
                         conns: &mut Vec<Conn>,
                         rtable: &mut ResourceTable|
@@ -361,6 +384,7 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
                 recv_waiter: None,
                 send_waiter: None,
             });
+            conn_meta.push((src, ch, dst));
             conns.len() - 1
         })
     };
@@ -488,6 +512,11 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
     };
 
     let mut flows: Vec<Flow> = Vec::new();
+    // (start time, payload bytes) per flow id; maintained only when
+    // tracing, so the untraced hot loop allocates nothing extra.
+    let mut flow_meta: Vec<(f64, f64)> = Vec::new();
+    // Synthetic track group for the live-flow counter (one past the ranks).
+    let trace_sim_pid = ef.num_ranks as u64;
     // Live flow ids + per-flow position index for O(1) swap-removal.
     let mut live: Vec<usize> = Vec::new();
     let mut live_pos: Vec<usize> = Vec::new();
@@ -568,6 +597,16 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
                             pending.push(f);
                             n_flows += 1;
                             rates_dirty = true;
+                            if let Some(tr) = trace.as_deref_mut() {
+                                flow_meta.push((now, bytes));
+                                tr.name_process(trace_sim_pid, "simulator");
+                                tr.counter(
+                                    trace_sim_pid,
+                                    "live_flows",
+                                    now * 1e6,
+                                    live.len() as f64,
+                                );
+                            }
                             tbs[t_id].idx += 1;
                             break; // blocked until the flow completes
                         } else {
@@ -749,6 +788,29 @@ pub fn simulate(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> Result<SimR
                 let route = conns[conn].route;
                 rs.remove(route, &rtable);
                 flows[f].epoch += 1; // drop any queued projections
+                if let Some(tr) = trace.as_deref_mut() {
+                    let (start, bytes) = flow_meta[f];
+                    let (src, ch, dst) = conn_meta[conn];
+                    let rank = tbs[owner].rank as u64;
+                    let row = tb_local[owner] as u64;
+                    tr.name_process(rank, &format!("rank {rank}"));
+                    tr.name_thread(rank, row, &format!("tb{row}"));
+                    tr.complete(
+                        rank,
+                        row,
+                        &format!("send r{src}->r{dst} ch{ch}"),
+                        start * 1e6,
+                        (now - start).max(0.0) * 1e6,
+                        &[
+                            ("src", Arg::Num(src as f64)),
+                            ("dst", Arg::Num(dst as f64)),
+                            ("channel", Arg::Num(ch as f64)),
+                            ("bytes", Arg::Num(bytes)),
+                            ("rate_gbps", Arg::Num(flows[f].rate / 1e9)),
+                        ],
+                    );
+                    tr.counter(trace_sim_pid, "live_flows", now * 1e6, live.len() as f64);
+                }
                 // Sender proceeds immediately; the slice arrives at the
                 // receiver after the hop latency.
                 ready.push(owner);
@@ -897,6 +959,36 @@ mod tests {
             assert!(rel <= 1e-9, "time parity at {size}: {} vs {} (rel {rel:e})", fast.time, gold.time);
             assert_eq!(fast.events, gold.events, "event count at {size}");
             assert_eq!(fast.flows, gold.flows, "flow count at {size}");
+        }
+    }
+
+    /// Tracing must be a pure observer: the traced run returns the exact
+    /// report of the untraced run, and the sink carries one span per flow
+    /// plus the live-flow counter samples on the synthetic track.
+    #[test]
+    fn traced_run_matches_untraced_and_emits_flow_spans() {
+        let topo = mini_topo();
+        let t = allgather_ring(4).unwrap();
+        let c = compile(&t, "ag", &CompileOpts::default()).unwrap();
+        let size = 256 * 1024u64;
+        let plain = simulate(&c.ef, &topo, size).unwrap();
+        let mut sink = crate::trace::TraceSink::new();
+        let traced = simulate_traced(&c.ef, &topo, size, Some(&mut sink)).unwrap();
+        assert_eq!(plain.time.to_bits(), traced.time.to_bits(), "tracing perturbed the clock");
+        assert_eq!(plain.events, traced.events);
+        assert_eq!(plain.flows, traced.flows);
+        assert_eq!(sink.span_count(), plain.flows, "one span per flow");
+        let doc = sink.to_json();
+        let evs = doc.req_arr("traceEvents").unwrap();
+        // 2 counter samples per flow (start + finish).
+        let counters = evs.iter().filter(|e| e.req_str("ph").unwrap() == "C").count();
+        assert_eq!(counters, 2 * plain.flows);
+        // Spans land on real rank tracks with the documented args.
+        let span = evs.iter().find(|e| e.req_str("ph").unwrap() == "X").unwrap();
+        assert!(span.get("pid").unwrap().as_usize().unwrap() < c.ef.num_ranks);
+        let args = span.get("args").unwrap();
+        for k in ["src", "dst", "channel", "bytes", "rate_gbps"] {
+            assert!(args.get(k).is_some(), "span missing arg {k}");
         }
     }
 

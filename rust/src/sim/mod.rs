@@ -6,6 +6,8 @@
 //! * [`engine`] — the event loop: tile loop, slicing, staging windows,
 //!   spin-lock dependences, max-min fair bandwidth sharing. Hot paths are
 //!   indexed + incremental (see the module docs / EXPERIMENTS.md §Perf).
+//!   [`simulate_traced`] additionally records per-flow timeline spans into
+//!   a [`crate::trace::TraceSink`] (EXPERIMENTS.md §TRACE).
 //! * [`reference`] — the pre-optimization engine, preserved verbatim as
 //!   the golden-parity oracle and the perf baseline.
 //! * [`fault`] — the unhealthy-cluster model: [`FaultModel`] (degraded
@@ -18,7 +20,7 @@ pub mod protocol;
 pub mod reference;
 pub mod resources;
 
-pub use engine::{simulate, SimReport, STAGING_BYTES};
+pub use engine::{simulate, simulate_traced, SimReport, STAGING_BYTES};
 pub use fault::{simulate_faulty, FaultModel};
 pub use protocol::Protocol;
 pub use reference::simulate_reference;

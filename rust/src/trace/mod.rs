@@ -1,0 +1,243 @@
+//! Timeline observability: Chrome/Perfetto trace-event export.
+//!
+//! The repo's counters ([`crate::coordinator::ServeMetrics`], bench rows)
+//! say *how much* time went somewhere; they can't say *where on the
+//! timeline* it went — which is the question behind every "why is p99
+//! bad" investigation and behind debugging a synthesized schedule. This
+//! module is the shared sink all three facades emit into:
+//!
+//! * [`crate::sim::simulate_traced`] — per-rank tracks of per-flow spans
+//!   (src→dst, channel, bytes, achieved rate) plus a live-flow-count
+//!   counter track, in *simulated* time.
+//! * [`crate::exec::Session::trace_enable`] — per-rank / per-threadblock
+//!   retired-instruction spans on both drivers, plus wedge / launch-failure
+//!   markers from the fault machinery, in wall-clock time.
+//! * [`crate::serve::Service::trace_enable`] — admission-queue-depth
+//!   counter track plus per-tenant wave / request / retry spans, in
+//!   wall-clock time.
+//!
+//! The output is the Trace Event Format's JSON-array flavor wrapped in
+//! `{"traceEvents": [...]}` — load the file directly in `ui.perfetto.dev`
+//! or `chrome://tracing`. Serialization rides [`crate::util::json`]; the
+//! module adds no dependencies.
+//!
+//! Event vocabulary used (all timestamps in microseconds, fractional ok):
+//! `ph:"X"` complete spans (`ts` + `dur`), `ph:"C"` counter samples,
+//! `ph:"i"` instant markers, and `ph:"M"` process/thread-naming metadata.
+//! `pid` is the track group (a rank, or a synthetic track like the
+//! simulator's flow counter), `tid` the row within it (a threadblock, a
+//! tenant).
+
+use std::collections::BTreeSet;
+
+use crate::core::{Gc3Error, Result};
+use crate::util::json::Json;
+
+/// An in-memory trace-event buffer; see the module docs for the format.
+///
+/// Producers append via [`TraceSink::complete`] / [`TraceSink::counter`] /
+/// [`TraceSink::instant`] and name their tracks once via
+/// [`TraceSink::name_process`] / [`TraceSink::name_thread`] (idempotent —
+/// repeated naming is deduplicated, so hot paths may name unconditionally).
+#[derive(Default)]
+pub struct TraceSink {
+    events: Vec<Json>,
+    spans: usize,
+    named_procs: BTreeSet<u64>,
+    named_threads: BTreeSet<(u64, u64)>,
+}
+
+/// Span/marker argument value: everything the producers need to tag spans
+/// with (`bytes`, `rate`, `tenant`, ...).
+pub enum Arg {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Arg {
+    fn to_json(&self) -> Json {
+        match self {
+            // NaN/inf would serialize as invalid JSON; clamp to null.
+            Arg::Num(n) if !n.is_finite() => Json::Null,
+            Arg::Num(n) => Json::Num(*n),
+            Arg::Str(s) => Json::Str(s.clone()),
+            Arg::Bool(b) => Json::Bool(*b),
+        }
+    }
+}
+
+impl TraceSink {
+    pub fn new() -> TraceSink {
+        TraceSink::default()
+    }
+
+    fn base(ph: &str, pid: u64, tid: u64, name: &str, ts_us: f64) -> Json {
+        let mut ev = Json::obj();
+        ev.set("ph", Json::str(ph))
+            .set("pid", Json::Num(pid as f64))
+            .set("tid", Json::Num(tid as f64))
+            .set("name", Json::str(name))
+            .set("ts", Json::Num(if ts_us.is_finite() { ts_us } else { 0.0 }));
+        ev
+    }
+
+    fn set_args(ev: &mut Json, args: &[(&str, Arg)]) {
+        if args.is_empty() {
+            return;
+        }
+        let mut a = Json::obj();
+        for (k, v) in args {
+            a.set(k, v.to_json());
+        }
+        ev.set("args", a);
+    }
+
+    /// A complete (`ph:"X"`) span: `dur_us` long, starting at `ts_us`.
+    pub fn complete(
+        &mut self,
+        pid: u64,
+        tid: u64,
+        name: &str,
+        ts_us: f64,
+        dur_us: f64,
+        args: &[(&str, Arg)],
+    ) {
+        let mut ev = Self::base("X", pid, tid, name, ts_us);
+        ev.set("dur", Json::Num(if dur_us.is_finite() { dur_us.max(0.0) } else { 0.0 }));
+        Self::set_args(&mut ev, args);
+        self.events.push(ev);
+        self.spans += 1;
+    }
+
+    /// One sample of the counter track `name` on track group `pid`.
+    pub fn counter(&mut self, pid: u64, name: &str, ts_us: f64, value: f64) {
+        let mut ev = Self::base("C", pid, 0, name, ts_us);
+        let mut a = Json::obj();
+        a.set("value", if value.is_finite() { Json::Num(value) } else { Json::Null });
+        ev.set("args", a);
+        self.events.push(ev);
+    }
+
+    /// A thread-scoped instant (`ph:"i"`) marker — wedges, launch failures.
+    pub fn instant(&mut self, pid: u64, tid: u64, name: &str, ts_us: f64, args: &[(&str, Arg)]) {
+        let mut ev = Self::base("i", pid, tid, name, ts_us);
+        ev.set("s", Json::str("t"));
+        Self::set_args(&mut ev, args);
+        self.events.push(ev);
+    }
+
+    /// Name track group `pid` (`process_name` metadata). Idempotent.
+    pub fn name_process(&mut self, pid: u64, name: &str) {
+        if !self.named_procs.insert(pid) {
+            return;
+        }
+        let mut ev = Self::base("M", pid, 0, "process_name", 0.0);
+        let mut a = Json::obj();
+        a.set("name", Json::str(name));
+        ev.set("args", a);
+        self.events.push(ev);
+    }
+
+    /// Name row `tid` of track group `pid` (`thread_name`). Idempotent.
+    pub fn name_thread(&mut self, pid: u64, tid: u64, name: &str) {
+        if !self.named_threads.insert((pid, tid)) {
+            return;
+        }
+        let mut ev = Self::base("M", pid, tid, "thread_name", 0.0);
+        let mut a = Json::obj();
+        a.set("name", Json::str(name));
+        ev.set("args", a);
+        self.events.push(ev);
+    }
+
+    /// Number of `ph:"X"` spans recorded (the CI smoke's liveness signal).
+    pub fn span_count(&self) -> usize {
+        self.spans
+    }
+
+    /// Total events recorded, metadata and counters included.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The `{"traceEvents": [...]}` document.
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("traceEvents", Json::Arr(self.events.clone()));
+        doc
+    }
+
+    /// Write the trace document to `path`.
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| Gc3Error::Invalid(format!("trace write {path}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_counters_and_metadata_serialize() {
+        let mut t = TraceSink::new();
+        t.name_process(0, "rank 0");
+        t.name_thread(0, 1, "tb1");
+        t.complete(
+            0,
+            1,
+            "send r0->r1 ch0",
+            10.5,
+            3.25,
+            &[("bytes", Arg::Num(4096.0)), ("dst", Arg::Str("r1".into()))],
+        );
+        t.counter(2, "live_flows", 10.5, 1.0);
+        t.counter(2, "live_flows", 13.75, 0.0);
+        t.instant(0, 1, "wedged", 14.0, &[]);
+        assert_eq!(t.span_count(), 1);
+        assert_eq!(t.len(), 6);
+        let doc = Json::parse(&t.to_json().to_string()).unwrap();
+        let evs = doc.req_arr("traceEvents").unwrap();
+        assert_eq!(evs.len(), 6);
+        let span = evs.iter().find(|e| e.req_str("ph").unwrap() == "X").unwrap();
+        assert_eq!(span.req_str("name").unwrap(), "send r0->r1 ch0");
+        assert_eq!(span.get("ts").unwrap().as_f64(), Some(10.5));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(3.25));
+        assert_eq!(span.get("args").unwrap().get("bytes").unwrap().as_f64(), Some(4096.0));
+        let ctr = evs.iter().find(|e| e.req_str("ph").unwrap() == "C").unwrap();
+        assert_eq!(ctr.get("args").unwrap().get("value").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn track_naming_is_deduplicated() {
+        let mut t = TraceSink::new();
+        for _ in 0..100 {
+            t.name_process(7, "rank 7");
+            t.name_thread(7, 0, "tb0");
+        }
+        assert_eq!(t.len(), 2, "metadata must not repeat per event");
+    }
+
+    #[test]
+    fn non_finite_inputs_never_corrupt_the_document() {
+        let mut t = TraceSink::new();
+        t.complete(0, 0, "x", f64::NAN, f64::INFINITY, &[("rate", Arg::Num(f64::NAN))]);
+        t.counter(0, "c", 0.0, f64::NAN);
+        // The serialized document must stay parseable JSON.
+        Json::parse(&t.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn negative_durations_are_clamped() {
+        let mut t = TraceSink::new();
+        t.complete(0, 0, "x", 5.0, -1.0, &[]);
+        let doc = t.to_json();
+        let ev = &doc.req_arr("traceEvents").unwrap()[0];
+        assert_eq!(ev.get("dur").unwrap().as_f64(), Some(0.0));
+    }
+}

@@ -386,6 +386,57 @@ fn fault_model_jitter_is_seeded_and_default_is_transparent() {
     assert_ne!(a.time.to_bits(), c.time.to_bits(), "seed must steer the jitter draw");
 }
 
+// ---------------------------------------------------------------------------
+// Metrics layer: the bucketed histogram quantile is a sound upper bound on
+// the exact percentile computed from the same samples.
+// ---------------------------------------------------------------------------
+
+/// [`LatencyHistogram::quantile_us`] (bucketed) vs [`percentile`] (exact)
+/// on shared random samples. Both use the same ceil-rank order statistic,
+/// so the bucketed answer must (a) never undercut the exact one and
+/// (b) land on exactly the inclusive upper edge of the bucket holding the
+/// exact percentile's sample — the histogram may lose resolution, never
+/// rank.
+#[test]
+fn histogram_quantile_bounds_exact_percentile() {
+    use gc3::bench::perf::percentile;
+    use gc3::coordinator::metrics::{LatencyHistogram, LAT_BOUNDS_US};
+
+    let mut rng = Rng::new(0xB0C4_1A7);
+    for trial in 0..50 {
+        let n = rng.range(1, 200);
+        let mut h = LatencyHistogram::default();
+        let mut samples_us: Vec<f64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Whole microseconds below the 25 ms top bound, so every
+            // sample lands in a finite bucket; pushing `s * 1e6` repeats
+            // `record`'s own unit conversion bit-for-bit.
+            let k = rng.below(24_000) + 1;
+            let s = k as f64 * 1e-6;
+            h.record(s);
+            samples_us.push(s * 1e6);
+        }
+        samples_us.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let exact = percentile(&samples_us, q);
+            let bucketed = h.quantile_us(q).unwrap();
+            assert!(
+                bucketed >= exact,
+                "trial {trial} q {q}: bucketed {bucketed} undercuts exact {exact}"
+            );
+            let edge = *LAT_BOUNDS_US
+                .iter()
+                .find(|&&b| exact <= b)
+                .expect("samples stay below the top bound");
+            assert_eq!(
+                bucketed, edge,
+                "trial {trial} q {q}: bucketed {bucketed} != bucket edge {edge} \
+                 of exact {exact}"
+            );
+        }
+    }
+}
+
 /// The generator's determinism contract: same seed, same programs.
 #[test]
 fn generator_is_deterministic() {
