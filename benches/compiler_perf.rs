@@ -3,12 +3,13 @@
 //! fast the discrete-event engine retires simulation events — the §Perf
 //! numbers tracked in EXPERIMENTS.md.
 //!
-//! Emits `BENCH_compiler_perf.json` (schema v6: per-scenario compile ms,
+//! Emits `BENCH_compiler_perf.json` (schema v7: per-scenario compile ms,
 //! simulate ms, events/s, the optimized-vs-reference head-to-head, the
 //! autotuner's tuned-vs-default rows — EXPERIMENTS.md §TUNE, the `exec[]`
 //! executor-throughput rows — §EXEC, the `serve[]` serving-layer rows
-//! — §SERVE, and the `faults[]` degradation-sweep rows — §FAULTS,
-//! reported, not gated) plus the tuned table itself as
+//! — §SERVE, the `faults[]` degradation-sweep rows — §FAULTS, reported,
+//! not gated, and the `synth[]` sketch-synthesis rows — §SYNTH, gated:
+//! ≥ 1 verified synthesized win) plus the tuned table itself as
 //! `TUNED_bench_allreduce.json`; CI archives both as artifacts.
 //!
 //! Run: `cargo bench --bench compiler_perf`
@@ -58,8 +59,18 @@ fn main() {
     // Reported, not gated: `recovered` ≥ 1.0 is already guaranteed by the
     // replanner's argmin (it keeps the naive plan unless beaten); the
     // interesting per-run number is how often and by how much it wins.
-    let json =
-        perf::to_json(&cases, h2h.as_ref(), &tuned_rows, &exec_rows, &serve_rows, &fault_rows);
+    println!("== Sketch-guided synthesis (relay alltoall vs library, asym fabric)");
+    let synth_rows = perf::synth_suite().expect("synth suite");
+    print!("{}", perf::render_synth(&synth_rows));
+    let json = perf::to_json(
+        &cases,
+        h2h.as_ref(),
+        &tuned_rows,
+        &exec_rows,
+        &serve_rows,
+        &fault_rows,
+        &synth_rows,
+    );
     let path = "BENCH_compiler_perf.json";
     std::fs::write(path, json.to_string()).expect("write BENCH_compiler_perf.json");
     println!("wrote {path}");
@@ -83,6 +94,16 @@ fn main() {
         "tuned plans never beat the default anywhere: {tuned_rows:?}"
     );
     println!("tuned-vs-default gate passed: never worse, strictly better somewhere");
+    // Gate: synthesis must actually generate something the library doesn't
+    // have — at least one size where a sketch-synthesized plan beats the
+    // best library plan on simulated time AND passed byte-accurate
+    // functional verification through the Planner (sim-time speedups are
+    // machine-independent, so this is safe to enforce on any runner).
+    assert!(
+        synth_rows.iter().any(|r| r.won && r.verified && r.speedup > 1.0),
+        "no verified synthesized win anywhere: {synth_rows:?}"
+    );
+    println!("synthesis gate passed: >= 1 verified synthesized win over the library");
     if let Some(h) = &h2h {
         // Hard gate: a speedup ratio is machine-independent, so enforce it
         // here where CI runs the bench (EXPERIMENTS.md §Perf).

@@ -18,8 +18,9 @@ use crate::exec::{execute_reference, test_pattern, Memory, NativeReducer, Sessio
 use crate::planner::Planner;
 use crate::serve::{loadgen, Service, ServiceConfig, TraceSpec};
 use crate::sim::{simulate, simulate_reference, FaultModel, Protocol};
+use crate::synth::{synthesize, SynthOpts};
 use crate::topology::Topology;
-use crate::tune::{tune, Collective, TuneOpts, TunedTable};
+use crate::tune::{tune, Collective, CompileCache, TuneOpts, TunedTable};
 use crate::util::json::Json;
 use std::time::Instant;
 
@@ -207,7 +208,7 @@ pub fn exec_suite(threads: usize) -> Result<Vec<ExecRow>> {
 }
 
 /// One serving-layer measurement row (EXPERIMENTS.md §SERVE; the `serve[]`
-/// array of `BENCH_compiler_perf.json`, schema v6): throughput and
+/// array of `BENCH_compiler_perf.json`, schema v7): throughput and
 /// nearest-rank latency percentiles for one trace mix through [`Service`],
 /// plus the coalescing win against the same trace served one launch per
 /// request.
@@ -301,7 +302,7 @@ pub fn serve_suite(threads: usize) -> Result<Vec<ServeRow>> {
 }
 
 /// One fault-injection measurement row (EXPERIMENTS.md §FAULTS; the
-/// `faults[]` array of `BENCH_compiler_perf.json`, schema v6 — reported,
+/// `faults[]` array of `BENCH_compiler_perf.json`, schema v7 — reported,
 /// not gated): a single-link degradation priced three ways — the healthy
 /// plan on the healthy fabric, the same (naive) plan on the degraded
 /// fabric, and [`Planner::replan_degraded`]'s choice on the degraded
@@ -357,6 +358,94 @@ pub fn faults_suite() -> Result<Vec<FaultRow>> {
         });
     }
     Ok(rows)
+}
+
+/// One synthesis measurement row (EXPERIMENTS.md §SYNTH; the `synth[]`
+/// array of `BENCH_compiler_perf.json`, schema v7): the best library plan
+/// vs the best sketch-synthesized candidate at one size, plus the search
+/// cost that bought the comparison.
+#[derive(Clone, Debug)]
+pub struct SynthRow {
+    pub collective: String,
+    pub topo: String,
+    pub size: u64,
+    /// Simulated time of the tuner's best library plan, seconds.
+    pub library_s: f64,
+    pub library_choice: String,
+    /// Simulated time of the best synthesized candidate, seconds.
+    pub synth_s: f64,
+    /// The synthesized best's key, e.g. `synth:relay/lb8:s3 x1 ll`.
+    pub synth_key: String,
+    /// `library_s / synth_s` — > 1.0 means synthesis beat the library.
+    pub speedup: f64,
+    /// Whether the synthesized candidate won (and was published).
+    pub won: bool,
+    /// Whether the published winner passed byte-accurate functional
+    /// verification through the Planner's tuned dispatch. Always equal to
+    /// `won`: [`synthesize`] hard-fails instead of publishing an
+    /// unverified winner.
+    pub verified: bool,
+    /// Wall-clock seconds for the whole search (all sizes share one).
+    pub search_wall_s: f64,
+    /// Synthesized grid points priced (seeds × instances × protocols).
+    pub candidates: usize,
+}
+
+/// Run the synthesis scenario: relay-sketch AllToAll on the asymmetric
+/// fabric — the topology whose slow pair links the library's direct
+/// pattern cannot route around — against the tuner's best library plan
+/// at the same sizes. The acceptance gate (`benches/compiler_perf.rs`)
+/// requires ≥ 1 verified win with speedup > 1.0.
+pub fn synth_suite() -> Result<Vec<SynthRow>> {
+    let topo = Topology::asym(1);
+    let sizes: [u64; 2] = [1 << 20, 16 << 20];
+    let opts = SynthOpts { budget: 6, seed: 1, ..SynthOpts::default() };
+    let mut cache = CompileCache::new();
+    let t0 = Instant::now();
+    let out = synthesize(&topo, Collective::AllToAll, &sizes, &opts, &mut cache)?;
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(out
+        .comparisons
+        .iter()
+        .map(|c| SynthRow {
+            collective: out.table.collective.clone(),
+            topo: out.table.topology.clone(),
+            size: c.size,
+            library_s: c.library_s,
+            library_choice: c.library_choice.clone(),
+            synth_s: c.synth_s,
+            synth_key: c.synth_key.clone(),
+            speedup: c.speedup,
+            won: c.won,
+            verified: c.won,
+            search_wall_s: wall,
+            candidates: out.candidates,
+        })
+        .collect())
+}
+
+/// Human-readable rendering of the synthesis rows.
+pub fn render_synth(rows: &[SynthRow]) -> String {
+    let mut out = format!(
+        "{:<10} {:>8} {:>10} {:>24} {:>10} {:>26} {:>10} {:>8} {:>4}\n",
+        "collective", "topo", "size", "library best", "lib us", "synthesized best", "synth us",
+        "speedup", "won"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10} {:>8} {:>10} {:>24} {:>10.1} {:>26} {:>10.1} {:>7.2}x {:>4}\n",
+            r.collective,
+            r.topo,
+            crate::util::human_bytes(r.size),
+            r.library_choice,
+            r.library_s * 1e6,
+            r.synth_key,
+            r.synth_s * 1e6,
+            r.speedup,
+            if r.won { "yes" } else { "no" }
+        ));
+    }
+    out
 }
 
 /// Human-readable rendering of the fault-injection rows.
@@ -531,10 +620,11 @@ pub fn to_json(
     exec: &[ExecRow],
     serve: &[ServeRow],
     faults: &[FaultRow],
+    synth: &[SynthRow],
 ) -> Json {
     let mut root = Json::obj();
     root.set("bench", Json::Str("compiler_perf".into()));
-    root.set("schema_version", Json::Num(6.0));
+    root.set("schema_version", Json::Num(7.0));
     let rows: Vec<Json> = cases
         .iter()
         .map(|c| {
@@ -650,6 +740,28 @@ pub fn to_json(
             })
             .collect();
         root.set("faults", Json::Arr(rows));
+    }
+    if !synth.is_empty() {
+        let rows: Vec<Json> = synth
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("collective", Json::Str(r.collective.clone()));
+                o.set("topo", Json::Str(r.topo.clone()));
+                o.set("size_bytes", Json::Num(r.size as f64));
+                o.set("library_s", Json::Num(r.library_s));
+                o.set("library_choice", Json::Str(r.library_choice.clone()));
+                o.set("synth_s", Json::Num(r.synth_s));
+                o.set("synth_key", Json::Str(r.synth_key.clone()));
+                o.set("speedup", Json::Num(r.speedup));
+                o.set("won", Json::Bool(r.won));
+                o.set("verified", Json::Bool(r.verified));
+                o.set("search_wall_s", Json::Num(r.search_wall_s));
+                o.set("candidates", Json::Num(r.candidates as f64));
+                o
+            })
+            .collect();
+        root.set("synth", Json::Arr(rows));
     }
     root
 }
@@ -784,7 +896,21 @@ mod tests {
             recovered: 4.0 / 3.0,
             replanned_won: true,
         }];
-        let j = to_json(&cases, Some(&h), &tuned, &exec, &serve, &faults);
+        let synth = vec![SynthRow {
+            collective: "alltoall".into(),
+            topo: "asymx1".into(),
+            size: 1 << 20,
+            library_s: 3.4e-4,
+            library_choice: "direct x1 ll".into(),
+            synth_s: 2.0e-4,
+            synth_key: "synth:relay/lb8:s3 x1 ll".into(),
+            speedup: 1.7,
+            won: true,
+            verified: true,
+            search_wall_s: 2.5,
+            candidates: 18,
+        }];
+        let j = to_json(&cases, Some(&h), &tuned, &exec, &serve, &faults, &synth);
         let s = j.to_string();
         for field in [
             "compile_ms",
@@ -812,10 +938,16 @@ mod tests {
             "replanned_s",
             "recovered",
             "replanned_won",
+            "synth",
+            "library_s",
+            "library_choice",
+            "synth_key",
+            "search_wall_s",
+            "verified",
         ] {
             assert!(s.contains(field), "missing {field} in {s}");
         }
-        assert_eq!(j.get("schema_version").and_then(|v| v.as_usize()), Some(6));
+        assert_eq!(j.get("schema_version").and_then(|v| v.as_usize()), Some(7));
         let arr = j.get("cases").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("events").and_then(|e| e.as_usize()), Some(42));
@@ -834,13 +966,19 @@ mod tests {
         let fl = j.get("faults").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(fl[0].get("link").and_then(|e| e.as_str()), Some("nvlink"));
         assert_eq!(fl[0].get("replanned_won"), Some(&Json::Bool(true)));
-        // No tuned/exec/serve/faults rows → no sections (old consumers
-        // keep working).
-        let bare = to_json(&cases, None, &[], &[], &[], &[]);
+        let sy = j.get("synth").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(sy[0].get("collective").and_then(|e| e.as_str()), Some("alltoall"));
+        assert_eq!(sy[0].get("won"), Some(&Json::Bool(true)));
+        assert_eq!(sy[0].get("verified"), Some(&Json::Bool(true)));
+        assert_eq!(sy[0].get("candidates").and_then(|e| e.as_usize()), Some(18));
+        // No tuned/exec/serve/faults/synth rows → no sections (old
+        // consumers keep working).
+        let bare = to_json(&cases, None, &[], &[], &[], &[], &[]);
         assert!(bare.get("tuned_vs_default").is_none());
         assert!(bare.get("exec").is_none());
         assert!(bare.get("serve").is_none());
         assert!(bare.get("faults").is_none());
+        assert!(bare.get("synth").is_none());
     }
 
     /// The exec suite's scenarios are small enough to run here in full:

@@ -212,7 +212,12 @@ mod tests {
                 .iter()
                 .map(|&(size, protocol)| TunedEntry {
                     size,
-                    choice: TunedChoice { variant: variant.into(), instances: 2, protocol },
+                    choice: TunedChoice {
+                        variant: variant.into(),
+                        instances: 2,
+                        protocol,
+                        synthesized: None,
+                    },
                     time: 1.0e-5,
                     algbw: size as f64 / 1.0e-5,
                 })

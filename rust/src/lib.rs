@@ -108,6 +108,15 @@
 //! * [`tune`] — the simulator-driven autotuner: searches the
 //!   variant × instances × protocol grid with [`sim`] as the cost oracle
 //!   and emits serializable [`tune::TunedTable`]s the planner serves.
+//! * [`synth`] — sketch-guided algorithm synthesis (TACCL-style): a
+//!   [`synth::Sketch`] constrains a deterministic seeded
+//!   greedy-with-restarts search over chunk routings on topology-derived
+//!   candidate edges, candidates are emitted through [`dsl`] and priced
+//!   on [`sim`] via the tuner's shared [`tune::CompileCache`], and
+//!   winners land in [`tune::TunedTable`]s with `synthesized{seed,
+//!   sketch, sim_time}` provenance the planner regenerates from
+//!   ([`synth::regenerate_trace`]) — algorithms *generated*, not
+//!   selected, behind `gc3 synth`.
 //! * [`planner`] — the planning facade: tuned-table, GC3-heuristic and
 //!   NCCL-fallback dispatch behind one `plan()` call, with provenance.
 //! * [`collectives`] — the GC3 program library (Two-Step AllToAll §2, Ring
@@ -151,6 +160,7 @@ pub mod sim;
 pub mod exec;
 pub mod nccl;
 pub mod tune;
+pub mod synth;
 pub mod planner;
 pub mod collectives;
 pub mod serve;

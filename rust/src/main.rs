@@ -12,6 +12,7 @@
 //! gc3 train     [--ranks R] [--steps K] [--lr F] [--pjrt-reduce]
 //! gc3 figures   [--fig 7|8|9|11|loc|abl]        regenerate §6 figures
 //! gc3 tune      --collective C [--sizes ...]    autotune + emit a TunedTable
+//! gc3 synth     --collective C --topo T [--budget N] [--seed S] [--out T.json]
 //! gc3 plan      [--collective C] [--size S] [--tuned TABLE.json]
 //! gc3 serve     --trace MIX[:N[:SEED]] [--sessions S] [--threads T]
 //! ```
@@ -24,6 +25,7 @@ use gc3::exec::{self, verify, Memory, NativeReducer, Session};
 use gc3::planner::Planner;
 use gc3::serve::{loadgen, FaultSpec, Service, ServiceConfig, TraceSpec};
 use gc3::sim::{simulate, simulate_traced, FaultModel, Protocol};
+use gc3::synth::{synthesize, SynthOpts};
 use gc3::topology::Topology;
 use gc3::trace::TraceSink;
 use gc3::train::{train, TrainOpts};
@@ -41,6 +43,55 @@ fn topo_from(args: &Args) -> Topology {
     };
     t.gpus_per_node = args.usize("gpus", t.gpus_per_node);
     t
+}
+
+/// Strict variant of [`topo_from`] for the synth verb: an unknown
+/// `--topo` is a hard error listing the accepted names instead of
+/// silently defaulting to a100 (the `--faults`/`--degrade` convention —
+/// a synthesized table is only valid for the topology it was searched
+/// on, so a typo must not quietly search the wrong fabric).
+fn topo_strict(args: &Args) -> Result<Topology> {
+    let nodes = args.usize("nodes", 1);
+    let name = args.str_or("topo", "a100");
+    let mut t = match name {
+        "a100" => Topology::a100(nodes),
+        "ndv2" => Topology::ndv2(nodes),
+        "ndv4" => Topology::ndv4(nodes),
+        "asym" => Topology::asym(nodes),
+        _ => {
+            return Err(Gc3Error::Invalid(format!(
+                "unknown topology '{name}' (accepted: a100|ndv2|ndv4|asym)"
+            )))
+        }
+    };
+    t.gpus_per_node = args.usize("gpus", t.gpus_per_node);
+    Ok(t)
+}
+
+/// Strict integer option: a malformed value is a hard error naming the
+/// accepted grammar, never a silent fallback to the default.
+fn count_strict(args: &Args, name: &str, grammar: &str, default: u64) -> Result<u64> {
+    match args.opt(name) {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|_| {
+            Gc3Error::Invalid(format!("bad --{name} '{s}' (accepted: {grammar})"))
+        }),
+    }
+}
+
+fn sizes_from(args: &Args, default: Vec<u64>) -> Result<Vec<u64>> {
+    match args.opt("sizes") {
+        Some(list) => {
+            let mut v = Vec::new();
+            for part in list.split(',') {
+                v.push(util::parse_bytes(part).ok_or_else(|| {
+                    Gc3Error::Invalid(format!("bad size '{part}' in --sizes"))
+                })?);
+            }
+            Ok(v)
+        }
+        None => Ok(default),
+    }
 }
 
 fn find_program(topo: &Topology, name: &str) -> Result<gc3::dsl::Trace> {
@@ -320,24 +371,22 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "tune" => {
             let topo = topo_from(args);
             let coll = collective_from(args)?;
-            let sizes: Vec<u64> = match args.opt("sizes") {
-                Some(list) => {
-                    let mut v = Vec::new();
-                    for part in list.split(',') {
-                        v.push(util::parse_bytes(part).ok_or_else(|| {
-                            Gc3Error::Invalid(format!("bad size '{part}' in --sizes"))
-                        })?);
-                    }
-                    v
-                }
-                None => bench::size_sweep(4 * 1024, 1 << 30),
-            };
+            let sizes = sizes_from(args, bench::size_sweep(4 * 1024, 1 << 30))?;
             let t0 = std::time::Instant::now();
-            let out = tune::tune(&topo, coll, &sizes, &tune::TuneOpts::default())?;
+            // The process-wide compile cache is shared with `gc3 synth`:
+            // overlapping candidates compile once per process, whichever
+            // verb asked first.
+            let mut cache =
+                tune::shared_cache().lock().unwrap_or_else(|p| p.into_inner());
+            let (h0, m0) = (cache.hits(), cache.misses());
+            let out = tune::tune_with_cache(&topo, coll, &sizes, &tune::TuneOpts::default(), &mut cache)?;
+            let (hits, misses) = (cache.hits() - h0, cache.misses() - m0);
+            drop(cache);
             print!("{}", out.table.render());
             println!(
                 "searched {} candidates ({} feasible, {} skipped, {} memo hits), \
-                 {} simulations, {} winning plans functionally verified in {:.1}s",
+                 {} simulations, {} winning plans functionally verified in {:.1}s \
+                 (shared cache: {hits} hits / {misses} misses)",
                 out.candidates,
                 out.feasible,
                 out.skipped.len(),
@@ -352,6 +401,64 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 }
             }
             let default_path = format!("TUNED_{}_{}.json", coll.name(), topo.name);
+            let path = args.str_or("out", &default_path);
+            std::fs::write(path, out.table.to_json_string())
+                .map_err(|e| Gc3Error::Ef(e.to_string()))?;
+            println!("wrote {path}");
+            Ok(())
+        }
+        "synth" => {
+            // Sketch-guided synthesis: generate candidate routings from
+            // the collective's template sketch, price them on the
+            // simulator through the shared compile cache, and publish
+            // the best plan per size as a provenance-carrying TunedTable
+            // the planner can replay (`gc3 plan --tuned SYNTH_*.json`).
+            let topo = topo_strict(args)?;
+            let coll = collective_from(args)?;
+            let opts = SynthOpts {
+                budget: count_strict(
+                    args,
+                    "budget",
+                    "a positive integer number of restart seeds",
+                    SynthOpts::default().budget as u64,
+                )? as usize,
+                seed: count_strict(args, "seed", "a non-negative integer", 0)?,
+                link_budget: count_strict(
+                    args,
+                    "link-budget",
+                    "a positive integer chunk budget per link",
+                    gc3::synth::DEFAULT_LINK_BUDGET as u64,
+                )? as usize,
+                ..SynthOpts::default()
+            };
+            let sizes = sizes_from(args, bench::size_sweep(1 << 20, 256 << 20))?;
+            let t0 = std::time::Instant::now();
+            let mut cache =
+                tune::shared_cache().lock().unwrap_or_else(|p| p.into_inner());
+            let out = synthesize(&topo, coll, &sizes, &opts, &mut cache)?;
+            drop(cache);
+            print!("{}", out.render());
+            println!(
+                "searched {} synthesized candidates over {} seeds ({} skipped), \
+                 {} simulations, {} of {} sizes won, {} winning plans functionally \
+                 verified in {:.1}s (shared cache: {} hits / {} misses)",
+                out.candidates,
+                opts.budget,
+                out.skipped.len(),
+                out.simulations,
+                out.wins(),
+                out.comparisons.len(),
+                out.verified_winners,
+                t0.elapsed().as_secs_f64(),
+                out.cache_hits,
+                out.cache_misses
+            );
+            if args.flag("v") {
+                for (key, err) in &out.skipped {
+                    println!("  skipped {key}: {err}");
+                }
+            }
+            let default_path = format!("SYNTH_{}_{}.json", coll.name(), topo.name);
             let path = args.str_or("out", &default_path);
             std::fs::write(path, out.table.to_json_string())
                 .map_err(|e| Gc3Error::Ef(e.to_string()))?;
@@ -574,6 +681,16 @@ usage:
                 [--sizes 64KB,4MB,...] [--out TUNED.json] [--v]
                 searches variant x instances x protocol on the simulator and
                 writes the best-plan-per-size TunedTable as JSON
+  gc3 synth     [--collective allreduce|alltoall] [--topo a100|ndv2|ndv4|asym]
+                [--nodes N] [--gpus G] [--budget SEEDS] [--seed S0]
+                [--link-budget L] [--sizes 1MB,16MB,...] [--out SYNTH.json] [--v]
+                sketch-guided synthesis: generate candidate algorithms from
+                the collective's template sketch (ring_perm for allreduce,
+                relay for alltoall), price seeds S0..S0+SEEDS on the
+                simulator through the compile cache shared with `gc3 tune`,
+                and write the best-plan-per-size TunedTable — synthesized
+                winners carry replayable {seed, sketch, sim_time} provenance
+                that `gc3 plan --tuned` regenerates and explains
   gc3 plan      [--collective C] [--size 4MB] [--tuned TABLE.json] [--nodes N]
                 [--degrade nvlink|shm|ib|pcie:FACTOR]
                 dispatch through the Planner facade and explain the choice;
@@ -867,6 +984,76 @@ mod tests {
         run("serve", &args).unwrap();
         assert_valid_trace(&serve_path);
         std::fs::remove_file(&serve_path).ok();
+    }
+
+    #[test]
+    fn help_mentions_synth_verb() {
+        assert!(HELP.contains("gc3 synth"), "{HELP}");
+        assert!(HELP.contains("--budget"), "{HELP}");
+        assert!(HELP.contains("--link-budget"), "{HELP}");
+    }
+
+    /// `gc3 synth` end to end on a tiny grid: the written table loads
+    /// back, targets the searched fabric, and (on the asymmetric fabric,
+    /// where relays beat the library's direct AllToAll) carries at least
+    /// one provenance-stamped synthesized winner.
+    #[test]
+    fn synth_runs_end_to_end_and_writes_a_table() {
+        let path =
+            std::env::temp_dir().join(format!("gc3_synth_cli_{}.json", std::process::id()));
+        let p = path.to_str().unwrap().to_string();
+        let args = args_of(&[
+            "synth",
+            "--collective",
+            "alltoall",
+            "--topo",
+            "asym",
+            "--gpus",
+            "4",
+            "--budget",
+            "2",
+            "--seed",
+            "1",
+            "--sizes",
+            "1MB",
+            "--out",
+            &p,
+        ]);
+        run("synth", &args).unwrap();
+        let table = TunedTable::from_json_str(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(table.collective, "alltoall");
+        assert_eq!(table.topology, "asymx1");
+        assert!(
+            table.entries.iter().any(|e| e.choice.synthesized.is_some()),
+            "the relay sketch wins on asym, so the table must carry provenance"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The synth verb's hard-CLI-error convention: unknown `--topo`,
+    /// malformed `--budget`/`--seed` and an unsupported `--collective`
+    /// all fail loudly, each listing its accepted grammar.
+    #[test]
+    fn synth_rejects_bad_inputs_with_grammar_errors() {
+        let err =
+            run("synth", &args_of(&["synth", "--topo", "dgx1"])).unwrap_err().to_string();
+        assert!(err.contains("dgx1"), "{err}");
+        assert!(err.contains("a100|ndv2|ndv4|asym"), "error lists topologies: {err}");
+        let err =
+            run("synth", &args_of(&["synth", "--budget", "lots"])).unwrap_err().to_string();
+        assert!(err.contains("--budget 'lots'"), "{err}");
+        assert!(err.contains("integer"), "error states the grammar: {err}");
+        let err =
+            run("synth", &args_of(&["synth", "--seed", "nine"])).unwrap_err().to_string();
+        assert!(err.contains("--seed 'nine'"), "{err}");
+        assert!(err.contains("integer"), "error states the grammar: {err}");
+        let err = run(
+            "synth",
+            &args_of(&["synth", "--collective", "allgather", "--topo", "asym", "--gpus", "4"]),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("allreduce|alltoall"), "error lists the sketch set: {err}");
     }
 
     /// The benchdiff verb: identical artifacts pass, a 30% events/s drop

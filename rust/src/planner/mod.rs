@@ -312,13 +312,20 @@ impl Planner {
             let opts = CompileOpts::for_topo(&self.topo)
                 .with_instances(choice.instances)
                 .with_protocol(choice.protocol);
-            let built = variant_trace(&self.topo, collective, &choice.variant)
-                .and_then(|trace| self.build(&key, &trace, &key, &opts, &choice.key()));
+            // Synthesized winners regenerate their trace from provenance
+            // (the search's own deterministic generator); library winners
+            // rebuild from the variant grid.
+            let trace = match &choice.synthesized {
+                Some(sp) => crate::synth::regenerate_trace(&self.topo, collective, sp),
+                None => variant_trace(&self.topo, collective, &choice.variant),
+            };
+            let built =
+                trace.and_then(|trace| self.build(&key, &trace, &key, &opts, &choice.key()));
             if let Err(e) = built {
                 return Some(Err(e));
             }
         }
-        let reason = format!(
+        let mut reason = format!(
             "tuned table for {} on {} covers {}: bucket {} argmin chose {} ({:.1} us simulated)",
             collective.name(),
             self.topo.name,
@@ -327,6 +334,14 @@ impl Planner {
             choice.key(),
             time * 1e6
         );
+        if let Some(sp) = &choice.synthesized {
+            reason.push_str(&format!(
+                " — synthesized{{seed={}, sketch={}, sim_time={:.1}us}}",
+                sp.seed,
+                sp.sketch,
+                sp.sim_time * 1e6
+            ));
+        }
         Some(Ok(self.finish(&key, Backend::Tuned, Some(choice), Some(size), reason)))
     }
 

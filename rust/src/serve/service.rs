@@ -955,6 +955,7 @@ mod tests {
                         variant: "ring".into(),
                         instances: 2,
                         protocol: Protocol::LL,
+                        synthesized: None,
                     },
                     time: 1.0e-5,
                     algbw: size as f64 / 1.0e-5,

@@ -1,0 +1,170 @@
+//! Template emitters: turn a search engine's routing decisions into DSL
+//! programs.
+//!
+//! Each emitter is a pure function from a routing artifact (a rank
+//! permutation, a table of relay paths) to a [`Trace`] built through the
+//! ordinary [`Program`] recorder — synthesized algorithms go through
+//! exactly the same validation, compilation, and verification machinery
+//! as the handwritten library programs. The search engine
+//! ([`super::search`]) owns *choosing* the artifacts; this module only
+//! owns *spelling them* in the DSL.
+
+use crate::core::{BufferId, Gc3Error, Result};
+use crate::dsl::collective::CollectiveSpec;
+use crate::dsl::{Program, SchedHint, Trace};
+
+/// Ring AllReduce over a permuted rank order: lane `i`'s chunk starts on
+/// rank `perm[i]` and travels the ring `perm[0] → perm[1] → … → perm[0]`.
+/// The identity permutation reproduces the library's manual ring
+/// ([`crate::collectives::allreduce::ring`] with hints) op-for-op; other
+/// permutations re-route the same reduce–broadcast schedule over a
+/// different cycle of physical links — the knob that matters on fabrics
+/// where rank adjacency and link speed are not the same thing.
+pub fn ring_permutation_allreduce(perm: &[usize]) -> Result<Trace> {
+    let r_ = perm.len();
+    let mut seen = vec![false; r_];
+    for &p in perm {
+        if p >= r_ || seen[p] {
+            return Err(Gc3Error::Invalid(format!(
+                "ring permutation {perm:?} is not a permutation of 0..{r_}"
+            )));
+        }
+        seen[p] = true;
+    }
+    if r_ < 2 {
+        return Err(Gc3Error::Invalid("ring permutation needs >= 2 ranks".to_string()));
+    }
+    let mut p = Program::new(CollectiveSpec::allreduce(r_, r_));
+    for i in 0..r_ {
+        let hint = SchedHint::tb(i, i, i);
+        let mut c = p.chunk(BufferId::Input, perm[i], i, 1)?;
+        for step in 1..r_ {
+            let at = p.chunk(BufferId::Input, perm[(i + step) % r_], i, 1)?;
+            c = p.reduce(at, c, hint)?;
+        }
+        for step in r_ - 1..2 * r_ - 2 {
+            let dst = perm[(i + step + 1) % r_];
+            c = p.copy(c, BufferId::Input, dst, i, hint)?;
+        }
+    }
+    p.finish()
+}
+
+/// AllToAll where every `(src, dst)` chunk follows an explicit relay path
+/// `paths[src·R + dst] = [src, hop₁, …, dst]` — intermediate hops bounce
+/// through scratch slots on the relay rank. A length-2 path is the direct
+/// send ([`crate::collectives::alltoall::direct`]'s pattern for that
+/// pair); longer paths trade hop count for faster links, which is the
+/// whole game on fabrics whose direct pair links are slow (no NVSwitch:
+/// non-neighbors fall to host shared memory while ring hops keep NVLink
+/// rate).
+pub fn relay_alltoall(ranks: usize, paths: &[Vec<usize>]) -> Result<Trace> {
+    if paths.len() != ranks * ranks {
+        return Err(Gc3Error::Invalid(format!(
+            "relay alltoall wants {n} paths (one per (src, dst) pair), got {m}",
+            n = ranks * ranks,
+            m = paths.len()
+        )));
+    }
+    let mut p = Program::new(CollectiveSpec::alltoall(ranks));
+    let mut scratch_next = vec![0usize; ranks];
+    for src in 0..ranks {
+        for dst in 0..ranks {
+            let path = &paths[src * ranks + dst];
+            let want = if src == dst { 1 } else { 2 };
+            if path.len() < want || path[0] != src || path[path.len() - 1] != dst {
+                return Err(Gc3Error::Invalid(format!(
+                    "path for ({src}, {dst}) must run [src, …, dst], got {path:?}"
+                )));
+            }
+            if path.windows(2).any(|w| w[0] == w[1]) {
+                return Err(Gc3Error::Invalid(format!(
+                    "path for ({src}, {dst}) repeats a rank hop: {path:?}"
+                )));
+            }
+            let mut c = p.chunk(BufferId::Input, src, dst, 1)?;
+            for k in 1..path.len().saturating_sub(1) {
+                let hop = path[k];
+                let idx = scratch_next[hop];
+                scratch_next[hop] += 1;
+                c = p.copy_to(c, BufferId::Scratch, hop, idx)?;
+            }
+            p.copy_to(c, BufferId::Output, dst, src)?;
+        }
+    }
+    p.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::allreduce;
+    use crate::compiler::{compile, CompileOpts};
+    use crate::exec::{verify, NativeReducer};
+
+    #[test]
+    fn identity_permutation_reproduces_the_library_ring() {
+        let perm: Vec<usize> = (0..4).collect();
+        let ours = ring_permutation_allreduce(&perm).unwrap();
+        let lib = allreduce::ring(4, true).unwrap();
+        assert_eq!(ours.op_count(), lib.op_count());
+        for (a, b) in ours.ops.iter().zip(lib.ops.iter()) {
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+    }
+
+    #[test]
+    fn permuted_rings_verify_functionally() {
+        for perm in [vec![0, 2, 1, 3], vec![3, 1, 0, 2], vec![1, 0, 3, 2]] {
+            let t = ring_permutation_allreduce(&perm).unwrap();
+            let c = compile(&t, "perm_ring", &CompileOpts::default()).unwrap();
+            verify(&c.ef, &t.spec, 2, &mut NativeReducer)
+                .unwrap_or_else(|e| panic!("{perm:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn rejects_non_permutations() {
+        assert!(ring_permutation_allreduce(&[0, 0, 1]).is_err(), "duplicate");
+        assert!(ring_permutation_allreduce(&[0, 5, 1]).is_err(), "out of range");
+        assert!(ring_permutation_allreduce(&[0]).is_err(), "too small");
+    }
+
+    #[test]
+    fn relay_alltoall_with_mixed_path_lengths_verifies() {
+        // 4 ranks: opposite pairs relay through a ring neighbor, the rest
+        // go direct — the shape the search emits on non-NVSwitch fabrics.
+        let r = 4;
+        let mut paths: Vec<Vec<usize>> = Vec::new();
+        for src in 0..r {
+            for dst in 0..r {
+                paths.push(if src == dst {
+                    vec![src]
+                } else if (src + 2) % r == dst {
+                    vec![src, (src + 1) % r, dst]
+                } else {
+                    vec![src, dst]
+                });
+            }
+        }
+        let t = relay_alltoall(r, &paths).unwrap();
+        let c = compile(&t, "relay_a2a", &CompileOpts::default()).unwrap();
+        verify(&c.ef, &t.spec, 2, &mut NativeReducer).unwrap();
+        assert!(
+            t.scratch_chunks.iter().any(|&n| n > 0),
+            "relayed chunks must stage through scratch"
+        );
+    }
+
+    #[test]
+    fn relay_alltoall_rejects_malformed_paths() {
+        let direct: Vec<Vec<usize>> =
+            (0..2).flat_map(|s| (0..2).map(move |d| vec![s, d])).collect();
+        assert!(relay_alltoall(2, &direct).is_err(), "self path [s, s] repeats a rank");
+        let mut ok: Vec<Vec<usize>> = vec![vec![0], vec![0, 1], vec![1, 0], vec![1]];
+        assert!(relay_alltoall(2, &ok).is_ok());
+        ok[1] = vec![1, 0]; // wrong endpoints for (0, 1)
+        assert!(relay_alltoall(2, &ok).is_err());
+        assert!(relay_alltoall(2, &ok[..2]).is_err(), "wrong path count");
+    }
+}

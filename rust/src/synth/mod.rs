@@ -1,0 +1,519 @@
+//! Sketch-guided collective algorithm **synthesis** on the simulator —
+//! generating algorithms instead of selecting them.
+//!
+//! The autotuner ([`crate::tune`]) can only rank what humans wrote: its
+//! grid is library-variant × instances × protocol. This module closes
+//! the remaining gap to TACCL-style synthesis: a [`Sketch`] constrains
+//! the search to a template family with topology-derived candidate edges
+//! and per-link chunk budgets ([`sketch`]), a deterministic seeded
+//! greedy-with-restarts engine instantiates candidate routings
+//! ([`search`]) and spells them as ordinary DSL programs ([`emit`]), and
+//! the driver [`synthesize`] prices every candidate with
+//! [`crate::sim::simulate`] through the tuner's shared [`CompileCache`]
+//! and thread-pool pattern. Winners are validated byte-identically
+//! through [`crate::planner::Plan::verify`] before anything is
+//! published.
+//!
+//! A synthesized winner flows into the existing [`TunedTable`] /
+//! `Backend::Tuned` dispatch path as a provenance-carrying entry: its
+//! [`TunedChoice::synthesized`] records `{seed, sketch, sim_time}`, and
+//! [`regenerate_trace`] replays exactly that `(sketch, seed)` pair — a
+//! pure function shared with the search itself — so a loaded table can
+//! rebuild the winning program in a later process and `gc3 plan` can
+//! explain why it won. The `gc3 synth` CLI verb drives this end to end;
+//! reproduction commands live in EXPERIMENTS.md §SYNTH.
+
+mod emit;
+mod search;
+mod sketch;
+
+pub use search::{candidate_trace, permutation, route_all};
+pub use sketch::{candidate_edges, edge_cost, Edge, Sketch, Template, DEFAULT_LINK_BUDGET};
+
+use crate::compiler::{compile, CompileOpts, Compiled};
+use crate::core::{Gc3Error, Result};
+use crate::dsl::Trace;
+use crate::planner::{Backend, Planner};
+use crate::sim::{simulate, Protocol};
+use crate::topology::Topology;
+use crate::tune::{
+    parallel_map, resolve_workers, tune_with_cache, Collective, CompileCache, SynthProvenance,
+    TuneOpts, TunedChoice, TunedEntry, TunedTable,
+};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Search knobs for [`synthesize`].
+#[derive(Clone, Debug)]
+pub struct SynthOpts {
+    /// Restarts to explore: seeds `seed .. seed + budget`.
+    pub budget: usize,
+    /// First seed (seed 0 is the canonical greedy order — the search
+    /// always prices the deterministic baseline restart when in range).
+    pub seed: u64,
+    /// Per-link chunk budget baked into the [`Sketch`].
+    pub link_budget: usize,
+    /// Worker threads for compile/price pools; 0 = one per core (capped).
+    pub workers: usize,
+    /// Instance replication factors to sweep per routing.
+    pub instances: Vec<usize>,
+    /// Protocols to sweep, ladder order (ties break low-latency-first).
+    pub protocols: Vec<Protocol>,
+    /// Functionally verify every distinct synthesized winner through the
+    /// Planner's tuned dispatch before publishing the table.
+    pub verify_winners: bool,
+}
+
+impl Default for SynthOpts {
+    fn default() -> Self {
+        SynthOpts {
+            budget: 8,
+            seed: 0,
+            link_budget: DEFAULT_LINK_BUDGET,
+            workers: 0,
+            instances: vec![1],
+            protocols: vec![Protocol::LL, Protocol::LL128, Protocol::Simple],
+            verify_winners: true,
+        }
+    }
+}
+
+/// Head-to-head at one size: the best library plan vs the best
+/// synthesized candidate.
+#[derive(Clone, Debug)]
+pub struct SynthComparison {
+    pub size: u64,
+    /// Simulated time of the tuner's best library plan, seconds.
+    pub library_s: f64,
+    /// The library winner's key, e.g. `direct x1 ll`.
+    pub library_choice: String,
+    /// Simulated time of the best synthesized candidate, seconds.
+    pub synth_s: f64,
+    /// The synthesized best's key, e.g. `synth:relay/lb8:s3 x1 ll`.
+    pub synth_key: String,
+    /// `library_s / synth_s` — > 1.0 means synthesis beat the library.
+    pub speedup: f64,
+    /// Whether the synthesized candidate strictly won (and therefore
+    /// replaced the library entry in the published table).
+    pub won: bool,
+}
+
+/// What a synthesis run did, beyond the table itself.
+#[derive(Clone, Debug)]
+pub struct SynthOutcome {
+    /// Best plan per size — library entries where the library held,
+    /// provenance-carrying synthesized entries where synthesis won.
+    pub table: TunedTable,
+    /// The sketch string the run searched under (e.g. `relay/lb8`).
+    pub sketch: String,
+    pub comparisons: Vec<SynthComparison>,
+    /// Synthesized grid points enumerated (seeds × instances × protocols).
+    pub candidates: usize,
+    /// Simulator calls for the synthesized candidates (feasible × sizes).
+    pub simulations: usize,
+    /// Shared-cache hit/miss deltas across the whole run, library
+    /// baseline included — the satellite counter for the summary line.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// `(candidate key, error)` for candidates that failed to compile.
+    pub skipped: Vec<(String, String)>,
+    /// Distinct synthesized winners that passed functional verification
+    /// through the Planner's tuned dispatch (0 when verification is off
+    /// or the library swept the grid).
+    pub verified_winners: usize,
+}
+
+impl SynthOutcome {
+    /// Human-readable comparison table (CLI output).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "synthesis: {} on {} ({} ranks), sketch {}\n{:>12} {:>24} {:>10} {:>28} {:>10} {:>8}\n",
+            self.table.collective,
+            self.table.topology,
+            self.table.num_ranks,
+            self.sketch,
+            "size",
+            "library best",
+            "time us",
+            "synthesized best",
+            "time us",
+            "speedup"
+        );
+        for c in &self.comparisons {
+            out.push_str(&format!(
+                "{:>12} {:>24} {:>10.1} {:>28} {:>10.1} {:>7.2}x{}\n",
+                crate::util::human_bytes(c.size),
+                c.library_choice,
+                c.library_s * 1e6,
+                c.synth_key,
+                c.synth_s * 1e6,
+                c.speedup,
+                if c.won { "  WON" } else { "" }
+            ));
+        }
+        out
+    }
+
+    /// Sizes where synthesis beat the best library plan.
+    pub fn wins(&self) -> usize {
+        self.comparisons.iter().filter(|c| c.won).count()
+    }
+}
+
+/// Replay the exact trace a recorded synthesized winner was priced and
+/// verified as: parse the provenance's sketch string and re-run the
+/// deterministic generator at its seed. Shares [`candidate_trace`] with
+/// the search, so regeneration can never drift from what the search
+/// priced.
+pub fn regenerate_trace(
+    topo: &Topology,
+    collective: Collective,
+    prov: &SynthProvenance,
+) -> Result<Trace> {
+    let sketch = Sketch::parse(&prov.sketch)?;
+    candidate_trace(topo, collective, &sketch, prov.seed)
+}
+
+/// One synthesized grid point.
+struct SynthCand {
+    seed: u64,
+    variant: String,
+    instances: usize,
+    protocol: Protocol,
+}
+
+impl SynthCand {
+    fn key(&self) -> String {
+        TunedChoice {
+            variant: self.variant.clone(),
+            instances: self.instances,
+            protocol: self.protocol,
+            synthesized: None,
+        }
+        .key()
+    }
+}
+
+/// The synthesis driver: library baseline (through the shared cache) →
+/// seeded candidate generation → compile (parallel, memoized) → price
+/// every `(candidate, size)` cell → per-size argmin against the library
+/// → verify synthesized winners through the Planner's tuned dispatch.
+pub fn synthesize(
+    topo: &Topology,
+    collective: Collective,
+    sizes: &[u64],
+    opts: &SynthOpts,
+    cache: &mut CompileCache,
+) -> Result<SynthOutcome> {
+    let mut sizes: Vec<u64> = sizes.to_vec();
+    sizes.sort_unstable();
+    sizes.dedup();
+    if sizes.is_empty() {
+        return Err(Gc3Error::Invalid("synth: empty size grid".to_string()));
+    }
+    if opts.budget == 0 {
+        return Err(Gc3Error::Invalid("synth: budget must be >= 1 seed".to_string()));
+    }
+    let sketch = Sketch::for_collective(collective, opts.link_budget)?;
+    let (hits0, misses0) = (cache.hits(), cache.misses());
+    let workers = resolve_workers(opts.workers);
+
+    // ---- Library baseline: the tuner's argmin per size, compiled through
+    // the same shared cache so `gc3 tune` and `gc3 synth` runs over one
+    // topology reuse each other's candidates. Winner verification happens
+    // below on the *published* table, not twice.
+    let lib = tune_with_cache(
+        topo,
+        collective,
+        &sizes,
+        &TuneOpts { workers: opts.workers, verify_winners: false, ..TuneOpts::default() },
+        cache,
+    )?;
+
+    // ---- Candidate grid: one restart per seed, swept over the compile
+    // configuration knobs.
+    let mut cands: Vec<SynthCand> = Vec::new();
+    for k in 0..opts.budget {
+        let seed = opts.seed.wrapping_add(k as u64);
+        let variant = format!("synth:{}:s{seed}", sketch.render());
+        for &instances in &opts.instances {
+            for &protocol in &opts.protocols {
+                cands.push(SynthCand { seed, variant: variant.clone(), instances, protocol });
+            }
+        }
+    }
+
+    // ---- Compile phase: memo hits are free, misses compile in parallel.
+    let misses: Vec<usize> = (0..cands.len())
+        .filter(|&i| {
+            let c = &cands[i];
+            cache
+                .get_named(topo, collective.name(), &c.variant, c.instances, c.protocol)
+                .is_none()
+        })
+        .collect();
+    let compiled: Vec<Result<Compiled>> = parallel_map(misses.len(), workers, |k| {
+        let c = &cands[misses[k]];
+        let trace = candidate_trace(topo, collective, &sketch, c.seed)?;
+        let name = format!(
+            "synth_{}_{}_lb{}_s{}_x{}_{}",
+            collective.name(),
+            sketch.template.name(),
+            sketch.link_budget,
+            c.seed,
+            c.instances,
+            c.protocol.name()
+        );
+        let copts =
+            CompileOpts::for_topo(topo).with_instances(c.instances).with_protocol(c.protocol);
+        compile(&trace, &name, &copts)
+    });
+    let mut skipped: Vec<(String, String)> = Vec::new();
+    for (&i, res) in misses.iter().zip(compiled) {
+        let c = &cands[i];
+        match res {
+            Ok(comp) => cache.insert_named(
+                topo,
+                collective.name(),
+                &c.variant,
+                c.instances,
+                c.protocol,
+                Arc::new(comp),
+            ),
+            Err(e) => skipped.push((c.key(), e.to_string())),
+        }
+    }
+    let feasible: Vec<(usize, Arc<Compiled>)> = (0..cands.len())
+        .filter_map(|i| {
+            let c = &cands[i];
+            cache
+                .peek_named(topo, collective.name(), &c.variant, c.instances, c.protocol)
+                .map(|a| (i, a))
+        })
+        .collect();
+    if feasible.is_empty() {
+        return Err(Gc3Error::Invalid(format!(
+            "synth: no feasible candidate for {} on {} ({} skipped)",
+            collective.name(),
+            topo.name,
+            skipped.len()
+        )));
+    }
+
+    // ---- Price phase: the whole (candidate × size) grid in parallel.
+    let cells = feasible.len() * sizes.len();
+    let reports = parallel_map(cells, workers, |k| {
+        let (fi, si) = (k / sizes.len(), k % sizes.len());
+        simulate(&feasible[fi].1.ef, topo, sizes[si])
+    });
+
+    // ---- Per-size argmin against the library baseline: a synthesized
+    // entry replaces the library entry only when strictly faster, and it
+    // carries its regeneration provenance.
+    let mut entries = Vec::with_capacity(sizes.len());
+    let mut comparisons = Vec::with_capacity(sizes.len());
+    for (si, &size) in sizes.iter().enumerate() {
+        let lib_entry = &lib.table.entries[si];
+        let mut best: Option<(usize, f64, f64)> = None;
+        for fi in 0..feasible.len() {
+            if let Ok(rep) = &reports[fi * sizes.len() + si] {
+                if best.map(|(_, t, _)| rep.time < t).unwrap_or(true) {
+                    best = Some((fi, rep.time, rep.algbw));
+                }
+            }
+        }
+        let (fi, time, algbw) = best.ok_or_else(|| {
+            Gc3Error::Invalid(format!("synth: no candidate simulates at size {size}"))
+        })?;
+        let c = &cands[feasible[fi].0];
+        let won = time < lib_entry.time;
+        comparisons.push(SynthComparison {
+            size,
+            library_s: lib_entry.time,
+            library_choice: lib_entry.choice.key(),
+            synth_s: time,
+            synth_key: c.key(),
+            speedup: lib_entry.time / time,
+            won,
+        });
+        entries.push(if won {
+            TunedEntry {
+                size,
+                choice: TunedChoice {
+                    variant: c.variant.clone(),
+                    instances: c.instances,
+                    protocol: c.protocol,
+                    synthesized: Some(SynthProvenance {
+                        seed: c.seed,
+                        sketch: sketch.render(),
+                        sim_time: time,
+                    }),
+                },
+                time,
+                algbw,
+            }
+        } else {
+            lib_entry.clone()
+        });
+    }
+    let table = TunedTable {
+        collective: collective.name().to_string(),
+        topology: topo.name.clone(),
+        num_ranks: topo.num_ranks(),
+        entries,
+    };
+
+    // ---- Verify phase: every distinct synthesized winner goes through
+    // the exact dispatch path consumers will use — table loaded into a
+    // Planner, plan served from it, trace regenerated from provenance —
+    // and must pass byte-accurate functional verification before the
+    // table is published.
+    let mut verified_winners = 0usize;
+    if opts.verify_winners {
+        let mut planner = Planner::new(topo.clone()).with_tuned(table.clone())?;
+        let mut seen: HashSet<String> = HashSet::new();
+        for entry in &table.entries {
+            if entry.choice.synthesized.is_none() || !seen.insert(entry.choice.key()) {
+                continue;
+            }
+            let plan = planner.plan(collective, entry.size)?;
+            if plan.backend != Backend::Tuned {
+                return Err(Gc3Error::Invalid(format!(
+                    "synth: dispatch did not serve winner {} from the tuned table",
+                    entry.choice.key()
+                )));
+            }
+            plan.verify(2).map_err(|e| {
+                Gc3Error::Invalid(format!(
+                    "synth: winning plan {} failed functional verification: {e}",
+                    entry.choice.key()
+                ))
+            })?;
+            verified_winners += 1;
+        }
+    }
+
+    Ok(SynthOutcome {
+        table,
+        sketch: sketch.render(),
+        comparisons,
+        candidates: cands.len(),
+        simulations: cells,
+        cache_hits: cache.hits() - hits0,
+        cache_misses: cache.misses() - misses0,
+        skipped,
+        verified_winners,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn asym4() -> Topology {
+        let mut t = Topology::asym(1);
+        t.gpus_per_node = 4;
+        t
+    }
+
+    fn fast_opts() -> SynthOpts {
+        SynthOpts { budget: 2, workers: 2, protocols: vec![Protocol::Simple], ..SynthOpts::default() }
+    }
+
+    /// The acceptance shape in miniature: on the asymmetric fabric the
+    /// relay AllToAll beats the library's direct pattern, the winning
+    /// entry carries provenance, and it verified through the Planner.
+    #[test]
+    fn relay_alltoall_beats_the_library_on_asym() {
+        let topo = asym4();
+        let out = synthesize(
+            &topo,
+            Collective::AllToAll,
+            &[1 << 20],
+            &fast_opts(),
+            &mut CompileCache::new(),
+        )
+        .unwrap();
+        assert_eq!(out.comparisons.len(), 1);
+        let c = &out.comparisons[0];
+        assert!(c.won, "synth {:.3}us vs library {:.3}us", c.synth_s * 1e6, c.library_s * 1e6);
+        assert!(c.speedup > 1.0);
+        let prov = out.table.entries[0].choice.synthesized.as_ref().expect("provenance");
+        assert_eq!(prov.sketch, out.sketch);
+        assert!((prov.sim_time - c.synth_s).abs() < 1e-12);
+        assert!(out.verified_winners >= 1, "winner must verify through the Planner");
+        assert!(out.wins() >= 1);
+    }
+
+    /// Seed determinism end to end: regenerating a winner's trace from
+    /// its provenance and recompiling yields byte-identical EF JSON.
+    #[test]
+    fn regeneration_is_seed_deterministic() {
+        let topo = asym4();
+        let mut cache = CompileCache::new();
+        let out =
+            synthesize(&topo, Collective::AllToAll, &[1 << 20], &fast_opts(), &mut cache).unwrap();
+        let entry = &out.table.entries[0];
+        let prov = entry.choice.synthesized.as_ref().unwrap();
+        let opts = CompileOpts::for_topo(&topo)
+            .with_instances(entry.choice.instances)
+            .with_protocol(entry.choice.protocol);
+        let ef_json = |p: &SynthProvenance| {
+            let trace = regenerate_trace(&topo, Collective::AllToAll, p).unwrap();
+            compile(&trace, "regen", &opts).unwrap().ef.to_json_string()
+        };
+        assert_eq!(ef_json(prov), ef_json(prov));
+        let other = SynthProvenance { seed: prov.seed.wrapping_add(17), ..prov.clone() };
+        let _ = regenerate_trace(&topo, Collective::AllToAll, &other).unwrap();
+    }
+
+    /// Satellite: the shared cache makes a repeat run free — every
+    /// candidate (library baseline included) is served from the memo.
+    #[test]
+    fn shared_cache_makes_repeat_runs_free() {
+        let topo = asym4();
+        let mut cache = CompileCache::new();
+        let opts = SynthOpts { verify_winners: false, ..fast_opts() };
+        let o1 =
+            synthesize(&topo, Collective::AllToAll, &[1 << 20], &opts, &mut cache).unwrap();
+        assert!(o1.cache_misses > 0, "first run compiles");
+        let o2 =
+            synthesize(&topo, Collective::AllToAll, &[1 << 20], &opts, &mut cache).unwrap();
+        assert_eq!(o2.cache_misses, 0, "second run is all memo hits");
+        assert!(o2.cache_hits >= o2.candidates);
+    }
+
+    /// AllReduce synthesizes too (ring permutation), and on a fabric
+    /// whose identity ring is already optimal the library keeps every
+    /// bucket — the search must not publish a non-improvement.
+    #[test]
+    fn allreduce_ring_permutation_never_regresses() {
+        let topo = asym4();
+        let out = synthesize(
+            &topo,
+            Collective::AllReduce,
+            &[1 << 20],
+            &SynthOpts { verify_winners: false, ..fast_opts() },
+            &mut CompileCache::new(),
+        )
+        .unwrap();
+        let c = &out.comparisons[0];
+        assert!(out.table.entries[0].time <= c.library_s, "published entry is the argmin");
+        if !c.won {
+            assert!(out.table.entries[0].choice.synthesized.is_none());
+        }
+    }
+
+    #[test]
+    fn unsupported_inputs_are_hard_errors() {
+        let topo = asym4();
+        let mut cache = CompileCache::new();
+        let e = synthesize(&topo, Collective::AllGather, &[1 << 20], &fast_opts(), &mut cache)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("allreduce|alltoall"), "{e}");
+        assert!(synthesize(&topo, Collective::AllToAll, &[], &fast_opts(), &mut cache).is_err());
+        let zero = SynthOpts { budget: 0, ..fast_opts() };
+        assert!(synthesize(&topo, Collective::AllToAll, &[1 << 20], &zero, &mut cache).is_err());
+    }
+}

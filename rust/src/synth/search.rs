@@ -1,0 +1,241 @@
+//! The deterministic seeded search engine: greedy-with-restarts over
+//! chunk routings inside a [`Sketch`].
+//!
+//! One seed is one restart: it fixes the order the router considers
+//! `(src, dst)` pairs (seed 0 keeps the canonical src-major order, any
+//! other seed shuffles it through [`crate::util::rng::Rng`]) or, for the
+//! ring template, the rank permutation itself. Routing is greedy
+//! sequential: each pair takes the currently cheapest path under a
+//! congestion-aware cost — a directed edge's effective cost ramps from
+//! `base` to `2·base` as its load approaches the sketch's link budget,
+//! at which point it closes — so earlier pairs shape the network later
+//! pairs see, and different
+//! seeds land in different local optima. The driver ([`super::synthesize`])
+//! prices every restart on the simulator and keeps the argmin.
+//!
+//! Everything here is a pure function of `(topology, sketch, seed)`:
+//! [`candidate_trace`] is shared by the search and by provenance
+//! regeneration ([`super::regenerate_trace`]), so a recorded winner can
+//! never drift from what the search priced.
+
+use crate::core::{Gc3Error, Result};
+use crate::dsl::Trace;
+use crate::topology::Topology;
+use crate::tune::Collective;
+use crate::util::rng::Rng;
+
+use super::emit;
+use super::sketch::{edge_cost, Sketch, Template};
+
+/// The rank permutation seed `seed` explores: identity at seed 0 (the
+/// library ring's order — the search always prices the known-good
+/// baseline), Fisher–Yates shuffled otherwise.
+pub fn permutation(ranks: usize, seed: u64) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..ranks).collect();
+    if seed != 0 {
+        Rng::new(seed).shuffle(&mut perm);
+    }
+    perm
+}
+
+/// Dijkstra over the complete directed rank graph with per-edge closures.
+/// `cost(a, b)` returns `None` for a closed edge. O(V²) scan — rank
+/// counts are double digits, a heap would be noise.
+fn shortest_path(
+    ranks: usize,
+    src: usize,
+    dst: usize,
+    cost: impl Fn(usize, usize) -> Option<f64>,
+) -> Option<Vec<usize>> {
+    let mut dist = vec![f64::INFINITY; ranks];
+    let mut prev = vec![usize::MAX; ranks];
+    let mut done = vec![false; ranks];
+    dist[src] = 0.0;
+    for _ in 0..ranks {
+        let u = (0..ranks)
+            .filter(|&u| !done[u] && dist[u].is_finite())
+            .min_by(|&a, &b| dist[a].total_cmp(&dist[b]))?;
+        if u == dst {
+            break;
+        }
+        done[u] = true;
+        for v in 0..ranks {
+            if v == u || done[v] {
+                continue;
+            }
+            if let Some(c) = cost(u, v) {
+                if dist[u] + c < dist[v] {
+                    dist[v] = dist[u] + c;
+                    prev[v] = u;
+                }
+            }
+        }
+    }
+    if !dist[dst].is_finite() {
+        return None;
+    }
+    let mut path = vec![dst];
+    while *path.last().unwrap() != src {
+        path.push(prev[*path.last().unwrap()]);
+    }
+    path.reverse();
+    Some(path)
+}
+
+/// Route every `(src, dst)` pair for a relay AllToAll: greedy sequential
+/// shortest paths under the congestion cost, pair order fixed by `seed`.
+/// Returns `ranks²` paths indexed `src·R + dst` (`[src]` on the
+/// diagonal). A pair that finds every route closed by the link budget
+/// falls back to its direct edge — the emitted program is always total.
+pub fn route_all(topo: &Topology, link_budget: usize, seed: u64) -> Vec<Vec<usize>> {
+    let r = topo.num_ranks();
+    let mut base = vec![0.0f64; r * r];
+    for a in 0..r {
+        for b in 0..r {
+            if a != b {
+                base[a * r + b] = edge_cost(topo, a, b);
+            }
+        }
+    }
+    let mut pairs: Vec<(usize, usize)> = (0..r)
+        .flat_map(|s| (0..r).filter(move |&d| d != s).map(move |d| (s, d)))
+        .collect();
+    if seed != 0 {
+        Rng::new(seed).shuffle(&mut pairs);
+    }
+    let mut load = vec![0usize; r * r];
+    let mut paths = vec![Vec::new(); r * r];
+    for s in 0..r {
+        paths[s * r + s] = vec![s];
+    }
+    for (src, dst) in pairs {
+        let path = shortest_path(r, src, dst, |a, b| {
+            let e = a * r + b;
+            // Ramp to 2x base at the budget: gentle enough that fast
+            // links stay preferred while they have headroom (matching
+            // the simulator's near-saturation-only contention), steep
+            // enough that loaded edges shed traffic.
+            (load[e] < link_budget)
+                .then(|| base[e] * (1.0 + load[e] as f64 / link_budget as f64))
+        })
+        .unwrap_or_else(|| vec![src, dst]);
+        for w in path.windows(2) {
+            load[w[0] * r + w[1]] += 1;
+        }
+        paths[src * r + dst] = path;
+    }
+    paths
+}
+
+/// The one place a `(topology, collective, sketch, seed)` tuple becomes a
+/// trace — used by the search to generate candidates and by
+/// [`super::regenerate_trace`] to replay a recorded winner, so the two
+/// can never disagree.
+pub fn candidate_trace(
+    topo: &Topology,
+    collective: Collective,
+    sketch: &Sketch,
+    seed: u64,
+) -> Result<Trace> {
+    match (collective, sketch.template) {
+        (Collective::AllReduce, Template::RingPermutation) => {
+            emit::ring_permutation_allreduce(&permutation(topo.num_ranks(), seed))
+        }
+        (Collective::AllToAll, Template::Relay) => {
+            emit::relay_alltoall(topo.num_ranks(), &route_all(topo, sketch.link_budget, seed))
+        }
+        _ => Err(Gc3Error::Invalid(format!(
+            "sketch template '{}' does not synthesize {} (accepted: \
+             ring_perm for allreduce, relay for alltoall)",
+            sketch.template.name(),
+            collective.name()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutations_are_seed_deterministic() {
+        assert_eq!(permutation(8, 0), (0..8).collect::<Vec<_>>(), "seed 0 is identity");
+        let a = permutation(8, 7);
+        assert_eq!(a, permutation(8, 7), "same seed, same permutation");
+        assert_ne!(a, permutation(8, 8));
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn routes_are_valid_and_seed_deterministic() {
+        let topo = Topology::asym(1);
+        let r = topo.num_ranks();
+        let paths = route_all(&topo, 8, 3);
+        assert_eq!(paths, route_all(&topo, 8, 3));
+        for src in 0..r {
+            for dst in 0..r {
+                let p = &paths[src * r + dst];
+                assert_eq!(p[0], src);
+                assert_eq!(*p.last().unwrap(), dst);
+                assert!(p.windows(2).all(|w| w[0] != w[1]), "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn router_relays_around_slow_pair_links() {
+        // asym has no NVSwitch: ring neighbors keep NVLink while other
+        // intra-node pairs fall to shm. With budget headroom the router
+        // must prefer multi-hop NVLink relays over slow direct edges.
+        let topo = Topology::asym(1);
+        let r = topo.num_ranks();
+        let paths = route_all(&topo, 8, 0);
+        let relayed =
+            paths.iter().filter(|p| p.len() > 2).count();
+        assert!(relayed > 0, "no pair was relayed");
+        // The worst pair (distance 4 on the ring) must not take the
+        // direct shm edge at zero load: 4 NVLink hops are cheaper.
+        assert!(paths[4].len() > 2, "0 -> 4 should relay, got {:?}", paths[4]);
+        let _ = r;
+    }
+
+    #[test]
+    fn budget_one_forces_spread_or_direct_fallback() {
+        let topo = Topology::asym(1);
+        let r = topo.num_ranks();
+        let paths = route_all(&topo, 1, 0);
+        // Count per-edge loads: no edge may exceed the budget except via
+        // the direct-edge fallback, which is only taken when every route
+        // is closed.
+        let mut load = vec![0usize; r * r];
+        for p in &paths {
+            for w in p.windows(2) {
+                load[w[0] * r + w[1]] += 1;
+            }
+        }
+        let over: Vec<usize> =
+            (0..r * r).filter(|&e| load[e] > 1).collect();
+        for e in over {
+            // Overloaded edges must all be direct fallbacks: (src, dst)
+            // pairs routed as exactly [src, dst].
+            let (a, b) = (e / r, e % r);
+            assert_eq!(paths[a * r + b], vec![a, b], "non-fallback edge over budget");
+        }
+    }
+
+    #[test]
+    fn candidate_trace_matches_template_to_collective() {
+        let mut topo = Topology::asym(1);
+        topo.gpus_per_node = 4;
+        let relay = Sketch::for_collective(Collective::AllToAll, 8).unwrap();
+        let t = candidate_trace(&topo, Collective::AllToAll, &relay, 1).unwrap();
+        assert_eq!(t.spec.num_ranks, 4);
+        let ring = Sketch::for_collective(Collective::AllReduce, 8).unwrap();
+        let t = candidate_trace(&topo, Collective::AllReduce, &ring, 1).unwrap();
+        assert_eq!(t.spec.num_ranks, 4);
+        assert!(candidate_trace(&topo, Collective::AllReduce, &relay, 1).is_err());
+        assert!(candidate_trace(&topo, Collective::AllGather, &ring, 1).is_err());
+    }
+}

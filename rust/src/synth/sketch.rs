@@ -1,0 +1,199 @@
+//! Sketches: the human-shaped constraint that makes synthesis tractable.
+//!
+//! TACCL's central idea is that a search over *all* chunk routings is
+//! hopeless, but a search inside a communication sketch — a template
+//! family plus per-link budgets — is small enough to enumerate and price
+//! on a cost model. A [`Sketch`] here names the template the search
+//! instantiates ([`Template`]) and carries the per-link chunk budget the
+//! router respects; [`candidate_edges`] derives the edge inventory and
+//! base costs straight from a [`Topology`]'s link classes, so the search
+//! never hard-codes a fabric.
+//!
+//! Sketches render to a stable string (`relay/lb8`) that round-trips
+//! through [`Sketch::parse`]; together with the search seed that string
+//! is the complete provenance of a synthesized algorithm — enough to
+//! regenerate its trace bit-for-bit in a later process
+//! ([`super::regenerate_trace`]).
+
+use crate::core::{Gc3Error, Result};
+use crate::topology::{LinkType, Topology};
+use crate::tune::Collective;
+
+/// Template families the search engine knows how to instantiate.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Template {
+    /// Ring AllReduce over a permuted rank order
+    /// ([`super::emit::ring_permutation_allreduce`]).
+    RingPermutation,
+    /// Per-pair relay routing for AllToAll
+    /// ([`super::emit::relay_alltoall`]).
+    Relay,
+}
+
+impl Template {
+    pub fn name(self) -> &'static str {
+        match self {
+            Template::RingPermutation => "ring_perm",
+            Template::Relay => "relay",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Template> {
+        match s {
+            "ring_perm" => Some(Template::RingPermutation),
+            "relay" => Some(Template::Relay),
+            _ => None,
+        }
+    }
+}
+
+/// The search constraint: which template to instantiate and how many
+/// chunks one directed link may carry before the router must route
+/// around it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Sketch {
+    pub template: Template,
+    /// Per-link chunk budget: a directed edge already carrying this many
+    /// routed chunks is closed to further paths (the congestion half of
+    /// the sketch).
+    pub link_budget: usize,
+}
+
+/// Default per-link chunk budget: on an R-rank ring fabric, all-pairs
+/// shortest-path relaying loads each directed ring edge with ~R chunks,
+/// so 8 (one node's worth of GPUs) admits a full relay solution.
+pub const DEFAULT_LINK_BUDGET: usize = 8;
+
+impl Sketch {
+    /// The template family that searches `collective`'s routing space.
+    /// Synthesis only covers the collectives with a template; the others
+    /// keep their library plans.
+    pub fn for_collective(collective: Collective, link_budget: usize) -> Result<Sketch> {
+        if link_budget == 0 {
+            return Err(Gc3Error::Invalid(
+                "sketch link budget must be >= 1 chunk per link".to_string(),
+            ));
+        }
+        let template = match collective {
+            Collective::AllReduce => Template::RingPermutation,
+            Collective::AllToAll => Template::Relay,
+            _ => {
+                return Err(Gc3Error::Invalid(format!(
+                    "no synthesis sketch for {} (accepted: allreduce|alltoall)",
+                    collective.name()
+                )))
+            }
+        };
+        Ok(Sketch { template, link_budget })
+    }
+
+    /// Stable provenance string, e.g. `relay/lb8`. Only knobs that change
+    /// the emitted trace appear here — the seed count ("budget") of a
+    /// search run deliberately does not, because regeneration replays a
+    /// single seed.
+    pub fn render(&self) -> String {
+        format!("{}/lb{}", self.template.name(), self.link_budget)
+    }
+
+    /// Inverse of [`Sketch::render`].
+    pub fn parse(s: &str) -> Result<Sketch> {
+        let grammar = "sketch grammar: <template>/lb<N> with template ring_perm|relay and N >= 1";
+        let (tname, budget) = s
+            .split_once('/')
+            .ok_or_else(|| Gc3Error::Invalid(format!("bad sketch '{s}' ({grammar})")))?;
+        let template = Template::parse(tname)
+            .ok_or_else(|| Gc3Error::Invalid(format!("bad sketch template '{tname}' ({grammar})")))?;
+        let link_budget = budget
+            .strip_prefix("lb")
+            .and_then(|n| n.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| Gc3Error::Invalid(format!("bad sketch budget '{budget}' ({grammar})")))?;
+        Ok(Sketch { template, link_budget })
+    }
+}
+
+/// One directed candidate edge the router may send a chunk over.
+#[derive(Clone, Copy, Debug)]
+pub struct Edge {
+    pub src: usize,
+    pub dst: usize,
+    /// Base traversal cost, seconds per byte — the reciprocal of the
+    /// bandwidth a lone chunk flow sees on this link class.
+    pub cost: f64,
+}
+
+/// Seconds-per-byte base cost of sending one chunk flow `a → b`, derived
+/// from the link class [`Topology::link_type`] assigns the pair. Shm is
+/// doubled: the host bounce is one shared resource per unordered pair, so
+/// even a lone flow effectively shares it with the reverse direction.
+pub fn edge_cost(topo: &Topology, a: usize, b: usize) -> f64 {
+    match topo.link_type(a, b) {
+        LinkType::NvLink => 1.0 / topo.tb_bw,
+        LinkType::Shm => 2.0 / topo.shm_bw,
+        LinkType::Ib => 1.0 / topo.ib_conn_bw,
+    }
+}
+
+/// Every directed rank pair with its base cost — the complete graph the
+/// router searches, priced from the topology's link inventory rather than
+/// any hard-coded fabric shape.
+pub fn candidate_edges(topo: &Topology) -> Vec<Edge> {
+    let r = topo.num_ranks();
+    let mut out = Vec::with_capacity(r * (r - 1));
+    for src in 0..r {
+        for dst in 0..r {
+            if src != dst {
+                out.push(Edge { src, dst, cost: edge_cost(topo, src, dst) });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_parse_roundtrip() {
+        for sketch in [
+            Sketch { template: Template::Relay, link_budget: 8 },
+            Sketch { template: Template::RingPermutation, link_budget: 3 },
+        ] {
+            assert_eq!(Sketch::parse(&sketch.render()).unwrap(), sketch);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_the_grammar() {
+        for bad in ["", "relay", "relay/8", "relay/lb0", "relay/lbx", "spiral/lb4"] {
+            let e = Sketch::parse(bad).unwrap_err().to_string();
+            assert!(e.contains("ring_perm|relay"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn collectives_map_to_templates_or_error() {
+        let s = Sketch::for_collective(Collective::AllToAll, 8).unwrap();
+        assert_eq!(s.template, Template::Relay);
+        let s = Sketch::for_collective(Collective::AllReduce, 4).unwrap();
+        assert_eq!(s.template, Template::RingPermutation);
+        let e = Sketch::for_collective(Collective::AllGather, 8).unwrap_err().to_string();
+        assert!(e.contains("allreduce|alltoall"), "{e}");
+        assert!(Sketch::for_collective(Collective::AllToAll, 0).is_err());
+    }
+
+    #[test]
+    fn edges_price_the_link_classes_apart() {
+        let topo = crate::topology::Topology::asym(1);
+        // Ring neighbors ride NVLink, opposite pairs bounce through shm.
+        assert!(edge_cost(&topo, 0, 1) < edge_cost(&topo, 0, 4));
+        let edges = candidate_edges(&topo);
+        assert_eq!(edges.len(), 8 * 7, "complete directed graph");
+        assert!(edges.iter().all(|e| e.cost > 0.0 && e.src != e.dst));
+        // Cross-node edges price as IB.
+        let two = crate::topology::Topology::asym(2);
+        let ib = edge_cost(&two, 0, 9);
+        assert!((ib - 1.0 / two.ib_conn_bw).abs() < 1e-18);
+    }
+}

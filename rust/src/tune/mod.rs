@@ -24,7 +24,7 @@ mod space;
 mod table;
 
 pub use space::{enumerate, variant_trace, variants, Candidate, Collective, TuneOpts};
-pub use table::{TunedChoice, TunedEntry, TunedTable};
+pub use table::{SynthProvenance, TunedChoice, TunedEntry, TunedTable};
 
 use crate::compiler::{compile, Compiled};
 use crate::core::{Gc3Error, Result};
@@ -37,12 +37,20 @@ use std::sync::Arc;
 /// Compiled-candidate memo keyed by the topology fingerprint plus the
 /// `(collective, variant, instances, protocol)` identity of a candidate —
 /// i.e. `(program, opts)` *on a specific machine shape*. A cache can be
-/// carried across [`tune_with_cache`] calls (overlapping grids, repeated
-/// tuning runs) so identical candidates never recompile; candidates from a
-/// different rank count / SM budget never alias.
+/// carried across [`tune_with_cache`] and [`crate::synth::synthesize`]
+/// calls (overlapping grids, repeated tuning runs, a tune followed by a
+/// synth over the same topology) so identical candidates never recompile;
+/// candidates from a different rank count / SM budget never alias. The
+/// variant key is an owned string so synthesized candidates — whose names
+/// are generated (`synth:relay/lb8:s3`), not library constants — memoize
+/// through the same cache. Lifetime hit/miss counters feed the `gc3 tune`
+/// / `gc3 synth` summary lines; [`shared_cache`] is the process-wide
+/// instance both verbs share.
 #[derive(Default)]
 pub struct CompileCache {
-    map: HashMap<(String, &'static str, &'static str, usize, Protocol), Arc<Compiled>>,
+    map: HashMap<(String, String, String, usize, Protocol), Arc<Compiled>>,
+    hits: usize,
+    misses: usize,
 }
 
 impl CompileCache {
@@ -59,23 +67,86 @@ impl CompileCache {
 
     fn key(
         topo: &Topology,
-        cand: &Candidate,
-    ) -> (String, &'static str, &'static str, usize, Protocol) {
-        (
-            Self::fingerprint(topo),
+        collective: &str,
+        variant: &str,
+        instances: usize,
+        protocol: Protocol,
+    ) -> (String, String, String, usize, Protocol) {
+        (Self::fingerprint(topo), collective.to_string(), variant.to_string(), instances, protocol)
+    }
+
+    /// Counted lookup by candidate identity — bumps the hit/miss counters.
+    pub fn get(&mut self, topo: &Topology, cand: &Candidate) -> Option<Arc<Compiled>> {
+        self.get_named(topo, cand.collective.name(), cand.variant, cand.instances, cand.protocol)
+    }
+
+    /// Counted lookup for generated (non-library) variant names.
+    pub fn get_named(
+        &mut self,
+        topo: &Topology,
+        collective: &str,
+        variant: &str,
+        instances: usize,
+        protocol: Protocol,
+    ) -> Option<Arc<Compiled>> {
+        let found =
+            self.map.get(&Self::key(topo, collective, variant, instances, protocol)).cloned();
+        match found {
+            Some(_) => self.hits += 1,
+            None => self.misses += 1,
+        }
+        found
+    }
+
+    /// Uncounted lookup — for re-reading an entry a caller already
+    /// resolved (so one logical lookup is not double-counted).
+    pub fn peek(&self, topo: &Topology, cand: &Candidate) -> Option<Arc<Compiled>> {
+        self.peek_named(topo, cand.collective.name(), cand.variant, cand.instances, cand.protocol)
+    }
+
+    /// Uncounted [`CompileCache::get_named`].
+    pub fn peek_named(
+        &self,
+        topo: &Topology,
+        collective: &str,
+        variant: &str,
+        instances: usize,
+        protocol: Protocol,
+    ) -> Option<Arc<Compiled>> {
+        self.map.get(&Self::key(topo, collective, variant, instances, protocol)).cloned()
+    }
+
+    pub fn insert(&mut self, topo: &Topology, cand: &Candidate, compiled: Arc<Compiled>) {
+        self.insert_named(
+            topo,
             cand.collective.name(),
             cand.variant,
             cand.instances,
             cand.protocol,
-        )
+            compiled,
+        );
     }
 
-    pub fn get(&self, topo: &Topology, cand: &Candidate) -> Option<Arc<Compiled>> {
-        self.map.get(&Self::key(topo, cand)).cloned()
+    pub fn insert_named(
+        &mut self,
+        topo: &Topology,
+        collective: &str,
+        variant: &str,
+        instances: usize,
+        protocol: Protocol,
+        compiled: Arc<Compiled>,
+    ) {
+        self.map.insert(Self::key(topo, collective, variant, instances, protocol), compiled);
     }
 
-    pub fn insert(&mut self, topo: &Topology, cand: &Candidate, compiled: Arc<Compiled>) {
-        self.map.insert(Self::key(topo, cand), compiled);
+    /// Lifetime counted-lookup hits.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Lifetime counted-lookup misses.
+    pub fn misses(&self) -> usize {
+        self.misses
     }
 
     pub fn len(&self) -> usize {
@@ -85,6 +156,16 @@ impl CompileCache {
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
+}
+
+/// The process-wide compile cache `gc3 tune` and `gc3 synth` share, so a
+/// synth run over a topology an earlier tune (or vice versa) already
+/// compiled reuses every overlapping candidate instead of rebuilding its
+/// own memo.
+pub fn shared_cache() -> &'static std::sync::Mutex<CompileCache> {
+    static SHARED: std::sync::OnceLock<std::sync::Mutex<CompileCache>> =
+        std::sync::OnceLock::new();
+    SHARED.get_or_init(|| std::sync::Mutex::new(CompileCache::new()))
 }
 
 /// What a tuning run did, beyond the table itself.
@@ -110,7 +191,9 @@ pub struct TuneOutcome {
 
 /// Run `f(0..n)` on a scoped worker pool and collect the results in order.
 /// Plain `std::thread::scope` — the vendored crate set has no rayon.
-fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+/// Shared with [`crate::synth`], which prices its candidates through the
+/// same pool pattern.
+pub(crate) fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
@@ -141,7 +224,7 @@ where
         .collect()
 }
 
-fn resolve_workers(requested: usize) -> usize {
+pub(crate) fn resolve_workers(requested: usize) -> usize {
     if requested > 0 {
         requested
     } else {
@@ -209,7 +292,7 @@ pub fn tune_with_cache(
         }
     }
     let feasible: Vec<(&Candidate, Arc<Compiled>)> =
-        cands.iter().filter_map(|c| cache.get(topo, c).map(|a| (c, a))).collect();
+        cands.iter().filter_map(|c| cache.peek(topo, c).map(|a| (c, a))).collect();
     if feasible.is_empty() {
         return Err(Gc3Error::Invalid(format!(
             "tune: no feasible candidate for {} on {} ({} skipped)",
@@ -371,9 +454,12 @@ mod tests {
         assert_eq!(o1.cache_hits, 0);
         assert_eq!(o1.feasible + o1.skipped.len(), o1.candidates);
         assert_eq!(o1.simulations, o1.feasible * 2);
+        assert_eq!(cache.misses(), o1.candidates, "one counted lookup per candidate");
+        assert_eq!(cache.hits(), 0);
         let o2 = tune_with_cache(&topo, Collective::AllGather, &[256 * 1024], &opts, &mut cache)
             .unwrap();
         assert_eq!(o2.cache_hits, o2.candidates, "every candidate reused");
+        assert_eq!(cache.hits(), o2.candidates, "lifetime counter tracks the reuse");
         assert_eq!(cache.len(), o1.feasible);
     }
 

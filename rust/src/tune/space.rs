@@ -130,6 +130,7 @@ impl Candidate {
             variant: self.variant.to_string(),
             instances: self.instances,
             protocol: self.protocol,
+            synthesized: None,
         }
     }
 }

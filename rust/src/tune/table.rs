@@ -12,14 +12,34 @@ use crate::core::{Gc3Error, Result};
 use crate::sim::Protocol;
 use crate::util::json::Json;
 
+/// Provenance of a synthesized (searched, not library) plan: everything
+/// needed to regenerate its trace deterministically in a later process
+/// ([`crate::synth::regenerate_trace`]) and to explain why it won.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SynthProvenance {
+    /// Search seed the winning restart ran at.
+    pub seed: u64,
+    /// Sketch string (e.g. `relay/lb8`) — parses back through
+    /// [`crate::synth::Sketch::parse`].
+    pub sketch: String,
+    /// Simulated completion time the search priced the winner at, seconds.
+    pub sim_time: f64,
+}
+
 /// One winning compile configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TunedChoice {
-    /// Library program variant (see [`super::variants`]).
+    /// Library program variant (see [`super::variants`]), or a
+    /// `synth:<sketch>:s<seed>` name when the plan was synthesized.
     pub variant: String,
     /// Instance replication factor (§5.3.2) — GC3's channel-count knob.
     pub instances: usize,
     pub protocol: Protocol,
+    /// Present when the plan came from the synthesis search
+    /// ([`crate::synth`]) rather than the library variant grid; consumers
+    /// regenerate the trace from it instead of
+    /// [`super::variant_trace`].
+    pub synthesized: Option<SynthProvenance>,
 }
 
 impl TunedChoice {
@@ -155,6 +175,13 @@ impl TunedTable {
                     .set("protocol", Json::str(e.choice.protocol.name()))
                     .set("time_s", Json::Num(e.time))
                     .set("algbw", Json::Num(e.algbw));
+                if let Some(sp) = &e.choice.synthesized {
+                    let mut s = Json::obj();
+                    s.set("seed", Json::Num(sp.seed as f64))
+                        .set("sketch", Json::str(&sp.sketch))
+                        .set("sim_time_s", Json::Num(sp.sim_time));
+                    o.set("synthesized", s);
+                }
                 o
             })
             .collect();
@@ -171,12 +198,24 @@ impl TunedTable {
             let proto_name = row.req_str("protocol")?;
             let protocol = Protocol::parse(proto_name)
                 .ok_or_else(|| format!("entry {i}: unknown protocol '{proto_name}'"))?;
+            let synthesized = match row.get("synthesized") {
+                Some(s) => Some(SynthProvenance {
+                    seed: s.req_usize("seed")? as u64,
+                    sketch: s.req_str("sketch")?.to_string(),
+                    sim_time: s
+                        .req("sim_time_s")?
+                        .as_f64()
+                        .ok_or_else(|| format!("entry {i}: sim_time_s is not a number"))?,
+                }),
+                None => None,
+            };
             entries.push(TunedEntry {
                 size: row.req_usize("size")? as u64,
                 choice: TunedChoice {
                     variant: row.req_str("variant")?.to_string(),
                     instances: row.req_usize("instances")?,
                     protocol,
+                    synthesized,
                 },
                 time: row
                     .req("time_s")?
@@ -216,7 +255,12 @@ mod tests {
     fn sample() -> TunedTable {
         let mk = |size: u64, variant: &str, instances: usize, protocol: Protocol| TunedEntry {
             size,
-            choice: TunedChoice { variant: variant.to_string(), instances, protocol },
+            choice: TunedChoice {
+                variant: variant.to_string(),
+                instances,
+                protocol,
+                synthesized: None,
+            },
             time: 1.25e-5 * size as f64 / 65536.0,
             algbw: size as f64 / 1.25e-5,
         };
@@ -237,6 +281,25 @@ mod tests {
         let t = sample();
         let back = TunedTable::from_json_str(&t.to_json_string()).unwrap();
         assert_eq!(t, back);
+    }
+
+    #[test]
+    fn synthesized_provenance_roundtrips() {
+        let mut t = sample();
+        t.entries[1].choice.variant = "synth:relay/lb8:s3".to_string();
+        t.entries[1].choice.synthesized = Some(SynthProvenance {
+            seed: 3,
+            sketch: "relay/lb8".to_string(),
+            sim_time: 4.25e-5,
+        });
+        let text = t.to_json_string();
+        assert!(text.contains("\"synthesized\""), "{text}");
+        let back = TunedTable::from_json_str(&text).unwrap();
+        assert_eq!(t, back, "provenance survives the roundtrip");
+        assert_eq!(back.entries[0].choice.synthesized, None, "library entries stay bare");
+        // A provenance object missing fields must not load.
+        let broken = text.replace("\"sketch\"", "\"sketchy\"");
+        assert!(TunedTable::from_json_str(&broken).is_err());
     }
 
     #[test]

@@ -343,6 +343,7 @@ fn service_cache_follows_tuned_buckets() {
                     variant: "ring".into(),
                     instances: 2,
                     protocol: Protocol::LL,
+                    synthesized: None,
                 },
                 time: 1.0e-5,
                 algbw: size as f64 / 1.0e-5,
