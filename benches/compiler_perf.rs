@@ -3,14 +3,16 @@
 //! fast the discrete-event engine retires simulation events — the §Perf
 //! numbers tracked in EXPERIMENTS.md.
 //!
-//! Emits `BENCH_compiler_perf.json` (schema v7: per-scenario compile ms,
+//! Emits `BENCH_compiler_perf.json` (schema v8: per-scenario compile ms,
 //! simulate ms, events/s, the optimized-vs-reference head-to-head, the
 //! autotuner's tuned-vs-default rows — EXPERIMENTS.md §TUNE, the `exec[]`
 //! executor-throughput rows — §EXEC, the `serve[]` serving-layer rows
 //! — §SERVE, the `faults[]` degradation-sweep rows — §FAULTS, reported,
-//! not gated, and the `synth[]` sketch-synthesis rows — §SYNTH, gated:
-//! ≥ 1 verified synthesized win) plus the tuned table itself as
-//! `TUNED_bench_allreduce.json`; CI archives both as artifacts.
+//! not gated, the `synth[]` sketch-synthesis rows — §SYNTH, gated:
+//! ≥ 1 verified synthesized win, and the `hier[]` staged-vs-flat rows on
+//! composed fabrics — §SCALE, gated: staged beats flat on every fabric)
+//! plus the tuned table itself as `TUNED_bench_allreduce.json`; CI
+//! archives both as artifacts.
 //!
 //! Run: `cargo bench --bench compiler_perf`
 //! Skip the slow reference-engine head-to-head: set `GC3_BENCH_FAST=1`
@@ -62,6 +64,9 @@ fn main() {
     println!("== Sketch-guided synthesis (relay alltoall vs library, asym fabric)");
     let synth_rows = perf::synth_suite().expect("synth suite");
     print!("{}", perf::render_synth(&synth_rows));
+    println!("== Hierarchical fabrics (staged vs flat allreduce, incl. 1024-rank 2-tier)");
+    let hier_rows = perf::hier_suite().expect("hier suite");
+    print!("{}", perf::render_hier(&hier_rows));
     let json = perf::to_json(
         &cases,
         h2h.as_ref(),
@@ -70,6 +75,7 @@ fn main() {
         &serve_rows,
         &fault_rows,
         &synth_rows,
+        &hier_rows,
     );
     let path = "BENCH_compiler_perf.json";
     std::fs::write(path, json.to_string()).expect("write BENCH_compiler_perf.json");
@@ -104,6 +110,21 @@ fn main() {
         "no verified synthesized win anywhere: {synth_rows:?}"
     );
     println!("synthesis gate passed: >= 1 verified synthesized win over the library");
+    // Gate: on every composed fabric the pod-staged allreduce must beat the
+    // flat library plan on simulated time — the whole point of planning
+    // hierarchically is fewer spine crossings, and sim-time ratios are
+    // machine-independent, so this is safe to enforce on any runner.
+    for r in &hier_rows {
+        assert!(
+            r.speedup > 1.0,
+            "staged allreduce loses to flat on {} ({} ranks): {}s staged vs {}s flat",
+            r.fabric,
+            r.ranks,
+            r.staged_s,
+            r.flat_s
+        );
+    }
+    println!("hier gate passed: staged beats flat on every composed fabric");
     if let Some(h) = &h2h {
         // Hard gate: a speedup ratio is machine-independent, so enforce it
         // here where CI runs the bench (EXPERIMENTS.md §Perf).

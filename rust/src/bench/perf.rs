@@ -208,7 +208,7 @@ pub fn exec_suite(threads: usize) -> Result<Vec<ExecRow>> {
 }
 
 /// One serving-layer measurement row (EXPERIMENTS.md §SERVE; the `serve[]`
-/// array of `BENCH_compiler_perf.json`, schema v7): throughput and
+/// array of `BENCH_compiler_perf.json`, schema v8): throughput and
 /// nearest-rank latency percentiles for one trace mix through [`Service`],
 /// plus the coalescing win against the same trace served one launch per
 /// request.
@@ -302,7 +302,7 @@ pub fn serve_suite(threads: usize) -> Result<Vec<ServeRow>> {
 }
 
 /// One fault-injection measurement row (EXPERIMENTS.md §FAULTS; the
-/// `faults[]` array of `BENCH_compiler_perf.json`, schema v7 — reported,
+/// `faults[]` array of `BENCH_compiler_perf.json`, schema v8 — reported,
 /// not gated): a single-link degradation priced three ways — the healthy
 /// plan on the healthy fabric, the same (naive) plan on the degraded
 /// fabric, and [`Planner::replan_degraded`]'s choice on the degraded
@@ -361,7 +361,7 @@ pub fn faults_suite() -> Result<Vec<FaultRow>> {
 }
 
 /// One synthesis measurement row (EXPERIMENTS.md §SYNTH; the `synth[]`
-/// array of `BENCH_compiler_perf.json`, schema v7): the best library plan
+/// array of `BENCH_compiler_perf.json`, schema v8): the best library plan
 /// vs the best sketch-synthesized candidate at one size, plus the search
 /// cost that bought the comparison.
 #[derive(Clone, Debug)]
@@ -422,6 +422,113 @@ pub fn synth_suite() -> Result<Vec<SynthRow>> {
             candidates: out.candidates,
         })
         .collect())
+}
+
+/// One hierarchical-planning measurement row (EXPERIMENTS.md §SCALE; the
+/// `hier[]` array of `BENCH_compiler_perf.json`, schema v8): the planner's
+/// pod-staged AllReduce vs the flat library hierarchical program, both
+/// priced on the same composed multi-pod fabric.
+#[derive(Clone, Debug)]
+pub struct HierRow {
+    /// The composed fabric spec ([`crate::fabric::FABRIC_GRAMMAR`]).
+    pub fabric: String,
+    pub ranks: usize,
+    pub size: u64,
+    /// Simulated time of the flat hierarchical library plan, seconds.
+    pub flat_s: f64,
+    /// Simulated time of the planner's pod-staged plan, seconds.
+    pub staged_s: f64,
+    /// `flat_s / staged_s` — the staged win over the tapered spine; the
+    /// bench gate requires > 1.0 on every row.
+    pub speedup: f64,
+    /// Wall-clock of the planner's full plan() call (compile included).
+    pub compile_ms: f64,
+    /// Simulator events retired pricing the staged plan.
+    pub events: usize,
+    /// Simulator throughput pricing the staged plan — the 1024-rank row
+    /// is the de-quadratization tripwire.
+    pub events_per_sec: f64,
+    /// Whether the staged plan passed byte-accurate [`Plan::verify`]
+    /// (small fabrics only; the 1024-rank row is priced sim-only here and
+    /// verified by the CI smoke instead).
+    pub verified: bool,
+}
+
+/// Run the hierarchical-planning scenarios: a small 2-tier fabric whose
+/// staged plan is byte-verified, and the flagship 1024-rank fabric
+/// (16 pods × 8 nodes × 8 GPUs) priced end to end. Sizes sit inside the
+/// allreduce dispatch window so the planner picks the staged GC3 program,
+/// never the O(ranks²) NCCL fallback.
+pub fn hier_suite() -> Result<Vec<HierRow>> {
+    Ok(vec![
+        hier_case("a100x2/pods:2/tiers:2/gpus:2", 2 << 20, true)?,
+        hier_case("a100x8/pods:16/tiers:2/nics:8@400", 4 << 20, false)?,
+    ])
+}
+
+/// Measure one hierarchical-planning scenario.
+pub fn hier_case(spec: &str, size: u64, verify: bool) -> Result<HierRow> {
+    let fabric = crate::fabric::Fabric::parse(spec)?;
+    let topo = fabric.lower();
+    let mut planner = Planner::new(topo.clone());
+    let t0 = Instant::now();
+    let plan = planner.plan(Collective::AllReduce, size)?;
+    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let staged = simulate(&plan.ef, &topo, size)?;
+    let sim_wall = t1.elapsed().as_secs_f64();
+    // Flat baseline: the library's flat hierarchical program over the
+    // same ranks and protocol, priced on the same composed fabric.
+    let flat_trace = allreduce::hierarchical(topo.nodes, topo.gpus_per_node)?;
+    let flat_ef = compile(
+        &flat_trace,
+        "flat_hier",
+        &CompileOpts::for_topo(&topo).with_protocol(plan.ef.protocol),
+    )?
+    .ef;
+    let flat = simulate(&flat_ef, &topo, size)?;
+    let verified = if verify {
+        plan.verify(4)?;
+        true
+    } else {
+        false
+    };
+    Ok(HierRow {
+        fabric: spec.to_string(),
+        ranks: topo.num_ranks(),
+        size,
+        flat_s: flat.time,
+        staged_s: staged.time,
+        speedup: flat.time / staged.time.max(1e-300),
+        compile_ms,
+        events: staged.events,
+        events_per_sec: staged.events as f64 / sim_wall.max(1e-12),
+        verified,
+    })
+}
+
+/// Human-readable rendering of the hierarchical-planning rows.
+pub fn render_hier(rows: &[HierRow]) -> String {
+    let mut out = format!(
+        "{:<36} {:>6} {:>8} {:>10} {:>10} {:>8} {:>11} {:>12} {:>9}\n",
+        "fabric", "ranks", "size", "flat us", "staged us", "speedup", "compile ms",
+        "events/s", "verified"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<36} {:>6} {:>8} {:>10.1} {:>10.1} {:>7.2}x {:>11.1} {:>12.0} {:>9}\n",
+            r.fabric,
+            r.ranks,
+            crate::util::human_bytes(r.size),
+            r.flat_s * 1e6,
+            r.staged_s * 1e6,
+            r.speedup,
+            r.compile_ms,
+            r.events_per_sec,
+            if r.verified { "yes" } else { "sim-only" }
+        ));
+    }
+    out
 }
 
 /// Human-readable rendering of the synthesis rows.
@@ -621,10 +728,11 @@ pub fn to_json(
     serve: &[ServeRow],
     faults: &[FaultRow],
     synth: &[SynthRow],
+    hier: &[HierRow],
 ) -> Json {
     let mut root = Json::obj();
     root.set("bench", Json::Str("compiler_perf".into()));
-    root.set("schema_version", Json::Num(7.0));
+    root.set("schema_version", Json::Num(8.0));
     let rows: Vec<Json> = cases
         .iter()
         .map(|c| {
@@ -762,6 +870,26 @@ pub fn to_json(
             })
             .collect();
         root.set("synth", Json::Arr(rows));
+    }
+    if !hier.is_empty() {
+        let rows: Vec<Json> = hier
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("fabric", Json::Str(r.fabric.clone()));
+                o.set("ranks", Json::Num(r.ranks as f64));
+                o.set("size_bytes", Json::Num(r.size as f64));
+                o.set("flat_s", Json::Num(r.flat_s));
+                o.set("staged_s", Json::Num(r.staged_s));
+                o.set("speedup", Json::Num(r.speedup));
+                o.set("compile_ms", Json::Num(r.compile_ms));
+                o.set("events", Json::Num(r.events as f64));
+                o.set("events_per_sec", Json::Num(r.events_per_sec));
+                o.set("verified", Json::Bool(r.verified));
+                o
+            })
+            .collect();
+        root.set("hier", Json::Arr(rows));
     }
     root
 }
@@ -910,7 +1038,19 @@ mod tests {
             search_wall_s: 2.5,
             candidates: 18,
         }];
-        let j = to_json(&cases, Some(&h), &tuned, &exec, &serve, &faults, &synth);
+        let hier = vec![HierRow {
+            fabric: "a100x2/pods:2/tiers:2/gpus:2".into(),
+            ranks: 8,
+            size: 2 << 20,
+            flat_s: 4.0e-4,
+            staged_s: 2.5e-4,
+            speedup: 1.6,
+            compile_ms: 12.0,
+            events: 900,
+            events_per_sec: 45000.0,
+            verified: true,
+        }];
+        let j = to_json(&cases, Some(&h), &tuned, &exec, &serve, &faults, &synth, &hier);
         let s = j.to_string();
         for field in [
             "compile_ms",
@@ -944,10 +1084,13 @@ mod tests {
             "synth_key",
             "search_wall_s",
             "verified",
+            "hier",
+            "flat_s",
+            "staged_s",
         ] {
             assert!(s.contains(field), "missing {field} in {s}");
         }
-        assert_eq!(j.get("schema_version").and_then(|v| v.as_usize()), Some(7));
+        assert_eq!(j.get("schema_version").and_then(|v| v.as_usize()), Some(8));
         let arr = j.get("cases").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("events").and_then(|e| e.as_usize()), Some(42));
@@ -971,14 +1114,43 @@ mod tests {
         assert_eq!(sy[0].get("won"), Some(&Json::Bool(true)));
         assert_eq!(sy[0].get("verified"), Some(&Json::Bool(true)));
         assert_eq!(sy[0].get("candidates").and_then(|e| e.as_usize()), Some(18));
-        // No tuned/exec/serve/faults/synth rows → no sections (old
+        let hr = j.get("hier").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(
+            hr[0].get("fabric").and_then(|e| e.as_str()),
+            Some("a100x2/pods:2/tiers:2/gpus:2")
+        );
+        assert_eq!(hr[0].get("ranks").and_then(|e| e.as_usize()), Some(8));
+        assert_eq!(hr[0].get("verified"), Some(&Json::Bool(true)));
+        // No tuned/exec/serve/faults/synth/hier rows → no sections (old
         // consumers keep working).
-        let bare = to_json(&cases, None, &[], &[], &[], &[], &[]);
+        let bare = to_json(&cases, None, &[], &[], &[], &[], &[], &[]);
         assert!(bare.get("tuned_vs_default").is_none());
         assert!(bare.get("exec").is_none());
         assert!(bare.get("serve").is_none());
         assert!(bare.get("faults").is_none());
         assert!(bare.get("synth").is_none());
+        assert!(bare.get("hier").is_none());
+    }
+
+    /// The hier suite's small scenario end to end: the staged plan must
+    /// beat the flat hierarchical plan on the tapered 2-tier fabric and
+    /// byte-verify — the same pair of facts the bench gate enforces. (The
+    /// 1024-rank flagship row runs only in the bench harness; its compile
+    /// is too heavy for the unit sweep.)
+    #[test]
+    fn hier_case_small_fabric_stages_and_wins() {
+        let small = hier_case("a100x2/pods:2/tiers:2/gpus:2", 2 << 20, true).unwrap();
+        assert_eq!(small.ranks, 8);
+        assert!(small.verified, "small-fabric staged plan must byte-verify");
+        assert!(
+            small.speedup > 1.0,
+            "staged ({} s) must beat flat ({} s) on {}",
+            small.staged_s,
+            small.flat_s,
+            small.fabric
+        );
+        assert!(small.events > 0 && small.events_per_sec > 0.0);
+        print!("{}", render_hier(&[small]));
     }
 
     /// The exec suite's scenarios are small enough to run here in full:

@@ -118,6 +118,13 @@ const METRICS: &[MetricSpec] = &[
     },
     MetricSpec { section: "serve", key_field: "trace", metric: "req_per_sec", lower_is_better: false },
     MetricSpec { section: "serve", key_field: "trace", metric: "p99_s", lower_is_better: true },
+    MetricSpec { section: "hier", key_field: "fabric", metric: "compile_ms", lower_is_better: true },
+    MetricSpec {
+        section: "hier",
+        key_field: "fabric",
+        metric: "events_per_sec",
+        lower_is_better: false,
+    },
 ];
 
 fn section<'a>(doc: &'a Json, name: &str) -> &'a [Json] {

@@ -20,6 +20,7 @@ use crate::core::{BufferId, Gc3Error, Result, Slot, SlotRange};
 use crate::dsl::collective::{reduce_vals, val, ChunkValue, CollectiveSpec};
 use crate::dsl::{SchedHint, Trace, TraceOp};
 use std::collections::HashMap;
+use std::rc::Rc;
 
 pub type NodeId = usize;
 
@@ -44,8 +45,12 @@ pub struct ChunkNode {
     /// Dependence edges (node ids), true and false alike, deduplicated.
     pub deps: Vec<NodeId>,
     pub hint: SchedHint,
-    /// Symbolic contents produced at each covered dst chunk.
-    pub values: Vec<ChunkValue>,
+    /// Symbolic contents produced at each covered dst chunk. `Rc`-shared
+    /// with the builder's slot states (and across Copy nodes), so a value
+    /// reduced over R ranks is materialized once, not deep-cloned per
+    /// read/write — the difference between O(ops·R) and O(ops·R²) total
+    /// value bytes on a 1024-rank staged reduction.
+    pub values: Vec<Rc<ChunkValue>>,
 }
 
 /// The traced Chunk DAG plus the final symbolic memory state.
@@ -63,7 +68,7 @@ pub struct ChunkDag {
 struct SlotState {
     last_writer: Option<NodeId>,
     readers_since: Vec<NodeId>,
-    value: Option<ChunkValue>,
+    value: Option<Rc<ChunkValue>>,
 }
 
 impl ChunkDag {
@@ -77,6 +82,7 @@ impl ChunkDag {
         // Start nodes for every initialized input slot.
         for slot in trace.spec.initialized_inputs() {
             let id = nodes.len();
+            let v = Rc::new(val(slot.rank, slot.index));
             nodes.push(ChunkNode {
                 id,
                 op: ChunkOpKind::Start,
@@ -84,14 +90,14 @@ impl ChunkDag {
                 dst: SlotRange::slot(slot.rank, slot.buffer, slot.index),
                 deps: Vec::new(),
                 hint: SchedHint::none(),
-                values: vec![val(slot.rank, slot.index)],
+                values: vec![Rc::clone(&v)],
             });
             state.insert(
                 slot,
                 SlotState {
                     last_writer: Some(id),
                     readers_since: Vec::new(),
-                    value: Some(val(slot.rank, slot.index)),
+                    value: Some(v),
                 },
             );
         }
@@ -104,8 +110,9 @@ impl ChunkDag {
                 TraceOp::Reduce { dst, src, .. } => (ChunkOpKind::Reduce, *src, *dst),
             };
 
-            // True deps: reads of src (and of dst for reduce).
-            let mut src_vals: Vec<ChunkValue> = Vec::with_capacity(src.size);
+            // True deps: reads of src (and of dst for reduce). Reads share
+            // the stored value by `Rc` — no deep clone per read.
+            let mut src_vals: Vec<Rc<ChunkValue>> = Vec::with_capacity(src.size);
             for s in src.slots() {
                 let st = state.get_mut(&s).ok_or(Gc3Error::UninitializedRead(s))?;
                 if st.value.is_none() {
@@ -113,19 +120,19 @@ impl ChunkDag {
                 }
                 deps.push(st.last_writer.expect("value implies writer"));
                 st.readers_since.push(id);
-                src_vals.push(st.value.clone().unwrap());
+                src_vals.push(Rc::clone(st.value.as_ref().unwrap()));
             }
 
-            let mut values: Vec<ChunkValue> = Vec::with_capacity(dst.size);
+            let mut values: Vec<Rc<ChunkValue>> = Vec::with_capacity(dst.size);
             match kind {
                 ChunkOpKind::Copy => values = src_vals,
                 ChunkOpKind::Reduce => {
                     for (k, s) in dst.slots().enumerate() {
                         let st = state.get(&s).ok_or(Gc3Error::UninitializedRead(s))?;
                         let dst_val =
-                            st.value.clone().ok_or(Gc3Error::UninitializedRead(s))?;
+                            Rc::clone(st.value.as_ref().ok_or(Gc3Error::UninitializedRead(s))?);
                         deps.push(st.last_writer.expect("value implies writer"));
-                        values.push(reduce_vals(&dst_val, &src_vals[k]));
+                        values.push(Rc::new(reduce_vals(&dst_val, &src_vals[k])));
                     }
                 }
                 ChunkOpKind::Start => unreachable!(),
@@ -145,7 +152,7 @@ impl ChunkDag {
                 st.value = None; // set below
             }
             for (k, s) in dst.slots().enumerate() {
-                state.get_mut(&s).unwrap().value = Some(values[k].clone());
+                state.get_mut(&s).unwrap().value = Some(Rc::clone(&values[k]));
             }
 
             deps.sort_unstable();
@@ -154,8 +161,14 @@ impl ChunkDag {
             nodes.push(ChunkNode { id, op: kind, src: Some(src), dst, deps, hint: *op.hint(), values });
         }
 
-        let final_state: HashMap<Slot, ChunkValue> =
-            state.into_iter().filter_map(|(s, st)| st.value.map(|v| (s, v))).collect();
+        // Materialize the final symbolic memory once; node values still
+        // share the Rc'd storage.
+        let final_state: HashMap<Slot, ChunkValue> = state
+            .into_iter()
+            .filter_map(|(s, st)| {
+                st.value.map(|v| (s, Rc::try_unwrap(v).unwrap_or_else(|rc| (*rc).clone())))
+            })
+            .collect();
 
         Ok(ChunkDag {
             spec: trace.spec.clone(),
@@ -224,7 +237,7 @@ mod tests {
         assert_eq!(dag.num_ops(), 2);
         let reduce = &dag.nodes[2];
         assert_eq!(reduce.op, ChunkOpKind::Reduce);
-        assert_eq!(reduce.values[0], vec![(0, 0), (1, 0)]);
+        assert_eq!(*reduce.values[0], vec![(0, 0), (1, 0)]);
         // Reduce depends on both start nodes.
         assert_eq!(reduce.deps, vec![0, 1]);
         dag.check_acyclic().unwrap();
@@ -282,7 +295,7 @@ mod tests {
         let dag = ChunkDag::build(&p.finish().unwrap()).unwrap();
         let copy = dag.nodes.last().unwrap();
         assert_eq!(copy.values.len(), 4);
-        assert_eq!(copy.values[3], val(0, 3));
+        assert_eq!(*copy.values[3], val(0, 3));
         // Copy depends on all 4 start nodes covering r0:in[0..4].
         assert_eq!(copy.deps.len(), 4);
     }

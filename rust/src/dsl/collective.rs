@@ -25,11 +25,42 @@ pub fn val(rank: Rank, index: usize) -> ChunkValue {
 
 /// Reduce two symbolic values (set union; duplicates collapse, matching a
 /// sum-reduction applied to the same chunk at most once in valid programs).
+/// Values are sorted+deduped by construction ([`val`] singletons, spec
+/// postconditions, and the outputs of this function), so the union is a
+/// linear two-pointer merge — O(|a|+|b|) per reduction step instead of the
+/// old clone+sort's O((|a|+|b|) log(|a|+|b|)), which dominated chunk-DAG
+/// validation at 1024 ranks. Hand-built unsorted values still work via a
+/// sort-and-dedup fallback.
 pub fn reduce_vals(a: &ChunkValue, b: &ChunkValue) -> ChunkValue {
-    let mut out = a.clone();
-    out.extend(b.iter().cloned());
-    out.sort_unstable();
-    out.dedup();
+    let strictly_sorted = |v: &ChunkValue| v.windows(2).all(|w| w[0] < w[1]);
+    if !strictly_sorted(a) || !strictly_sorted(b) {
+        let mut out = a.clone();
+        out.extend(b.iter().copied());
+        out.sort_unstable();
+        out.dedup();
+        return out;
+    }
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
     out
 }
 
@@ -327,9 +358,18 @@ mod tests {
 
     #[test]
     fn reduce_vals_dedups_and_sorts() {
+        // Unsorted inputs take the sort-and-dedup fallback.
         let a = vec![(1, 0), (0, 0)];
         let b = vec![(0, 0), (2, 0)];
         assert_eq!(reduce_vals(&a, &b), vec![(0, 0), (1, 0), (2, 0)]);
+        // Sorted inputs take the linear merge; same answer.
+        let a = vec![(0, 0), (1, 0)];
+        assert_eq!(reduce_vals(&a, &b), vec![(0, 0), (1, 0), (2, 0)]);
+        // Disjoint tails on either side survive the merge.
+        let long = vec![(0, 0), (3, 0), (4, 0)];
+        let short = vec![(1, 0)];
+        assert_eq!(reduce_vals(&long, &short), vec![(0, 0), (1, 0), (3, 0), (4, 0)]);
+        assert_eq!(reduce_vals(&short, &long), vec![(0, 0), (1, 0), (3, 0), (4, 0)]);
     }
 
     #[test]

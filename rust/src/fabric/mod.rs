@@ -1,0 +1,613 @@
+//! Composable topology algebra: `Fabric = ScaleUp × ScaleOut`.
+//!
+//! Every preset in [`crate::topology`] is a *flat* single-pod cluster — at
+//! most a few nodes on one IB leaf. Real GC3-scale deployments (and the
+//! PCCL line of work this subsystem follows) are hierarchical: a scale-up
+//! domain (the NVLink/NVSwitch node, with its link efficiency and latency)
+//! crossed with a multi-tier fat-tree scale-out (NICs into tier-1 leaf
+//! switches inside a pod, tier-2 spine switches between pods, each tier
+//! with its own bandwidth, taper, and latency).
+//!
+//! A [`Fabric`] is parsed from a compact spec string
+//! (see [`FABRIC_GRAMMAR`], e.g. `a100x8/pods:16/tiers:2/nics:8@400` for
+//! 16 pods × 8 nodes × 8 GPUs = 1024 ranks) and **lowers** to today's
+//! [`Topology`]: the scale-up preset supplies the intra-node inventory,
+//! and the scale-out tiers become shared bandwidth resources with latency
+//! in the sim's [`ResourceTable`](crate::sim::resources::ResourceTable) —
+//! so `sim::simulate`, `sim::FaultModel`, the Planner, and the tuner all
+//! work unchanged on composed fabrics. A spec with no scale-out keys
+//! (`a100x8`) lowers bit-identically to the flat preset: golden parity is
+//! pinned by tests here and in `rust/tests/property.rs`.
+//!
+//! Index math (`rank_of`/`pod_of`/`node_in_pod_of`/`gpu_of`/`nic_of`)
+//! lives on the fabric itself so `planner::hier` can plan staged
+//! collectives without consulting the lowered topology.
+
+use crate::core::{Gc3Error, Rank, Result};
+use crate::topology::{ScaleOut, Topology};
+
+/// The accepted `--fabric` spec grammar, quoted verbatim in every parse
+/// error (the repo's hard-error convention).
+pub const FABRIC_GRAMMAR: &str = "<preset>x<nodes>[/pods:<P>][/tiers:<1|2>][/nics:<K>[@<Gbps>]]\
+     [/t1:<S>][/t2:<S>][/taper:<F>][/eff:<F>][/gpus:<G>] with preset a100|ndv2|ndv4|asym";
+
+/// Per-traversal latency of a tier-1 (in-pod leaf) switch: one switch hop
+/// plus the pod-local cable, seconds.
+pub const T1_LAT: f64 = 0.7e-6;
+
+/// Per-traversal latency of a tier-2 (cross-pod spine) switch: one switch
+/// hop plus the longer inter-pod run, seconds.
+pub const T2_LAT: f64 = 1.2e-6;
+
+/// Refuse to build fabrics beyond this many ranks — everything up to here
+/// simulates end to end; beyond it a typo'd spec would try to allocate
+/// gigabytes of postcondition.
+pub const MAX_RANKS: usize = 65536;
+
+/// The scale-up factor of the algebra: which flat preset supplies the
+/// intra-node inventory (NVSwitch vs p2p mesh, link rates, latencies) and
+/// how many nodes one pod holds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScaleUp {
+    /// Preset name: `a100 | ndv2 | ndv4 | asym`.
+    pub preset: String,
+    /// Nodes per pod (the whole cluster when there is no scale-out).
+    pub nodes: usize,
+    /// Override of the preset's GPUs per node.
+    pub gpus_per_node: Option<usize>,
+}
+
+/// The scale-out factor: a 1- or 2-tier fat tree over the pods.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScaleOutSpec {
+    pub pods: usize,
+    /// 1 = leaf switches only, 2 = leaf + spine.
+    pub tiers_fat_tree: usize,
+    /// Override of the preset's NICs per node.
+    pub nics_per_node: Option<usize>,
+    /// Override of the per-NIC rate, Gb/s (`nics:<K>@<Gbps>`).
+    pub nic_gbps: Option<f64>,
+    /// Tier-1 switches per pod; default = NICs per node (rail-optimized:
+    /// the leaf tier is non-blocking).
+    pub switches_t1: Option<usize>,
+    /// Tier-2 switches fabric-wide; default = `switches_t1`.
+    pub switches_t2: Option<usize>,
+    /// Spine oversubscription ≥ 1: aggregate tier-2 capacity is the
+    /// fabric's injection bandwidth divided by this. The default 2:1 is
+    /// the common tapered fat tree — and what makes cross-pod traffic the
+    /// bottleneck staged collectives route around.
+    pub taper: f64,
+    /// Achieved efficiency of the scale-out links in `(0, 1]`, applied to
+    /// both tier capacities.
+    pub link_eff: f64,
+}
+
+impl Default for ScaleOutSpec {
+    fn default() -> ScaleOutSpec {
+        ScaleOutSpec {
+            pods: 1,
+            tiers_fat_tree: 1,
+            nics_per_node: None,
+            nic_gbps: None,
+            switches_t1: None,
+            switches_t2: None,
+            taper: 2.0,
+            link_eff: 1.0,
+        }
+    }
+}
+
+/// A composed fabric: `ScaleUp × ScaleOut`. `scaleout == None` is the
+/// degenerate product — exactly the flat preset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fabric {
+    pub scaleup: ScaleUp,
+    pub scaleout: Option<ScaleOutSpec>,
+}
+
+impl Fabric {
+    /// Parse a fabric spec string. Unknown keys, malformed values, and
+    /// inconsistent shapes (`pods > 1` needs `tiers:2`) are hard errors
+    /// quoting [`FABRIC_GRAMMAR`].
+    pub fn parse(spec: &str) -> Result<Fabric> {
+        let bad = |why: String| {
+            Gc3Error::Invalid(format!(
+                "bad fabric spec '{spec}': {why} (accepted: {FABRIC_GRAMMAR})"
+            ))
+        };
+        let mut segs = spec.split('/');
+        let head = segs.next().unwrap_or("");
+        let (preset, nodes_s) = head
+            .rsplit_once('x')
+            .ok_or_else(|| bad("expected '<preset>x<nodes>' head".to_string()))?;
+        if !matches!(preset, "a100" | "ndv2" | "ndv4" | "asym") {
+            return Err(bad(format!("unknown preset '{preset}'")));
+        }
+        let nodes: usize = nodes_s
+            .parse()
+            .ok()
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| bad(format!("bad node count '{nodes_s}'")))?;
+        let mut so = ScaleOutSpec::default();
+        let mut tiers_explicit = false;
+        let mut any_scaleout = false;
+        let mut gpus: Option<usize> = None;
+        for seg in segs {
+            let (key, val) = seg
+                .split_once(':')
+                .ok_or_else(|| bad(format!("entry '{seg}' is not '<key>:<value>'")))?;
+            let count = |what: &str| {
+                val.parse::<usize>()
+                    .ok()
+                    .filter(|&n| n >= 1)
+                    .ok_or_else(|| bad(format!("bad {what} '{val}'")))
+            };
+            match key {
+                "pods" => {
+                    so.pods = count("pod count")?;
+                    any_scaleout = true;
+                }
+                "tiers" => {
+                    so.tiers_fat_tree = count("tier count")?;
+                    if so.tiers_fat_tree > 2 {
+                        return Err(bad(format!(
+                            "{} fat-tree tiers unsupported (1 or 2)",
+                            so.tiers_fat_tree
+                        )));
+                    }
+                    tiers_explicit = true;
+                    any_scaleout = true;
+                }
+                "nics" => {
+                    let (k, g) = match val.split_once('@') {
+                        Some((k, g)) => {
+                            let gbps = g
+                                .parse::<f64>()
+                                .ok()
+                                .filter(|&g| g > 0.0)
+                                .ok_or_else(|| bad(format!("bad NIC rate '{g}' Gb/s")))?;
+                            (k, Some(gbps))
+                        }
+                        None => (val, None),
+                    };
+                    so.nics_per_node = Some(
+                        k.parse::<usize>()
+                            .ok()
+                            .filter(|&n| n >= 1)
+                            .ok_or_else(|| bad(format!("bad NIC count '{k}'")))?,
+                    );
+                    so.nic_gbps = g;
+                    any_scaleout = true;
+                }
+                "t1" => {
+                    so.switches_t1 = Some(count("tier-1 switch count")?);
+                    any_scaleout = true;
+                }
+                "t2" => {
+                    so.switches_t2 = Some(count("tier-2 switch count")?);
+                    any_scaleout = true;
+                }
+                "taper" => {
+                    so.taper = val
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|&t| t >= 1.0)
+                        .ok_or_else(|| bad(format!("bad taper '{val}' (needs >= 1)")))?;
+                    any_scaleout = true;
+                }
+                "eff" => {
+                    so.link_eff = val
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|&e| e > 0.0 && e <= 1.0)
+                        .ok_or_else(|| bad(format!("bad eff '{val}' (needs 0 < eff <= 1)")))?;
+                    any_scaleout = true;
+                }
+                "gpus" => gpus = Some(count("GPU count")?),
+                _ => return Err(bad(format!("unknown key '{key}'"))),
+            }
+        }
+        if so.pods > 1 && !tiers_explicit {
+            so.tiers_fat_tree = 2; // multi-pod implies a spine
+        }
+        if so.pods > 1 && so.tiers_fat_tree < 2 {
+            return Err(bad(format!(
+                "{} pods need a tier-2 spine (tiers:2), got tiers:{}",
+                so.pods, so.tiers_fat_tree
+            )));
+        }
+        let fabric = Fabric {
+            scaleup: ScaleUp { preset: preset.to_string(), nodes, gpus_per_node: gpus },
+            scaleout: if any_scaleout { Some(so) } else { None },
+        };
+        if fabric.ranks() > MAX_RANKS {
+            return Err(bad(format!(
+                "{} ranks exceeds the {MAX_RANKS}-rank cap",
+                fabric.ranks()
+            )));
+        }
+        Ok(fabric)
+    }
+
+    // ---------------- index algebra ----------------
+
+    /// GPUs per node after the scale-up override.
+    pub fn gpus_per_node(&self) -> usize {
+        self.scaleup.gpus_per_node.unwrap_or_else(|| self.base_preset().gpus_per_node)
+    }
+
+    pub fn nodes_per_pod(&self) -> usize {
+        self.scaleup.nodes
+    }
+
+    pub fn pods(&self) -> usize {
+        self.scaleout.as_ref().map(|s| s.pods).unwrap_or(1)
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.pods() * self.nodes_per_pod()
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.nodes() * self.gpus_per_node()
+    }
+
+    /// NICs per node after the scale-out override.
+    pub fn nics_per_node(&self) -> usize {
+        self.scaleout
+            .as_ref()
+            .and_then(|s| s.nics_per_node)
+            .unwrap_or_else(|| self.base_preset().nics_per_node)
+    }
+
+    /// Global rank of `(pod, node-in-pod, gpu)`.
+    pub fn rank_of(&self, pod: usize, node: usize, gpu: usize) -> Rank {
+        (pod * self.nodes_per_pod() + node) * self.gpus_per_node() + gpu
+    }
+
+    pub fn pod_of(&self, r: Rank) -> usize {
+        r / (self.nodes_per_pod() * self.gpus_per_node())
+    }
+
+    /// Global node index of rank `r`.
+    pub fn node_of(&self, r: Rank) -> usize {
+        r / self.gpus_per_node()
+    }
+
+    /// Node index *within its pod*.
+    pub fn node_in_pod_of(&self, r: Rank) -> usize {
+        self.node_of(r) % self.nodes_per_pod()
+    }
+
+    pub fn gpu_of(&self, r: Rank) -> usize {
+        r % self.gpus_per_node()
+    }
+
+    /// NIC index (within the node) rank `r` injects through — the same
+    /// share rule as [`Topology::nic_of`].
+    pub fn nic_of(&self, r: Rank) -> usize {
+        self.gpu_of(r) * self.nics_per_node() / self.gpus_per_node()
+    }
+
+    // ---------------- lowering ----------------
+
+    fn base_preset(&self) -> Topology {
+        match self.scaleup.preset.as_str() {
+            "ndv2" => Topology::ndv2(self.nodes()),
+            "ndv4" => Topology::ndv4(self.nodes()),
+            "asym" => Topology::asym(self.nodes()),
+            // parse() admits only the four presets.
+            _ => Topology::a100(self.nodes()),
+        }
+    }
+
+    /// Canonical (filename-safe, cache-key-stable) name. A fabric with no
+    /// scale-out keeps the preset's own name, so golden parity includes
+    /// the name and tuned tables transfer.
+    pub fn name(&self) -> String {
+        let mut s = format!("{}x{}", self.scaleup.preset, self.scaleup.nodes);
+        if let Some(g) = self.scaleup.gpus_per_node {
+            s.push_str(&format!("+gpus{g}"));
+        }
+        if let Some(so) = &self.scaleout {
+            s.push_str(&format!("+pods{}+tiers{}", so.pods, so.tiers_fat_tree));
+            if let Some(k) = so.nics_per_node {
+                s.push_str(&format!("+nics{k}"));
+                if let Some(g) = so.nic_gbps {
+                    s.push_str(&format!("@{g}"));
+                }
+            }
+            if let Some(t1) = so.switches_t1 {
+                s.push_str(&format!("+t1s{t1}"));
+            }
+            if let Some(t2) = so.switches_t2 {
+                s.push_str(&format!("+t2s{t2}"));
+            }
+            if so.taper != 2.0 {
+                s.push_str(&format!("+taper{}", so.taper));
+            }
+            if so.link_eff != 1.0 {
+                s.push_str(&format!("+eff{}", so.link_eff));
+            }
+        }
+        s
+    }
+
+    /// Resolved tier-1 switch count per pod (0 when there is no scale-out).
+    pub fn switches_t1(&self) -> usize {
+        match &self.scaleout {
+            Some(so) => so.switches_t1.unwrap_or_else(|| self.nics_per_node()),
+            None => 0,
+        }
+    }
+
+    /// Resolved tier-2 switch count fabric-wide (0 below two tiers).
+    pub fn switches_t2(&self) -> usize {
+        match &self.scaleout {
+            Some(so) if so.tiers_fat_tree >= 2 => {
+                so.switches_t2.unwrap_or_else(|| self.switches_t1())
+            }
+            _ => 0,
+        }
+    }
+
+    /// Per-switch tier-1 capacity, bytes/s: the pod's NIC aggregate spread
+    /// over the leaf switches (non-blocking leaf by default).
+    pub fn t1_bw(&self, nic_bw: f64) -> f64 {
+        let so = match &self.scaleout {
+            Some(so) => so,
+            None => return 0.0,
+        };
+        let agg = self.nodes_per_pod() as f64 * self.nics_per_node() as f64 * nic_bw;
+        agg * so.link_eff / self.switches_t1() as f64
+    }
+
+    /// Per-switch tier-2 capacity, bytes/s: fabric injection bandwidth
+    /// divided by the taper, spread over the spine switches.
+    pub fn t2_bw(&self, nic_bw: f64) -> f64 {
+        let so = match &self.scaleout {
+            Some(so) if so.tiers_fat_tree >= 2 => so,
+            _ => return 0.0,
+        };
+        let inject = self.pods() as f64
+            * self.nodes_per_pod() as f64
+            * self.nics_per_node() as f64
+            * nic_bw;
+        inject * so.link_eff / so.taper / self.switches_t2() as f64
+    }
+
+    /// Lower to the flat [`Topology`] + resource model the whole stack
+    /// (sim, Planner, tuner, fault model) already understands. With no
+    /// scale-out this IS the preset, field for field.
+    pub fn lower(&self) -> Topology {
+        let mut t = self.base_preset();
+        if let Some(g) = self.scaleup.gpus_per_node {
+            t.gpus_per_node = g;
+        }
+        if let Some(so) = &self.scaleout {
+            if let Some(k) = so.nics_per_node {
+                t.nics_per_node = k;
+            }
+            if let Some(gbps) = so.nic_gbps {
+                t.ib_nic_bw = gbps * 1e9 / 8.0;
+            }
+            let nic_bw = t.ib_nic_bw;
+            t.scaleout = Some(ScaleOut {
+                pods: so.pods,
+                nodes_per_pod: self.nodes_per_pod(),
+                tiers: so.tiers_fat_tree,
+                switches_t1: self.switches_t1(),
+                switches_t2: self.switches_t2(),
+                t1_bw: self.t1_bw(nic_bw),
+                t2_bw: self.t2_bw(nic_bw),
+                t1_lat: T1_LAT,
+                t2_lat: T2_LAT,
+            });
+        }
+        t.name = self.name();
+        t
+    }
+
+    /// Multi-line human description for `gc3 topo --fabric … --show`:
+    /// shape, per-tier bandwidth/latency, and the analytic bounds of the
+    /// lowered topology.
+    pub fn describe(&self) -> String {
+        let t = self.lower();
+        let gbs = |b: f64| format!("{:.1} GB/s", b / 1e9);
+        let mut s = format!(
+            "fabric {}: {} ranks ({} pods x {} nodes x {} gpus)\n",
+            t.name,
+            self.ranks(),
+            self.pods(),
+            self.nodes_per_pod(),
+            self.gpus_per_node()
+        );
+        s.push_str(&format!(
+            "  scale-up [{}]: nvlink {} | shm {} | pcie {} ({} gpus/switch)\n",
+            self.scaleup.preset,
+            gbs(t.nvlink_gpu_bw),
+            gbs(t.shm_bw),
+            gbs(t.pcie_switch_bw),
+            t.gpus_per_pcie_switch
+        ));
+        s.push_str(&format!(
+            "  nic: {} x {} per node (conn cap {})\n",
+            t.nics_per_node,
+            gbs(t.ib_nic_bw),
+            gbs(t.ib_conn_bw)
+        ));
+        match &t.scaleout {
+            Some(so) => {
+                s.push_str(&format!(
+                    "  t1: {} switches/pod x {} @ {:.1} us\n",
+                    so.switches_t1,
+                    gbs(so.t1_bw),
+                    so.t1_lat * 1e6
+                ));
+                if so.tiers >= 2 {
+                    s.push_str(&format!(
+                        "  t2: {} switches x {} @ {:.1} us (taper {})\n",
+                        so.switches_t2,
+                        gbs(so.t2_bw),
+                        so.t2_lat * 1e6,
+                        self.scaleout.as_ref().map(|x| x.taper).unwrap_or(2.0)
+                    ));
+                } else {
+                    s.push_str("  t2: none (leaf-only fabric)\n");
+                }
+            }
+            None => s.push_str("  scale-out: none (flat preset)\n"),
+        }
+        s.push_str(&format!(
+            "  alltoall_bound {} | allreduce_ring_bound {}\n",
+            gbs(t.alltoall_bound()),
+            gbs(t.allreduce_ring_bound())
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden parity: a spec with no scale-out keys lowers to the flat
+    /// preset bit-identically — name included, so tuned tables transfer.
+    #[test]
+    fn bare_spec_lowers_to_flat_preset() {
+        for (spec, flat) in [
+            ("a100x8", Topology::a100(8)),
+            ("ndv2x2", Topology::ndv2(2)),
+            ("ndv4x4", Topology::ndv4(4)),
+            ("asymx1", Topology::asym(1)),
+        ] {
+            let f = Fabric::parse(spec).unwrap();
+            assert!(f.scaleout.is_none(), "{spec}");
+            let t = f.lower();
+            assert_eq!(t.name, flat.name);
+            assert_eq!(t.nodes, flat.nodes);
+            assert_eq!(t.gpus_per_node, flat.gpus_per_node);
+            assert_eq!(t.sm_count, flat.sm_count);
+            assert_eq!(t.has_nvswitch, flat.has_nvswitch);
+            assert_eq!(t.nvlink_gpu_bw.to_bits(), flat.nvlink_gpu_bw.to_bits());
+            assert_eq!(t.shm_bw.to_bits(), flat.shm_bw.to_bits());
+            assert_eq!(t.ib_nic_bw.to_bits(), flat.ib_nic_bw.to_bits());
+            assert_eq!(t.nics_per_node, flat.nics_per_node);
+            assert_eq!(t.gpus_per_pcie_switch, flat.gpus_per_pcie_switch);
+            assert_eq!(t.pcie_switch_bw.to_bits(), flat.pcie_switch_bw.to_bits());
+            assert_eq!(t.tb_bw.to_bits(), flat.tb_bw.to_bits());
+            assert_eq!(t.ib_conn_bw.to_bits(), flat.ib_conn_bw.to_bits());
+            assert_eq!(t.scaleout, None);
+        }
+    }
+
+    /// The ISSUE's flagship shape: 16 pods × 8 nodes × 8 GPUs = 1024 ranks
+    /// behind 400 Gb/s NICs and a 2:1-tapered spine.
+    #[test]
+    fn flagship_1024_rank_fabric() {
+        let f = Fabric::parse("a100x8/pods:16/tiers:2/nics:8@400").unwrap();
+        assert_eq!(f.ranks(), 1024);
+        assert_eq!(f.pods(), 16);
+        let t = f.lower();
+        assert_eq!(t.nodes, 128);
+        assert_eq!(t.num_ranks(), 1024);
+        assert!((t.ib_nic_bw - 50e9).abs() < 1.0, "400 Gb/s = 50 GB/s");
+        let so = t.scaleout.as_ref().unwrap();
+        assert_eq!((so.pods, so.nodes_per_pod, so.tiers), (16, 8, 2));
+        assert_eq!((so.switches_t1, so.switches_t2), (8, 8));
+        // Pod aggregate 8 nodes × 8 NICs × 50 GB/s = 3.2 TB/s over 8
+        // leaves; spine = 16 pods × 3.2 TB/s / taper 2 / 8 switches.
+        assert!((so.t1_bw - 400e9).abs() < 1.0, "{}", so.t1_bw);
+        assert!((so.t2_bw - 3.2e12).abs() < 1e3, "{}", so.t2_bw);
+        assert!(so.t2_lat > so.t1_lat);
+        // Spine is tapered: a pod can inject more than its 1/pods spine
+        // share — cross-pod is the bottleneck staged plans route around.
+        assert!(so.t2_bw * so.switches_t2 as f64 * 2.0
+            < so.t1_bw * so.switches_t1 as f64 * 16.0 * 2.0);
+    }
+
+    #[test]
+    fn index_algebra_round_trips() {
+        let f = Fabric::parse("a100x8/pods:16/tiers:2").unwrap();
+        for &r in &[0, 1, 63, 64, 511, 512, 1023] {
+            let (p, n, g) = (f.pod_of(r), f.node_in_pod_of(r), f.gpu_of(r));
+            assert_eq!(f.rank_of(p, n, g), r);
+            assert!(p < f.pods() && n < f.nodes_per_pod() && g < f.gpus_per_node());
+        }
+        assert_eq!(f.pod_of(64), 1);
+        assert_eq!(f.node_of(64), 8);
+        assert_eq!(f.node_in_pod_of(64), 0);
+        // Fabric and lowered topology agree on every index function.
+        let t = f.lower();
+        for r in [0usize, 77, 640, 1000] {
+            assert_eq!(f.pod_of(r), t.pod_of(r));
+            assert_eq!(f.node_of(r), t.node_of(r));
+            assert_eq!(f.gpu_of(r), t.gpu_of(r));
+            assert_eq!(f.nic_of(r), t.nic_of(r));
+        }
+    }
+
+    #[test]
+    fn parse_hard_errors_name_the_grammar() {
+        for bad in [
+            "a100",                      // no 'x<nodes>' head
+            "h100x8",                    // unknown preset
+            "a100x0",                    // zero nodes
+            "a100x8/pods",               // key without value
+            "a100x8/racks:4",            // unknown key
+            "a100x8/pods:16/tiers:1",    // multi-pod without a spine
+            "a100x8/tiers:3",            // too many tiers
+            "a100x8/nics:8@fast",        // bad NIC rate
+            "a100x8/taper:0.5",          // taper < 1
+            "a100x8/eff:1.5",            // eff out of range
+            "a100x64/pods:256/tiers:2",  // over the rank cap
+        ] {
+            let e = Fabric::parse(bad).unwrap_err().to_string();
+            assert!(e.contains(FABRIC_GRAMMAR), "{bad}: {e}");
+        }
+        // Multi-pod without explicit tiers defaults to a 2-tier tree.
+        let f = Fabric::parse("a100x8/pods:4").unwrap();
+        assert_eq!(f.scaleout.as_ref().unwrap().tiers_fat_tree, 2);
+    }
+
+    #[test]
+    fn names_are_canonical_and_filename_safe() {
+        let f = Fabric::parse("a100x8/pods:16/tiers:2/nics:8@400").unwrap();
+        assert_eq!(f.name(), "a100x8+pods16+tiers2+nics8@400");
+        assert_eq!(f.lower().name, f.name());
+        assert!(!f.name().contains('/') && !f.name().contains(' '));
+        // Non-default knobs show up; defaults don't.
+        let g = Fabric::parse("ndv4x4/pods:2/tiers:2/t1:4/taper:4/eff:0.9").unwrap();
+        assert_eq!(g.name(), "ndv4x4+pods2+tiers2+t1s4+taper4+eff0.9");
+        let bare = Fabric::parse("asymx2").unwrap();
+        assert_eq!(bare.name(), "asymx2");
+    }
+
+    #[test]
+    fn describe_prints_tiers_and_bounds() {
+        let f = Fabric::parse("a100x8/pods:16/tiers:2/nics:8@400").unwrap();
+        let d = f.describe();
+        assert!(d.contains("1024 ranks"), "{d}");
+        assert!(d.contains("t1: 8 switches/pod"), "{d}");
+        assert!(d.contains("t2: 8 switches"), "{d}");
+        assert!(d.contains("alltoall_bound"), "{d}");
+        let flat = Fabric::parse("a100x2").unwrap().describe();
+        assert!(flat.contains("scale-out: none"), "{flat}");
+    }
+
+    /// The lowered fabric prices end to end through the sim resource
+    /// table: same-pod and cross-pod IB routes pick up the right switch
+    /// hops (detailed route shape is pinned in `sim::resources`).
+    #[test]
+    fn lowered_fabric_routes_through_tiers() {
+        use crate::sim::resources::ResourceTable;
+        use crate::sim::Protocol;
+        let f = Fabric::parse("a100x2/pods:2/tiers:2").unwrap();
+        let t = f.lower();
+        let mut rt = ResourceTable::new(&t, Protocol::Simple);
+        let same_pod = rt.route(&t, 0, 8); // node 0 → node 1, pod 0
+        let cross_pod = rt.route(&t, 0, 16); // pod 0 → pod 1
+        assert!(cross_pod.resources.len() > same_pod.resources.len());
+        assert!(cross_pod.alpha > same_pod.alpha);
+    }
+}

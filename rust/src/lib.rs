@@ -94,6 +94,13 @@
 //! * [`topology`] — multi-GPU/multi-node network descriptions: the A100
 //!   node of Fig. 2, Azure NDv2/NDv4 nodes, mixed-bandwidth `asym`, and
 //!   N-node IB clusters.
+//! * [`fabric`] — the composable topology algebra
+//!   `Fabric = ScaleUp × ScaleOut`: a scale-up preset crossed with a
+//!   multi-tier fat-tree scale-out (pods, leaf/spine switch counts, NIC
+//!   rate, taper), parsed from `--fabric` spec strings
+//!   ([`fabric::FABRIC_GRAMMAR`]) and lowered to a plain [`topology`]
+//!   whose switch tiers price as shared sim resources — 1024+ ranks
+//!   through the unchanged engine, behind `gc3 topo --fabric`.
 //! * [`sim`] — the performance substrate: a discrete-event, max-min-fair
 //!   flow simulator of the GC3 runtime (§4.2–4.4): connections, channels,
 //!   4 MB staging tiles, slice pipelining, protocols (Simple/LL/LL128) and
@@ -118,7 +125,11 @@
 //!   ([`synth::regenerate_trace`]) — algorithms *generated*, not
 //!   selected, behind `gc3 synth`.
 //! * [`planner`] — the planning facade: tuned-table, GC3-heuristic and
-//!   NCCL-fallback dispatch behind one `plan()` call, with provenance.
+//!   NCCL-fallback dispatch behind one `plan()` call, with provenance;
+//!   [`planner::hier`] contributes the rabenseifner-style staged
+//!   collectives (reduce in-node → fold to pod leaders → cross-pod ring →
+//!   broadcast back down) that dispatch automatically on multi-pod
+//!   fabrics and byte-verify against the flat plans.
 //! * [`collectives`] — the GC3 program library (Two-Step AllToAll §2, Ring
 //!   AllReduce §6.2, Hierarchical AllReduce §6.3, AllToNext §6.4, plus
 //!   AllGather / ReduceScatter / Broadcast), name-indexed via
@@ -156,6 +167,7 @@ pub mod instdag;
 pub mod sched;
 pub mod ef;
 pub mod topology;
+pub mod fabric;
 pub mod sim;
 pub mod exec;
 pub mod nccl;

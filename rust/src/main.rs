@@ -13,7 +13,8 @@
 //! gc3 figures   [--fig 7|8|9|11|loc|abl]        regenerate §6 figures
 //! gc3 tune      --collective C [--sizes ...]    autotune + emit a TunedTable
 //! gc3 synth     --collective C --topo T [--budget N] [--seed S] [--out T.json]
-//! gc3 plan      [--collective C] [--size S] [--tuned TABLE.json]
+//! gc3 plan      [--collective C] [--size S] [--tuned TABLE.json] [--fabric SPEC]
+//! gc3 topo      --fabric SPEC [--show]       inspect a composed fabric
 //! gc3 serve     --trace MIX[:N[:SEED]] [--sessions S] [--threads T]
 //! ```
 
@@ -22,6 +23,7 @@ use gc3::compiler::{CompileOpts, IrStage, Pipeline};
 use gc3::core::{Gc3Error, Result};
 use gc3::ef::EfProgram;
 use gc3::exec::{self, verify, Memory, NativeReducer, Session};
+use gc3::fabric::Fabric;
 use gc3::planner::Planner;
 use gc3::serve::{loadgen, FaultSpec, Service, ServiceConfig, TraceSpec};
 use gc3::sim::{simulate, simulate_traced, FaultModel, Protocol};
@@ -66,6 +68,16 @@ fn topo_strict(args: &Args) -> Result<Topology> {
     };
     t.gpus_per_node = args.usize("gpus", t.gpus_per_node);
     Ok(t)
+}
+
+/// Topology source for verbs that speak both dialects: `--fabric <spec>`
+/// (the composed-fabric grammar, hard-erroring on unknown keys) wins over
+/// the flat `--topo/--nodes/--gpus` trio.
+fn topo_or_fabric(args: &Args) -> Result<Topology> {
+    match args.opt("fabric") {
+        Some(spec) => Ok(Fabric::parse(spec)?.lower()),
+        None => Ok(topo_from(args)),
+    }
 }
 
 /// Strict integer option: a malformed value is a hard error naming the
@@ -131,7 +143,7 @@ fn opts_from(args: &Args, topo: &Topology) -> Result<CompileOpts> {
 }
 
 fn main() {
-    let args = Args::parse(&["v", "no-fuse", "pjrt-reduce", "check"]);
+    let args = Args::parse(&["v", "no-fuse", "pjrt-reduce", "check", "show", "verify"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match run(cmd, &args) {
         Ok(()) => 0,
@@ -573,9 +585,32 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "topo" => {
+            // Inspect a composed fabric: parse the --fabric spec (unknown
+            // keys hard-error quoting the grammar), print the shape,
+            // per-tier bandwidth/latency and the analytic bounds; --show
+            // additionally dumps the lowered sim resource inventory.
+            let spec = args.opt("fabric").ok_or_else(|| {
+                Gc3Error::Invalid(format!(
+                    "topo needs --fabric <spec> (accepted: {})",
+                    gc3::fabric::FABRIC_GRAMMAR
+                ))
+            })?;
+            let fabric = Fabric::parse(spec)?;
+            print!("{}", fabric.describe());
+            if args.flag("show") {
+                let topo = fabric.lower();
+                let rt = gc3::sim::resources::ResourceTable::new(&topo, Protocol::Simple);
+                println!("  lowered sim resources ({}):", rt.names.len());
+                for (name, cap) in rt.names.iter().zip(&rt.caps) {
+                    println!("    {name:16} {:.1} GB/s", cap / 1e9);
+                }
+            }
+            Ok(())
+        }
         "plan" | "registry" => {
             // The unified dispatch facade: tuned table -> GC3 -> NCCL.
-            let mut planner = Planner::new(topo_from(args));
+            let mut planner = Planner::new(topo_or_fabric(args)?);
             if let Some(path) = args.opt("tuned") {
                 let text =
                     std::fs::read_to_string(path).map_err(|e| Gc3Error::Ef(e.to_string()))?;
@@ -594,7 +629,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 let (link, factor) = spec.split_once(':').ok_or_else(|| {
                     Gc3Error::Invalid(format!(
                         "bad --degrade '{spec}' (accepted: <link>:<factor>, link one of {})",
-                        Topology::LINK_CLASSES.join("|")
+                        Topology::DEGRADE_CLASSES.join("|")
                     ))
                 })?;
                 let factor: f64 = factor.parse().map_err(|_| {
@@ -634,6 +669,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     rep.time * 1e6
                 );
                 println!("  why: {}", plan.choice.reason);
+                if args.flag("verify") {
+                    let stats = plan.verify(args.usize("elems", 4))?;
+                    println!(
+                        "  verified byte-accurate: {} messages, {} elems moved",
+                        stats.messages, stats.elems_moved
+                    );
+                }
                 if args.flag("v") {
                     println!("  compile stages:");
                     print!("{}", plan.stats.render_stage_times());
@@ -691,18 +733,30 @@ usage:
                 and write the best-plan-per-size TunedTable — synthesized
                 winners carry replayable {seed, sketch, sim_time} provenance
                 that `gc3 plan --tuned` regenerates and explains
+  gc3 topo      --fabric '<preset>x<nodes>[/pods:P][/tiers:1|2][/nics:K[@Gbps]]
+                [/t1:S][/t2:S][/taper:F][/eff:F][/gpus:G]' [--show]
+                parse a composed fabric spec (scale-up preset x fat-tree
+                scale-out), print ranks, per-tier bandwidth/latency and the
+                alltoall/allreduce-ring bounds; unknown keys are hard
+                errors naming the grammar; --show dumps the lowered sim
+                resource inventory (per-switch shared-bandwidth resources)
   gc3 plan      [--collective C] [--size 4MB] [--tuned TABLE.json] [--nodes N]
-                [--degrade nvlink|shm|ib|pcie:FACTOR]
+                [--fabric SPEC] [--verify] [--elems E]
+                [--degrade nvlink|shm|ib|pcie|nic|t1|t2:FACTOR]
                 dispatch through the Planner facade and explain the choice;
-                --degrade replans on the degraded fabric and prices the new
-                plan against the naive (healthy) dispatch
+                --fabric plans on a composed multi-pod fabric (the planner
+                dispatches pod-staged hierarchical programs there);
+                --verify runs the plan byte-accurately on the session
+                executor; --degrade replans on the degraded fabric (switch
+                tiers included) and prices the new plan against the naive
+                (healthy) dispatch
                 (alias: gc3 registry)
   gc3 serve     [--trace mixed|small|allreduce[:N[:SEED]]] [--sessions S]
                 [--threads T] [--queue Q] [--batch B] [--tuned TABLE.json]
                 [--nodes N] [--gpus G] [--topo a100|ndv2|ndv4|asym]
                 [--faults SPEC]  where SPEC mixes network faults
-                (nvlink|shm|ib|pcie:<factor>, eff:<f>, jitter:<f>, dead:rN,
-                seed:<n>) with one session fault (wedge:r<rank>,
+                (nvlink|shm|ib|pcie|nic|t1|t2:<factor>, eff:<f>, jitter:<f>,
+                dead:rN, seed:<n>) with one session fault (wedge:r<rank>,
                 drop:r<src>-r<dst>, timeout:<sweeps>)
                 [--trace-out TRACE.json]
                 drive a deterministic multi-tenant request trace through the
@@ -717,7 +771,8 @@ mod tests {
     use super::*;
 
     fn args_of(v: &[&str]) -> Args {
-        Args::parse_from(v.iter().map(|s| s.to_string()), &["v", "no-fuse"]).unwrap()
+        Args::parse_from(v.iter().map(|s| s.to_string()), &["v", "no-fuse", "show", "verify"])
+            .unwrap()
     }
 
     /// Satellite bug fix: an invalid `--protocol` used to be silently
@@ -1054,6 +1109,90 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("allreduce|alltoall"), "error lists the sketch set: {err}");
+    }
+
+    /// The topo verb inspects composed fabrics: happy path (with and
+    /// without --show), missing --fabric and unknown keys are hard errors
+    /// quoting the fabric grammar.
+    #[test]
+    fn topo_verb_describes_fabrics_and_rejects_bad_specs() {
+        let args =
+            args_of(&["topo", "--fabric", "a100x8/pods:16/tiers:2/nics:8@400"]);
+        run("topo", &args).unwrap();
+        let args =
+            args_of(&["topo", "--fabric", "a100x2/pods:2/tiers:2", "--show"]);
+        run("topo", &args).unwrap();
+        let err = run("topo", &args_of(&["topo"])).unwrap_err().to_string();
+        assert!(err.contains("--fabric"), "{err}");
+        assert!(err.contains("a100|ndv2|ndv4|asym"), "error quotes the grammar: {err}");
+        let err = run("topo", &args_of(&["topo", "--fabric", "a100x8/racks:4"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown key 'racks'"), "{err}");
+        assert!(err.contains("a100|ndv2|ndv4|asym"), "error quotes the grammar: {err}");
+    }
+
+    /// `gc3 plan --fabric … --verify` plans a pod-staged collective on a
+    /// composed fabric and byte-verifies it on the session executor.
+    #[test]
+    fn plan_on_fabric_verifies_staged_collective() {
+        let args = args_of(&[
+            "plan",
+            "--collective",
+            "allreduce",
+            "--fabric",
+            "a100x2/pods:2/tiers:2/gpus:2",
+            "--size",
+            "4MB",
+            "--verify",
+        ]);
+        run("plan", &args).unwrap();
+    }
+
+    /// `gc3 plan --degrade` speaks the scale-out classes: `nic:` works on
+    /// any fabric, `t2:` replans on a composed one and is a hard error on
+    /// a flat preset.
+    #[test]
+    fn plan_degrade_accepts_scaleout_classes() {
+        let args = args_of(&[
+            "plan",
+            "--collective",
+            "allgather",
+            "--size",
+            "64KB",
+            "--gpus",
+            "4",
+            "--degrade",
+            "nic:0.5",
+        ]);
+        run("plan", &args).unwrap();
+        let args = args_of(&[
+            "plan",
+            "--collective",
+            "allreduce",
+            "--fabric",
+            "a100x2/pods:2/tiers:2/gpus:2",
+            "--size",
+            "4MB",
+            "--degrade",
+            "t2:0.25",
+        ]);
+        run("plan", &args).unwrap();
+        let err = run(
+            "plan",
+            &args_of(&["plan", "--degrade", "t2:0.5", "--size", "64KB", "--gpus", "4"]),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("flat topology"), "{err}");
+    }
+
+    #[test]
+    fn help_mentions_topo_verb_and_fabric() {
+        assert!(HELP.contains("gc3 topo"), "{HELP}");
+        assert!(HELP.contains("--fabric"), "{HELP}");
+        assert!(HELP.contains("/pods:"), "{HELP}");
+        assert!(HELP.contains("--verify"), "{HELP}");
     }
 
     /// The benchdiff verb: identical artifacts pass, a 30% events/s drop

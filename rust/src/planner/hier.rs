@@ -1,0 +1,205 @@
+//! Hierarchical (pod-staged) collective programs for composed fabrics.
+//!
+//! On a multi-pod fabric ([`crate::fabric`]) the flat library programs
+//! waste the tapered spine: a flat hierarchical AllReduce rings its
+//! cross-node phase over *all* `pods × nodes_per_pod` nodes, crossing the
+//! oversubscribed tier-2 spine `2(N−1)` times per chunk, and a flat
+//! two-step AllToAll sends one message per destination *node*. The staged
+//! programs here compose per-tier stages instead, rabenseifner-style:
+//!
+//! * [`staged_allreduce`] — reduce in-node (NVLink ring) → fold node sums
+//!   to a per-chunk pod-leader node (tier-1 traffic) → a short cross-pod
+//!   ring among the `pods` leaders (the only tier-2 traffic:
+//!   `2(pods−1)` spine crossings per chunk instead of
+//!   `2(pods·nodes_per_pod−1)`) → broadcast back down pod then node.
+//! * [`staged_alltoall`] — the §2 two-step algorithm lifted one level:
+//!   each pod plays the "node" role and its `nodes_per_pod × gpus` ranks
+//!   the "GPU" role, so cross-pod message count per rank drops from
+//!   `(P−1)·npp·G` to `P−1` with `npp·G×` larger messages.
+//!
+//! Both emit ordinary [`dsl::Program`](crate::dsl::Program)s over the same
+//! [`CollectiveSpec`] as their flat counterparts, so they flow through the
+//! existing compile → [`Plan::verify`](crate::planner::Plan::verify) →
+//! TunedTable/PlanCache path unchanged and byte-verify against the flat
+//! plans. The [`Planner`](crate::planner::Planner) dispatches them
+//! automatically whenever its topology reports more than one pod.
+
+use crate::collectives::alltoall;
+use crate::core::{BufferId, Gc3Error, Rank, Result};
+use crate::dsl::collective::CollectiveSpec;
+use crate::dsl::{Program, SchedHint, Trace};
+
+/// Pod-staged AllReduce over `pods × nodes_per_pod × gpus` ranks,
+/// `gpus` chunks per rank (the same chunking as
+/// [`allreduce::hierarchical`](crate::collectives::allreduce::hierarchical),
+/// so the two plans verify against the same postcondition).
+///
+/// Five phases, each on its own channel block (the §5.4 head-of-line
+/// lesson from the flat hierarchical program): (0) in-node ring reduce so
+/// GPU `g` of every node holds its node's sum of chunk `g`; (1) in-pod
+/// chain fold of node sums into the chunk's leader node `g % nodes_per_pod`
+/// (spreading leader duty across nodes); (2) cross-pod chain
+/// reduce + copy-back among the pod leaders — the only spine traffic;
+/// (3) in-pod broadcast chain back to every node; (4) in-node ring
+/// broadcast to every GPU.
+pub fn staged_allreduce(pods: usize, nodes_per_pod: usize, gpus: usize) -> Result<Trace> {
+    let (p_, n_, g_) = (pods, nodes_per_pod, gpus);
+    let ranks = p_ * n_ * g_;
+    if p_ == 0 || n_ == 0 || g_ == 0 || ranks < 2 {
+        return Err(Gc3Error::Invalid(format!(
+            "staged allreduce needs >= 2 ranks, got {p_} pods x {n_} nodes x {g_} gpus"
+        )));
+    }
+    let rank = |p: usize, n: usize, g: usize| -> Rank { (p * n_ + n) * g_ + g };
+    let mut prog = Program::new(CollectiveSpec::allreduce(ranks, g_));
+    let hint = |g: usize, phase: usize| SchedHint::chan(phase * g_ + g);
+
+    for g in 0..g_ {
+        // Per-chunk pod-leader node: chunk g's cross-pod traffic runs
+        // through node `g % n_` of each pod, so leader duty (and tier-1
+        // uplink load) spreads across the pod's nodes.
+        let ln = g % n_;
+        // Phase 0: in-node ring reduce — GPU g of every node ends holding
+        // that node's sum of chunk g.
+        for p in 0..p_ {
+            for n in 0..n_ {
+                let mut c = prog.chunk(BufferId::Input, rank(p, n, (g + 1) % g_), g, 1)?;
+                for step in 2..=g_ {
+                    let at =
+                        prog.chunk(BufferId::Input, rank(p, n, (g + step) % g_), g, 1)?;
+                    c = prog.reduce(at, c, hint(g, 0))?;
+                }
+            }
+        }
+        // Phase 1: fold node sums to the pod leader (tier-1 traffic only).
+        for p in 0..p_ {
+            let mut c = prog.chunk(BufferId::Input, rank(p, (ln + 1) % n_, g), g, 1)?;
+            for j in 2..=n_ {
+                let at = prog.chunk(BufferId::Input, rank(p, (ln + j) % n_, g), g, 1)?;
+                c = prog.reduce(at, c, hint(g, 1))?;
+            }
+        }
+        // Phase 2: cross-pod chain among the leaders — reduce into pod 0,
+        // then send the global sum back around. 2(P−1) spine crossings
+        // per chunk, the staged win.
+        let mut c = prog.chunk(BufferId::Input, rank(1 % p_, ln, g), g, 1)?;
+        for q in 2..=p_ {
+            let at = prog.chunk(BufferId::Input, rank(q % p_, ln, g), g, 1)?;
+            c = prog.reduce(at, c, hint(g, 2))?;
+        }
+        for q in 1..p_ {
+            c = prog.copy(c, BufferId::Input, rank(q, ln, g), g, hint(g, 2))?;
+        }
+        // Phase 3: in-pod broadcast chain from the leader node.
+        for p in 0..p_ {
+            let mut c = prog.chunk(BufferId::Input, rank(p, ln, g), g, 1)?;
+            for j in 1..n_ {
+                c = prog.copy(c, BufferId::Input, rank(p, (ln + j) % n_, g), g, hint(g, 3))?;
+            }
+        }
+        // Phase 4: in-node ring broadcast to the other GPUs.
+        for p in 0..p_ {
+            for n in 0..n_ {
+                let mut c = prog.chunk(BufferId::Input, rank(p, n, g), g, 1)?;
+                for step in 1..g_ {
+                    c = prog.copy(c, BufferId::Input, rank(p, n, (g + step) % g_), g,
+                        hint(g, 4))?;
+                }
+            }
+        }
+    }
+    prog.finish()
+}
+
+/// Pod-staged AllToAll: the §2 two-step algorithm one level up — pods are
+/// the "nodes", each pod's `nodes_per_pod × gpus` ranks the "GPUs". The
+/// global rank layout `(pod · npp + node) · gpus + gpu` flattens exactly to
+/// two-step's `node · G + gpu` with `G = npp · gpus`, so the emitted
+/// program is the library's own two-step over that shape: chunks bound for
+/// a remote pod stage onto the pod-aligned rank first, then ride one large
+/// aggregated cross-pod transfer.
+pub fn staged_alltoall(pods: usize, nodes_per_pod: usize, gpus: usize) -> Result<Trace> {
+    if pods == 0 || nodes_per_pod == 0 || gpus == 0 {
+        return Err(Gc3Error::Invalid(format!(
+            "staged alltoall needs a non-empty fabric, got {pods} pods x \
+             {nodes_per_pod} nodes x {gpus} gpus"
+        )));
+    }
+    alltoall::two_step(pods, nodes_per_pod * gpus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunkdag::{validate::validate, ChunkDag};
+    use crate::compiler::{compile, CompileOpts};
+    use crate::exec::{verify, NativeReducer};
+
+    #[test]
+    fn staged_allreduce_validates_and_runs() {
+        for (p, n, g) in [(2, 2, 2), (2, 1, 2), (1, 2, 2), (3, 2, 2), (2, 2, 1)] {
+            let t = staged_allreduce(p, n, g).unwrap();
+            validate(&ChunkDag::build(&t).unwrap())
+                .unwrap_or_else(|e| panic!("staged({p},{n},{g}): {e}"));
+            let c = compile(&t, "staged", &CompileOpts::default()).unwrap();
+            verify(&c.ef, &t.spec, 4, &mut NativeReducer)
+                .unwrap_or_else(|e| panic!("staged({p},{n},{g}): {e}"));
+        }
+        assert!(staged_allreduce(1, 1, 1).is_err(), "single rank refused");
+    }
+
+    /// The staged win, counted: cross-pod hops per chunk are 2(P−1),
+    /// independent of nodes_per_pod — a flat hierarchical program over the
+    /// same ranks crosses pods Θ(P·npp) times per chunk.
+    #[test]
+    fn staged_allreduce_spine_crossings() {
+        let (p_, n_, g_) = (4, 2, 2);
+        let t = staged_allreduce(p_, n_, g_).unwrap();
+        let pod = |r: Rank| r / (n_ * g_);
+        let cross_pod = t
+            .ops
+            .iter()
+            .filter(|o| o.is_remote() && pod(o.src().rank) != pod(o.dst().rank))
+            .count();
+        assert_eq!(cross_pod, g_ * 2 * (p_ - 1), "2(P-1) spine hops per chunk");
+
+        let flat = crate::collectives::allreduce::hierarchical(p_ * n_, g_).unwrap();
+        let flat_cross = flat
+            .ops
+            .iter()
+            .filter(|o| o.is_remote() && pod(o.src().rank) != pod(o.dst().rank))
+            .count();
+        assert!(
+            cross_pod < flat_cross,
+            "staged {cross_pod} must cross the spine less than flat {flat_cross}"
+        );
+    }
+
+    #[test]
+    fn staged_alltoall_validates_and_runs() {
+        for (p, n, g) in [(2, 2, 2), (2, 1, 2), (3, 2, 1)] {
+            let t = staged_alltoall(p, n, g).unwrap();
+            validate(&ChunkDag::build(&t).unwrap()).unwrap();
+            let c = compile(&t, "staged_a2a", &CompileOpts::default()).unwrap();
+            verify(&c.ef, &t.spec, 4, &mut NativeReducer)
+                .unwrap_or_else(|e| panic!("staged_a2a({p},{n},{g}): {e}"));
+        }
+    }
+
+    /// Cross-pod message economics of the staged AllToAll: (P−1) large
+    /// transfers per rank instead of (P−1)·npp·G small ones.
+    #[test]
+    fn staged_alltoall_aggregates_cross_pod_messages() {
+        let (p_, n_, g_) = (3, 2, 2);
+        let big = n_ * g_;
+        let t = staged_alltoall(p_, n_, g_).unwrap();
+        let pod = |r: Rank| r / big;
+        let cross: Vec<_> = t
+            .ops
+            .iter()
+            .filter(|o| o.is_remote() && pod(o.src().rank) != pod(o.dst().rank))
+            .collect();
+        assert_eq!(cross.len(), p_ * (p_ - 1) * big, "P(P-1)·npp·G aggregated transfers");
+        assert!(cross.iter().all(|o| o.src().size == big), "each carries npp·G chunks");
+    }
+}

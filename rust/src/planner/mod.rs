@@ -31,13 +31,18 @@
 //! 2. **GC3 static heuristics**: the §6.2 ring (or §6.3 hierarchical
 //!    program across nodes) inside the tuned size window for AllReduce;
 //!    the §2 two-step program across nodes for AllToAll; the library ring
-//!    for AllGather / ReduceScatter.
+//!    for AllGather / ReduceScatter. On a multi-pod fabric
+//!    ([`crate::fabric`]), the pod-staged [`hier`] programs take over:
+//!    AllReduce rings only the pod leaders across the tier-2 spine, and
+//!    AllToAll aggregates cross-pod messages at pod granularity.
 //! 3. **NCCL fallback** (§1: "our runtime falls back on NCCL's
 //!    implementation"): the model-tuned baseline schedule everywhere else.
 //!
 //! Compiled plans are cached by choice, so repeated requests are free.
 //! [`crate::coordinator::Registry`] is now a thin NCCL-compatible shim
 //! over this type.
+
+pub mod hier;
 
 use crate::collectives::{allreduce, alltoall, alltonext, basics};
 use crate::compiler::{CompileOpts, CompileStats, Pipeline};
@@ -537,7 +542,18 @@ impl Planner {
         }
         let key = "gc3_ar";
         if !self.cache.contains_key(key) {
-            if self.topo.nodes > 1 {
+            if self.topo.pods() > 1 {
+                // Multi-pod fabric: the pod-staged program — only the
+                // short leader ring crosses the tapered tier-2 spine.
+                let t = hier::staged_allreduce(
+                    self.topo.pods(),
+                    self.topo.nodes_per_pod(),
+                    self.topo.gpus_per_node,
+                )?;
+                let opts =
+                    CompileOpts::for_topo(&self.topo).with_protocol(Protocol::LL128);
+                self.build(key, &t, "gc3_allreduce_staged", &opts, "staged hier ll128")?;
+            } else if self.topo.nodes > 1 {
                 // Multi-node: hierarchical AllReduce (§6.3).
                 let t = allreduce::hierarchical(self.topo.nodes, self.topo.gpus_per_node)?;
                 let opts =
@@ -579,14 +595,32 @@ impl Planner {
         }
         let key = "gc3_a2a";
         if !self.cache.contains_key(key) {
-            let t = alltoall::two_step(self.topo.nodes, self.topo.gpus_per_node)?;
-            let opts = CompileOpts::for_topo(&self.topo);
-            self.build(key, &t, "gc3_alltoall", &opts, "two_step simple")?;
+            if self.topo.pods() > 1 {
+                let t = hier::staged_alltoall(
+                    self.topo.pods(),
+                    self.topo.nodes_per_pod(),
+                    self.topo.gpus_per_node,
+                )?;
+                let opts = CompileOpts::for_topo(&self.topo);
+                self.build(key, &t, "gc3_alltoall_staged", &opts, "pod two_step simple")?;
+            } else {
+                let t = alltoall::two_step(self.topo.nodes, self.topo.gpus_per_node)?;
+                let opts = CompileOpts::for_topo(&self.topo);
+                self.build(key, &t, "gc3_alltoall", &opts, "two_step simple")?;
+            }
         }
-        let reason = format!(
-            "{} nodes: the §2 two-step program aggregates IB transfers — GC3 custom kernel",
-            self.topo.nodes
-        );
+        let reason = if self.topo.pods() > 1 {
+            format!(
+                "{} pods: the pod-staged two-step program aggregates cross-pod \
+                 transfers — GC3 custom kernel",
+                self.topo.pods()
+            )
+        } else {
+            format!(
+                "{} nodes: the §2 two-step program aggregates IB transfers — GC3 custom kernel",
+                self.topo.nodes
+            )
+        };
         Ok(self.finish(key, Backend::Gc3, None, Some(size), reason))
     }
 
@@ -784,6 +818,53 @@ mod tests {
         let e = p.replan_degraded(&model, Collective::AllReduce, 2 << 20).unwrap_err();
         let msg = e.to_string();
         assert!(msg.contains("r1 is dead"), "{msg}");
+    }
+
+    /// On a multi-pod fabric the static dispatch serves the pod-staged
+    /// programs, they byte-verify, and the staged AllReduce beats the
+    /// flat hierarchical program's simulated time on the same fabric.
+    #[test]
+    fn multi_pod_fabric_dispatches_staged_plans() {
+        let fabric = crate::fabric::Fabric::parse("a100x2/pods:2/tiers:2/gpus:2").unwrap();
+        let topo = fabric.lower();
+        assert_eq!(topo.pods(), 2);
+        let mut p = Planner::new(topo.clone());
+        let ar = p.plan(Collective::AllReduce, 2 << 20).unwrap();
+        assert_eq!(ar.backend, Backend::Gc3);
+        assert!(ar.choice.variant.contains("staged"), "{}", ar.choice.variant);
+        ar.verify(4).unwrap();
+        let a2a = p.plan(Collective::AllToAll, 2 << 20).unwrap();
+        assert!(a2a.ef.name.contains("staged"), "{}", a2a.ef.name);
+        assert!(a2a.choice.reason.contains("pods"), "{}", a2a.choice.reason);
+        a2a.verify(4).unwrap();
+        // Head-to-head on the tapered spine: staged beats flat.
+        let staged_t = ar.simulate().unwrap().time;
+        let flat =
+            allreduce::hierarchical(topo.nodes, topo.gpus_per_node).unwrap();
+        let opts = CompileOpts::for_topo(&topo).with_protocol(Protocol::LL128);
+        let flat_c = Pipeline::new(&opts).run(&flat, "flat_hier").unwrap();
+        let flat_t = simulate(&flat_c.ef, &topo, 2 << 20).unwrap().time;
+        assert!(
+            staged_t < flat_t,
+            "staged {staged_t} must beat flat {flat_t} on a 2-tier fabric"
+        );
+    }
+
+    /// Degrading a switch tier replans on the tiered fabric: the winner
+    /// never loses to the naive staged plan, prices the renamed degraded
+    /// topology, and still verifies byte-accurately.
+    #[test]
+    fn replan_degraded_handles_switch_tiers() {
+        let fabric = crate::fabric::Fabric::parse("a100x2/pods:2/tiers:2/gpus:2").unwrap();
+        let mut p = Planner::new(fabric.lower());
+        let model = FaultModel {
+            degraded_links: vec![("t2".into(), 0.25)],
+            ..FaultModel::default()
+        };
+        let r = p.replan_degraded(&model, Collective::AllReduce, 2 << 20).unwrap();
+        assert!(r.time <= r.naive_time, "{} > {}", r.time, r.naive_time);
+        assert!(r.degraded_topo.contains("t2x0.25"), "{}", r.degraded_topo);
+        r.plan.verify(4).unwrap();
     }
 
     #[test]

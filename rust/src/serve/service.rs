@@ -78,7 +78,7 @@ impl FaultSpec {
             if matches!(key, "wedge" | "drop" | "timeout") {
                 session = Some(SessionFault::parse(entry)?);
             } else if matches!(key, "eff" | "jitter" | "dead" | "seed")
-                || Topology::LINK_CLASSES.contains(&key)
+                || Topology::DEGRADE_CLASSES.contains(&key)
             {
                 model_entries.push(entry);
             } else {

@@ -21,8 +21,8 @@ use crate::util::rng::Rng;
 
 /// The accepted `--faults` / `FaultModel::parse` grammar, quoted verbatim
 /// in every parse error (the PR 3 hard-error convention).
-pub const FAULT_GRAMMAR: &str =
-    "nvlink|shm|ib|pcie:<factor>, eff:<factor>, jitter:<frac>, dead:r<rank>, seed:<n>";
+pub const FAULT_GRAMMAR: &str = "nvlink|shm|ib|pcie|nic|t1|t2:<factor>, eff:<factor>, \
+     jitter:<frac>, dead:r<rank>, seed:<n>";
 
 /// A description of an unhealthy cluster: link efficiency, jitter, per-link
 /// degradations, and dead ranks. `Default` is the healthy cluster.
@@ -35,7 +35,9 @@ pub struct FaultModel {
     /// deterministic seeded factor in `[1, 1 + jitter)`.
     pub jitter: f64,
     /// Per-link-class degradations `(class, factor)`, applied in order via
-    /// [`Topology::degrade`]; classes from [`Topology::LINK_CLASSES`].
+    /// [`Topology::degrade`]; classes from [`Topology::DEGRADE_CLASSES`]
+    /// (the four flat link classes plus the scale-out `nic`/`t1`/`t2`
+    /// classes — the tier classes require a composed-fabric topology).
     pub degraded_links: Vec<(String, f64)>,
     /// Ranks that have fallen off the cluster entirely. A collective that
     /// includes a dead rank cannot complete; the Planner must plan around
@@ -70,7 +72,7 @@ impl FaultModel {
     /// Parse a comma-separated fault spec, e.g. `ib:0.25,jitter:0.1,seed:7`.
     ///
     /// Accepted entries: `<class>:<factor>` with class from
-    /// [`Topology::LINK_CLASSES`], `eff:<factor>`, `jitter:<frac>`,
+    /// [`Topology::DEGRADE_CLASSES`], `eff:<factor>`, `jitter:<frac>`,
     /// `dead:r<rank>`, `seed:<n>`. Anything else is a hard error quoting
     /// [`FAULT_GRAMMAR`].
     pub fn parse(spec: &str) -> Result<FaultModel> {
@@ -105,7 +107,7 @@ impl FaultModel {
                 "seed" => {
                     m.seed = val.parse::<u64>().map_err(|_| bad(entry))?;
                 }
-                cls if Topology::LINK_CLASSES.contains(&cls) => {
+                cls if Topology::DEGRADE_CLASSES.contains(&cls) => {
                     let f = val.parse::<f64>().map_err(|_| bad(entry))?;
                     m.degraded_links.push((cls.to_string(), f));
                 }
@@ -275,6 +277,28 @@ mod tests {
                 "{bad}: {e}"
             );
         }
+    }
+
+    /// Scale-out fault classes parse; `nic` degrades any topology's NIC
+    /// rate, while the switch-tier classes hard-error on flat fabrics
+    /// (there is no tier to degrade) at topology-derivation time.
+    #[test]
+    fn scaleout_fault_classes_parse_and_gate_on_fabric() {
+        let m = FaultModel::parse("nic:0.5, t1:0.5, t2:0.25").unwrap();
+        assert_eq!(
+            m.degraded_links,
+            vec![
+                ("nic".to_string(), 0.5),
+                ("t1".to_string(), 0.5),
+                ("t2".to_string(), 0.25)
+            ]
+        );
+        let topo = Topology::a100(2);
+        let nic_only = FaultModel::parse("nic:0.5").unwrap();
+        let d = nic_only.degraded_topology(&topo).unwrap();
+        assert!((d.ib_nic_bw - topo.ib_nic_bw * 0.5).abs() < 1.0);
+        let e = m.degraded_topology(&topo).unwrap_err().to_string();
+        assert!(e.contains("flat topology"), "{e}");
     }
 
     #[test]

@@ -47,6 +47,11 @@ pub struct ResourceTable {
     pcie_down0: usize,
     nic_out0: usize,
     nic_in0: usize,
+    /// Scale-out switch tiers (fabric lowering): leaf (`t1/p{pod}s{s}`)
+    /// and spine (`t2/s{s}`) blocks. Both empty on flat topologies, so
+    /// every flat route stays bit-identical to the pre-fabric table.
+    t1_0: usize,
+    t2_0: usize,
 }
 
 /// A flow's static routing information, materialized from the interned
@@ -112,6 +117,26 @@ impl ResourceTable {
                 names.push(format!("nic_in/n{node}k{k}"));
             }
         }
+        // Scale-out switch tiers, present only when the topology was
+        // lowered from a composed fabric: each leaf (t1) switch is shared
+        // by the whole pod, each spine (t2) switch by the whole fabric.
+        let t1_0 = caps.len();
+        let mut t2_0 = t1_0;
+        if let Some(so) = &topo.scaleout {
+            for p in 0..so.pods {
+                for s in 0..so.switches_t1 {
+                    caps.push(so.t1_bw * ib);
+                    names.push(format!("t1/p{p}s{s}"));
+                }
+            }
+            t2_0 = caps.len();
+            if so.tiers >= 2 {
+                for s in 0..so.switches_t2 {
+                    caps.push(so.t2_bw * ib);
+                    names.push(format!("t2/s{s}"));
+                }
+            }
+        }
         ResourceTable {
             caps,
             names,
@@ -128,6 +153,8 @@ impl ResourceTable {
             pcie_down0,
             nic_out0,
             nic_in0,
+            t1_0,
+            t2_0,
         }
     }
 
@@ -170,16 +197,50 @@ impl ResourceTable {
                 let d_sw = topo.pcie_switch_of(dst);
                 let s_nic = topo.nic_of(src);
                 let d_nic = topo.nic_of(dst);
-                (
-                    vec![
-                        self.pcie_up0 + sn * self.switches_per_node + s_sw,
-                        self.nic_out0 + sn * topo.nics_per_node + s_nic,
-                        self.nic_in0 + dn * topo.nics_per_node + d_nic,
-                        self.pcie_down0 + dn * self.switches_per_node + d_sw,
-                    ],
-                    tb_cap.min(topo.ib_conn_bw * proto.ib_eff()),
-                    proto.ib_latency(),
-                )
+                let mut res = vec![
+                    self.pcie_up0 + sn * self.switches_per_node + s_sw,
+                    self.nic_out0 + sn * topo.nics_per_node + s_nic,
+                ];
+                let mut alpha = proto.ib_latency();
+                if let Some(so) = &topo.scaleout {
+                    let (sp, dp) = (topo.pod_of(src), topo.pod_of(dst));
+                    if sp == dp {
+                        // Pod-internal: one leaf-switch traversal. The
+                        // switch choice is a deterministic spread over the
+                        // leaf tier so concurrent pairs share fairly.
+                        if so.switches_t1 > 0 {
+                            res.push(
+                                self.t1_0
+                                    + sp * so.switches_t1
+                                    + (s_nic + d_nic) % so.switches_t1,
+                            );
+                            alpha += so.t1_lat;
+                        }
+                    } else {
+                        // Cross-pod: source leaf → spine → destination
+                        // leaf. The spine hop is where the fat-tree taper
+                        // (oversubscription) bites.
+                        if so.switches_t1 > 0 {
+                            res.push(
+                                self.t1_0 + sp * so.switches_t1 + s_nic % so.switches_t1,
+                            );
+                            alpha += so.t1_lat;
+                        }
+                        if so.tiers >= 2 && so.switches_t2 > 0 {
+                            res.push(self.t2_0 + (sn + dn) % so.switches_t2);
+                            alpha += so.t2_lat;
+                        }
+                        if so.switches_t1 > 0 {
+                            res.push(
+                                self.t1_0 + dp * so.switches_t1 + d_nic % so.switches_t1,
+                            );
+                            alpha += so.t1_lat;
+                        }
+                    }
+                }
+                res.push(self.nic_in0 + dn * topo.nics_per_node + d_nic);
+                res.push(self.pcie_down0 + dn * self.switches_per_node + d_sw);
+                (res, tb_cap.min(topo.ib_conn_bw * proto.ib_eff()), alpha)
             }
         };
         let id = self.route_cap.len();
@@ -275,6 +336,53 @@ mod tests {
         let r2 = rt.route(&topo, 3, 0);
         assert_eq!(rt.caps.len(), before + 1);
         assert_eq!(r.resources[1], r2.resources[1]);
+    }
+
+    #[test]
+    fn flat_topologies_gain_no_tier_resources() {
+        let topo = Topology::a100(2);
+        let rt = ResourceTable::new(&topo, Protocol::Simple);
+        assert!(
+            rt.names.iter().all(|n| !n.starts_with("t1/") && !n.starts_with("t2/")),
+            "flat tables must stay bit-identical to the pre-fabric inventory"
+        );
+    }
+
+    #[test]
+    fn scaleout_tiers_add_switch_resources_and_route_hops() {
+        use crate::topology::ScaleOut;
+        let mut topo = Topology::a100(4);
+        topo.scaleout = Some(ScaleOut {
+            pods: 2,
+            nodes_per_pod: 2,
+            tiers: 2,
+            switches_t1: 2,
+            switches_t2: 2,
+            t1_bw: 100e9,
+            t2_bw: 50e9,
+            t1_lat: 1e-6,
+            t2_lat: 2e-6,
+        });
+        let mut rt = ResourceTable::new(&topo, Protocol::Simple);
+        let t1s = rt.names.iter().filter(|n| n.starts_with("t1/")).count();
+        let t2s = rt.names.iter().filter(|n| n.starts_with("t2/")).count();
+        assert_eq!(t1s, 2 * 2, "pods x switches_t1 leaf resources");
+        assert_eq!(t2s, 2, "switches_t2 spine resources");
+        // Same-pod cross-node (node 0 → node 1, both pod 0): exactly one
+        // leaf switch joins the flat 4-hop IB route; no spine.
+        let same = rt.route(&topo, 3, 8 + 6);
+        // Cross-pod (node 0 → node 2): source leaf + spine + dest leaf.
+        let cross = rt.route(&topo, 3, 16 + 6);
+        let count = |r: &super::Route, pfx: &str| {
+            r.resources.iter().filter(|&&i| rt.names[i].starts_with(pfx)).count()
+        };
+        assert_eq!(same.resources.len(), 5);
+        assert_eq!(count(&same, "t1/"), 1);
+        assert_eq!(count(&same, "t2/"), 0);
+        assert_eq!(cross.resources.len(), 7);
+        assert_eq!(count(&cross, "t1/"), 2);
+        assert_eq!(count(&cross, "t2/"), 1);
+        assert!(cross.alpha > same.alpha, "cross-pod pays spine + extra leaf latency");
     }
 
     #[test]

@@ -126,23 +126,73 @@ pub struct Edge {
 /// from the link class [`Topology::link_type`] assigns the pair. Shm is
 /// doubled: the host bounce is one shared resource per unordered pair, so
 /// even a lone flow effectively shares it with the reverse direction.
+/// Cross-pod IB pairs on a composed fabric additionally pay the spine's
+/// oversubscription: the taper is aggregate injection over aggregate
+/// tier-2 capacity, so a lone cross-pod flow is priced as if the spine
+/// were that much slower — steering the router toward in-pod relays.
 pub fn edge_cost(topo: &Topology, a: usize, b: usize) -> f64 {
     match topo.link_type(a, b) {
         LinkType::NvLink => 1.0 / topo.tb_bw,
         LinkType::Shm => 2.0 / topo.shm_bw,
-        LinkType::Ib => 1.0 / topo.ib_conn_bw,
+        LinkType::Ib => {
+            let mut c = 1.0 / topo.ib_conn_bw;
+            if !topo.same_pod(a, b) {
+                c *= cross_pod_penalty(topo);
+            }
+            c
+        }
     }
 }
 
-/// Every directed rank pair with its base cost — the complete graph the
-/// router searches, priced from the topology's link inventory rather than
-/// any hard-coded fabric shape.
+/// Spine oversubscription factor (≥ 1) of a composed fabric: fabric
+/// injection bandwidth over aggregate tier-2 capacity. Exactly 1.0 on
+/// flat topologies and untapered spines, so flat-preset edge costs are
+/// untouched.
+fn cross_pod_penalty(topo: &Topology) -> f64 {
+    let so = match &topo.scaleout {
+        Some(so) if so.tiers >= 2 && so.switches_t2 > 0 => so,
+        _ => return 1.0,
+    };
+    let inject =
+        (so.pods * so.nodes_per_pod * topo.nics_per_node) as f64 * topo.ib_nic_bw;
+    let spine = so.switches_t2 as f64 * so.t2_bw;
+    (inject / spine).max(1.0)
+}
+
+/// Every directed rank pair the router may use, with base costs — priced
+/// from the topology's link inventory rather than any hard-coded fabric
+/// shape. On flat (single-pod) topologies this is the complete directed
+/// graph. On a composed multi-pod fabric the complete graph is quadratic
+/// in pods × nodes × gpus, so the inventory is restricted to the edges a
+/// pod-staged schedule can use: all intra-node pairs, gpu-aligned pairs
+/// inside a pod, and gpu+node-aligned pairs across pods — the same
+/// hierarchy the [`crate::planner::hier`] programs route over.
 pub fn candidate_edges(topo: &Topology) -> Vec<Edge> {
     let r = topo.num_ranks();
-    let mut out = Vec::with_capacity(r * (r - 1));
+    if topo.pods() <= 1 {
+        let mut out = Vec::with_capacity(r * (r - 1));
+        for src in 0..r {
+            for dst in 0..r {
+                if src != dst {
+                    out.push(Edge { src, dst, cost: edge_cost(topo, src, dst) });
+                }
+            }
+        }
+        return out;
+    }
+    let mut out = Vec::new();
     for src in 0..r {
         for dst in 0..r {
-            if src != dst {
+            if src == dst {
+                continue;
+            }
+            let aligned_gpu = topo.gpu_of(src) == topo.gpu_of(dst);
+            let keep = topo.same_node(src, dst)
+                || (topo.same_pod(src, dst) && aligned_gpu)
+                || (aligned_gpu
+                    && topo.node_of(src) % topo.nodes_per_pod()
+                        == topo.node_of(dst) % topo.nodes_per_pod());
+            if keep {
                 out.push(Edge { src, dst, cost: edge_cost(topo, src, dst) });
             }
         }
@@ -195,5 +245,35 @@ mod tests {
         let two = crate::topology::Topology::asym(2);
         let ib = edge_cost(&two, 0, 9);
         assert!((ib - 1.0 / two.ib_conn_bw).abs() < 1e-18);
+    }
+
+    /// Pod-aware inventory: multi-pod fabrics restrict the candidate set
+    /// to the hierarchy's edges and surcharge cross-pod IB by the spine
+    /// taper; flat presets keep the complete graph at unchanged prices.
+    #[test]
+    fn multi_pod_fabrics_restrict_and_surcharge_edges() {
+        let fabric = crate::fabric::Fabric::parse("a100x2/pods:2/tiers:2/gpus:2").unwrap();
+        let topo = fabric.lower();
+        let r = topo.num_ranks();
+        let edges = candidate_edges(&topo);
+        assert!(edges.len() < r * (r - 1), "restricted below the complete graph");
+        // Intra-node and gpu-aligned pairs survive; a cross-pod pair with
+        // mismatched gpu index does not.
+        assert!(edges.iter().any(|e| e.src == 0 && e.dst == 1), "intra-node kept");
+        assert!(edges.iter().any(|e| e.src == 0 && e.dst == 2), "in-pod aligned kept");
+        assert!(edges.iter().any(|e| e.src == 0 && e.dst == 4), "cross-pod aligned kept");
+        assert!(
+            !edges.iter().any(|e| e.src == 0 && e.dst == 7),
+            "cross-pod unaligned dropped"
+        );
+        // The spine taper (default 2:1) surcharges cross-pod edges only.
+        let in_pod = edge_cost(&topo, 0, 2);
+        let cross_pod = edge_cost(&topo, 0, 4);
+        assert!((in_pod - 1.0 / topo.ib_conn_bw).abs() < 1e-18);
+        assert!(
+            (cross_pod - 2.0 / topo.ib_conn_bw).abs() < 1e-18,
+            "{cross_pod} vs {}",
+            2.0 / topo.ib_conn_bw
+        );
     }
 }

@@ -26,6 +26,33 @@ pub enum LinkType {
     Ib,
 }
 
+/// Multi-tier fat-tree scale-out attached to a [`Topology`] by the
+/// `fabric` algebra ([`crate::fabric::Fabric::lower`]). When present, the
+/// flat `nodes` are grouped into `pods` of `nodes_per_pod` and IB routes
+/// additionally cross tier-1 (in-pod leaf) and, with `tiers == 2`, tier-2
+/// (cross-pod spine) switch resources — shared bandwidth with latency, so
+/// `sim::simulate` prices the hierarchy with no engine changes. `None`
+/// (every flat preset) keeps the resource model bit-identical to before
+/// the fabric subsystem existed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScaleOut {
+    pub pods: usize,
+    pub nodes_per_pod: usize,
+    /// Fat-tree tiers: 1 = leaf switches only (single pod), 2 = leaf +
+    /// spine (cross-pod traffic crosses both).
+    pub tiers: usize,
+    /// Tier-1 (leaf) switches per pod.
+    pub switches_t1: usize,
+    /// Tier-2 (spine) switches in the whole fabric (`tiers == 2`).
+    pub switches_t2: usize,
+    /// Per-switch capacity, bytes/s per direction.
+    pub t1_bw: f64,
+    pub t2_bw: f64,
+    /// Per-traversal latency (switch hop + link), seconds.
+    pub t1_lat: f64,
+    pub t2_lat: f64,
+}
+
 /// A cluster topology: `nodes` × `gpus_per_node` ranks plus link capacities.
 #[derive(Clone, Debug)]
 pub struct Topology {
@@ -57,6 +84,10 @@ pub struct Topology {
     /// channels are needed to saturate a NIC. Limits the AllToNext
     /// baseline's lone send (§6.4).
     pub ib_conn_bw: f64,
+    /// Multi-tier scale-out attached by [`crate::fabric`]. `None` for the
+    /// flat presets: the sim resource table is then bit-identical to the
+    /// pre-fabric model.
+    pub scaleout: Option<ScaleOut>,
 }
 
 impl Topology {
@@ -76,6 +107,7 @@ impl Topology {
             pcie_switch_bw: 50.0e9,       // 2 NICs behind each switch
             tb_bw: 23.0e9,                // measured single-tb copy rate
             ib_conn_bw: 6.0e9,            // single QP + proxy channel
+            scaleout: None,
         }
     }
 
@@ -95,6 +127,7 @@ impl Topology {
             pcie_switch_bw: 12.5e9,
             tb_bw: 20.0e9,
             ib_conn_bw: 5.0e9,
+            scaleout: None,
         }
     }
 
@@ -123,6 +156,7 @@ impl Topology {
             pcie_switch_bw: 64.0e9,       // PCIe Gen4 switch, per direction
             tb_bw: 24.0e9,
             ib_conn_bw: 7.0e9,
+            scaleout: None,
         }
     }
 
@@ -148,6 +182,7 @@ impl Topology {
             pcie_switch_bw: 20.0e9,
             tb_bw: 20.0e9,
             ib_conn_bw: 4.0e9,
+            scaleout: None,
         }
     }
 
@@ -181,6 +216,25 @@ impl Topology {
     /// PCIe switch index (within the node) of rank `r`.
     pub fn pcie_switch_of(&self, r: Rank) -> usize {
         self.gpu_of(r) / self.gpus_per_pcie_switch
+    }
+
+    /// Number of pods. Flat topologies (no scale-out) are one big pod.
+    pub fn pods(&self) -> usize {
+        self.scaleout.as_ref().map(|s| s.pods).unwrap_or(1)
+    }
+
+    /// Nodes per pod (`nodes` when flat).
+    pub fn nodes_per_pod(&self) -> usize {
+        self.scaleout.as_ref().map(|s| s.nodes_per_pod).unwrap_or(self.nodes)
+    }
+
+    /// Pod index of rank `r` (0 on flat topologies).
+    pub fn pod_of(&self, r: Rank) -> usize {
+        self.node_of(r) / self.nodes_per_pod()
+    }
+
+    pub fn same_pod(&self, a: Rank, b: Rank) -> bool {
+        self.pod_of(a) == self.pod_of(b)
     }
 
     /// Whether two intra-node GPUs have a direct p2p path (§4.2 connection
@@ -221,15 +275,30 @@ impl Topology {
         self.nvlink_gpu_bw * r / (2.0 * (r - 1.0))
     }
 
-    /// Link classes accepted by [`Topology::degrade`].
+    /// Flat link classes accepted by [`Topology::degrade`] on every
+    /// topology. Kept separate from [`Topology::SCALEOUT_CLASSES`]: the
+    /// flat-preset property sweep iterates exactly these.
     pub const LINK_CLASSES: [&'static str; 4] = ["nvlink", "shm", "ib", "pcie"];
+
+    /// Scale-out link classes: `nic` works on any topology (it scales the
+    /// per-NIC rate without touching the per-connection QP cap); `t1`/`t2`
+    /// require a tiered scale-out and hard-error on flat fabrics.
+    pub const SCALEOUT_CLASSES: [&'static str; 3] = ["nic", "t1", "t2"];
+
+    /// Every class [`Topology::degrade`] accepts, flat classes first (the
+    /// joined string is quoted in CLI/fault-parse errors).
+    pub const DEGRADE_CLASSES: [&'static str; 7] =
+        ["nvlink", "shm", "ib", "pcie", "nic", "t1", "t2"];
 
     /// Derived topology with one link class running at `factor` of its
     /// healthy bandwidth (`0 < factor ≤ 1`) — the fault model the Planner
     /// prices when a link is flapping or renegotiated down. The derived
     /// topology is renamed (`{name}!{link}x{factor}`), so tuned tables
     /// captured on the healthy fabric refuse to load into it: plans tuned
-    /// on one link inventory don't transfer to a degraded one.
+    /// on one link inventory don't transfer to a degraded one. Repeated
+    /// degradation of the same class *merges* factors into one name tag
+    /// (`!ibx0.25` twice → `!ibx0.0625`), keeping PlanCache/TunedTable
+    /// keys stable under re-degradation instead of growing without bound.
     pub fn degrade(&self, link: &str, factor: f64) -> Result<Topology> {
         if !(factor > 0.0 && factor <= 1.0) {
             return Err(Gc3Error::Invalid(format!(
@@ -245,16 +314,68 @@ impl Topology {
                 t.ib_conn_bw *= factor;
             }
             "pcie" => t.pcie_switch_bw *= factor,
+            "nic" => t.ib_nic_bw *= factor,
+            "t1" | "t2" => match t.scaleout.as_mut() {
+                Some(so) if link == "t1" => so.t1_bw *= factor,
+                Some(so) if so.tiers >= 2 => so.t2_bw *= factor,
+                Some(_) => {
+                    return Err(Gc3Error::Invalid(format!(
+                        "cannot degrade '{link}' on '{}': the fabric has no tier-2 \
+                         spine (tiers < 2)",
+                        self.name
+                    )))
+                }
+                None => {
+                    return Err(Gc3Error::Invalid(format!(
+                        "cannot degrade '{link}' on flat topology '{}': switch tiers \
+                         exist only on fabrics with scale-out (see `gc3 topo --fabric`)",
+                        self.name
+                    )))
+                }
+            },
             _ => {
                 return Err(Gc3Error::Invalid(format!(
                     "unknown link class '{link}' (accepted: {})",
-                    Self::LINK_CLASSES.join(", ")
+                    Self::DEGRADE_CLASSES.join(", ")
                 )))
             }
         }
-        t.name = format!("{}!{link}x{factor}", self.name);
+        t.name = merged_degrade_name(&self.name, link, factor);
         Ok(t)
     }
+}
+
+/// Derived-topology name with per-class factor merging: `base!tag!tag…`
+/// where re-degrading a class already tagged multiplies into the existing
+/// `{class}x{factor}` tag instead of appending another. Unrecognized tags
+/// (e.g. `effx0.5` from the fault model) pass through untouched.
+fn merged_degrade_name(name: &str, link: &str, factor: f64) -> String {
+    let mut parts = name.split('!');
+    let base = parts.next().unwrap_or(name);
+    let mut tags: Vec<String> = Vec::new();
+    let mut merged = false;
+    for tag in parts {
+        let prev = tag
+            .strip_prefix(link)
+            .and_then(|r| r.strip_prefix('x'))
+            .and_then(|r| r.parse::<f64>().ok());
+        match prev {
+            Some(p) if !merged => {
+                tags.push(format!("{link}x{}", p * factor));
+                merged = true;
+            }
+            _ => tags.push(tag.to_string()),
+        }
+    }
+    if !merged {
+        tags.push(format!("{link}x{factor}"));
+    }
+    let mut out = base.to_string();
+    for tag in tags {
+        out.push('!');
+        out.push_str(&tag);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -360,6 +481,95 @@ mod tests {
         let same = t.degrade("ib", 1.0).unwrap();
         assert_eq!(same.ib_nic_bw, t.ib_nic_bw);
         assert_ne!(same.name, t.name);
+    }
+
+    fn tiny_scaleout() -> ScaleOut {
+        ScaleOut {
+            pods: 2,
+            nodes_per_pod: 2,
+            tiers: 2,
+            switches_t1: 2,
+            switches_t2: 2,
+            t1_bw: 100.0e9,
+            t2_bw: 50.0e9,
+            t1_lat: 1.0e-6,
+            t2_lat: 2.0e-6,
+        }
+    }
+
+    #[test]
+    fn flat_topologies_are_one_pod() {
+        let t = Topology::a100(4);
+        assert_eq!(t.pods(), 1);
+        assert_eq!(t.nodes_per_pod(), 4);
+        assert_eq!(t.pod_of(31), 0);
+        assert!(t.same_pod(0, 31));
+    }
+
+    #[test]
+    fn pod_index_math_with_scaleout() {
+        let mut t = Topology::a100(4);
+        t.scaleout = Some(tiny_scaleout());
+        assert_eq!(t.pods(), 2);
+        assert_eq!(t.nodes_per_pod(), 2);
+        assert_eq!(t.pod_of(0), 0);
+        assert_eq!(t.pod_of(15), 0, "node 1 is still pod 0");
+        assert_eq!(t.pod_of(16), 1, "node 2 starts pod 1");
+        assert!(t.same_pod(8, 15));
+        assert!(!t.same_pod(15, 16));
+    }
+
+    /// The satellite bugfix: re-degrading the same link class must merge
+    /// factors into one name tag, not grow the name on every call —
+    /// PlanCache/TunedTable keys derive from the name.
+    #[test]
+    fn repeated_degradation_merges_name_tags() {
+        let t = Topology::a100(2);
+        let once = t.degrade("ib", 0.5).unwrap();
+        let twice = once.degrade("ib", 0.5).unwrap();
+        assert_eq!(twice.name, "a100x2!ibx0.25");
+        assert!((twice.ib_nic_bw - t.ib_nic_bw * 0.25).abs() < 1.0);
+        // Idempotent length: a third round still has exactly one ib tag.
+        let thrice = twice.degrade("ib", 0.5).unwrap();
+        assert_eq!(thrice.name, "a100x2!ibx0.125");
+        assert_eq!(thrice.name.matches("ib").count(), 1);
+        // Other classes still append their own tag, order preserved...
+        let mixed = twice.degrade("pcie", 0.5).unwrap();
+        assert_eq!(mixed.name, "a100x2!ibx0.25!pciex0.5");
+        // ...and merging works on an interior tag too.
+        let again = mixed.degrade("ib", 0.5).unwrap();
+        assert_eq!(again.name, "a100x2!ibx0.125!pciex0.5");
+        // Foreign tags (fault-model eff) pass through untouched.
+        assert_eq!(
+            merged_degrade_name("a100x2!effx0.9!ibx0.5", "ib", 0.5),
+            "a100x2!effx0.9!ibx0.25"
+        );
+    }
+
+    #[test]
+    fn nic_degrades_everywhere_but_tiers_need_scaleout() {
+        let t = Topology::a100(2);
+        let d = t.degrade("nic", 0.5).unwrap();
+        assert_eq!(d.name, "a100x2!nicx0.5");
+        assert!((d.ib_nic_bw - t.ib_nic_bw * 0.5).abs() < 1.0);
+        assert_eq!(d.ib_conn_bw, t.ib_conn_bw, "QP cap is not the NIC");
+        for cls in ["t1", "t2"] {
+            let e = t.degrade(cls, 0.5).unwrap_err().to_string();
+            assert!(e.contains("flat topology"), "{cls}: {e}");
+        }
+        let mut tiered = Topology::a100(4);
+        tiered.scaleout = Some(tiny_scaleout());
+        let d1 = tiered.degrade("t1", 0.5).unwrap();
+        let so = d1.scaleout.as_ref().unwrap();
+        assert!((so.t1_bw - 50.0e9).abs() < 1.0);
+        assert_eq!(so.t2_bw, 50.0e9, "t2 untouched");
+        let d2 = tiered.degrade("t2", 0.25).unwrap();
+        assert!((d2.scaleout.as_ref().unwrap().t2_bw - 12.5e9).abs() < 1.0);
+        // t2 on a 1-tier fabric is a hard error naming the reason.
+        let mut leaf_only = tiered.clone();
+        leaf_only.scaleout.as_mut().unwrap().tiers = 1;
+        let e = leaf_only.degrade("t2", 0.5).unwrap_err().to_string();
+        assert!(e.contains("no tier-2"), "{e}");
     }
 
     #[test]

@@ -437,6 +437,123 @@ fn histogram_quantile_bounds_exact_percentile() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fabric layer: the index algebra round-trips on random shapes, the
+// degenerate product reproduces the flat presets, and scale-out
+// degradation never moves an output byte.
+// ---------------------------------------------------------------------------
+
+/// `rank_of ∘ (pod_of, node_in_pod_of, gpu_of) = id` on random fabric
+/// shapes, the fabric and its lowered topology agree on every index
+/// function, and `nic_of` stays inside the node's NIC inventory.
+#[test]
+fn fabric_index_algebra_round_trips_on_random_shapes() {
+    use gc3::fabric::Fabric;
+
+    let mut rng = Rng::new(0xFAB_12C);
+    for trial in 0..60 {
+        let preset = *rng.choose(&["a100", "ndv2", "ndv4", "asym"]);
+        let nodes = rng.range(1, 5);
+        let pods = rng.range(1, 5);
+        let gpus = rng.range(1, 9);
+        let nics = rng.range(1, 9);
+        let spec =
+            format!("{preset}x{nodes}/pods:{pods}/tiers:2/gpus:{gpus}/nics:{nics}");
+        let f = Fabric::parse(&spec).unwrap_or_else(|e| panic!("trial {trial}: {e}"));
+        assert_eq!(f.ranks(), pods * nodes * gpus, "{spec}");
+        let topo = f.lower();
+        assert_eq!(topo.num_ranks(), f.ranks(), "{spec}");
+        for _ in 0..50 {
+            let r = rng.below(f.ranks());
+            let (p, n, g) = (f.pod_of(r), f.node_in_pod_of(r), f.gpu_of(r));
+            assert!(p < f.pods() && n < f.nodes_per_pod() && g < f.gpus_per_node());
+            assert_eq!(f.rank_of(p, n, g), r, "{spec}: rank {r}");
+            assert!(f.nic_of(r) < f.nics_per_node(), "{spec}: rank {r}");
+            assert_eq!(f.pod_of(r), topo.pod_of(r), "{spec}: rank {r}");
+            assert_eq!(f.node_of(r), topo.node_of(r), "{spec}: rank {r}");
+            assert_eq!(f.gpu_of(r), topo.gpu_of(r), "{spec}: rank {r}");
+            assert_eq!(f.nic_of(r), topo.nic_of(r), "{spec}: rank {r}");
+        }
+    }
+}
+
+/// Golden parity, end to end: a fabric with no scale-out keys lowers to
+/// the flat preset so exactly that a compiled plan simulates to the
+/// bit-identical time on both — tuned tables and cached plans transfer.
+#[test]
+fn one_pod_fabric_lowering_is_sim_bit_identical_to_flat_preset() {
+    use gc3::fabric::Fabric;
+    use gc3::planner::Planner;
+    use gc3::sim::simulate;
+    use gc3::topology::Topology;
+    use gc3::tune::Collective;
+
+    const SIZE: u64 = 1024 * 1024;
+    for (spec, flat) in [
+        ("a100x2", Topology::a100(2)),
+        ("ndv2x2", Topology::ndv2(2)),
+        ("ndv4x2", Topology::ndv4(2)),
+        ("asymx2", Topology::asym(2)),
+    ] {
+        let lowered = Fabric::parse(spec).unwrap().lower();
+        assert_eq!(lowered.name, flat.name, "{spec}");
+        let plan = Planner::new(flat.clone()).plan(Collective::AllReduce, SIZE).unwrap();
+        let on_flat = simulate(&plan.ef, &flat, SIZE).unwrap();
+        let on_lowered = simulate(&plan.ef, &lowered, SIZE).unwrap();
+        assert_eq!(
+            on_flat.time.to_bits(),
+            on_lowered.time.to_bits(),
+            "{spec}: lowered fabric prices differently from the flat preset"
+        );
+        assert_eq!(on_flat.algbw.to_bits(), on_lowered.algbw.to_bits(), "{spec}");
+    }
+}
+
+/// Satellite pin: under a single-NIC degradation on a composed fabric the
+/// replanned (pod-staged) plan simulates no slower than the naive plan
+/// and its executed output bytes are identical — switch-tier and NIC
+/// faults may move the dispatch, never the answer.
+#[test]
+fn single_nic_degradation_preserves_bytes_on_composed_fabric() {
+    use gc3::fabric::Fabric;
+    use gc3::planner::Planner;
+    use gc3::sim::FaultModel;
+    use gc3::tune::Collective;
+
+    const SIZE: u64 = 2 * 1024 * 1024; // inside the allreduce dispatch window
+    let topo = Fabric::parse("a100x2/pods:2/tiers:2/gpus:2").unwrap().lower();
+    let healthy = Planner::new(topo.clone()).plan(Collective::AllReduce, SIZE).unwrap();
+    for cls in ["nic", "t1", "t2"] {
+        let model = FaultModel {
+            degraded_links: vec![(cls.to_string(), 0.5)],
+            ..FaultModel::default()
+        };
+        let mut planner = Planner::new(topo.clone());
+        let r = planner
+            .replan_degraded(&model, Collective::AllReduce, SIZE)
+            .unwrap_or_else(|e| panic!("{cls}: replan: {e}"));
+        assert!(
+            r.time <= r.naive_time * (1.0 + 1e-9),
+            "{cls}: replanned {} s slower than naive {} s",
+            r.time,
+            r.naive_time
+        );
+        assert!(
+            r.degraded_topo.contains(&format!("{cls}x0.5")),
+            "{cls}: degraded fabric name '{}' lacks the degradation tag",
+            r.degraded_topo
+        );
+        let total = lcm(lcm(healthy.ef.in_chunks, r.plan.ef.in_chunks), 4);
+        let h = flat_output_bits(&healthy.ef, total);
+        let d = flat_output_bits(&r.plan.ef, total);
+        assert_eq!(
+            h, d,
+            "{cls}: replanned EF '{}' diverged from healthy EF '{}'",
+            r.plan.ef.name, healthy.ef.name
+        );
+    }
+}
+
 /// The generator's determinism contract: same seed, same programs.
 #[test]
 fn generator_is_deterministic() {
