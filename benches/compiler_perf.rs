@@ -3,16 +3,17 @@
 //! fast the discrete-event engine retires simulation events — the §Perf
 //! numbers tracked in EXPERIMENTS.md.
 //!
-//! Emits `BENCH_compiler_perf.json` (schema v8: per-scenario compile ms,
+//! Emits `BENCH_compiler_perf.json` (schema v9: per-scenario compile ms,
 //! simulate ms, events/s, the optimized-vs-reference head-to-head, the
 //! autotuner's tuned-vs-default rows — EXPERIMENTS.md §TUNE, the `exec[]`
 //! executor-throughput rows — §EXEC, the `serve[]` serving-layer rows
 //! — §SERVE, the `faults[]` degradation-sweep rows — §FAULTS, reported,
 //! not gated, the `synth[]` sketch-synthesis rows — §SYNTH, gated:
-//! ≥ 1 verified synthesized win, and the `hier[]` staged-vs-flat rows on
-//! composed fabrics — §SCALE, gated: staged beats flat on every fabric)
-//! plus the tuned table itself as `TUNED_bench_allreduce.json`; CI
-//! archives both as artifacts.
+//! ≥ 1 verified synthesized win, the `hier[]` staged-vs-flat rows on
+//! composed fabrics — §SCALE, gated: staged beats flat on every fabric,
+//! and the `obs[]` trace-analysis rows — §OBS, gated: every trace yields
+//! a non-empty attribution) plus the tuned table itself as
+//! `TUNED_bench_allreduce.json`; CI archives both as artifacts.
 //!
 //! Run: `cargo bench --bench compiler_perf`
 //! Skip the slow reference-engine head-to-head: set `GC3_BENCH_FAST=1`
@@ -67,6 +68,9 @@ fn main() {
     println!("== Hierarchical fabrics (staged vs flat allreduce, incl. 1024-rank 2-tier)");
     let hier_rows = perf::hier_suite().expect("hier suite");
     print!("{}", perf::render_hier(&hier_rows));
+    println!("== Trace analysis (critical path + latency attribution over served traces)");
+    let obs_rows = perf::obs_suite(4).expect("obs suite");
+    print!("{}", perf::render_obs(&obs_rows));
     let json = perf::to_json(
         &cases,
         h2h.as_ref(),
@@ -76,6 +80,7 @@ fn main() {
         &fault_rows,
         &synth_rows,
         &hier_rows,
+        &obs_rows,
     );
     let path = "BENCH_compiler_perf.json";
     std::fs::write(path, json.to_string()).expect("write BENCH_compiler_perf.json");
@@ -125,6 +130,23 @@ fn main() {
         );
     }
     println!("hier gate passed: staged beats flat on every composed fabric");
+    // Gate: attribution must cover every request and the per-component
+    // fractions must sum to 1 (the sum-to-wall invariant) — both are
+    // machine-independent, so enforce them wherever the bench runs.
+    for r in &obs_rows {
+        assert!(
+            r.requests > 0,
+            "obs suite attributed no requests on {}: {r:?}",
+            r.trace
+        );
+        let sum = r.frac_queue + r.frac_compile + r.frac_exec + r.frac_backoff + r.frac_other;
+        assert!(
+            (sum - 1.0).abs() < 1e-6,
+            "attribution fractions on {} sum to {sum}, not 1",
+            r.trace
+        );
+    }
+    println!("obs gate passed: full attribution with fractions summing to wall");
     if let Some(h) = &h2h {
         // Hard gate: a speedup ratio is machine-independent, so enforce it
         // here where CI runs the bench (EXPERIMENTS.md §Perf).

@@ -208,7 +208,7 @@ pub fn exec_suite(threads: usize) -> Result<Vec<ExecRow>> {
 }
 
 /// One serving-layer measurement row (EXPERIMENTS.md §SERVE; the `serve[]`
-/// array of `BENCH_compiler_perf.json`, schema v8): throughput and
+/// array of `BENCH_compiler_perf.json`, schema v9): throughput and
 /// nearest-rank latency percentiles for one trace mix through [`Service`],
 /// plus the coalescing win against the same trace served one launch per
 /// request.
@@ -302,7 +302,7 @@ pub fn serve_suite(threads: usize) -> Result<Vec<ServeRow>> {
 }
 
 /// One fault-injection measurement row (EXPERIMENTS.md §FAULTS; the
-/// `faults[]` array of `BENCH_compiler_perf.json`, schema v8 — reported,
+/// `faults[]` array of `BENCH_compiler_perf.json`, schema v9 — reported,
 /// not gated): a single-link degradation priced three ways — the healthy
 /// plan on the healthy fabric, the same (naive) plan on the degraded
 /// fabric, and [`Planner::replan_degraded`]'s choice on the degraded
@@ -361,7 +361,7 @@ pub fn faults_suite() -> Result<Vec<FaultRow>> {
 }
 
 /// One synthesis measurement row (EXPERIMENTS.md §SYNTH; the `synth[]`
-/// array of `BENCH_compiler_perf.json`, schema v8): the best library plan
+/// array of `BENCH_compiler_perf.json`, schema v9): the best library plan
 /// vs the best sketch-synthesized candidate at one size, plus the search
 /// cost that bought the comparison.
 #[derive(Clone, Debug)]
@@ -425,7 +425,7 @@ pub fn synth_suite() -> Result<Vec<SynthRow>> {
 }
 
 /// One hierarchical-planning measurement row (EXPERIMENTS.md §SCALE; the
-/// `hier[]` array of `BENCH_compiler_perf.json`, schema v8): the planner's
+/// `hier[]` array of `BENCH_compiler_perf.json`, schema v9): the planner's
 /// pod-staged AllReduce vs the flat library hierarchical program, both
 /// priced on the same composed multi-pod fabric.
 #[derive(Clone, Debug)]
@@ -505,6 +505,108 @@ pub fn hier_case(spec: &str, size: u64, verify: bool) -> Result<HierRow> {
         events_per_sec: staged.events as f64 / sim_wall.max(1e-12),
         verified,
     })
+}
+
+/// One observability measurement row (EXPERIMENTS.md §OBS; the `obs[]`
+/// array of `BENCH_compiler_perf.json`, schema v9): the trace analyzer
+/// timed against a captured serving run — wall-clock of one full
+/// attribution + critical-path pass over the capture, plus the fleet-wide
+/// attribution fractions it derived (which must sum to 1, the
+/// sum-to-wall invariant in fraction form).
+#[derive(Clone, Debug)]
+pub struct ObsRow {
+    /// The trace spec served to produce the analyzed capture.
+    pub trace: String,
+    /// Events in the capture.
+    pub events: usize,
+    /// Request spans attributed.
+    pub requests: usize,
+    /// Best-of-N wall-clock of one `obs::attribute` + `obs::analyze`
+    /// pass over the capture, milliseconds — the benchdiff-gated number.
+    pub analyze_ms: f64,
+    /// Fleet-wide fraction of wall time spent queued.
+    pub frac_queue: f64,
+    /// Fraction spent in plan-cache-miss compiles.
+    pub frac_compile: f64,
+    /// Fraction spent executing (checkout + launch).
+    pub frac_exec: f64,
+    /// Fraction spent in retry backoff.
+    pub frac_backoff: f64,
+    /// The exact residual fraction.
+    pub frac_other: f64,
+}
+
+/// Run the observability scenarios: serve each of the serve suite's trace
+/// mixes through a traced [`Service`], then time the `gc3 analyze` engine
+/// ([`crate::obs::attribute`] + [`crate::obs::analyze`]) over the
+/// captured events. Hard-errors if an analysis comes back empty — a bench
+/// that times analyzing nothing would gate nothing.
+pub fn obs_suite(threads: usize) -> Result<Vec<ObsRow>> {
+    let topo = Topology::a100_single();
+    let mut rows = Vec::new();
+    for spec_s in ["mixed:48:1", "small:48:2"] {
+        let spec = TraceSpec::parse(spec_s)?;
+        let reqs = loadgen::generate(&topo, &spec);
+        let cfg = ServiceConfig {
+            threads,
+            max_batch: 8,
+            max_elems: 512,
+            ..ServiceConfig::default()
+        };
+        let mut svc = Service::new(topo.clone(), cfg);
+        svc.trace_enable();
+        svc.serve(reqs)?;
+        let sink = svc.take_trace().expect("tracing was enabled");
+        let events = sink.events();
+        let t = best_of(3, || (crate::obs::attribute(events), crate::obs::analyze(events)));
+        let rep = crate::obs::attribute(events);
+        let crit = crate::obs::analyze(events);
+        if rep.requests.is_empty() || crit.spans == 0 {
+            return Err(Gc3Error::Invalid(format!(
+                "obs suite: empty analysis for {spec_s} \
+                 ({} requests, {} spans)",
+                rep.requests.len(),
+                crit.spans
+            )));
+        }
+        let f = rep.fractions();
+        rows.push(ObsRow {
+            trace: spec_s.to_string(),
+            events: events.len(),
+            requests: rep.requests.len(),
+            analyze_ms: t * 1e3,
+            frac_queue: f[0],
+            frac_compile: f[1],
+            frac_exec: f[2],
+            frac_backoff: f[3],
+            frac_other: f[4],
+        });
+    }
+    Ok(rows)
+}
+
+/// Human-readable rendering of the observability rows.
+pub fn render_obs(rows: &[ObsRow]) -> String {
+    let mut out = format!(
+        "{:<14} {:>8} {:>9} {:>12} {:>8} {:>9} {:>7} {:>9} {:>7}\n",
+        "trace", "events", "requests", "analyze ms", "queue", "compile", "exec", "backoff",
+        "other"
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<14} {:>8} {:>9} {:>12.3} {:>7.1}% {:>8.1}% {:>6.1}% {:>8.1}% {:>6.1}%\n",
+            r.trace,
+            r.events,
+            r.requests,
+            r.analyze_ms,
+            r.frac_queue * 100.0,
+            r.frac_compile * 100.0,
+            r.frac_exec * 100.0,
+            r.frac_backoff * 100.0,
+            r.frac_other * 100.0
+        ));
+    }
+    out
 }
 
 /// Human-readable rendering of the hierarchical-planning rows.
@@ -729,10 +831,11 @@ pub fn to_json(
     faults: &[FaultRow],
     synth: &[SynthRow],
     hier: &[HierRow],
+    obs: &[ObsRow],
 ) -> Json {
     let mut root = Json::obj();
     root.set("bench", Json::Str("compiler_perf".into()));
-    root.set("schema_version", Json::Num(8.0));
+    root.set("schema_version", Json::Num(9.0));
     let rows: Vec<Json> = cases
         .iter()
         .map(|c| {
@@ -890,6 +993,25 @@ pub fn to_json(
             })
             .collect();
         root.set("hier", Json::Arr(rows));
+    }
+    if !obs.is_empty() {
+        let rows: Vec<Json> = obs
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("trace", Json::Str(r.trace.clone()));
+                o.set("events", Json::Num(r.events as f64));
+                o.set("requests", Json::Num(r.requests as f64));
+                o.set("analyze_ms", Json::Num(r.analyze_ms));
+                o.set("frac_queue", Json::Num(r.frac_queue));
+                o.set("frac_compile", Json::Num(r.frac_compile));
+                o.set("frac_exec", Json::Num(r.frac_exec));
+                o.set("frac_backoff", Json::Num(r.frac_backoff));
+                o.set("frac_other", Json::Num(r.frac_other));
+                o
+            })
+            .collect();
+        root.set("obs", Json::Arr(rows));
     }
     root
 }
@@ -1050,7 +1172,18 @@ mod tests {
             events_per_sec: 45000.0,
             verified: true,
         }];
-        let j = to_json(&cases, Some(&h), &tuned, &exec, &serve, &faults, &synth, &hier);
+        let obs = vec![ObsRow {
+            trace: "mixed:48:1".into(),
+            events: 260,
+            requests: 48,
+            analyze_ms: 0.9,
+            frac_queue: 0.05,
+            frac_compile: 0.25,
+            frac_exec: 0.6,
+            frac_backoff: 0.0,
+            frac_other: 0.1,
+        }];
+        let j = to_json(&cases, Some(&h), &tuned, &exec, &serve, &faults, &synth, &hier, &obs);
         let s = j.to_string();
         for field in [
             "compile_ms",
@@ -1087,10 +1220,13 @@ mod tests {
             "hier",
             "flat_s",
             "staged_s",
+            "obs",
+            "analyze_ms",
+            "frac_backoff",
         ] {
             assert!(s.contains(field), "missing {field} in {s}");
         }
-        assert_eq!(j.get("schema_version").and_then(|v| v.as_usize()), Some(8));
+        assert_eq!(j.get("schema_version").and_then(|v| v.as_usize()), Some(9));
         let arr = j.get("cases").and_then(|c| c.as_arr()).unwrap();
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("events").and_then(|e| e.as_usize()), Some(42));
@@ -1121,15 +1257,39 @@ mod tests {
         );
         assert_eq!(hr[0].get("ranks").and_then(|e| e.as_usize()), Some(8));
         assert_eq!(hr[0].get("verified"), Some(&Json::Bool(true)));
-        // No tuned/exec/serve/faults/synth/hier rows → no sections (old
-        // consumers keep working).
-        let bare = to_json(&cases, None, &[], &[], &[], &[], &[], &[]);
+        let ob = j.get("obs").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(ob[0].get("trace").and_then(|e| e.as_str()), Some("mixed:48:1"));
+        assert_eq!(ob[0].get("requests").and_then(|e| e.as_usize()), Some(48));
+        assert_eq!(ob[0].get("analyze_ms").and_then(|e| e.as_f64()), Some(0.9));
+        // No tuned/exec/serve/faults/synth/hier/obs rows → no sections
+        // (old consumers keep working).
+        let bare = to_json(&cases, None, &[], &[], &[], &[], &[], &[], &[]);
         assert!(bare.get("tuned_vs_default").is_none());
         assert!(bare.get("exec").is_none());
         assert!(bare.get("serve").is_none());
         assert!(bare.get("faults").is_none());
         assert!(bare.get("synth").is_none());
         assert!(bare.get("hier").is_none());
+        assert!(bare.get("obs").is_none());
+    }
+
+    /// The obs suite end-to-end on its real (CI-sized) scenarios: every
+    /// mix must yield a non-empty attribution whose fleet-wide fractions
+    /// sum to 1 — the sum-to-wall invariant surfaced as the bench row CI
+    /// gates on.
+    #[test]
+    fn obs_suite_attributes_both_mixes() {
+        let rows = obs_suite(2).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.events > 0, "{}", r.trace);
+            assert!(r.requests >= 48, "{}: {} requests attributed", r.trace, r.requests);
+            assert!(r.analyze_ms >= 0.0, "{}", r.trace);
+            let sum =
+                r.frac_queue + r.frac_compile + r.frac_exec + r.frac_backoff + r.frac_other;
+            assert!((sum - 1.0).abs() < 1e-6, "{}: fractions sum to {sum}", r.trace);
+        }
+        print!("{}", render_obs(&rows));
     }
 
     /// The hier suite's small scenario end to end: the staged plan must

@@ -5,7 +5,8 @@
 //! *enforces* it. [`diff`] walks the named rows shared by an old and a
 //! new artifact — compiler cases (`compile_ms`, `events_per_sec`), exec
 //! scenarios (`cooperative_elems_per_sec`, `threaded_elems_per_sec`) and
-//! serve traces (`req_per_sec`, `p99_s`) — normalizes each comparison so
+//! serve traces (`req_per_sec`, `p99_s`), hier fabrics (`compile_ms`,
+//! `events_per_sec`) and obs traces (`analyze_ms`) — normalizes each comparison so
 //! "worse" is positive regardless of the metric's direction, and marks a
 //! row regressed when it worsened by more than the tolerance. The
 //! `gc3 benchdiff <old.json> <new.json>` verb prints the report and exits
@@ -125,6 +126,7 @@ const METRICS: &[MetricSpec] = &[
         metric: "events_per_sec",
         lower_is_better: false,
     },
+    MetricSpec { section: "obs", key_field: "trace", metric: "analyze_ms", lower_is_better: true },
 ];
 
 fn section<'a>(doc: &'a Json, name: &str) -> &'a [Json] {
@@ -266,6 +268,26 @@ mod tests {
         assert!(report.regressions().is_empty());
         assert_eq!(report.missing.len(), 4, "{:?}", report.missing);
         assert!(report.render().contains("warning"));
+    }
+
+    #[test]
+    fn obs_analyze_ms_increase_is_flagged() {
+        let at = |ms: f64| {
+            Json::parse(&format!(
+                r#"{{"obs": [{{"trace": "mixed:48:1", "analyze_ms": {ms},
+                               "requests": 48, "frac_exec": 0.8}}]}}"#
+            ))
+            .unwrap()
+        };
+        let report = diff(&at(1.0), &at(1.5), 0.10).unwrap();
+        let regs = report.regressions();
+        assert_eq!(regs.len(), 1, "{}", report.render());
+        assert_eq!(regs[0].key, "obs[mixed:48:1].analyze_ms");
+        assert!((regs[0].worse - 0.5).abs() < 1e-9);
+        // Same artifact: compared, not regressed.
+        let same = diff(&at(1.0), &at(1.0), 0.10).unwrap();
+        assert_eq!(same.rows.len(), 1);
+        assert!(same.regressions().is_empty());
     }
 
     #[test]

@@ -20,6 +20,9 @@ const LAT_BUCKETS: usize = LAT_BOUNDS_US.len() + 1;
 #[derive(Clone, Debug, Default)]
 pub struct LatencyHistogram {
     counts: [u64; LAT_BUCKETS],
+    /// Sum of every valid sample (µs); lets the Prometheus exposition emit
+    /// the conventional `_sum` series alongside `_bucket`/`_count`.
+    sum_us: f64,
     /// Samples rejected by [`LatencyHistogram::record`]: NaN, negative, or
     /// infinite durations. A NaN used to land in the overflow bucket
     /// (inflating reported p99) and a negative in the first bucket
@@ -43,6 +46,12 @@ impl LatencyHistogram {
             .position(|&bound| us <= bound)
             .unwrap_or(LAT_BOUNDS_US.len());
         self.counts[idx] += 1;
+        self.sum_us += us;
+    }
+
+    /// Sum of every valid sample, in microseconds.
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
     }
 
     /// Samples recorded.
@@ -53,6 +62,18 @@ impl LatencyHistogram {
     /// Per-bucket counts ([`LAT_BOUNDS_US`] order, overflow last).
     pub fn counts(&self) -> &[u64] {
         &self.counts
+    }
+
+    /// Fold `other`'s samples into `self`. Bucket boundaries are fixed
+    /// ([`LAT_BOUNDS_US`]), so merging is exact: per-bucket counts and
+    /// invalid-sample counts add. This is how per-tenant histograms roll
+    /// up into fleet-wide ones (and how sharded services will aggregate).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *mine += theirs;
+        }
+        self.sum_us += other.sum_us;
+        self.invalid_samples += other.invalid_samples;
     }
 
     /// Upper bound (µs) of the bucket holding quantile `q` (in `[0, 1]`);
@@ -120,6 +141,21 @@ pub struct ServeMetrics {
     pub replans: u64,
     /// Submit-to-completion latency of every served request.
     pub latency: LatencyHistogram,
+    /// Per-tenant submit-to-completion latency, keyed by tenant name.
+    /// Same samples as [`ServeMetrics::latency`] (fixed buckets, so the
+    /// per-tenant histograms [`LatencyHistogram::merge`] back into the
+    /// global exactly); lets `gc3 analyze` and the Prometheus exposition
+    /// report per-tenant p50/p99 instead of one global histogram.
+    pub per_tenant: std::collections::BTreeMap<String, LatencyHistogram>,
+}
+
+impl ServeMetrics {
+    /// Record one request latency into both the global histogram and the
+    /// tenant's own.
+    pub fn record_latency(&mut self, tenant: &str, seconds: f64) {
+        self.latency.record(seconds);
+        self.per_tenant.entry(tenant.to_string()).or_default().record(seconds);
+    }
 }
 
 impl fmt::Display for ServeMetrics {
@@ -250,6 +286,47 @@ mod tests {
         let mut edge = LatencyHistogram::default();
         edge.record(50e-6);
         assert_eq!(edge.counts()[0], 1);
+    }
+
+    #[test]
+    fn histogram_merge_is_exact_and_per_tenant_rolls_up_to_global() {
+        // Merging two histograms equals recording all samples into one:
+        // fixed buckets make the fold exact, not approximate.
+        let samples_a = [40e-6, 2e-3, 1.0, f64::NAN];
+        let samples_b = [80e-6, 80e-6, 9e-3];
+        let (mut a, mut b, mut all) = (
+            LatencyHistogram::default(),
+            LatencyHistogram::default(),
+            LatencyHistogram::default(),
+        );
+        for s in samples_a {
+            a.record(s);
+            all.record(s);
+        }
+        for s in samples_b {
+            b.record(s);
+            all.record(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.counts(), all.counts());
+        assert!((a.sum_us() - all.sum_us()).abs() <= 1e-9 * all.sum_us().abs());
+        assert_eq!(a.invalid_samples, all.invalid_samples);
+        assert_eq!(a.quantile_us(0.99), all.quantile_us(0.99));
+
+        // ServeMetrics::record_latency feeds both views; merging every
+        // tenant histogram reproduces the global one exactly.
+        let mut sm = ServeMetrics::default();
+        sm.record_latency("tenant-a", 40e-6);
+        sm.record_latency("tenant-a", 2e-3);
+        sm.record_latency("tenant-b", 9e-3);
+        assert_eq!(sm.per_tenant.len(), 2);
+        assert_eq!(sm.per_tenant["tenant-a"].total(), 2);
+        assert_eq!(sm.per_tenant["tenant-b"].quantile_us(0.99), Some(10_000.0));
+        let mut rolled = LatencyHistogram::default();
+        for h in sm.per_tenant.values() {
+            rolled.merge(h);
+        }
+        assert_eq!(rolled.counts(), sm.latency.counts());
     }
 
     #[test]

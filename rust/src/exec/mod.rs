@@ -24,7 +24,8 @@ mod reference;
 
 pub use reference::execute_reference;
 pub use session::{
-    Channel, ConnKey, Driver, RankMemory, RankVm, RecvPort, SendPort, Session, SessionFault,
+    Channel, ConnKey, Driver, RankMemory, RankVm, RecvPort, SendPort, Session, SessionCounters,
+    SessionFault,
 };
 
 use crate::core::{BufferId, Gc3Error, Rank, Result, Slot};

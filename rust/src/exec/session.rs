@@ -512,6 +512,27 @@ pub enum Driver {
 /// }
 /// # Ok::<(), gc3::core::Gc3Error>(())
 /// ```
+/// Cumulative launch counters a [`Session`] keeps across its lifetime —
+/// the executor facade's contribution to the unified metrics registry
+/// ([`crate::obs::Registry`], via [`Session::publish_obs`]). Counted
+/// unconditionally (no tracing required): successful launches, failures
+/// by kind, and instructions retired.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionCounters {
+    /// Launches that completed and passed the drain check.
+    pub launches: u64,
+    /// Launches that returned an error (all kinds, including the two
+    /// broken out below).
+    pub launch_failures: u64,
+    /// Instructions retired across all successful launches (every
+    /// instruction of the EF retires on success, on both drivers).
+    pub retired_insts: u64,
+    /// Failures whose deadlock census fired.
+    pub deadlocks: u64,
+    /// Failures that blew an injected sweep budget.
+    pub timeouts: u64,
+}
+
 pub struct Session {
     label: String,
     /// Registered EFs by name — the MSCCL-style dynamic algorithm store.
@@ -539,6 +560,8 @@ pub struct Session {
     /// Instant markers: `(rank, name, us)`; `None` rank = a launch-level
     /// marker (deadlock / timeout) on the synthetic session track.
     trace_marks: Vec<(Option<Rank>, &'static str, f64)>,
+    /// Lifetime launch counters (see [`SessionCounters`]).
+    counters: SessionCounters,
 }
 
 impl Default for Session {
@@ -565,7 +588,58 @@ impl Session {
             trace_base: None,
             trace_spans: Vec::new(),
             trace_marks: Vec::new(),
+            counters: SessionCounters::default(),
         }
+    }
+
+    /// The session's lifetime launch counters.
+    pub fn counters(&self) -> SessionCounters {
+        self.counters
+    }
+
+    /// Publish the session's lifetime counters into the unified metrics
+    /// registry ([`crate::obs`]), labeled by session. Snapshot-style:
+    /// each call overwrites the previous totals, so repeated publishes
+    /// are idempotent.
+    pub fn publish_obs(&self, reg: &mut crate::obs::Registry) {
+        let labels: &[(&str, &str)] = &[("session", self.label.as_str())];
+        let c = self.counters;
+        reg.counter(
+            "gc3_session_launches_total",
+            "Launches that completed and passed the drain check.",
+            labels,
+            c.launches,
+        );
+        reg.counter(
+            "gc3_session_launch_failures_total",
+            "Launches that returned an error (all kinds).",
+            labels,
+            c.launch_failures,
+        );
+        reg.counter(
+            "gc3_session_retired_insts_total",
+            "Instructions retired across all successful launches.",
+            labels,
+            c.retired_insts,
+        );
+        reg.counter(
+            "gc3_session_deadlocks_total",
+            "Failed launches whose deadlock census fired.",
+            labels,
+            c.deadlocks,
+        );
+        reg.counter(
+            "gc3_session_timeouts_total",
+            "Failed launches that blew an injected sweep budget.",
+            labels,
+            c.timeouts,
+        );
+        reg.gauge(
+            "gc3_session_registered_programs",
+            "EFs registered in the session's dynamic algorithm store.",
+            labels,
+            self.programs.len() as f64,
+        );
     }
 
     /// Record a wall-clock timeline for every subsequent launch: one span
@@ -622,6 +696,17 @@ impl Session {
                 _ => "launch-failed",
             };
             self.trace_marks.push((None, kind, base.elapsed().as_secs_f64() * 1e6));
+        }
+    }
+
+    /// Count one failed launch into [`SessionCounters`], classifying the
+    /// broken-out kinds the same way [`Session::trace_mark_failure`] does.
+    fn count_failure(&mut self, e: &Gc3Error) {
+        self.counters.launch_failures += 1;
+        match e {
+            Gc3Error::Deadlock(_) => self.counters.deadlocks += 1,
+            Gc3Error::Exec(m) if m.contains("sweep budget") => self.counters.timeouts += 1,
+            _ => {}
         }
     }
 
@@ -741,10 +826,13 @@ impl Session {
                     self.flush_channels();
                 }
                 self.trace_mark_failure(&e);
+                self.count_failure(&e);
                 return Err(e);
             }
         }
         self.drain_check()?;
+        self.counters.launches += 1;
+        self.counters.retired_insts += ef.num_insts() as u64;
         Ok(stats)
     }
 
@@ -807,9 +895,12 @@ impl Session {
                 self.flush_channels();
             }
             self.trace_mark_failure(&err);
+            self.count_failure(&err);
             return Err(err);
         }
         self.drain_check()?;
+        self.counters.launches += 1;
+        self.counters.retired_insts += ef.num_insts() as u64;
         Ok(stats)
     }
 

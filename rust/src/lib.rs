@@ -156,7 +156,16 @@
 //!   fault markers on both drivers), and
 //!   [`serve::Service::trace_enable`] (queue-depth counters plus per-tenant
 //!   wave/request/retry spans) — behind `--trace-out <file.json>`, loadable
-//!   in `ui.perfetto.dev`.
+//!   in `ui.perfetto.dev`. [`trace::TraceSink::merge`] combines captures
+//!   from different layers into one timeline.
+//! * [`obs`] — unified observability over everything above: the
+//!   snapshot-able [`obs::Registry`] each facade publishes its counters
+//!   into (`publish_obs` on [`planner::Planner`], [`exec::Session`] and
+//!   [`serve::Service`]), Prometheus text exposition ([`obs::expo`],
+//!   behind `gc3 serve --metrics-out`), and trace-driven analysis —
+//!   critical path + per-resource occupancy ([`obs::critical`]) and
+//!   per-request latency attribution ([`obs::attrib`]) — behind
+//!   `gc3 analyze <TRACE.json>`.
 
 pub mod util;
 pub mod core;
@@ -181,6 +190,7 @@ pub mod coordinator;
 pub mod train;
 pub mod bench;
 pub mod trace;
+pub mod obs;
 
 pub use crate::compiler::Pipeline;
 pub use crate::core::{BufferId, ChanId, Rank, Slot, SlotRange};

@@ -16,6 +16,8 @@
 //! gc3 plan      [--collective C] [--size S] [--tuned TABLE.json] [--fabric SPEC]
 //! gc3 topo      --fabric SPEC [--show]       inspect a composed fabric
 //! gc3 serve     --trace MIX[:N[:SEED]] [--sessions S] [--threads T]
+//!               [--metrics-out FILE.prom] [--metrics-every N]
+//! gc3 analyze   <TRACE.json> [--top K]       bottleneck table from a trace
 //! ```
 
 use gc3::collectives::{self, Library};
@@ -24,8 +26,9 @@ use gc3::core::{Gc3Error, Result};
 use gc3::ef::EfProgram;
 use gc3::exec::{self, verify, Memory, NativeReducer, Session};
 use gc3::fabric::Fabric;
+use gc3::obs;
 use gc3::planner::Planner;
-use gc3::serve::{loadgen, FaultSpec, Service, ServiceConfig, TraceSpec};
+use gc3::serve::{loadgen, CollectiveKind, FaultSpec, Service, ServiceConfig, TraceSpec};
 use gc3::sim::{simulate, simulate_traced, FaultModel, Protocol};
 use gc3::synth::{synthesize, SynthOpts};
 use gc3::topology::Topology;
@@ -34,6 +37,17 @@ use gc3::train::{train, TrainOpts};
 use gc3::tune::{self, Collective, TunedTable};
 use gc3::util::cli::Args;
 use gc3::{bench, util};
+
+/// Snapshot every facade's counters into a fresh [`obs::Registry`] and
+/// write the Prometheus text exposition to `path`; returns the series
+/// count (the serve verb's `--metrics-out` / `--metrics-every` writer).
+fn write_prom(svc: &Service, path: &str) -> Result<usize> {
+    let mut reg = obs::Registry::new();
+    svc.publish_obs(&mut reg);
+    std::fs::write(path, obs::expo::render(&reg))
+        .map_err(|e| Gc3Error::Invalid(format!("metrics write {path}: {e}")))?;
+    Ok(reg.len())
+}
 
 fn topo_from(args: &Args) -> Topology {
     let nodes = args.usize("nodes", 1);
@@ -508,6 +522,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 println!("installed faults '{faults}' (serving on {})", svc.topo().name);
             }
             let reqs = loadgen::generate(svc.topo(), &spec);
+            // Remember one representative standard collective so --trace-out
+            // can fold a simulated flow timeline of it into the service
+            // capture (the merged view: serving story + wire story).
+            let rep = reqs.iter().find_map(|r| match &r.collective {
+                CollectiveKind::Std(c) => Some((*c, r.size)),
+                CollectiveKind::Custom(_) => None,
+            });
             println!(
                 "serving trace '{}' ({} requests) on {} ({} ranks), {} worker thread(s)",
                 spec.mix,
@@ -516,8 +537,29 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 svc.topo().num_ranks(),
                 threads
             );
+            let metrics_out = args.opt("metrics-out").map(str::to_string);
+            let metrics_every = args.usize("metrics-every", 0);
             let t0 = std::time::Instant::now();
-            let (responses, bounced) = svc.serve(reqs)?;
+            let (responses, bounced) = match metrics_out.as_deref() {
+                // Chunked serving: rewrite the Prometheus snapshot after
+                // every N requests so a scraper watching the file sees the
+                // counters move while the trace drains.
+                Some(path) if metrics_every > 0 => {
+                    let mut responses = Vec::new();
+                    let mut bounced = 0usize;
+                    let mut rest = reqs;
+                    while !rest.is_empty() {
+                        let tail = rest.split_off(rest.len().min(metrics_every));
+                        let (r, b) = svc.serve(rest)?;
+                        responses.extend(r);
+                        bounced += b;
+                        write_prom(&svc, path)?;
+                        rest = tail;
+                    }
+                    (responses, bounced)
+                }
+                _ => svc.serve(reqs)?,
+            };
             let wall = t0.elapsed().as_secs_f64();
             let mut lat: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
             lat.sort_by(|a, b| a.total_cmp(b));
@@ -552,12 +594,56 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 svc.pool().depth()
             );
             println!("{}", svc.metrics());
+            if let Some(path) = metrics_out.as_deref() {
+                let series = write_prom(&svc, path)?;
+                println!("wrote metrics {path} ({series} series)");
+            }
             if let Some(path) = args.opt("trace-out") {
-                if let Some(sink) = svc.take_trace() {
+                if let Some(mut sink) = svc.take_trace() {
+                    // The merged view: fold a simulated flow timeline of one
+                    // representative served collective into the service
+                    // capture, so a single Perfetto file carries both the
+                    // wave/tenant/retry story and what a plan does on the
+                    // wire (pids collision-shifted by TraceSink::merge).
+                    if let Some((coll, size)) = rep {
+                        let topo = svc.topo().clone();
+                        if let Ok(plan) = svc.planner().plan(coll, size) {
+                            let mut sim_sink = TraceSink::new();
+                            if simulate_traced(&plan.ef, &topo, size, Some(&mut sim_sink))
+                                .is_ok()
+                            {
+                                sink.merge(sim_sink);
+                            }
+                        }
+                    }
                     sink.write(path)?;
                     println!("wrote trace {path} ({} spans)", sink.span_count());
                 }
             }
+            Ok(())
+        }
+        "analyze" => {
+            // Trace-driven bottleneck analysis: latency attribution (where
+            // did each served request's wall time go) plus the critical
+            // path / per-resource occupancy of the captured timeline.
+            let path = args.positional.get(1).ok_or_else(|| {
+                Gc3Error::Invalid("usage: gc3 analyze <TRACE.json> [--top K]".to_string())
+            })?;
+            let top = args.usize("top", 8);
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| Gc3Error::Invalid(format!("analyze {path}: {e}")))?;
+            let doc = util::json::Json::parse(&text)
+                .map_err(|e| Gc3Error::Invalid(format!("analyze {path}: bad JSON: {e}")))?;
+            let events = doc.get("traceEvents").and_then(|j| j.as_arr()).ok_or_else(|| {
+                Gc3Error::Invalid(format!(
+                    "analyze {path}: no traceEvents array (not a gc3 --trace-out capture)"
+                ))
+            })?;
+            println!("analyzing {path} ({} events)", events.len());
+            let att = obs::attribute(events);
+            print!("{}", obs::attrib::render(&att, top));
+            let crit = obs::analyze(events);
+            print!("{}", obs::critical::render(&crit, top));
             Ok(())
         }
         "benchdiff" => {
@@ -758,13 +844,24 @@ usage:
                 (nvlink|shm|ib|pcie|nic|t1|t2:<factor>, eff:<f>, jitter:<f>,
                 dead:rN, seed:<n>) with one session fault (wedge:r<rank>,
                 drop:r<src>-r<dst>, timeout:<sweeps>)
-                [--trace-out TRACE.json]
+                [--trace-out TRACE.json] [--metrics-out FILE.prom]
+                [--metrics-every N]
                 drive a deterministic multi-tenant request trace through the
                 serving layer (plan cache + session pool + coalescing) and
                 report req/s, p50/p99 latency, hit rates and serve metrics —
                 under --faults the service replans/retries and counts it;
                 --trace-out dumps queue-depth counters plus per-tenant
-                wave/request/retry spans for ui.perfetto.dev";
+                wave/request/retry spans for ui.perfetto.dev, merged with a
+                simulated flow timeline of one served collective;
+                --metrics-out snapshots every facade's counters as Prometheus
+                text exposition at shutdown (and every N requests with
+                --metrics-every N, for file-watching scrapers)
+  gc3 analyze   <TRACE.json> [--top K]
+                trace-driven bottleneck analysis of any --trace-out capture:
+                per-request latency attribution (queue / compile / exec /
+                backoff / other, fractions sum to wall time) with per-tenant
+                p50/p99, plus the critical path, per-track busy/blocked and
+                full per-resource occupancy of the timeline";
 
 #[cfg(test)]
 mod tests {
@@ -1039,6 +1136,117 @@ mod tests {
         run("serve", &args).unwrap();
         assert_valid_trace(&serve_path);
         std::fs::remove_file(&serve_path).ok();
+    }
+
+    #[test]
+    fn help_mentions_analyze_and_metrics_out() {
+        assert!(HELP.contains("gc3 analyze"), "{HELP}");
+        assert!(HELP.contains("--metrics-out"), "{HELP}");
+        assert!(HELP.contains("--metrics-every"), "{HELP}");
+        assert!(HELP.contains("latency attribution"), "{HELP}");
+    }
+
+    /// `gc3 serve --metrics-out` writes a Prometheus text-format snapshot
+    /// of every facade's counters; `--metrics-every N` rewrites it as the
+    /// trace drains (the shutdown rewrite wins, so the file holds the
+    /// final totals). The line scan doubles as an exposition-format
+    /// smoke: every sample line must split into `name{labels} value`
+    /// with a finite value.
+    #[test]
+    fn serve_metrics_out_writes_prometheus_snapshot() {
+        let path =
+            std::env::temp_dir().join(format!("gc3_metrics_{}.prom", std::process::id()));
+        let p = path.to_str().unwrap().to_string();
+        let args = args_of(&[
+            "serve",
+            "--trace",
+            "small:6:3",
+            "--gpus",
+            "4",
+            "--elems-per-chunk",
+            "8",
+            "--metrics-out",
+            &p,
+            "--metrics-every",
+            "2",
+        ]);
+        run("serve", &args).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("# TYPE gc3_serve_admitted_total counter"), "{text}");
+        assert!(text.contains("# TYPE gc3_serve_latency_us histogram"), "{text}");
+        assert!(text.contains("gc3_serve_admitted_total{topology=\"a100x1\"} 6"), "{text}");
+        assert!(text.contains("gc3_plan_cache_misses_total"), "{text}");
+        assert!(text.contains("gc3_planner_cached_plans"), "{text}");
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (series, value) =
+                line.rsplit_once(' ').unwrap_or_else(|| panic!("bad sample line: {line}"));
+            assert!(series.starts_with("gc3_"), "bad series name in: {line}");
+            assert!(
+                value.parse::<f64>().map(f64::is_finite).unwrap_or(false),
+                "bad value in: {line}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// `gc3 analyze` end to end on a faulted serve capture: the verb runs
+    /// on the written file, the wedge-induced solo retries surface as
+    /// nonzero backoff time in the attribution, and the merged simulated
+    /// flow timeline (folded in by `serve --trace-out`) gives the
+    /// critical-path analyzer resource-stamped spans to rank. Missing
+    /// files, non-trace JSON and a missing path are hard errors.
+    #[test]
+    fn analyze_runs_on_a_faulted_serve_capture() {
+        let path =
+            std::env::temp_dir().join(format!("gc3_analyze_{}.json", std::process::id()));
+        let p = path.to_str().unwrap().to_string();
+        let args = args_of(&[
+            "serve",
+            "--trace",
+            "small:4:1",
+            "--gpus",
+            "4",
+            "--elems-per-chunk",
+            "8",
+            "--faults",
+            "wedge:r1",
+            "--trace-out",
+            &p,
+        ]);
+        run("serve", &args).unwrap();
+        run("analyze", &args_of(&["analyze", &p, "--top", "4"])).unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = util::json::Json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").and_then(|j| j.as_arr()).unwrap();
+        let att = obs::attribute(events);
+        assert!(att.requests.len() >= 4, "every request attributed, got {}", att.requests.len());
+        assert!(
+            att.totals_us[3] > 0.0,
+            "wedge-induced solo retries must surface as backoff time: {:?}",
+            att.totals_us
+        );
+        let crit = obs::analyze(events);
+        assert!(
+            !crit.resources.is_empty(),
+            "the merged sim timeline must carry resource-stamped flow spans"
+        );
+        assert!(obs::critical::render(&crit, 4).contains("hottest resource"));
+
+        let err = run("analyze", &args_of(&["analyze", "/nonexistent/x.json"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("analyze"), "{err}");
+        let bad = std::env::temp_dir().join(format!("gc3_analyze_bad_{}.json", std::process::id()));
+        std::fs::write(&bad, "{\"notATrace\": 1}").unwrap();
+        let err = run("analyze", &args_of(&["analyze", bad.to_str().unwrap()]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("traceEvents"), "{err}");
+        let err = run("analyze", &args_of(&["analyze"])).unwrap_err().to_string();
+        assert!(err.contains("usage"), "{err}");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&bad).ok();
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Latency attribution: where each served request's wall time went.
+//!
+//! The serving tracer ([`crate::serve::Service::trace_enable`]) stamps
+//! every `request`/`retry` span with the components the service actually
+//! measured — `queue_us` (submit → drain start), `compile_us` (plan-cache
+//! miss resolve), `exec_us` (checkout + launch, cumulative across waves
+//! and retries), `backoff_us` (retry-round sleeps) — plus `other_us`, the
+//! exact residual, so **the five components sum to the span's duration by
+//! construction** (pinned to 1e-9 relative by the attribution property
+//! test). [`attribute`] folds those spans into per-request, per-tenant
+//! and fleet-wide decompositions; [`render`] prints the `gc3 analyze`
+//! bottleneck table (e.g. *"73% of wall on asym!shmx0.25 is retry
+//! backoff"*).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Component names, in the order [`RequestAttrib::components_us`] (and
+/// every totals array) uses: queue wait, cache-miss compile, execute,
+/// retry backoff, residual.
+pub const COMPONENTS: [&str; 5] = ["queue", "compile", "exec", "backoff", "other"];
+
+/// One served request's decomposed latency.
+#[derive(Clone, Debug)]
+pub struct RequestAttrib {
+    /// Tenant that submitted the request (the span's track label).
+    pub tenant: String,
+    /// Program served (the span's `program` arg).
+    pub program: String,
+    /// Whether this was a solo retry after a failed wave.
+    pub retried: bool,
+    /// Submit-to-completion wall time (the span's `dur`), µs.
+    pub wall_us: f64,
+    /// The five components in [`COMPONENTS`] order, µs. Sums to
+    /// [`RequestAttrib::wall_us`] within f64 rounding.
+    pub components_us: [f64; 5],
+}
+
+impl RequestAttrib {
+    /// Sum of the five components (µs) — equals `wall_us` within f64
+    /// rounding for traces this crate wrote.
+    pub fn sum_us(&self) -> f64 {
+        self.components_us.iter().sum()
+    }
+}
+
+/// One tenant's aggregate row in the bottleneck table.
+#[derive(Clone, Debug)]
+pub struct TenantRow {
+    /// Tenant name.
+    pub tenant: String,
+    /// Served requests (retries that eventually answered included).
+    pub requests: usize,
+    /// Total wall time across the tenant's requests, µs.
+    pub wall_us: f64,
+    /// Component totals in [`COMPONENTS`] order, µs.
+    pub components_us: [f64; 5],
+    /// Exact median of the tenant's request latencies, µs.
+    pub p50_us: f64,
+    /// Exact 99th percentile of the tenant's request latencies, µs.
+    pub p99_us: f64,
+}
+
+impl TenantRow {
+    /// The tenant's dominant component: `(name, fraction of wall)`.
+    pub fn dominant(&self) -> (&'static str, f64) {
+        dominant_of(&self.components_us, self.wall_us)
+    }
+}
+
+/// Fleet-wide attribution over one serving trace.
+#[derive(Clone, Debug, Default)]
+pub struct AttribReport {
+    /// Serving topology name, from the tracer's `topology` instant marker
+    /// (degraded tags included, e.g. `asym!shmx0.25`); `None` for traces
+    /// recorded before the marker existed.
+    pub topology: Option<String>,
+    /// Every served request, trace order.
+    pub requests: Vec<RequestAttrib>,
+    /// Component totals across all requests, [`COMPONENTS`] order, µs.
+    pub totals_us: [f64; 5],
+    /// Total wall time across all requests, µs.
+    pub wall_us: f64,
+}
+
+/// The dominant component of a totals array: `(name, fraction)`.
+fn dominant_of(components_us: &[f64; 5], wall_us: f64) -> (&'static str, f64) {
+    let (mut best, mut best_v) = (0, f64::NEG_INFINITY);
+    for (i, &v) in components_us.iter().enumerate() {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    (COMPONENTS[best], if wall_us > 0.0 { best_v / wall_us } else { 0.0 })
+}
+
+/// Exact percentile (nearest-rank) of an unsorted sample set, µs.
+fn percentile_us(samples: &mut [f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(f64::total_cmp);
+    let rank = ((q.clamp(0.0, 1.0) * samples.len() as f64).ceil() as usize).max(1);
+    samples[rank - 1]
+}
+
+impl AttribReport {
+    /// Fleet-wide component fractions of total wall, [`COMPONENTS`]
+    /// order. All zeros when no requests were served.
+    pub fn fractions(&self) -> [f64; 5] {
+        if self.wall_us <= 0.0 {
+            return [0.0; 5];
+        }
+        let mut f = [0.0; 5];
+        for (i, &v) in self.totals_us.iter().enumerate() {
+            f[i] = v / self.wall_us;
+        }
+        f
+    }
+
+    /// The component dominating total wall time: `(name, fraction)`.
+    pub fn dominant(&self) -> (&'static str, f64) {
+        dominant_of(&self.totals_us, self.wall_us)
+    }
+
+    /// Per-tenant aggregate rows, sorted by wall time descending.
+    pub fn tenants(&self) -> Vec<TenantRow> {
+        let mut acc: BTreeMap<&str, (usize, f64, [f64; 5], Vec<f64>)> = BTreeMap::new();
+        for r in &self.requests {
+            let e = acc.entry(r.tenant.as_str()).or_insert((0, 0.0, [0.0; 5], Vec::new()));
+            e.0 += 1;
+            e.1 += r.wall_us;
+            for (t, c) in e.2.iter_mut().zip(r.components_us.iter()) {
+                *t += c;
+            }
+            e.3.push(r.wall_us);
+        }
+        let mut rows: Vec<TenantRow> = acc
+            .into_iter()
+            .map(|(tenant, (requests, wall_us, components_us, mut lats))| TenantRow {
+                tenant: tenant.to_string(),
+                requests,
+                wall_us,
+                components_us,
+                p50_us: percentile_us(&mut lats, 0.50),
+                p99_us: percentile_us(&mut lats, 0.99),
+            })
+            .collect();
+        rows.sort_by(|a, b| b.wall_us.total_cmp(&a.wall_us));
+        rows
+    }
+}
+
+/// Decompose every `request`/`retry` span in `events`. Spans missing the
+/// attribution args (traces from before the tracer carried them) fall
+/// back to `other = dur`, so the sum-to-wall invariant holds for them
+/// too. Non-request spans (waves, sim flows) are ignored.
+pub fn attribute(events: &[Json]) -> AttribReport {
+    // Tenant labels: thread_name metadata keyed (pid, tid).
+    let mut tenant_of: BTreeMap<(u64, u64), String> = BTreeMap::new();
+    let mut topology = None;
+    for ev in events {
+        let ph = ev.get("ph").and_then(|p| p.as_str());
+        let name = ev.get("name").and_then(|n| n.as_str());
+        let id = |key: &str| ev.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0).max(0.0) as u64;
+        if ph == Some("M") && name == Some("thread_name") {
+            if let Some(label) =
+                ev.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str())
+            {
+                tenant_of.insert((id("pid"), id("tid")), label.to_string());
+            }
+        }
+        if ph == Some("i") && name == Some("topology") {
+            if let Some(t) = ev.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str())
+            {
+                topology = Some(t.to_string());
+            }
+        }
+    }
+    let mut rep = AttribReport { topology, ..AttribReport::default() };
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) != Some("X") {
+            continue;
+        }
+        let name = ev.get("name").and_then(|n| n.as_str()).unwrap_or("");
+        let retried = match name {
+            "request" => false,
+            "retry" => true,
+            _ => continue,
+        };
+        let num = |key: &str| ev.get(key).and_then(|v| v.as_f64());
+        let wall = num("dur").unwrap_or(0.0).max(0.0);
+        let args = ev.get("args");
+        let arg = |key: &str| args.and_then(|a| a.get(key)).and_then(|v| v.as_f64());
+        let components_us = match (arg("queue_us"), arg("compile_us"), arg("exec_us")) {
+            (Some(q), Some(c), Some(e)) => [
+                q,
+                c,
+                e,
+                arg("backoff_us").unwrap_or(0.0),
+                arg("other_us").unwrap_or(0.0),
+            ],
+            _ => [0.0, 0.0, 0.0, 0.0, wall],
+        };
+        let pid = num("pid").unwrap_or(0.0).max(0.0) as u64;
+        let tid = num("tid").unwrap_or(0.0).max(0.0) as u64;
+        let tenant = tenant_of
+            .get(&(pid, tid))
+            .cloned()
+            .unwrap_or_else(|| format!("tid{tid}"));
+        let program = args
+            .and_then(|a| a.get("program"))
+            .and_then(|p| p.as_str())
+            .unwrap_or("?")
+            .to_string();
+        for (t, c) in rep.totals_us.iter_mut().zip(components_us.iter()) {
+            *t += c;
+        }
+        rep.wall_us += wall;
+        rep.requests.push(RequestAttrib { tenant, program, retried, wall_us: wall, components_us });
+    }
+    rep
+}
+
+/// Render the attribution half of the `gc3 analyze` bottleneck table:
+/// the fleet-wide decomposition plus up to `top` per-tenant rows.
+pub fn render(rep: &AttribReport, top: usize) -> String {
+    let mut out = String::new();
+    if rep.requests.is_empty() {
+        out.push_str("attribution: no request spans in trace\n");
+        return out;
+    }
+    let topo = rep.topology.as_deref().unwrap_or("unknown-topology");
+    let (dom, frac) = rep.dominant();
+    out.push_str(&format!(
+        "attribution: {} request(s) on {topo}, wall {:.1}us — {:.0}% is {dom}\n",
+        rep.requests.len(),
+        rep.wall_us,
+        frac * 100.0
+    ));
+    let fr = rep.fractions();
+    out.push_str("  component   total_us    share\n");
+    for (i, name) in COMPONENTS.iter().enumerate() {
+        out.push_str(&format!(
+            "  {:<9} {:>10.1}   {:>5.1}%{}\n",
+            name,
+            rep.totals_us[i],
+            fr[i] * 100.0,
+            if *name == dom { "   <- dominant" } else { "" }
+        ));
+    }
+    let tenants = rep.tenants();
+    out.push_str(&format!("per-tenant ({} total, by wall time):\n", tenants.len()));
+    for row in tenants.iter().take(top.max(1)) {
+        let (tdom, tfrac) = row.dominant();
+        out.push_str(&format!(
+            "  {:<16} {:>3} req  wall {:>10.1}us  p50 {:>8.1}us  p99 {:>8.1}us  {:.0}% {tdom}\n",
+            row.tenant,
+            row.requests,
+            row.wall_us,
+            row.p50_us,
+            row.p99_us,
+            tfrac * 100.0
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Arg, TraceSink};
+
+    fn request_span(
+        sink: &mut TraceSink,
+        tid: u64,
+        name: &str,
+        ts: f64,
+        dur: f64,
+        comps: [f64; 5],
+    ) {
+        sink.complete(
+            1,
+            tid,
+            name,
+            ts,
+            dur,
+            &[
+                ("program", Arg::Str("gc3_ring".into())),
+                ("queue_us", Arg::Num(comps[0])),
+                ("compile_us", Arg::Num(comps[1])),
+                ("exec_us", Arg::Num(comps[2])),
+                ("backoff_us", Arg::Num(comps[3])),
+                ("other_us", Arg::Num(comps[4])),
+            ],
+        );
+    }
+
+    #[test]
+    fn attribute_sums_components_and_names_topology_and_tenants() {
+        let mut sink = TraceSink::new();
+        sink.name_thread(1, 1, "tenant-a");
+        sink.name_thread(1, 2, "tenant-b");
+        sink.instant(0, 1, "topology", 0.0, &[("name", Arg::Str("asym!shmx0.25".into()))]);
+        request_span(&mut sink, 1, "request", 0.0, 100.0, [10.0, 0.0, 80.0, 0.0, 10.0]);
+        request_span(&mut sink, 2, "retry", 50.0, 400.0, [20.0, 30.0, 50.0, 290.0, 10.0]);
+        let rep = attribute(sink.events());
+        assert_eq!(rep.topology.as_deref(), Some("asym!shmx0.25"));
+        assert_eq!(rep.requests.len(), 2);
+        assert_eq!(rep.wall_us, 500.0);
+        assert_eq!(rep.totals_us, [30.0, 30.0, 130.0, 290.0, 20.0]);
+        // Per-request sums equal wall.
+        for r in &rep.requests {
+            assert!((r.sum_us() - r.wall_us).abs() <= 1e-9 * r.wall_us.max(1.0));
+        }
+        // Backoff dominates the fleet: 290/500.
+        let (dom, frac) = rep.dominant();
+        assert_eq!(dom, "backoff");
+        assert!((frac - 0.58).abs() < 1e-12);
+        // Tenants resolve via metadata; rows sort by wall time.
+        let tenants = rep.tenants();
+        assert_eq!(tenants[0].tenant, "tenant-b");
+        assert!(tenants[0].requests == 1 && tenants[0].p99_us == 400.0);
+        assert_eq!(tenants[1].tenant, "tenant-a");
+        let rendered = render(&rep, 4);
+        assert!(rendered.contains("asym!shmx0.25"), "{rendered}");
+        assert!(rendered.contains("<- dominant"), "{rendered}");
+        assert!(rendered.contains("tenant-b"), "{rendered}");
+    }
+
+    #[test]
+    fn spans_without_attrib_args_fall_back_to_other() {
+        let mut sink = TraceSink::new();
+        sink.complete(1, 1, "request", 0.0, 250.0, &[("program", Arg::Str("p".into()))]);
+        sink.complete(1, 1, "wave", 0.0, 99.0, &[]); // not a request: ignored
+        let rep = attribute(sink.events());
+        assert_eq!(rep.requests.len(), 1);
+        assert_eq!(rep.requests[0].components_us, [0.0, 0.0, 0.0, 0.0, 250.0]);
+        assert_eq!(rep.requests[0].tenant, "tid1", "no metadata: fallback label");
+        assert_eq!(rep.dominant().0, "other");
+    }
+}

@@ -1,0 +1,384 @@
+//! Trace-driven critical-path extraction: which chain of spans bounds a
+//! timeline's completion, and where each track (and each fabric resource)
+//! spent its time.
+//!
+//! [`analyze`] consumes the `traceEvents` of any capture this crate
+//! writes — a simulated collective ([`crate::sim::simulate_traced`]), a
+//! live execution ([`crate::exec::Session::trace_enable`]), or a serving
+//! run ([`crate::serve::Service::trace_enable`]) — and derives:
+//!
+//! * the **critical path**: walking backwards from the latest-ending
+//!   span, repeatedly hopping to the latest-ending span that finished
+//!   before the current one started. The resulting chain is the set of
+//!   spans that bound completion — shorten any one of them and the
+//!   makespan moves;
+//! * per-track **busy vs. blocked** time (busy = union of the track's
+//!   spans; blocked = makespan minus busy), the full un-truncated table
+//!   sorted busiest-first;
+//! * per-resource utilization for sim traces, whose flow spans carry a
+//!   `res` arg naming every fabric resource the flow crossed (so a
+//!   degraded link shows up by name, e.g. `shm/r0r1` at 91%).
+//!
+//! The numbers here are *observed* occupancy over the trace window —
+//! complementary to [`crate::sim::SimReport::utilization`], which prices
+//! bytes against capacity. `gc3 analyze` renders both views.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Tolerance (µs) when deciding whether one span finished before another
+/// started: well under a nanosecond, far below both the simulator's event
+/// granularity and wall-clock timer resolution.
+const EDGE_EPS_US: f64 = 1e-6;
+
+/// One complete (`ph == "X"`) span lifted out of a trace.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Track group (trace `pid`).
+    pub pid: u64,
+    /// Track row (trace `tid`).
+    pub tid: u64,
+    /// Span name (e.g. `send r0->r1 ch0`, `request`, `wave`).
+    pub name: String,
+    /// Start, µs since the trace epoch.
+    pub ts_us: f64,
+    /// Duration, µs.
+    pub dur_us: f64,
+    /// Fabric resources the span crossed (`+`-joined `res` arg of sim
+    /// flow spans; `None` for exec/serve spans).
+    pub res: Option<String>,
+}
+
+impl Span {
+    /// End timestamp, µs since the trace epoch.
+    pub fn end_us(&self) -> f64 {
+        self.ts_us + self.dur_us
+    }
+}
+
+/// One track's share of the timeline.
+#[derive(Clone, Debug)]
+pub struct TrackUse {
+    /// Track group (trace `pid`).
+    pub pid: u64,
+    /// Track row (trace `tid`).
+    pub tid: u64,
+    /// Human label from the trace's `process_name`/`thread_name`
+    /// metadata, e.g. `rank 3/tb0`; falls back to `pid/tid` numbers.
+    pub label: String,
+    /// Time at least one of the track's spans was open (µs, interval
+    /// union — overlapping spans are not double-counted).
+    pub busy_us: f64,
+    /// Makespan minus busy time (µs).
+    pub blocked_us: f64,
+    /// `busy / makespan`, in `[0, 1]`.
+    pub utilization: f64,
+}
+
+/// What [`analyze`] found. All tables are complete — nothing is truncated
+/// here; rendering decides how much to show.
+#[derive(Clone, Debug, Default)]
+pub struct CriticalReport {
+    /// Earliest span start (µs) — the timeline origin.
+    pub t0_us: f64,
+    /// Latest span end minus earliest start (µs).
+    pub makespan_us: f64,
+    /// Total spans examined.
+    pub spans: usize,
+    /// The critical path, chronological order.
+    pub path: Vec<Span>,
+    /// Every track, sorted busiest-first.
+    pub tracks: Vec<TrackUse>,
+    /// Observed busy fraction per named fabric resource (sim traces
+    /// only — from flow spans' `res` args), sorted busiest-first. Empty
+    /// for traces whose spans carry no resource names.
+    pub resources: Vec<(String, f64)>,
+}
+
+impl CriticalReport {
+    /// The busiest track, if any span was seen.
+    pub fn hottest_track(&self) -> Option<&TrackUse> {
+        self.tracks.first()
+    }
+
+    /// The busiest named fabric resource, if the trace carried any.
+    pub fn hottest_resource(&self) -> Option<&(String, f64)> {
+        self.resources.first()
+    }
+}
+
+/// Lift every complete span out of `events`.
+fn collect_spans(events: &[Json]) -> Vec<Span> {
+    let mut spans = Vec::new();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) != Some("X") {
+            continue;
+        }
+        let num = |key: &str| ev.get(key).and_then(|v| v.as_f64());
+        let (Some(ts), Some(dur)) = (num("ts"), num("dur")) else { continue };
+        if !ts.is_finite() || !dur.is_finite() || dur < 0.0 {
+            continue;
+        }
+        spans.push(Span {
+            pid: num("pid").unwrap_or(0.0).max(0.0) as u64,
+            tid: num("tid").unwrap_or(0.0).max(0.0) as u64,
+            name: ev.get("name").and_then(|n| n.as_str()).unwrap_or("?").to_string(),
+            ts_us: ts,
+            dur_us: dur,
+            res: ev
+                .get("args")
+                .and_then(|a| a.get("res"))
+                .and_then(|r| r.as_str())
+                .map(|r| r.to_string()),
+        });
+    }
+    spans
+}
+
+/// Track labels from `process_name`/`thread_name` metadata events.
+fn track_labels(events: &[Json]) -> (BTreeMap<u64, String>, BTreeMap<(u64, u64), String>) {
+    let mut procs = BTreeMap::new();
+    let mut threads = BTreeMap::new();
+    for ev in events {
+        if ev.get("ph").and_then(|p| p.as_str()) != Some("M") {
+            continue;
+        }
+        let Some(label) = ev
+            .get("args")
+            .and_then(|a| a.get("name"))
+            .and_then(|n| n.as_str())
+            .map(|s| s.to_string())
+        else {
+            continue;
+        };
+        let pid = ev.get("pid").and_then(|p| p.as_f64()).unwrap_or(0.0).max(0.0) as u64;
+        match ev.get("name").and_then(|n| n.as_str()) {
+            Some("process_name") => {
+                procs.insert(pid, label);
+            }
+            Some("thread_name") => {
+                let tid = ev.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0).max(0.0) as u64;
+                threads.insert((pid, tid), label);
+            }
+            _ => {}
+        }
+    }
+    (procs, threads)
+}
+
+/// Union length of a set of intervals (µs). Sorts in place.
+fn union_us(iv: &mut Vec<(f64, f64)>) -> f64 {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for &(s, e) in iv.iter() {
+        match cur {
+            Some((cs, ce)) if s <= ce => cur = Some((cs, ce.max(e))),
+            Some((cs, ce)) => {
+                total += ce - cs;
+                cur = Some((s, e));
+            }
+            None => cur = Some((s, e)),
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+/// Walk the critical path backwards from the latest-ending span: at each
+/// step, hop to the latest-ending span that finished by the current
+/// span's start (within [`EDGE_EPS_US`]). Returns the chain in
+/// chronological order.
+fn walk_path(spans: &[Span]) -> Vec<Span> {
+    if spans.is_empty() {
+        return Vec::new();
+    }
+    // Sorted by end time for binary-searchable "latest end <= t" queries.
+    let mut by_end: Vec<&Span> = spans.iter().collect();
+    by_end.sort_by(|a, b| a.end_us().total_cmp(&b.end_us()));
+    let mut path: Vec<Span> = Vec::new();
+    let mut cur: &Span = by_end.last().expect("non-empty");
+    path.push((*cur).clone());
+    loop {
+        let cutoff = cur.ts_us + EDGE_EPS_US;
+        // Last index whose end <= cutoff.
+        let idx = by_end.partition_point(|s| s.end_us() <= cutoff);
+        if idx == 0 {
+            break;
+        }
+        let pred = by_end[idx - 1];
+        // Guard against zero-duration cycles: the predecessor must end
+        // strictly before the current span does.
+        if pred.end_us() + EDGE_EPS_US >= cur.end_us() {
+            break;
+        }
+        path.push(pred.clone());
+        cur = pred;
+    }
+    path.reverse();
+    path
+}
+
+/// Analyze a trace's `traceEvents` (as recorded by
+/// [`crate::trace::TraceSink`], or parsed back from a written file). An
+/// empty or span-free event list yields an empty default report.
+pub fn analyze(events: &[Json]) -> CriticalReport {
+    let spans = collect_spans(events);
+    if spans.is_empty() {
+        return CriticalReport::default();
+    }
+    let t0 = spans.iter().map(|s| s.ts_us).fold(f64::INFINITY, f64::min);
+    let tend = spans.iter().map(|s| s.end_us()).fold(f64::NEG_INFINITY, f64::max);
+    let makespan = (tend - t0).max(0.0);
+
+    // Per-track interval union.
+    let mut per_track: BTreeMap<(u64, u64), Vec<(f64, f64)>> = BTreeMap::new();
+    // Per-resource interval union (sim flow spans only).
+    let mut per_res: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    for s in &spans {
+        per_track.entry((s.pid, s.tid)).or_default().push((s.ts_us, s.end_us()));
+        if let Some(res) = &s.res {
+            for r in res.split('+').filter(|r| !r.is_empty()) {
+                per_res.entry(r.to_string()).or_default().push((s.ts_us, s.end_us()));
+            }
+        }
+    }
+    let (procs, threads) = track_labels(events);
+    let mut tracks: Vec<TrackUse> = per_track
+        .into_iter()
+        .map(|((pid, tid), mut iv)| {
+            let busy = union_us(&mut iv).min(makespan);
+            let proc = procs.get(&pid).cloned().unwrap_or_else(|| format!("pid{pid}"));
+            let thread =
+                threads.get(&(pid, tid)).cloned().unwrap_or_else(|| format!("tid{tid}"));
+            TrackUse {
+                pid,
+                tid,
+                label: format!("{proc}/{thread}"),
+                busy_us: busy,
+                blocked_us: (makespan - busy).max(0.0),
+                utilization: if makespan > 0.0 { busy / makespan } else { 0.0 },
+            }
+        })
+        .collect();
+    tracks.sort_by(|a, b| b.busy_us.total_cmp(&a.busy_us));
+    let mut resources: Vec<(String, f64)> = per_res
+        .into_iter()
+        .map(|(name, mut iv)| {
+            let busy = union_us(&mut iv).min(makespan);
+            (name, if makespan > 0.0 { busy / makespan } else { 0.0 })
+        })
+        .collect();
+    resources.sort_by(|a, b| b.1.total_cmp(&a.1));
+
+    CriticalReport {
+        t0_us: t0,
+        makespan_us: makespan,
+        spans: spans.len(),
+        path: walk_path(&spans),
+        tracks,
+        resources,
+    }
+}
+
+/// Render the report as the `gc3 analyze` bottleneck table: critical
+/// path (up to `top` hops), hottest tracks and hottest resources.
+pub fn render(rep: &CriticalReport, top: usize) -> String {
+    let mut out = String::new();
+    if rep.spans == 0 {
+        out.push_str("critical path: no spans in trace\n");
+        return out;
+    }
+    let top = top.max(1);
+    out.push_str(&format!(
+        "critical path: {} hop(s) over {} spans, makespan {:.1}us\n",
+        rep.path.len(),
+        rep.spans,
+        rep.makespan_us
+    ));
+    for (i, s) in rep.path.iter().rev().take(top).enumerate() {
+        let res = s.res.as_deref().map(|r| format!("  res={r}")).unwrap_or_default();
+        out.push_str(&format!(
+            "  {:>2}. {}  ts={:.1}us dur={:.1}us{res}\n",
+            i + 1,
+            s.name,
+            s.ts_us - rep.t0_us,
+            s.dur_us
+        ));
+    }
+    if rep.path.len() > top {
+        out.push_str(&format!("  ... {} earlier hop(s)\n", rep.path.len() - top));
+    }
+    out.push_str(&format!("tracks ({} total, busiest first):\n", rep.tracks.len()));
+    for t in rep.tracks.iter().take(top) {
+        out.push_str(&format!(
+            "  {:<24} busy {:>6.1}us ({:>5.1}%)  blocked {:>6.1}us\n",
+            t.label,
+            t.busy_us,
+            t.utilization * 100.0,
+            t.blocked_us
+        ));
+    }
+    if !rep.resources.is_empty() {
+        out.push_str(&format!("resources ({} total, busiest first):\n", rep.resources.len()));
+        for (name, frac) in rep.resources.iter().take(top) {
+            out.push_str(&format!("  {:<24} {:>5.1}%\n", name, frac * 100.0));
+        }
+        if let Some((name, frac)) = rep.hottest_resource() {
+            out.push_str(&format!("hottest resource: {name} at {:.0}%\n", frac * 100.0));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Arg, TraceSink};
+
+    fn events(sink: &TraceSink) -> Vec<Json> {
+        sink.events().to_vec()
+    }
+
+    /// A hand-built diamond: a(0..10) -> b(10..30) -> d(40..100), with
+    /// c(10..20) off the path. The walk must pick d, then b (latest end
+    /// <= 40), then a.
+    #[test]
+    fn path_walks_latest_ending_predecessors() {
+        let mut sink = TraceSink::new();
+        sink.name_process(0, "ranks");
+        sink.name_thread(0, 1, "tb0");
+        sink.complete(0, 1, "a", 0.0, 10.0, &[]);
+        sink.complete(0, 2, "b", 10.0, 20.0, &[]);
+        sink.complete(0, 2, "c", 10.0, 10.0, &[]);
+        sink.complete(0, 3, "d", 40.0, 60.0, &[("res", Arg::Str("shm/r0r1".into()))]);
+        let rep = analyze(&events(&sink));
+        assert_eq!(rep.spans, 4);
+        assert_eq!(rep.makespan_us, 100.0);
+        let names: Vec<&str> = rep.path.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["a", "b", "d"], "path is chronological and skips c");
+        // The res arg rides the span into the report.
+        assert_eq!(rep.path[2].res.as_deref(), Some("shm/r0r1"));
+        // Track (0,2) is busy 20us of 100 (b and c overlap on 10..20).
+        let t = rep.tracks.iter().find(|t| (t.pid, t.tid) == (0, 2)).unwrap();
+        assert_eq!(t.busy_us, 20.0);
+        assert_eq!(t.blocked_us, 80.0);
+        // Labels come from metadata where present.
+        let t01 = rep.tracks.iter().find(|t| (t.pid, t.tid) == (0, 1)).unwrap();
+        assert_eq!(t01.label, "ranks/tb0");
+        // The one named resource was open 60us of 100.
+        assert_eq!(rep.resources, vec![("shm/r0r1".to_string(), 0.6)]);
+        let rendered = render(&rep, 8);
+        assert!(rendered.contains("hottest resource: shm/r0r1 at 60%"), "{rendered}");
+    }
+
+    #[test]
+    fn empty_trace_yields_empty_report() {
+        let rep = analyze(&[]);
+        assert_eq!(rep.spans, 0);
+        assert!(rep.path.is_empty() && rep.tracks.is_empty());
+        assert!(render(&rep, 5).contains("no spans"));
+    }
+}

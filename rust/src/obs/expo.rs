@@ -1,0 +1,157 @@
+//! Prometheus text-format exposition of a [`Registry`] snapshot.
+//!
+//! [`render`] produces the plain text-based exposition format (version
+//! 0.0.4): `# HELP` / `# TYPE` headers per family, one
+//! `name{label="value",...} value` line per series, and the conventional
+//! cumulative `_bucket{le="..."}` / `_sum` / `_count` triplet for
+//! histograms. The output is deterministic (families and series render in
+//! sorted order) so snapshots diff cleanly, and dependency-free — a
+//! scraper, `promtool check metrics`, or the CI python smoke can consume
+//! the file written by `gc3 serve --metrics-out` directly.
+
+use crate::coordinator::metrics::LAT_BOUNDS_US;
+use crate::obs::registry::{Family, Labels, MetricKind, MetricValue, Registry};
+use std::fmt::Write as _;
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote and newline must be escaped inside the quoted value.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a label set as `{k="v",...}`; the empty set renders as nothing.
+/// `extra` appends one more pair (used for histogram `le` labels).
+fn label_block(labels: &Labels, extra: Option<(&str, &str)>) -> String {
+    let mut pairs: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        pairs.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+/// Format a float the way the exposition expects: plain decimal, no
+/// exponent surprises for the magnitudes we emit (Rust's shortest
+/// round-trip `Display` satisfies this for finite values).
+fn num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn render_family(out: &mut String, name: &str, fam: &Family) {
+    // HELP text: newlines would break the line-oriented format.
+    let help = fam.help.replace('\\', "\\\\").replace('\n', "\\n");
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {}", fam.kind.as_str());
+    for (labels, value) in &fam.series {
+        match value {
+            MetricValue::Counter(v) => {
+                let _ = writeln!(out, "{name}{} {v}", label_block(labels, None));
+            }
+            MetricValue::Gauge(v) => {
+                let _ = writeln!(out, "{name}{} {}", label_block(labels, None), num(*v));
+            }
+            MetricValue::Histogram(h) => {
+                // Cumulative buckets over the fixed bounds, then +Inf,
+                // then the conventional _sum/_count pair. Invalid samples
+                // never reached the buckets and are excluded throughout.
+                let mut cum = 0u64;
+                for (i, &bound) in LAT_BOUNDS_US.iter().enumerate() {
+                    cum += h.counts()[i];
+                    let le = num(bound);
+                    let _ = writeln!(
+                        out,
+                        "{name}_bucket{} {cum}",
+                        label_block(labels, Some(("le", &le)))
+                    );
+                }
+                let total = h.total();
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{} {total}",
+                    label_block(labels, Some(("le", "+Inf")))
+                );
+                let _ = writeln!(out, "{name}_sum{} {}", label_block(labels, None), num(h.sum_us()));
+                let _ = writeln!(out, "{name}_count{} {total}", label_block(labels, None));
+            }
+        }
+    }
+}
+
+/// Render the whole registry in the Prometheus text exposition format.
+/// Histogram bucket bounds are in microseconds ([`LAT_BOUNDS_US`]), as
+/// are `_sum` values — name histogram families with a `_us` suffix so the
+/// unit is explicit.
+pub fn render(reg: &Registry) -> String {
+    let mut out = String::new();
+    for (name, fam) in reg.families() {
+        render_family(&mut out, name, fam);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::LatencyHistogram;
+
+    #[test]
+    fn renders_counters_gauges_and_escapes_labels() {
+        let mut reg = Registry::new();
+        reg.counter(
+            "gc3_serve_admitted_total",
+            "Requests admitted past backpressure.",
+            &[("topology", "asym!shmx0.25")],
+            42,
+        );
+        reg.gauge("gc3_queue_depth", "Admission queue depth.", &[], 3.0);
+        reg.gauge("gc3_frac", "A fraction.", &[("q", "a\"b\\c")], 0.25);
+        let text = render(&reg);
+        assert!(text.contains("# HELP gc3_serve_admitted_total Requests admitted past backpressure."));
+        assert!(text.contains("# TYPE gc3_serve_admitted_total counter"));
+        assert!(text.contains("gc3_serve_admitted_total{topology=\"asym!shmx0.25\"} 42"));
+        // Label-less series renders with no brace block.
+        assert!(text.contains("\ngc3_queue_depth 3\n"), "{text}");
+        // Quote and backslash are escaped inside label values.
+        assert!(text.contains("q=\"a\\\"b\\\\c\"} 0.25"), "{text}");
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_sum_and_count() {
+        let mut h = LatencyHistogram::default();
+        h.record(40e-6); // le=50 bucket
+        h.record(40e-6);
+        h.record(2e-3); // le=2500 bucket
+        h.record(1.0); // overflow
+        let mut reg = Registry::new();
+        reg.histogram("gc3_latency_us", "Request latency (us).", &[("tenant", "a")], &h);
+        let text = render(&reg);
+        assert!(text.contains("# TYPE gc3_latency_us histogram"));
+        assert!(text.contains("gc3_latency_us_bucket{tenant=\"a\",le=\"50\"} 2"), "{text}");
+        // Buckets are cumulative: le=2500 includes the two le=50 samples.
+        assert!(text.contains("gc3_latency_us_bucket{tenant=\"a\",le=\"2500\"} 3"), "{text}");
+        // +Inf equals _count; the overflow sample appears only there.
+        assert!(text.contains("gc3_latency_us_bucket{tenant=\"a\",le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("gc3_latency_us_count{tenant=\"a\"} 4"), "{text}");
+        // _sum is in microseconds: 40 + 40 + 2000 + 1e6.
+        assert!(text.contains("gc3_latency_us_sum{tenant=\"a\"} 1002080"), "{text}");
+    }
+}

@@ -1,0 +1,34 @@
+//! Unified observability: one metrics registry, Prometheus exposition,
+//! and trace-driven bottleneck analysis.
+//!
+//! The crate's three facades each kept their own counters — the planner
+//! its cache and per-stage compile times, the session its retired
+//! instructions and wedges, the service its queue/admission/retry story.
+//! This module gives them one home and two consumers:
+//!
+//! * **Registry + exposition** ([`registry`], [`expo`]): each facade
+//!   publishes its current totals into an [`registry::Registry`] via its
+//!   `publish_obs` method, and [`expo::render`] emits the whole snapshot
+//!   in the Prometheus text format — written by
+//!   `gc3 serve --metrics-out <file.prom>` at shutdown and every
+//!   `--metrics-every N` requests.
+//! * **Trace analysis** ([`critical`], [`attrib`]): `gc3 analyze
+//!   <TRACE.json>` walks a recorded timeline ([`crate::trace`]) to
+//!   extract the critical path and per-track/per-resource occupancy
+//!   ([`critical::analyze`]) and to decompose each served request's
+//!   latency into queueing / compile / execute / retry-backoff
+//!   components ([`attrib::attribute`]), rendering one bottleneck table.
+//!
+//! Everything here is read-only over the layers below: the registry
+//! snapshots what the facades already count, and the analyzers consume
+//! traces those layers already write — no behavior changes when `obs` is
+//! unused.
+
+pub mod attrib;
+pub mod critical;
+pub mod expo;
+pub mod registry;
+
+pub use attrib::{attribute, AttribReport, RequestAttrib, COMPONENTS};
+pub use critical::{analyze, CriticalReport, TrackUse};
+pub use registry::{MetricKind, MetricValue, Registry};

@@ -1,0 +1,210 @@
+//! The metrics registry: one snapshot-able home for every counter the
+//! three facades used to keep in private structs.
+//!
+//! Before `obs`, the crate had eight sources of metric truth —
+//! `ExecStats`, `ServeMetrics`, `PoolStats`, `CacheStats`,
+//! `CompileStats`, `FusionStats`, `TuneOutcome`, `SimReport` — each with
+//! its own rendering. Those structs remain (they are the working state of
+//! their layers), but each facade now *publishes* into a [`Registry`]
+//! via its `publish_obs` method ([`crate::planner::Planner::publish_obs`],
+//! [`crate::exec::Session::publish_obs`],
+//! [`crate::serve::Service::publish_obs`]), and the registry is the single
+//! surface the Prometheus exposition ([`crate::obs::expo`]) renders.
+//!
+//! Publishing is **snapshot-style**: every call overwrites the series'
+//! value with the facade's current total, so re-publishing is idempotent
+//! and the registry always reflects "now" rather than a sum of publishes.
+
+use crate::coordinator::metrics::LatencyHistogram;
+use std::collections::BTreeMap;
+
+/// What a metric family is, in the Prometheus sense. Determines both the
+/// `# TYPE` line of the exposition and which [`MetricValue`] variant the
+/// family's series hold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonically non-decreasing total (exposition suffix `_total` is
+    /// the caller's naming convention, not enforced here).
+    Counter,
+    /// A point-in-time level that can go up or down.
+    Gauge,
+    /// A fixed-bucket [`LatencyHistogram`].
+    Histogram,
+}
+
+impl MetricKind {
+    /// The `# TYPE` keyword of the exposition format.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One series' value inside a family.
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    /// A counter total.
+    Counter(u64),
+    /// A gauge level.
+    Gauge(f64),
+    /// A histogram snapshot (cloned in at publish time; the fixed buckets
+    /// of [`LatencyHistogram`] make clones cheap and merges exact).
+    Histogram(LatencyHistogram),
+}
+
+/// Sorted `(key, value)` label pairs identifying one series within a
+/// family. Kept sorted so the same label set always maps to the same
+/// series regardless of caller ordering.
+pub type Labels = Vec<(String, String)>;
+
+/// One metric family: a help string, a kind, and its series keyed by
+/// label set.
+#[derive(Clone, Debug)]
+pub struct Family {
+    /// Human-readable description (the exposition's `# HELP` line).
+    pub help: String,
+    /// Family kind (the exposition's `# TYPE` line).
+    pub kind: MetricKind,
+    /// Every published series, keyed by its sorted label pairs.
+    pub series: BTreeMap<Labels, MetricValue>,
+}
+
+/// The registry: metric families keyed by name, in sorted order (so the
+/// exposition output is deterministic).
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    families: BTreeMap<String, Family>,
+}
+
+/// Normalize a caller's label slice into the canonical sorted owned form.
+fn canon(labels: &[(&str, &str)]) -> Labels {
+    let mut v: Labels =
+        labels.iter().map(|(k, val)| (k.to_string(), val.to_string())).collect();
+    v.sort();
+    v
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The family named `name`, created (or re-stamped with `help`/`kind`)
+    /// as needed. Re-publishing a family under a different kind replaces
+    /// the whole family: mixed-kind series cannot be exposed coherently.
+    fn family(&mut self, name: &str, help: &str, kind: MetricKind) -> &mut Family {
+        let fam = self.families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: BTreeMap::new(),
+        });
+        if fam.kind != kind {
+            fam.series.clear();
+            fam.kind = kind;
+        }
+        fam.help = help.to_string();
+        fam
+    }
+
+    /// Publish a counter series: `name{labels} = value`, overwriting any
+    /// previous value for the same label set.
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: u64) {
+        self.family(name, help, MetricKind::Counter)
+            .series
+            .insert(canon(labels), MetricValue::Counter(value));
+    }
+
+    /// Publish a gauge series, overwriting any previous value for the same
+    /// label set. Non-finite values are clamped to 0 (the exposition
+    /// format has no NaN).
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        let v = if value.is_finite() { value } else { 0.0 };
+        self.family(name, help, MetricKind::Gauge)
+            .series
+            .insert(canon(labels), MetricValue::Gauge(v));
+    }
+
+    /// Publish a histogram series (a snapshot clone of `h`), overwriting
+    /// any previous snapshot for the same label set.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        h: &LatencyHistogram,
+    ) {
+        self.family(name, help, MetricKind::Histogram)
+            .series
+            .insert(canon(labels), MetricValue::Histogram(h.clone()));
+    }
+
+    /// The value of `name{labels}` if published.
+    pub fn get(&self, name: &str, labels: &[(&str, &str)]) -> Option<&MetricValue> {
+        self.families.get(name)?.series.get(&canon(labels))
+    }
+
+    /// Every family, sorted by name.
+    pub fn families(&self) -> impl Iterator<Item = (&String, &Family)> {
+        self.families.iter()
+    }
+
+    /// Total series count across every family.
+    pub fn len(&self) -> usize {
+        self.families.values().map(|f| f.series.len()).sum()
+    }
+
+    /// Whether nothing has been published.
+    pub fn is_empty(&self) -> bool {
+        self.families.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_overwrites_and_label_order_is_canonical() {
+        let mut reg = Registry::new();
+        reg.counter("gc3_admitted_total", "Admitted requests.", &[("topology", "a100x2")], 3);
+        reg.counter("gc3_admitted_total", "Admitted requests.", &[("topology", "a100x2")], 7);
+        // Overwrite, not accumulate: publishing is snapshot-style.
+        match reg.get("gc3_admitted_total", &[("topology", "a100x2")]) {
+            Some(MetricValue::Counter(7)) => {}
+            other => panic!("expected Counter(7), got {other:?}"),
+        }
+        assert_eq!(reg.len(), 1);
+        // Label ordering does not mint a second series.
+        reg.gauge("g", "h", &[("b", "2"), ("a", "1")], 1.0);
+        reg.gauge("g", "h", &[("a", "1"), ("b", "2")], 2.0);
+        assert_eq!(reg.len(), 2);
+        match reg.get("g", &[("b", "2"), ("a", "1")]) {
+            Some(MetricValue::Gauge(v)) => assert_eq!(*v, 2.0),
+            other => panic!("expected Gauge(2.0), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn kind_change_replaces_family_and_histograms_snapshot() {
+        let mut reg = Registry::new();
+        reg.counter("m", "as counter", &[], 5);
+        reg.gauge("m", "as gauge", &[("x", "y")], 1.5);
+        // The counter series did not survive the kind change.
+        assert!(reg.get("m", &[]).is_none());
+        assert_eq!(reg.len(), 1);
+
+        let mut h = LatencyHistogram::default();
+        h.record(100e-6);
+        reg.histogram("lat", "latency", &[("tenant", "a")], &h);
+        // Mutating the source after publish does not touch the snapshot.
+        h.record(100e-6);
+        match reg.get("lat", &[("tenant", "a")]) {
+            Some(MetricValue::Histogram(snap)) => assert_eq!(snap.total(), 1),
+            other => panic!("expected Histogram, got {other:?}"),
+        }
+    }
+}

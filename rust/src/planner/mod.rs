@@ -267,6 +267,44 @@ impl Planner {
         self.cache.len()
     }
 
+    /// Publish the planner's state into the unified metrics registry
+    /// ([`crate::obs`]): cached-plan and tuned-table counts, plus
+    /// cumulative per-stage compile wall time aggregated across every
+    /// cached build ([`CompileStats::stage_times`]). Labeled by topology;
+    /// snapshot-style, so repeated publishes overwrite rather than
+    /// accumulate.
+    pub fn publish_obs(&self, reg: &mut crate::obs::Registry) {
+        let topo = self.topo.name.clone();
+        let labels: &[(&str, &str)] = &[("topology", topo.as_str())];
+        reg.gauge(
+            "gc3_planner_cached_plans",
+            "Distinct compiled plans in the planner's dispatch cache.",
+            labels,
+            self.cache.len() as f64,
+        );
+        reg.gauge(
+            "gc3_planner_tuned_tables",
+            "Autotuner tables loaded into the planner.",
+            labels,
+            self.tuned.len() as f64,
+        );
+        let mut per_stage: std::collections::BTreeMap<&'static str, f64> =
+            std::collections::BTreeMap::new();
+        for built in self.cache.values() {
+            for st in &built.stats.stage_times {
+                *per_stage.entry(st.stage).or_insert(0.0) += st.ms;
+            }
+        }
+        for (stage, ms) in per_stage {
+            reg.gauge(
+                "gc3_compile_stage_ms",
+                "Cumulative compile wall time per pipeline stage across cached plans (ms).",
+                &[("topology", topo.as_str()), ("stage", stage)],
+                ms,
+            );
+        }
+    }
+
     /// Register a pre-compiled EF under a custom name, servable by
     /// [`Planner::plan_custom`]. Registered plans live in their own
     /// `custom:` key namespace so they can never alias (or be aliased by)

@@ -320,6 +320,16 @@ impl PlanCache {
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
+
+    /// Cached entry count per collective name — the `collective` label of
+    /// the registry's plan-cache gauge ([`Service::publish_obs`]).
+    pub fn entries_per_collective(&self) -> std::collections::BTreeMap<String, usize> {
+        let mut m = std::collections::BTreeMap::new();
+        for (name, _) in self.slots.keys() {
+            *m.entry(name.clone()).or_insert(0usize) += 1;
+        }
+        m
+    }
 }
 
 /// Elements per chunk a request of `size` bytes executes at: the f32
@@ -349,6 +359,9 @@ struct ServiceTracer {
     sink: TraceSink,
     /// Tenant label → stable row id (first-seen order, starting at 1).
     tenants: HashMap<String, u64>,
+    /// Last topology name stamped into the timeline (re-stamped only on
+    /// change, e.g. a degraded replan mid-run).
+    topo_named: Option<String>,
 }
 
 impl ServiceTracer {
@@ -357,7 +370,7 @@ impl ServiceTracer {
         sink.name_process(TRACE_SERVICE_PID, "service");
         sink.name_thread(TRACE_SERVICE_PID, TRACE_WAVE_TID, "waves");
         sink.name_process(TRACE_TENANTS_PID, "tenants");
-        ServiceTracer { base: Instant::now(), sink, tenants: HashMap::new() }
+        ServiceTracer { base: Instant::now(), sink, tenants: HashMap::new(), topo_named: None }
     }
 
     fn now_us(&self) -> f64 {
@@ -373,6 +386,25 @@ impl ServiceTracer {
         self.tenants.insert(tenant.to_string(), tid);
         self.sink.name_thread(TRACE_TENANTS_PID, tid, tenant);
         tid
+    }
+
+    /// Stamp the serving topology into the timeline (an instant marker on
+    /// the service track) so `gc3 analyze` can name the fabric — degraded
+    /// tags included — without out-of-band context. Re-stamped only when
+    /// the name changes (a degraded replan mid-run).
+    fn topology(&mut self, name: &str) {
+        if self.topo_named.as_deref() == Some(name) {
+            return;
+        }
+        self.topo_named = Some(name.to_string());
+        let ts = self.now_us();
+        self.sink.instant(
+            TRACE_SERVICE_PID,
+            TRACE_WAVE_TID,
+            "topology",
+            ts,
+            &[("name", Arg::Str(name.to_string()))],
+        );
     }
 
     /// One admission-queue-depth counter sample at "now".
@@ -401,7 +433,12 @@ impl ServiceTracer {
     }
 
     /// One served request on its tenant's row: the span covers the whole
-    /// submit-to-completion latency (queue wait included).
+    /// submit-to-completion latency (queue wait included), and its args
+    /// carry the latency attribution [`crate::obs::attrib`] decomposes —
+    /// queue wait, cache-miss compile, execute, retry backoff, and the
+    /// exact residual (`other_us`), so the five components sum to the
+    /// span's `dur` by construction.
+    #[allow(clippy::too_many_arguments)]
     fn request(
         &mut self,
         tenant: &str,
@@ -410,22 +447,35 @@ impl ServiceTracer {
         latency_s: f64,
         batch: usize,
         retried: bool,
+        attrib_s: [f64; 4],
     ) {
         let tid = self.tenant_tid(tenant);
         // `submitted` may predate the epoch (tracing enabled mid-stream);
         // clamp to 0 rather than underflow.
         let start_us =
             submitted.checked_duration_since(self.base).unwrap_or_default().as_secs_f64() * 1e6;
+        let dur_us = (latency_s * 1e6).max(0.0);
+        let [queue_us, compile_us, exec_us, backoff_us] = attrib_s.map(|s| s * 1e6);
+        // Exact residual: scatter, group bookkeeping, other requests'
+        // resolve time. Sums with the four measured components back to
+        // `dur_us` (modulo one f64 rounding), which the attribution
+        // property test pins.
+        let other_us = dur_us - (queue_us + compile_us + exec_us + backoff_us);
         self.sink.complete(
             TRACE_TENANTS_PID,
             tid,
             if retried { "retry" } else { "request" },
             start_us,
-            (latency_s * 1e6).max(0.0),
+            dur_us,
             &[
                 ("program", Arg::Str(program.to_string())),
                 ("batch", Arg::Num(batch as f64)),
                 ("retried", Arg::Bool(retried)),
+                ("queue_us", Arg::Num(queue_us)),
+                ("compile_us", Arg::Num(compile_us)),
+                ("exec_us", Arg::Num(exec_us)),
+                ("backoff_us", Arg::Num(backoff_us)),
+                ("other_us", Arg::Num(other_us)),
             ],
         );
     }
@@ -451,12 +501,33 @@ struct Pending {
 }
 
 /// A pending request with its resolved plan — the unit the dispatch and
-/// retry phases work in.
+/// retry phases work in. Carries the request's measured latency
+/// components as they accrue (queue wait at drain, cache-miss compile at
+/// resolve, execute per wave/retry, backoff per retry round); the
+/// response path hands them to the tracer, which derives the exact
+/// residual.
 struct Resolved {
     p: Pending,
     plan: Arc<Plan>,
     hit: bool,
     elems: usize,
+    /// Submit → drain-start wait, seconds.
+    queue_s: f64,
+    /// Plan-cache resolve time on a miss (0 on a hit), seconds.
+    compile_s: f64,
+    /// Cumulative checkout + launch wall across every wave and retry this
+    /// request rode, seconds.
+    exec_s: f64,
+    /// Cumulative retry-backoff sleep this request sat through, seconds.
+    backoff_s: f64,
+}
+
+impl Resolved {
+    /// The measured components in tracer order: queue, compile, exec,
+    /// backoff.
+    fn attrib_s(&self) -> [f64; 4] {
+        [self.queue_s, self.compile_s, self.exec_s, self.backoff_s]
+    }
 }
 
 /// The response a failed request gets: its error, no output, no backend.
@@ -607,6 +678,110 @@ impl Service {
         self.queue.len()
     }
 
+    /// Publish the whole serving story into the unified metrics registry
+    /// ([`crate::obs`]): the serve counters and latency histograms
+    /// (fleet-wide plus one series per tenant), plan-cache and
+    /// session-pool counters, and the planner's own series
+    /// ([`Planner::publish_obs`]). Every series carries the serving
+    /// topology label — degraded tags included, so a replanned service
+    /// is visible in the exposition. Snapshot-style: each call overwrites
+    /// the previous totals, which is what `gc3 serve --metrics-every`
+    /// leans on to re-render the `.prom` file mid-run.
+    pub fn publish_obs(&self, reg: &mut crate::obs::Registry) {
+        let topo = self.planner.topo().name.clone();
+        let t: &[(&str, &str)] = &[("topology", topo.as_str())];
+        let m = &self.metrics.serve;
+        reg.counter("gc3_serve_admitted_total", "Requests admitted past backpressure.", t, m.admitted);
+        reg.counter(
+            "gc3_serve_rejected_total",
+            "Submissions bounced off the full admission queue.",
+            t,
+            m.rejected,
+        );
+        reg.counter(
+            "gc3_serve_failed_total",
+            "Admitted requests answered with an error response.",
+            t,
+            m.failed,
+        );
+        reg.counter(
+            "gc3_serve_coalesced_total",
+            "Requests that shared a coalesced launch with at least one other.",
+            t,
+            m.coalesced,
+        );
+        reg.counter(
+            "gc3_serve_launches_total",
+            "Launches dispatched (batched or solo).",
+            t,
+            m.batches,
+        );
+        reg.counter(
+            "gc3_serve_retries_total",
+            "Solo retry attempts after failed waves.",
+            t,
+            m.retries,
+        );
+        reg.counter(
+            "gc3_serve_wedged_total",
+            "Wedged sessions retired after failed launches.",
+            t,
+            m.wedged,
+        );
+        reg.counter(
+            "gc3_serve_replans_total",
+            "Times the service replanned onto a degraded topology.",
+            t,
+            m.replans,
+        );
+        reg.counter(
+            "gc3_serve_invalid_latency_samples_total",
+            "Latency samples rejected as NaN, negative, or infinite.",
+            t,
+            m.latency.invalid_samples,
+        );
+        reg.gauge("gc3_serve_queue_depth", "Current admission-queue depth.", t, m.queue_depth as f64);
+        reg.gauge(
+            "gc3_serve_peak_queue_depth",
+            "Deepest the admission queue ever got.",
+            t,
+            m.peak_queue_depth as f64,
+        );
+        const LAT_HELP: &str = "Submit-to-completion request latency (us).";
+        reg.histogram("gc3_serve_latency_us", LAT_HELP, t, &m.latency);
+        for (tenant, h) in &m.per_tenant {
+            reg.histogram(
+                "gc3_serve_latency_us",
+                LAT_HELP,
+                &[("topology", topo.as_str()), ("tenant", tenant.as_str())],
+                h,
+            );
+        }
+        let cs = self.cache.stats();
+        reg.counter("gc3_plan_cache_hits_total", "Plan-cache hits.", t, cs.hits);
+        reg.counter("gc3_plan_cache_misses_total", "Plan-cache misses (planner consulted).", t, cs.misses);
+        reg.counter("gc3_plan_cache_evictions_total", "Plan-cache LRU evictions.", t, cs.evictions);
+        for (collective, n) in self.cache.entries_per_collective() {
+            reg.gauge(
+                "gc3_plan_cache_entries",
+                "Cached plans per collective.",
+                &[("topology", topo.as_str()), ("collective", collective.as_str())],
+                n as f64,
+            );
+        }
+        let ps = self.pool.stats();
+        reg.counter("gc3_pool_spawned_total", "Sessions spawned by the pool.", t, ps.spawned as u64);
+        reg.counter("gc3_pool_reused_total", "Pool checkouts served by a parked session.", t, ps.reused as u64);
+        reg.counter("gc3_pool_evicted_total", "Parked sessions evicted past capacity.", t, ps.evicted as u64);
+        reg.counter(
+            "gc3_pool_dropped_unhealthy_total",
+            "Sessions refused check-in as unhealthy.",
+            t,
+            ps.dropped_unhealthy as u64,
+        );
+        self.planner.publish_obs(reg);
+    }
+
     /// Admit a request, or reject it when the admission queue is full —
     /// the service's backpressure signal. Returns the admission id.
     pub fn submit(&mut self, req: Request) -> Result<u64> {
@@ -645,22 +820,27 @@ impl Service {
     pub fn process(&mut self) -> Result<Vec<Response>> {
         let pending: Vec<Pending> = self.queue.drain(..).collect();
         self.metrics.serve.queue_depth = 0;
+        let topo_name = self.planner.topo().name.clone();
         if let Some(tr) = self.tracer.as_mut() {
             tr.queue(0);
+            tr.topology(&topo_name);
         }
         if pending.is_empty() {
             return Ok(Vec::new());
         }
+        let drain_start = Instant::now();
         let mut responses: Vec<Response> = Vec::new();
         // Resolve phase: every request through the plan cache; failures
         // become error responses immediately.
         let mut order: Vec<(String, String)> = Vec::new();
         let mut groups: HashMap<(String, String), Vec<Resolved>> = HashMap::new();
         for p in pending {
-            let (plan, bucket, hit) =
-                match self.cache.resolve(&mut self.planner, &p.req.collective, p.req.size) {
-                    Ok(resolved) => resolved,
-                    Err(e) => {
+            let resolve_t0 = Instant::now();
+            let resolved = self.cache.resolve(&mut self.planner, &p.req.collective, p.req.size);
+            let resolve_s = resolve_t0.elapsed().as_secs_f64();
+            let (plan, bucket, hit) = match resolved {
+                Ok(resolved) => resolved,
+                Err(e) => {
                         self.metrics.serve.failed += 1;
                         let msg = e.to_string();
                         if let Some(tr) = self.tracer.as_mut() {
@@ -698,7 +878,20 @@ impl Service {
             if !groups.contains_key(&key) {
                 order.push(key.clone());
             }
-            groups.entry(key).or_default().push(Resolved { p, plan, hit, elems });
+            let queue_s = drain_start.saturating_duration_since(p.submitted).as_secs_f64();
+            // Resolve time is attributed as "compile" only on a miss; a
+            // hit's lookup cost stays in the residual.
+            let compile_s = if hit { 0.0 } else { resolve_s };
+            groups.entry(key).or_default().push(Resolved {
+                p,
+                plan,
+                hit,
+                elems,
+                queue_s,
+                compile_s,
+                exec_s: 0.0,
+                backoff_s: 0.0,
+            });
         }
         // Dispatch phase: one coalesced launch per (program, bucket)
         // group, split at max_batch, on a pooled session. Members of a
@@ -711,7 +904,7 @@ impl Service {
             let members = groups.remove(&key).expect("group recorded in order");
             let mut it = members.into_iter();
             loop {
-                let group: Vec<Resolved> = it.by_ref().take(max_batch).collect();
+                let mut group: Vec<Resolved> = it.by_ref().take(max_batch).collect();
                 if group.is_empty() {
                     break;
                 }
@@ -723,6 +916,7 @@ impl Service {
                     .collect();
                 let label = format!("serve:{}", ef.name);
                 let wave_t0 = self.tracer.as_ref().map(|tr| tr.now_us());
+                let exec_t0 = Instant::now();
                 let launched = match self.pool.checkout_or_spawn(&label, std::slice::from_ref(ef))
                 {
                     Ok(mut session) => {
@@ -749,6 +943,12 @@ impl Service {
                     }
                     Err(e) => Err(e),
                 };
+                // Every member rode this wave's checkout + launch wall,
+                // whether it succeeded or is headed for a deferred retry.
+                let wave_exec_s = exec_t0.elapsed().as_secs_f64();
+                for r in &mut group {
+                    r.exec_s += wave_exec_s;
+                }
                 if let Some(t0) = wave_t0 {
                     let tenants: Vec<String> =
                         group.iter().map(|r| r.p.req.tenant.clone()).collect();
@@ -776,7 +976,7 @@ impl Service {
                 let batch_size = group.len();
                 for (r, output) in group.into_iter().zip(result.outputs) {
                     let latency = r.p.submitted.elapsed().as_secs_f64();
-                    self.metrics.serve.latency.record(latency);
+                    self.metrics.serve.record_latency(&r.p.req.tenant, latency);
                     if let Some(tr) = self.tracer.as_mut() {
                         tr.request(
                             &r.p.req.tenant,
@@ -785,6 +985,7 @@ impl Service {
                             latency,
                             batch_size,
                             false,
+                            r.attrib_s(),
                         );
                     }
                     responses.push(Response {
@@ -824,17 +1025,28 @@ impl Service {
                 break;
             }
             if attempt > 0 {
+                let sleep_t0 = Instant::now();
                 std::thread::sleep(Duration::from_micros(RETRY_BASE_US << (attempt - 1)));
+                // Every still-failed request sat through this round's
+                // backoff; measure the sleep actually taken, not the
+                // nominal duration.
+                let slept_s = sleep_t0.elapsed().as_secs_f64();
+                for (r, _) in &mut live {
+                    r.backoff_s += slept_s;
+                }
             }
             let mut still = Vec::new();
-            for (r, _) in live {
+            for (mut r, _) in live {
                 self.metrics.serve.retries += 1;
-                match self.relaunch_solo(&r) {
+                let relaunch_t0 = Instant::now();
+                let relaunched = self.relaunch_solo(&r);
+                r.exec_s += relaunch_t0.elapsed().as_secs_f64();
+                match relaunched {
                     Ok(mut result) => {
                         self.metrics.serve.batches += 1;
                         self.metrics.collective_calls += 1;
                         let latency = r.p.submitted.elapsed().as_secs_f64();
-                        self.metrics.serve.latency.record(latency);
+                        self.metrics.serve.record_latency(&r.p.req.tenant, latency);
                         if let Some(tr) = self.tracer.as_mut() {
                             tr.request(
                                 &r.p.req.tenant,
@@ -843,6 +1055,7 @@ impl Service {
                                 latency,
                                 1,
                                 true,
+                                r.attrib_s(),
                             );
                         }
                         let collective = r.p.req.collective.name().to_string();
@@ -1293,6 +1506,26 @@ mod tests {
             resp_a.latency_s,
             resp_b.latency_s
         );
+        // Per-tenant histograms tell the same story without the raw
+        // responses: both tenants have their own series, and the healthy
+        // tenant's p99 bucket stays flat — at or below the wedged
+        // tenant's, never inflated past it by b's backoff.
+        let per_tenant = &svc.metrics().serve.per_tenant;
+        assert_eq!(per_tenant.len(), 2, "{:?}", per_tenant.keys().collect::<Vec<_>>());
+        assert_eq!(per_tenant["a"].total(), 1);
+        assert_eq!(per_tenant["b"].total(), 1);
+        let (p99_a, p99_b) =
+            (per_tenant["a"].quantile_us(0.99).unwrap(), per_tenant["b"].quantile_us(0.99).unwrap());
+        assert!(
+            p99_a <= p99_b,
+            "healthy tenant p99 bucket ({p99_a}us) inflated past wedged tenant's ({p99_b}us)"
+        );
+        // And they roll up to the global histogram exactly.
+        let mut rolled = crate::coordinator::metrics::LatencyHistogram::default();
+        for h in per_tenant.values() {
+            rolled.merge(h);
+        }
+        assert_eq!(rolled.counts(), svc.metrics().serve.latency.counts());
     }
 
     /// The serving timeline behind `gc3 serve --trace-out`: queue-depth
@@ -1354,5 +1587,67 @@ mod tests {
         assert!(!responses[0].cache_hit, "re-planned on the degraded fabric");
         let err = svc.install_faults(&FaultSpec::parse("dead:r0").unwrap()).unwrap_err();
         assert!(err.to_string().contains("dead rank r0"), "{err}");
+    }
+
+    /// `publish_obs` snapshots the whole serving story into one registry
+    /// — serve counters, per-tenant latency series, cache/pool counters,
+    /// planner gauges — and the Prometheus exposition renders it with the
+    /// topology label on every series. Republishing overwrites (the
+    /// `--metrics-every` contract), never double-counts.
+    #[test]
+    fn publish_obs_snapshots_all_facades_and_republishing_overwrites() {
+        use crate::obs::{expo, MetricValue, Registry};
+        let mut svc = Service::new(topo4(), ServiceConfig::default());
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| req(Collective::AllGather, 64 << 10, 10 + i, ["a", "b"][i as usize % 2]))
+            .collect();
+        svc.serve(reqs).unwrap();
+        let mut reg = Registry::new();
+        svc.publish_obs(&mut reg);
+        let topo = svc.topo().name.clone();
+        let t: &[(&str, &str)] = &[("topology", topo.as_str())];
+        match reg.get("gc3_serve_admitted_total", t) {
+            Some(MetricValue::Counter(3)) => {}
+            other => panic!("admitted snapshot wrong: {other:?}"),
+        }
+        // Per-tenant latency series exist alongside the fleet-wide one.
+        for tenant in ["a", "b"] {
+            assert!(
+                reg.get("gc3_serve_latency_us", &[("topology", topo.as_str()), ("tenant", tenant)])
+                    .is_some(),
+                "missing per-tenant series for {tenant}"
+            );
+        }
+        // Cache and pool counters rode along.
+        match reg.get("gc3_plan_cache_misses_total", t) {
+            Some(MetricValue::Counter(n)) => assert_eq!(*n, svc.cache_stats().misses),
+            other => panic!("cache misses snapshot wrong: {other:?}"),
+        }
+        match reg.get("gc3_pool_spawned_total", t) {
+            Some(MetricValue::Counter(n)) => assert_eq!(*n, svc.pool_stats().spawned as u64),
+            other => panic!("pool spawned snapshot wrong: {other:?}"),
+        }
+        // Planner gauges arrive via the delegated publish.
+        assert!(reg.get("gc3_planner_cached_plans", t).is_some());
+        // Republishing after more traffic overwrites in place.
+        svc.serve(vec![req(Collective::AllGather, 64 << 10, 99, "a")]).unwrap();
+        svc.publish_obs(&mut reg);
+        match reg.get("gc3_serve_admitted_total", t) {
+            Some(MetricValue::Counter(4)) => {}
+            other => panic!("snapshot did not overwrite: {other:?}"),
+        }
+        // The exposition renders every family with the topology label.
+        let text = expo::render(&reg);
+        assert!(text.contains("# TYPE gc3_serve_latency_us histogram"), "{text}");
+        assert!(
+            text.contains(&format!("gc3_serve_admitted_total{{topology=\"{topo}\"}} 4")),
+            "{text}"
+        );
+        assert!(
+            text.contains(&format!(
+                "gc3_serve_latency_us_bucket{{tenant=\"a\",topology=\"{topo}\"")),
+            "labels render sorted: {text}"
+        );
+        assert!(text.contains("gc3_plan_cache_entries{collective=\"allgather\""), "{text}");
     }
 }

@@ -87,7 +87,10 @@ pub struct SimReport {
     pub algbw: f64,
     pub events: usize,
     pub flows: usize,
-    /// Busiest resources: (name, bytes moved / (time × capacity)).
+    /// Per-resource utilization, every resource that moved bytes, sorted
+    /// busiest-first: (name, bytes moved / (time × capacity)). Render
+    /// sites show the top few; analysis (`obs::critical`) consumes the
+    /// full vector.
     pub utilization: Vec<(String, f64)>,
 }
 
@@ -793,6 +796,12 @@ pub fn simulate_traced(
                     let (src, ch, dst) = conn_meta[conn];
                     let rank = tbs[owner].rank as u64;
                     let row = tb_local[owner] as u64;
+                    let res = rtable
+                        .resources_of(route)
+                        .iter()
+                        .map(|&i| rtable.names[i].as_str())
+                        .collect::<Vec<_>>()
+                        .join("+");
                     tr.name_process(rank, &format!("rank {rank}"));
                     tr.name_thread(rank, row, &format!("tb{row}"));
                     tr.complete(
@@ -807,6 +816,7 @@ pub fn simulate_traced(
                             ("channel", Arg::Num(ch as f64)),
                             ("bytes", Arg::Num(bytes)),
                             ("rate_gbps", Arg::Num(flows[f].rate / 1e9)),
+                            ("res", Arg::Str(res)),
                         ],
                     );
                     tr.counter(trace_sim_pid, "live_flows", now * 1e6, live.len() as f64);
@@ -845,7 +855,6 @@ pub fn simulate_traced(
         .map(|(i, &b)| (rtable.names[i].clone(), b / (now.max(1e-12) * rtable.caps[i])))
         .collect();
     utilization.sort_by(|a, b| b.1.total_cmp(&a.1));
-    utilization.truncate(8);
 
     Ok(SimReport {
         time: now,

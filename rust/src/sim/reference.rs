@@ -421,7 +421,6 @@ pub fn simulate_reference(ef: &EfProgram, topo: &Topology, size_bytes: u64) -> R
         .map(|(i, &b)| (rtable.names[i].clone(), b / (now.max(1e-12) * rtable.caps[i])))
         .collect();
     utilization.sort_by(|a, b| b.1.total_cmp(&a.1));
-    utilization.truncate(8);
 
     Ok(SimReport {
         time: now,

@@ -156,6 +156,51 @@ impl TraceSink {
         self.spans
     }
 
+    /// The recorded events, in append order — the raw material for
+    /// in-process analysis ([`crate::obs::critical`] /
+    /// [`crate::obs::attrib`]) without a serialize/parse round-trip.
+    pub fn events(&self) -> &[Json] {
+        &self.events
+    }
+
+    /// Merge `other` into `self` so sim + exec + serve captures from one
+    /// run combine into a single Perfetto-loadable timeline.
+    ///
+    /// Track groups collide freely across facades (every producer numbers
+    /// its `pid`s from 0), so every incoming `pid` is shifted above the
+    /// receiver's highest existing track group; span counts are additive
+    /// and the merged document stays valid trace-event JSON.
+    pub fn merge(&mut self, other: TraceSink) {
+        if other.events.is_empty() {
+            return;
+        }
+        // Shift incoming pids above every pid self has seen — named or
+        // not, scan the events themselves so anonymous tracks count too.
+        let max_pid = |events: &[Json]| -> Option<u64> {
+            events
+                .iter()
+                .filter_map(|e| e.get("pid").and_then(|p| p.as_f64()))
+                .map(|p| p.max(0.0) as u64)
+                .max()
+        };
+        let shift = match max_pid(&self.events) {
+            Some(m) => m + 1,
+            None => 0,
+        };
+        for mut ev in other.events {
+            let pid = ev.get("pid").and_then(|p| p.as_f64()).unwrap_or(0.0).max(0.0) as u64;
+            ev.set("pid", Json::Num((pid + shift) as f64));
+            self.events.push(ev);
+        }
+        self.spans += other.spans;
+        for pid in other.named_procs {
+            self.named_procs.insert(pid + shift);
+        }
+        for (pid, tid) in other.named_threads {
+            self.named_threads.insert((pid + shift, tid));
+        }
+    }
+
     /// Total events recorded, metadata and counters included.
     pub fn len(&self) -> usize {
         self.events.len()
@@ -230,6 +275,65 @@ mod tests {
         t.counter(0, "c", 0.0, f64::NAN);
         // The serialized document must stay parseable JSON.
         Json::parse(&t.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn merge_shifts_colliding_pids_and_adds_span_counts() {
+        let mut a = TraceSink::new();
+        a.name_process(0, "service");
+        a.complete(0, 1, "wave", 0.0, 5.0, &[]);
+        a.complete(1, 2, "request", 1.0, 4.0, &[]);
+        let mut b = TraceSink::new();
+        b.name_process(0, "rank 0");
+        b.complete(0, 0, "send r0->r1 ch0", 0.0, 2.0, &[]);
+        b.complete(0, 1, "send r0->r1 ch1", 2.0, 2.0, &[]);
+        let (a_spans, b_spans) = (a.span_count(), b.span_count());
+        let (a_len, b_len) = (a.len(), b.len());
+        a.merge(b);
+        assert_eq!(a.span_count(), a_spans + b_spans, "span counts additive");
+        assert_eq!(a.len(), a_len + b_len);
+        let doc = Json::parse(&a.to_json().to_string()).unwrap();
+        let evs = doc.req_arr("traceEvents").unwrap();
+        // a's pids were 0 and 1, so b's pid 0 must have shifted to 2 —
+        // the merged sim spans land on their own track group.
+        let sim_span = evs
+            .iter()
+            .find(|e| e.req_str("name").map(|n| n.starts_with("send ")).unwrap_or(false))
+            .unwrap();
+        assert_eq!(sim_span.get("pid").unwrap().as_f64(), Some(2.0));
+        // b's process_name metadata moved with it, and a's stayed put.
+        let procs: Vec<(f64, &str)> = evs
+            .iter()
+            .filter(|e| e.req_str("name") == Ok("process_name"))
+            .map(|e| {
+                (
+                    e.get("pid").unwrap().as_f64().unwrap(),
+                    e.get("args").unwrap().get("name").unwrap().as_str().unwrap(),
+                )
+            })
+            .collect();
+        assert!(procs.contains(&(0.0, "service")), "{procs:?}");
+        assert!(procs.contains(&(2.0, "rank 0")), "{procs:?}");
+        // Naming dedup keys shifted too: re-naming merged tracks is a
+        // no-op, naming the next fresh pid is not.
+        let len = a.len();
+        a.name_process(2, "rank 0 again");
+        assert_eq!(a.len(), len, "merged pid 2 already named");
+        a.name_process(3, "fresh");
+        assert_eq!(a.len(), len + 1);
+    }
+
+    #[test]
+    fn merge_into_empty_and_of_empty_are_clean() {
+        let mut a = TraceSink::new();
+        let mut b = TraceSink::new();
+        b.complete(4, 0, "x", 0.0, 1.0, &[]);
+        a.merge(TraceSink::new());
+        assert!(a.is_empty());
+        a.merge(b);
+        assert_eq!(a.span_count(), 1);
+        // No prior events → no shift: pid 4 survives verbatim.
+        assert_eq!(a.events()[0].get("pid").unwrap().as_f64(), Some(4.0));
     }
 
     #[test]
